@@ -1,0 +1,127 @@
+//! The MC# pipeline, stage by stage (paper Fig. 3 walkthrough):
+//!
+//! 1. expert significance analysis (§3.2.1–3.2.2: φ, w, drop-F-norm)
+//! 2. per-bit reconstruction error ε (Eq. 6)
+//! 3. integer-program bit allocation (Eq. 7) vs every baseline strategy
+//! 4. GPTQ packing + memory accounting
+//! 5. Online Top-any Pruning training (§3.4) and its effect
+//!
+//! ```bash
+//! cargo run --release --example compress_pipeline [-- dsvl-s]
+//! ```
+
+use anyhow::Result;
+use mcsharp::config::{OtpConfig, PmqConfig};
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::otp::{train_otp, OtpPruner};
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::{drop_fnorm, eps_table};
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::bench::Table;
+use mcsharp::util::human_bytes;
+use mcsharp::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let model_name =
+        std::env::args().nth(1).unwrap_or_else(|| "mix-tiny".to_string());
+    println!("== MC# pipeline walkthrough on {model_name} ==\n");
+    let base = train_or_load(&model_name, 300, false)?;
+    let cfg = base.cfg.clone();
+    let kind = if cfg.modalities > 1 { CorpusKind::Multimodal } else { CorpusKind::General };
+    let corpus = Corpus::new(kind, 0xDA7A);
+    let mut rng = Rng::new(42);
+
+    // -- stage 1: expert significance (Fig. 4 quantities) -----------------
+    println!("[1] expert significance analysis");
+    let calib = corpus.batch(8, 64, &mut rng);
+    let cal = calibrate(&base, &calib, 256);
+    let fnorm = drop_fnorm(&base, &cal.acts);
+    let mut t = Table::new(&["layer-0 expert", "freq φ", "mean-w", "drop-Fnorm"]);
+    for e in 0..cfg.n_experts.min(8) {
+        t.row(vec![
+            e.to_string(),
+            format!("{:.3}", cal.stats.frequency(0, e)),
+            format!("{:.3}", cal.stats.mean_weight(0, e)),
+            format!("{:.3}", fnorm[0][e]),
+        ]);
+    }
+    t.print();
+    println!(
+        "mean routing imbalance (gini): {:.3}\n",
+        cal.stats.mean_imbalance()
+    );
+
+    // -- stage 2: ε table --------------------------------------------------
+    println!("[2] per-expert per-bit reconstruction error ε (Eq. 6), layer 0");
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let mut t = Table::new(&["expert", "ε@1bit", "ε@2bit", "ε@3bit"]);
+    for e in 0..cfg.n_experts.min(8) {
+        t.row(vec![
+            e.to_string(),
+            format!("{:.4}", eps[0][e][0]),
+            format!("{:.4}", eps[0][e][1]),
+            format!("{:.4}", eps[0][e][2]),
+        ]);
+    }
+    t.print();
+
+    // -- stage 3: allocation strategies ------------------------------------
+    println!("\n[3] bit allocation @ avg 2.0 expert bits, every strategy");
+    let eval = corpus.batch(4, 48, &mut rng);
+    let mut t = Table::new(&["strategy", "layer-0 bits", "ppl"]);
+    for s in Strategy::ALL {
+        let alloc = strategies::allocation(s, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+        let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+        let ppl = q
+            .model
+            .perplexity(&eval, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+        t.row(vec![s.name().to_string(), format!("{:?}", alloc[0]), format!("{ppl:.3}")]);
+    }
+    let ppl_fp = base.perplexity(&eval, &mut ForwardOpts::default());
+    t.row(vec!["fp16".into(), "-".into(), format!("{ppl_fp:.3}")]);
+    t.print();
+
+    // -- stage 4: packing --------------------------------------------------
+    println!("\n[4] GPTQ packing");
+    let alloc =
+        strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    println!(
+        "  fp16 {} → packed {} ({:.1}×), avg model bits {:.2}",
+        human_bytes(base.nbytes_fp16()),
+        human_bytes(q.nbytes()),
+        base.nbytes_fp16() as f64 / q.nbytes() as f64,
+        q.avg_model_bits()
+    );
+
+    // -- stage 5: OTP -------------------------------------------------------
+    println!("\n[5] Online Top-any Pruning (λ=1)");
+    let oc = OtpConfig { steps: 150, ..Default::default() };
+    let rep = train_otp(&q, &calib, &oc, 0xF00D);
+    for (step, ratio, loss) in rep.curve.iter().step_by(3) {
+        println!("  step {step:>4}  mask-ratio {:.3}  distill-loss {loss:.5}", ratio);
+    }
+    let mut pruner = OtpPruner { routers: rep.routers };
+    let mut counter = (0u64, 0u64);
+    let ppl_otp = q.model.perplexity(
+        &eval,
+        &mut ForwardOpts {
+            provider: Some(&q),
+            pruner: Some(&mut pruner),
+            pruning_counter: Some(&mut counter),
+            ..Default::default()
+        },
+    );
+    let ppl_q = q
+        .model
+        .perplexity(&eval, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+    println!(
+        "  PMQ ppl {ppl_q:.3} → PMQ+OTP ppl {ppl_otp:.3} while pruning {:.1}% of activations",
+        100.0 * (1.0 - counter.0 as f64 / counter.1.max(1) as f64)
+    );
+    println!("\npipeline walkthrough OK");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Pre-loading deployment: compress **once**, ship the packed checkpoint,
+//! serve **without** calibration at boot — the workflow the paper's PMQ
+//! phase is named after ("Pre-Loading Mixed-Precision Quantization").
+//!
+//! ```bash
+//! cargo run --release --example deploy_qckpt
+//! ```
+//!
+//! 1. Offline (the "compressor" box): pretrain/load `mix-tiny`,
+//!    calibrate, PMQ-allocate, GPTQ-pack, and write
+//!    `checkpoints/mix-tiny-q2.bin`.
+//! 2. Online (the "edge" box): load the packed checkpoint only — no
+//!    calibration data, no Hessians, no fp16 weights — and serve a batch
+//!    of requests, verifying the outputs match the pre-save model
+//!    token-for-token.
+
+use anyhow::Result;
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::{repo_path, PmqConfig};
+use mcsharp::coordinator::batcher::Batcher;
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+use mcsharp::coordinator::request::GenRequest;
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::quant::qcheckpoint;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::human_bytes;
+use mcsharp::util::rng::Rng;
+
+fn main() -> Result<()> {
+    println!("== MC# pre-loading deployment ==\n");
+    let qpath = repo_path("checkpoints/mix-tiny-q2.bin");
+
+    // ---- offline: compress & ship ----------------------------------------
+    println!("[offline] compressing mix-tiny @ ~2 expert bits");
+    let base = train_or_load("mix-tiny", 300, false)?;
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    let mut rng = Rng::new(0xD3B0);
+    let calib = corpus.batch(8, 64, &mut rng);
+    let cal = calibrate(&base, &calib, 256);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let alloc = strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    let t0 = std::time::Instant::now();
+    qcheckpoint::save(&q, &qpath)?;
+    let fsize = std::fs::metadata(&qpath)?.len();
+    println!(
+        "  wrote {qpath}\n  {} on disk vs {} fp16 in memory ({:.1}× smaller payload), saved in {:.0} ms",
+        human_bytes(fsize),
+        human_bytes(base.nbytes_fp16()),
+        base.nbytes_fp16() as f64 / q.nbytes() as f64,
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+
+    // reference generations from the in-memory model before shipping
+    let prompts: Vec<Vec<u16>> = (0..8).map(|_| corpus.sample(12, &mut rng)).collect();
+    let be_ref = NativeBackend::quant(&q);
+    let mut eng_ref = DecodeEngine::new(EngineModel::Quant(&q), &be_ref, None);
+    let want: Vec<Vec<u16>> = prompts
+        .iter()
+        .map(|p| eng_ref.generate(p, 12))
+        .collect::<Result<_>>()?;
+
+    // ---- online: load & serve ---------------------------------------------
+    println!("\n[online] booting from the packed checkpoint only");
+    let t0 = std::time::Instant::now();
+    let q2 = qcheckpoint::load(&qpath)?;
+    println!(
+        "  loaded in {:.0} ms — {:.2} avg model bits, {} packed",
+        t0.elapsed().as_secs_f64() * 1e3,
+        q2.avg_model_bits(),
+        human_bytes(q2.nbytes()),
+    );
+    let be = NativeBackend::quant(&q2);
+    let mut eng = DecodeEngine::new(EngineModel::Quant(&q2), &be, None);
+    let mut b = Batcher::new(4, 4096);
+    for (i, p) in prompts.iter().enumerate() {
+        b.submit(GenRequest::greedy(i as u64, p.clone(), 12));
+    }
+    let mut results = b.run(&mut eng)?;
+    results.sort_by_key(|r| r.id);
+
+    // outputs must match the pre-save model token-for-token
+    let mut ok = 0;
+    for (r, w) in results.iter().zip(&want) {
+        assert_eq!(&r.tokens, w, "generation diverged after save/load (req {})", r.id);
+        ok += 1;
+    }
+    println!(
+        "  served {ok}/{} requests, outputs bit-identical to the pre-save model",
+        want.len()
+    );
+    println!(
+        "  {:.1} tok/s | p50 {:.1} ms | act {:.1} KB/token",
+        eng.metrics.tokens_per_sec(),
+        eng.metrics.latency_percentile_us(0.5) as f64 / 1e3,
+        eng.metrics.routed_bytes_per_token() / 1024.0,
+    );
+    println!("\ndeploy_qckpt OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! OTP exploration: the λ sweep of paper Fig. 13 plus per-layer mask
+//! behaviour. Trains the learnable routers at several sparsity weights
+//! and prints the mask-ratio training curves and the quality/pruning
+//! trade-off each λ lands on.
+//!
+//! ```bash
+//! cargo run --release --example otp_explore [-- dsvl-s]
+//! ```
+
+use anyhow::Result;
+use mcsharp::config::{OtpConfig, PmqConfig};
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::otp::{train_otp, OtpPruner};
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::bench::Table;
+use mcsharp::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "dsvl-s".to_string());
+    println!("== OTP λ sweep on {model_name} (paper Fig. 13) ==\n");
+    let base = train_or_load(&model_name, 300, false)?;
+    let cfg = base.cfg.clone();
+    let kind = if cfg.modalities > 1 { CorpusKind::Multimodal } else { CorpusKind::General };
+    let corpus = Corpus::new(kind, 0xDA7A);
+    let mut rng = Rng::new(0x07F);
+    let calib = corpus.batch(8, 64, &mut rng);
+    let cal = calibrate(&base, &calib, 256);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let alloc = strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    let eval = corpus.batch(4, 48, &mut rng);
+    let ppl_q = q
+        .model
+        .perplexity(&eval, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+    println!("PMQ-only perplexity: {ppl_q:.3}\n");
+
+    let mut summary = Table::new(&["lambda", "trained mask %", "measured pruned %", "ppl"]);
+    for &lambda in &[0.5f32, 1.0, 1.5, 2.0] {
+        let oc = OtpConfig { lambda, steps: 200, ..Default::default() };
+        let rep = train_otp(&q, &calib, &oc, 0xF00D + lambda as u64);
+        println!("λ = {lambda}: mask-ratio curve (step, pruned-frac, distill-loss)");
+        for (s, m, l) in rep.curve.iter().step_by(4) {
+            println!("  {s:>4}  {m:.3}  {l:.5}");
+        }
+        let mut pruner = OtpPruner { routers: rep.routers };
+        let mut counter = (0u64, 0u64);
+        let ppl = q.model.perplexity(
+            &eval,
+            &mut ForwardOpts {
+                provider: Some(&q),
+                pruner: Some(&mut pruner),
+                pruning_counter: Some(&mut counter),
+                ..Default::default()
+            },
+        );
+        let measured = 1.0 - counter.0 as f64 / counter.1.max(1) as f64;
+        summary.row(vec![
+            format!("{lambda}"),
+            format!("{:.1}", 100.0 * rep.curve.last().unwrap().1),
+            format!("{:.1}", 100.0 * measured),
+            format!("{ppl:.3}"),
+        ]);
+        println!();
+    }
+    println!("λ sweep summary (higher λ ⇒ more pruning — Fig. 13 shape):");
+    summary.print();
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: compress a pretrained MoE with MC# and generate.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Steps: load (or briefly pretrain) the `mix-tiny` MoE → calibrate on
+//! the C4-analog corpus → PMQ bit allocation at an average of 2 bits →
+//! GPTQ-quantize → generate text with the quantized model and print the
+//! compression summary.
+
+use anyhow::Result;
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::PmqConfig;
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::human_bytes;
+use mcsharp::util::rng::Rng;
+
+fn main() -> Result<()> {
+    println!("== MC# quickstart ==");
+    let base = train_or_load("mix-tiny", 300, false)?;
+    println!(
+        "model: mix-tiny — {} params, {} at fp16",
+        base.n_params(),
+        human_bytes(base.nbytes_fp16())
+    );
+
+    // calibration pass (C4-analog)
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    let mut rng = Rng::new(1);
+    let calib = corpus.batch(8, 64, &mut rng);
+    let cal = calibrate(&base, &calib, 256);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+
+    // PMQ integer program at avg 2 bits
+    let alloc = strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    println!("\nPMQ allocation (bits per expert):");
+    for (l, row) in alloc.iter().enumerate() {
+        println!("  layer {l}: {row:?}");
+    }
+
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    println!(
+        "\npacked: {} → {} ({:.1}× smaller, {:.2} avg model bits)",
+        human_bytes(base.nbytes_fp16()),
+        human_bytes(q.nbytes()),
+        base.nbytes_fp16() as f64 / q.nbytes() as f64,
+        q.avg_model_bits()
+    );
+
+    // quality check: held-out perplexity
+    let eval = corpus.batch(4, 48, &mut rng);
+    let ppl_fp = base.perplexity(&eval, &mut ForwardOpts::default());
+    let ppl_q = q
+        .model
+        .perplexity(&eval, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+    println!("perplexity: fp16 {ppl_fp:.3} → PMQ {ppl_q:.3}");
+
+    // generate a continuation with the compressed model
+    let prompt = corpus.sample(12, &mut rng);
+    let be = NativeBackend::quant(&q);
+    let mut engine = DecodeEngine::new(EngineModel::Quant(&q), &be, None);
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(&prompt, 16)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\nprompt tokens : {:?}", &out[..prompt.len()]);
+    println!("generated     : {:?}", &out[prompt.len()..]);
+    println!("decode throughput: {:.0} tok/s (native-quant)", 16.0 / dt);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Stand-alone TCP serving demo: starts the server on an ephemeral port,
+//! runs a client workload against it from another thread, prints the
+//! transcript. Demonstrates the deployable surface without needing two
+//! terminals.
+//!
+//! ```bash
+//! cargo run --release --example serve_tcp
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+use anyhow::Result;
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::PmqConfig;
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+use mcsharp::coordinator::server;
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::rng::Rng;
+
+fn main() -> Result<()> {
+    println!("== MC# TCP serving demo ==");
+    let base = train_or_load("mix-tiny", 300, false)?;
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    let mut rng = Rng::new(3);
+    let calib = corpus.batch(6, 48, &mut rng);
+    let cal = calibrate(&base, &calib, 192);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let alloc = strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!("server on {addr} (PMQ {:.2}-bit, native backend)", q.avg_model_bits());
+
+    let n_requests = 5usize;
+    std::thread::scope(|s| -> Result<()> {
+        s.spawn(|| {
+            let be = NativeBackend::quant(&q);
+            let engine = Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
+            server::serve(listener, &engine, 4, Some(n_requests)).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut line = String::new();
+        stream.write_all(b"PING\n")?;
+        reader.read_line(&mut line)?;
+        print!("client: PING → {line}");
+        let mut crng = Rng::new(77);
+        for i in 0..n_requests {
+            let prompt = corpus.sample(8, &mut crng);
+            let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+            let req = format!("GEN 8 {}\n", toks.join(","));
+            stream.write_all(req.as_bytes())?;
+            line.clear();
+            reader.read_line(&mut line)?;
+            print!("client: req {i} → {line}");
+        }
+        Ok(())
+    })?;
+    println!("serve_tcp OK");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""AOT compile path: lower every L2 graph to HLO text for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. Lowered with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple``.
+
+Writes ``artifacts/<config>_<graph>_t<bucket>.hlo.txt`` plus
+``artifacts/manifest.json`` describing argument shapes/dtypes and output
+arity — the Rust artifact registry consumes the manifest instead of
+re-deriving shapes.
+
+Python runs ONCE here (``make artifacts``); it is never on the request
+path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_CONFIGS = ("mix-tiny", "dsvl-s")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_meta(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_config(cfg: model.ModelConfig, out_dir: str, manifest: dict) -> None:
+    for t in cfg.buckets:
+        for name, fn, specs in model.graph_specs(cfg, t):
+            key = f"{cfg.name}_{name}_t{t}"
+            path = os.path.join(out_dir, f"{key}.hlo.txt")
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            n_out = len(jax.eval_shape(fn, *specs))
+            manifest["artifacts"][key] = {
+                "file": os.path.basename(path),
+                "config": cfg.name,
+                "graph": name,
+                "bucket": t,
+                "args": [spec_meta(s) for s in specs],
+                "n_outputs": n_out,
+            }
+            print(f"  {key}: {len(text)} chars, {time.time() - t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_CONFIGS),
+                    help="comma-separated config names under configs/")
+    ap.add_argument("--configs-dir", default="../configs")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"group": model.GROUP, "artifacts": {}}
+    for name in args.configs.split(","):
+        cfg = model.ModelConfig.load(os.path.join(args.configs_dir, f"{name}.json"))
+        print(f"lowering {cfg.name} (H={cfg.d_model} F={cfg.d_ff} E={cfg.n_experts} k={cfg.top_k})")
+        lower_config(cfg, args.out_dir, manifest)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

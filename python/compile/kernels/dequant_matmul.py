@@ -1,0 +1,75 @@
+"""Pallas dequant-matmul: the paper's pre-loading-compression hot path.
+
+Computes ``x @ W_hat`` where ``W_hat = (q - z) * s`` is reconstructed
+in-kernel from bit-plane-packed 2/3/4-bit codes (see ``packing.py``).
+
+TPU mapping of the HQQ CUDA kernel the paper ships (DESIGN.md
+§Hardware-Adaptation): instead of one warp per quantization group, the
+kernel tiles the *output* dimension with a BlockSpec grid; each grid step
+streams a ``[bits, d_in/8, TILE_O]`` packed tile (plus the matching
+``[n_groups, TILE_O]`` scale/zero tiles) HBM→VMEM, expands it to a
+``[d_in, TILE_O]`` f32 tile in registers/VMEM, and issues one MXU matmul
+against the resident ``[T, d_in]`` activation block. Packed weights are
+16/b× smaller than f32 in both HBM traffic and VMEM footprint — the
+dequant is fused so full-precision weights never exist in HBM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what
+``aot.py`` serializes for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_matmul_kernel(x_ref, planes_ref, scales_ref, zeros_ref, o_ref, *, bits: int, group: int):
+    """One output tile: unpack → dequant → matmul."""
+    x = x_ref[...]                      # [T, d_in]
+    planes = planes_ref[...]            # [bits, d_in//8, TILE_O] uint8
+    b, rows, tile_o = planes.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bitsarr = (planes[:, :, None, :] >> shifts[None, None, :, None]) & 1
+    q = bitsarr.reshape(b, rows * 8, tile_o).astype(jnp.float32)
+    weights = (2.0 ** jnp.arange(bits, dtype=jnp.float32))[:, None, None]
+    q = (q * weights).sum(axis=0)       # [d_in, TILE_O]
+    s = jnp.repeat(scales_ref[...], group, axis=0)
+    z = jnp.repeat(zeros_ref[...], group, axis=0)
+    w = (q - z) * s                     # dequantized tile, [d_in, TILE_O]
+    o_ref[...] = x @ w
+
+
+def pick_tile_o(d_out: int, target: int = 128) -> int:
+    """Largest divisor of ``d_out`` not exceeding ``target`` (MXU lane width)."""
+    t = min(d_out, target)
+    while d_out % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def dequant_matmul(x, planes, scales, zeros, *, bits: int, group: int = 32):
+    """``x:[T,d_in] @ dequant(planes:[bits,d_in//8,d_out]) -> [T,d_out]``."""
+    t, d_in = x.shape
+    _, rows, d_out = planes.shape
+    n_groups = scales.shape[0]
+    assert rows * 8 == d_in and d_in % group == 0
+    tile_o = pick_tile_o(d_out)
+    grid = (d_out // tile_o,)
+    return pl.pallas_call(
+        functools.partial(_dequant_matmul_kernel, bits=bits, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((bits, rows, tile_o), lambda i: (0, 0, i)),
+            pl.BlockSpec((n_groups, tile_o), lambda i: (0, i)),
+            pl.BlockSpec((n_groups, tile_o), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((t, tile_o), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, d_out), jnp.float32),
+        interpret=True,
+    )(x, planes, scales, zeros)

@@ -1,0 +1,70 @@
+"""Gating + OTP router kernels.
+
+``gating_scores`` is the MoE router softmax (top-k index selection happens
+in L2 with ``lax.top_k`` so the Rust coordinator receives both weights and
+indices from a single artifact). ``otp_router`` is the paper's learnable
+top-any pruner (§3.4): FC1(H→k) → concat with rank-sorted gate weights →
+FC2(2k→|C|) → Gumbel-Softmax over the nested candidate masks C_k. The
+Gumbel noise is an *input* — randomness stays in the Rust coordinator so
+the lowered graph is deterministic and replayable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _gating_kernel(x_ref, wg_ref, o_ref):
+    logits = x_ref[...] @ wg_ref[...]
+    m = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / e.sum(axis=-1, keepdims=True)
+
+
+@jax.jit
+def gating_scores(x, w_gate):
+    """Softmax expert scores ``[T, E]`` as a Pallas kernel."""
+    t, h = x.shape
+    e = w_gate.shape[1]
+    return pl.pallas_call(
+        _gating_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, e), jnp.float32),
+        interpret=True,
+    )(x, w_gate)
+
+
+def _otp_router_kernel(x_ref, gw_ref, fc1w_ref, fc1b_ref, fc2w_ref, fc2b_ref,
+                       noise_ref, tau_ref, y_ref, mask_ref, *, k: int):
+    x = x_ref[...]
+    gw = gw_ref[...]
+    h = jnp.maximum(x @ fc1w_ref[...] + fc1b_ref[...][0][None, :], 0.0)
+    z = jnp.concatenate([h, gw], axis=-1) @ fc2w_ref[...] + fc2b_ref[...][0][None, :]
+    z = (z + noise_ref[...]) / tau_ref[...][0, 0]
+    m = z.max(axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    y = e / e.sum(axis=-1, keepdims=True)
+    cand = (jnp.arange(k)[None, :] < (k - jnp.arange(k))[:, None]).astype(jnp.float32)
+    y_ref[...] = y
+    mask_ref[...] = y @ cand
+
+
+@functools.partial(jax.jit, static_argnames=())
+def otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau):
+    """Learnable top-any router; returns ``(y:[T,|C|], mask:[T,k])``."""
+    t, h = x.shape
+    k = gate_w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_otp_router_kernel, k=k),
+        out_shape=(
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+        ),
+        interpret=True,
+    )(x, gate_w, fc1_w, fc1_b.reshape(1, -1), fc2_w, fc2_b.reshape(1, -1),
+      noise, tau.reshape(1, 1))

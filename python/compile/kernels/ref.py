@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each kernel's
+output is allclose to the function of the same name here, and the Rust
+native backend is in turn tested against the PJRT execution of the
+lowered kernels — so all three implementations are pinned to this file.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def unpack_planes(planes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Unpack ``[bits, d_in//8, d_out]`` uint8 planes → ``[d_in, d_out]`` f32 codes."""
+    b, rows, d_out = planes.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    # [bits, rows, 8, d_out]: bit j of each byte is code row 8*i + j.
+    bitsarr = (planes[:, :, None, :] >> shifts[None, None, :, None]) & 1
+    bitsarr = bitsarr.reshape(b, rows * 8, d_out).astype(jnp.float32)
+    weights = (2.0 ** jnp.arange(bits, dtype=jnp.float32))[:, None, None]
+    return (bitsarr * weights).sum(axis=0)
+
+
+def dequant_weight(planes, scales, zeros, bits: int, group: int = 32) -> jnp.ndarray:
+    """Group-wise dequantization ``w = (q - z) * s`` from packed planes."""
+    q = unpack_planes(planes, bits)
+    s = jnp.repeat(scales, group, axis=0)
+    z = jnp.repeat(zeros, group, axis=0)
+    return (q - z) * s
+
+
+def dequant_matmul(x, planes, scales, zeros, bits: int, group: int = 32) -> jnp.ndarray:
+    """``x @ dequant(planes)`` — oracle for the Pallas dequant-matmul."""
+    return x @ dequant_weight(planes, scales, zeros, bits, group)
+
+
+def binary_weight(plane, alpha) -> jnp.ndarray:
+    """1-bit weight reconstruction ``alpha * (2*b - 1)`` (Eq. 8/9)."""
+    b = unpack_planes(plane[None] if plane.ndim == 2 else plane, 1)
+    return alpha[None, :] * (2.0 * b - 1.0)
+
+
+def binary_matmul(x, plane, alpha) -> jnp.ndarray:
+    """Oracle for the Pallas binary matmul (Eq. 9)."""
+    return x @ binary_weight(plane, alpha)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn_fp(x, wg, wu, wd) -> jnp.ndarray:
+    """SwiGLU expert FFN: ``(silu(x@wg) * (x@wu)) @ wd``."""
+    return (silu(x @ wg) * (x @ wu)) @ wd
+
+
+def expert_ffn_quant(x, packs, bits: int, group: int = 32) -> jnp.ndarray:
+    """Quantized expert FFN; ``packs`` = ((pg,sg,zg),(pu,su,zu),(pd,sd,zd))."""
+    (pg, sg, zg), (pu, su, zu), (pd, sd, zd) = packs
+    h = silu(dequant_matmul(x, pg, sg, zg, bits, group)) * dequant_matmul(x, pu, su, zu, bits, group)
+    return dequant_matmul(h, pd, sd, zd, bits, group)
+
+
+def expert_ffn_binary(x, packs) -> jnp.ndarray:
+    """1-bit expert FFN; ``packs`` = ((pg, ag), (pu, au), (pd, ad))."""
+    (pg, ag), (pu, au), (pd, ad) = packs
+    h = silu(binary_matmul(x, pg, ag)) * binary_matmul(x, pu, au)
+    return binary_matmul(h, pd, ad)
+
+
+def gating(x, w_gate) -> jnp.ndarray:
+    """Softmax routing scores over experts (top-k selection happens in L2/L3)."""
+    return jax.nn.softmax(x @ w_gate, axis=-1)
+
+
+def candidate_masks(k: int) -> jnp.ndarray:
+    """The nested top-any candidate set C_k (paper Eq. 10): row c keeps the
+    first k-c rank-sorted experts. |C| == k."""
+    return (jnp.arange(k)[None, :] < (k - jnp.arange(k))[:, None]).astype(jnp.float32)
+
+
+def otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau) -> tuple:
+    """Learnable top-any router (paper §3.4.1, Table 1).
+
+    Args:
+      x: ``[T, H]`` tokens. gate_w: ``[T, k]`` rank-sorted top-k gate weights.
+      fc1_w/fc1_b: ``[H, k]`` / ``[k]``. fc2_w/fc2_b: ``[2k, k]`` / ``[k]``.
+      noise: ``[T, k]`` Gumbel noise ``-log(-log(u))`` (RNG lives in Rust).
+      tau: ``[1]`` softmax temperature.
+
+    Returns:
+      ``(y, mask)``: candidate probabilities ``[T, |C|]`` (Eq. 13) and the
+      soft expert mask ``[T, k]`` = y @ C_k.
+    """
+    h = jax.nn.relu(x @ fc1_w + fc1_b[None, :])
+    logits = jnp.concatenate([h, gate_w], axis=-1) @ fc2_w + fc2_b[None, :]
+    y = jax.nn.softmax((logits + noise) / tau[0], axis=-1)
+    mask = y @ candidate_masks(gate_w.shape[1])
+    return y, mask

@@ -1,0 +1,147 @@
+"""L2: the JAX compute graphs the Rust runtime executes.
+
+Each function here is a pure, shape-static jax function over explicit
+weight arguments (weights live in Rust and are passed per call / kept in
+PJRT buffers). ``aot.py`` lowers every (config, graph, bucket) pair to
+HLO text under ``artifacts/``.
+
+Graph inventory (per model config ``c`` and token bucket ``T``):
+
+  expert_ffn_fp   (x[T,H], wg[H,F], wu[H,F], wd[F,H])           -> y[T,H]
+  expert_ffn_q{b} (x[T,H], 3×(planes,scales,zeros))             -> y[T,H]
+  expert_ffn_q1   (x[T,H], 3×(plane,alpha))                     -> y[T,H]
+  gating_topk     (x[T,H], w_gate[H,E])                         -> (w[T,k], idx[T,k] i32)
+  otp_router      (x[T,H], gate_w[T,k], fc1_w, fc1_b,
+                   fc2_w, fc2_b, noise[T,k], tau[1])            -> (y[T,k], mask[T,k])
+
+The MoE *block* itself (token→expert scatter/gather, shared experts,
+attention, KV cache) is the Rust coordinator's job — exactly the split
+the paper's serving story implies: routing and pruning decisions are
+cheap control flow; expert FFNs are the compiled hot path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gating as gating_k
+from .kernels import moe_ffn
+
+GROUP = 32  # quantization group size along d_in; must match rust/src/quant
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    n_shared_experts: int
+    max_seq_len: int
+    rope_theta: float
+    modalities: int
+    buckets: tuple
+
+    @staticmethod
+    def load(path: str) -> "ModelConfig":
+        with open(path) as f:
+            d = json.load(f)
+        d["buckets"] = tuple(d["buckets"])
+        return ModelConfig(**d)
+
+
+def expert_ffn_fp(x, wg, wu, wd):
+    """Full-precision SwiGLU expert (fused Pallas kernel)."""
+    return (moe_ffn.expert_ffn_fp(x, wg, wu, wd),)
+
+
+def make_expert_ffn_quant(bits: int):
+    """Quantized expert FFN over flat packed args (AOT-friendly signature)."""
+
+    def fn(x, pg, sg, zg, pu, su, zu, pd, sd, zd):
+        packs = ((pg, sg, zg), (pu, su, zu), (pd, sd, zd))
+        return (moe_ffn.expert_ffn_quant(x, packs, bits=bits, group=GROUP),)
+
+    return fn
+
+
+def expert_ffn_q1(x, pg, ag, pu, au, pd, ad):
+    """1-bit (binary) expert FFN."""
+    return (moe_ffn.expert_ffn_binary(x, ((pg, ag), (pu, au), (pd, ad))),)
+
+
+def make_gating_topk(k: int):
+    """Softmax scores (Pallas) + top-k select; weights renormalized to sum 1.
+
+    Top-k is expressed via argsort rather than ``jax.lax.top_k``: recent
+    jax lowers top_k to a ``topk(..., largest=true)`` HLO attribute that
+    the xla_extension 0.5.1 text parser (behind the Rust runtime)
+    rejects; ``sort`` round-trips fine.
+    """
+
+    def fn(x, w_gate):
+        scores = gating_k.gating_scores(x, w_gate)
+        idx = jnp.argsort(-scores, axis=-1)[:, :k]
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / w.sum(axis=-1, keepdims=True)
+        return w, idx.astype(jnp.int32)
+
+    return fn
+
+
+def otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau):
+    """Learnable top-any pruning router (Pallas kernel, §3.4)."""
+    y, mask = gating_k.otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau)
+    return y, mask
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def u8(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.uint8)
+
+
+def graph_specs(c: ModelConfig, t: int):
+    """(name, fn, arg_specs) for every graph lowered at bucket size ``t``."""
+    h, f, e, k = c.d_model, c.d_ff, c.n_experts, c.top_k
+    gh, gf = h // GROUP, f // GROUP
+    specs = [
+        ("expert_ffn_fp", expert_ffn_fp, [f32(t, h), f32(h, f), f32(h, f), f32(f, h)]),
+        ("gating_topk", make_gating_topk(k), [f32(t, h), f32(h, e)]),
+        (
+            "otp_router",
+            otp_router,
+            [f32(t, h), f32(t, k), f32(h, k), f32(k), f32(2 * k, k), f32(k), f32(t, k), f32(1)],
+        ),
+        (
+            "expert_ffn_q1",
+            expert_ffn_q1,
+            [f32(t, h), u8(h // 8, f), f32(f), u8(h // 8, f), f32(f), u8(f // 8, h), f32(h)],
+        ),
+    ]
+    for bits in (2, 3):
+        specs.append(
+            (
+                f"expert_ffn_q{bits}",
+                make_expert_ffn_quant(bits),
+                [
+                    f32(t, h),
+                    u8(bits, h // 8, f), f32(gh, f), f32(gh, f),
+                    u8(bits, h // 8, f), f32(gh, f), f32(gh, f),
+                    u8(bits, f // 8, h), f32(gf, h), f32(gf, h),
+                ],
+            )
+        )
+    return specs

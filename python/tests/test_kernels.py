@@ -1,0 +1,205 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary_matmul as bmm
+from compile.kernels import dequant_matmul as dqm
+from compile.kernels import gating as gk
+from compile.kernels import moe_ffn, packing, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(*shape):
+    return RNG.normal(size=shape).astype(np.float32)
+
+
+def packed_weight(d_in, d_out, bits, group=32):
+    w = rand(d_in, d_out)
+    codes, scales, zeros = packing.quantize_rtn(w, bits, group)
+    planes = packing.pack_codes(codes, bits)
+    return planes, scales, zeros
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("t,d_in,d_out", [(4, 64, 96), (16, 128, 256), (3, 32, 160)])
+def test_dequant_matmul_vs_ref(bits, t, d_in, d_out):
+    x = rand(t, d_in)
+    planes, scales, zeros = packed_weight(d_in, d_out, bits)
+    got = dqm.dequant_matmul(x, planes, scales, zeros, bits=bits)
+    want = ref.dequant_matmul(x, planes, scales, zeros, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bits=st.integers(2, 4),
+    t=st.integers(1, 24),
+    d_in=st.sampled_from([32, 64, 128]),
+    d_out=st.sampled_from([8, 64, 96, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_dequant_matmul_prop(bits, t, d_in, d_out, seed):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(t, d_in)).astype(np.float32)
+    w = r.normal(size=(d_in, d_out)).astype(np.float32)
+    codes, scales, zeros = packing.quantize_rtn(w, bits, 32)
+    planes = packing.pack_codes(codes, bits)
+    got = dqm.dequant_matmul(x, planes, scales, zeros, bits=bits)
+    want = ref.dequant_matmul(x, planes, scales, zeros, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_dequant_matmul_exactness():
+    """Dequant-matmul of RTN-quantized weights ≈ x @ w_hat computed in numpy."""
+    x = rand(8, 64)
+    w = rand(64, 32)
+    codes, scales, zeros = packing.quantize_rtn(w, 3, 32)
+    planes = packing.pack_codes(codes, 3)
+    w_hat = packing.dequantize(codes, scales, zeros, 32)
+    got = dqm.dequant_matmul(x, planes, scales, zeros, bits=3)
+    np.testing.assert_allclose(got, x @ w_hat, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("t,d_in,d_out", [(4, 64, 96), (16, 128, 256), (1, 32, 8)])
+def test_binary_matmul_vs_ref(t, d_in, d_out):
+    w = rand(d_in, d_out)
+    bits01, alpha = packing.binarize(w)
+    plane = packing.pack_codes(bits01, 1)[0]
+    x = rand(t, d_in)
+    got = bmm.binary_matmul(x, plane, alpha)
+    want = ref.binary_matmul(x, plane, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # also against the direct sign-matmul semantics of Eq. 4/9
+    direct = x @ (np.where(w >= 0, 1.0, -1.0).astype(np.float32) * alpha[None, :])
+    np.testing.assert_allclose(got, direct, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.integers(1, 24),
+    d_in=st.sampled_from([32, 64, 128]),
+    d_out=st.sampled_from([8, 64, 96, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_binary_matmul_prop(t, d_in, d_out, seed):
+    r = np.random.default_rng(seed)
+    w = r.normal(size=(d_in, d_out)).astype(np.float32)
+    x = r.normal(size=(t, d_in)).astype(np.float32)
+    bits01, alpha = packing.binarize(w)
+    plane = packing.pack_codes(bits01, 1)[0]
+    got = bmm.binary_matmul(x, plane, alpha)
+    want = ref.binary_matmul(x, plane, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bits=st.integers(2, 3),
+    t=st.integers(1, 16),
+    h=st.sampled_from([32, 64]),
+    f=st.sampled_from([32, 96]),
+    seed=st.integers(0, 2**31),
+)
+def test_expert_ffn_quant_prop(bits, t, h, f, seed):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(t, h)).astype(np.float32)
+
+    def pw(d_in, d_out):
+        w = r.normal(size=(d_in, d_out)).astype(np.float32)
+        codes, scales, zeros = packing.quantize_rtn(w, bits, 32)
+        return packing.pack_codes(codes, bits), scales, zeros
+
+    packs = (pw(h, f), pw(h, f), pw(f, h))
+    got = moe_ffn.expert_ffn_quant(x, packs, bits=bits)
+    want = ref.expert_ffn_quant(x, packs, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_expert_ffn_fp_vs_ref():
+    x, wg, wu, wd = rand(16, 128), rand(128, 256), rand(128, 256), rand(256, 128)
+    got = moe_ffn.expert_ffn_fp(x, wg, wu, wd)
+    want = ref.expert_ffn_fp(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_expert_ffn_quant_vs_ref(bits):
+    h, f = 64, 96
+    x = rand(8, h)
+    packs = tuple(packed_weight(*dims, bits) for dims in ((h, f), (h, f), (f, h)))
+    got = moe_ffn.expert_ffn_quant(x, packs, bits=bits)
+    want = ref.expert_ffn_quant(x, packs, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_expert_ffn_binary_vs_ref():
+    h, f = 64, 96
+    x = rand(8, h)
+
+    def bin_pack(d_in, d_out):
+        w = rand(d_in, d_out)
+        bits01, alpha = packing.binarize(w)
+        return packing.pack_codes(bits01, 1)[0], alpha
+
+    packs = (bin_pack(h, f), bin_pack(h, f), bin_pack(f, h))
+    got = moe_ffn.expert_ffn_binary(x, packs)
+    want = ref.expert_ffn_binary(x, packs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_gating_scores_vs_ref():
+    x, wg = rand(16, 128), rand(128, 8)
+    got = gk.gating_scores(x, wg)
+    want = ref.gating(x, wg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_candidate_masks_match_eq10():
+    c6 = np.asarray(ref.candidate_masks(6))
+    expected = np.array(
+        [
+            [1, 1, 1, 1, 1, 1],
+            [1, 1, 1, 1, 1, 0],
+            [1, 1, 1, 1, 0, 0],
+            [1, 1, 1, 0, 0, 0],
+            [1, 1, 0, 0, 0, 0],
+            [1, 0, 0, 0, 0, 0],
+        ],
+        dtype=np.float32,
+    )
+    np.testing.assert_array_equal(c6, expected)
+
+
+@pytest.mark.parametrize("k,t,h", [(2, 8, 64), (6, 16, 128)])
+def test_otp_router_vs_ref(k, t, h):
+    x = rand(t, h)
+    gate_w = np.abs(rand(t, k))
+    gate_w = np.sort(gate_w, axis=-1)[:, ::-1].copy()  # rank-sorted
+    fc1_w, fc1_b = rand(h, k), rand(k)
+    fc2_w, fc2_b = rand(2 * k, k), rand(k)
+    noise = -np.log(-np.log(RNG.uniform(1e-6, 1 - 1e-6, size=(t, k)))).astype(np.float32)
+    tau = np.array([1.0], dtype=np.float32)
+    got_y, got_m = gk.otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau)
+    want_y, want_m = ref.otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau)
+    np.testing.assert_allclose(got_y, want_y, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-4, atol=1e-5)
+    # every soft mask is monotone non-increasing across ranks (nested C_k)
+    gm = np.asarray(got_m)
+    assert np.all(np.diff(gm, axis=-1) <= 1e-6)
+
+
+def test_otp_router_low_tau_is_near_onehot():
+    k, t, h = 6, 8, 64
+    x = rand(t, h)
+    gate_w = np.abs(rand(t, k))
+    fc1_w, fc1_b = rand(h, k), rand(k)
+    fc2_w, fc2_b = rand(2 * k, k), rand(k)
+    noise = np.zeros((t, k), dtype=np.float32)
+    tau = np.array([0.05], dtype=np.float32)
+    y, _ = gk.otp_router(x, gate_w, fc1_w, fc1_b, fc2_w, fc2_b, noise, tau)
+    assert np.all(np.asarray(y).max(axis=-1) > 0.95)

@@ -1,0 +1,110 @@
+"""L2 graph-level tests: shapes, manifest consistency, numerical parity
+of the graph functions against the oracles across the model zoo configs."""
+
+import glob
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from compile import model
+from compile.kernels import packing, ref
+
+CONFIG_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "configs")
+
+
+def load_cfg(name):
+    return model.ModelConfig.load(os.path.join(CONFIG_DIR, f"{name}.json"))
+
+
+@pytest.mark.parametrize("name", ["mix-tiny", "dsvl-s"])
+def test_graph_specs_shapes(name):
+    cfg = load_cfg(name)
+    for t in cfg.buckets:
+        specs = model.graph_specs(cfg, t)
+        names = [s[0] for s in specs]
+        assert set(names) == {
+            "expert_ffn_fp", "gating_topk", "otp_router",
+            "expert_ffn_q1", "expert_ffn_q2", "expert_ffn_q3",
+        }
+        for gname, fn, args in specs:
+            outs = jax.eval_shape(fn, *args)
+            assert len(outs) >= 1, gname
+            if gname.startswith("expert_ffn"):
+                assert outs[0].shape == (t, cfg.d_model)
+            if gname == "gating_topk":
+                assert outs[0].shape == (t, cfg.top_k)
+                assert outs[1].shape == (t, cfg.top_k)
+
+
+def test_gating_topk_weights_sorted_and_normalized():
+    cfg = load_cfg("mix-tiny")
+    fn = model.make_gating_topk(cfg.top_k)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, cfg.d_model)).astype(np.float32)
+    wg = rng.normal(size=(cfg.d_model, cfg.n_experts)).astype(np.float32)
+    w, idx = fn(x, wg)
+    w, idx = np.asarray(w), np.asarray(idx)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-5)
+    assert np.all(np.diff(w, axis=-1) <= 1e-6), "not rank-sorted"
+    # indices must match the top-k of the reference softmax scores
+    scores = np.asarray(ref.gating(x, wg))
+    for i in range(8):
+        want = set(np.argsort(scores[i])[::-1][: cfg.top_k])
+        assert set(idx[i]) == want
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_expert_ffn_quant_graph_matches_oracle(bits):
+    cfg = load_cfg("mix-tiny")
+    h, f = cfg.d_model, cfg.d_ff
+    rng = np.random.default_rng(bits)
+    x = rng.normal(size=(4, h)).astype(np.float32)
+
+    def pack(d_in, d_out):
+        w = rng.normal(size=(d_in, d_out)).astype(np.float32)
+        codes, s, z = packing.quantize_rtn(w, bits, model.GROUP)
+        return packing.pack_codes(codes, bits), s, z
+
+    pg, sg, zg = pack(h, f)
+    pu, su, zu = pack(h, f)
+    pd, sd, zd = pack(f, h)
+    fn = model.make_expert_ffn_quant(bits)
+    (got,) = fn(x, pg, sg, zg, pu, su, zu, pd, sd, zd)
+    want = ref.expert_ffn_quant(x, ((pg, sg, zg), (pu, su, zu), (pd, sd, zd)), bits, model.GROUP)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_manifest_covers_all_graphs_and_buckets():
+    man_path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("run `make artifacts` first")
+    man = json.load(open(man_path))
+    assert man["group"] == model.GROUP
+    arts = man["artifacts"]
+    for name in ("mix-tiny", "dsvl-s"):
+        cfg = load_cfg(name)
+        for t in cfg.buckets:
+            for g in ("expert_ffn_fp", "expert_ffn_q1", "expert_ffn_q2",
+                      "expert_ffn_q3", "gating_topk", "otp_router"):
+                key = f"{name}_{g}_t{t}"
+                assert key in arts, key
+                meta = arts[key]
+                assert meta["bucket"] == t
+                # first arg is always the token block [t, H]
+                assert meta["args"][0]["shape"] == [t, cfg.d_model]
+    # files actually exist
+    art_dir = os.path.dirname(man_path)
+    for meta in arts.values():
+        assert os.path.exists(os.path.join(art_dir, meta["file"]))
+
+
+def test_hlo_artifacts_are_text_not_proto():
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    files = glob.glob(os.path.join(art_dir, "*.hlo.txt"))
+    if not files:
+        pytest.skip("run `make artifacts` first")
+    head = open(files[0]).read(200)
+    assert "HloModule" in head, "expected HLO text interchange format"

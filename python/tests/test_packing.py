@@ -1,0 +1,59 @@
+"""Packing format tests — pin the bit-plane layout shared with Rust."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import packing
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_pack_unpack_roundtrip(bits):
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 1 << bits, size=(64, 48), dtype=np.uint8)
+    planes = packing.pack_codes(q, bits)
+    assert planes.shape == (bits, 8, 48)
+    np.testing.assert_array_equal(packing.unpack_codes(planes, bits), q)
+
+
+def test_pack_fixed_vector():
+    """Cross-language pin: rust/src/quant/packed.rs asserts the same bytes."""
+    q = np.arange(16, dtype=np.uint8).reshape(16, 1) % 4  # 0,1,2,3,0,1,...
+    planes = packing.pack_codes(q, 2)
+    # bit-plane 0 (LSB): rows 0..7 -> 0,1,0,1,... => 0b10101010 = 0xAA
+    assert planes[0, 0, 0] == 0xAA and planes[0, 1, 0] == 0xAA
+    # bit-plane 1: rows 0..7 -> 0,0,1,1,... => 0b11001100 = 0xCC
+    assert planes[1, 0, 0] == 0xCC and planes[1, 1, 0] == 0xCC
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(1, 4),
+    rows=st.sampled_from([8, 32, 64, 128]),
+    cols=st.integers(1, 40),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_roundtrip_prop(bits, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 1 << bits, size=(rows, cols), dtype=np.uint8)
+    np.testing.assert_array_equal(packing.unpack_codes(packing.pack_codes(q, bits), bits), q)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_rtn_quantize_dequantize_error(bits):
+    """RTN reconstruction error must be bounded by half a quantization step."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(128, 32)).astype(np.float32)
+    codes, scales, zeros = packing.quantize_rtn(w, bits, group=32)
+    w_hat = packing.dequantize(codes, scales, zeros, group=32)
+    step = np.repeat(scales, 32, axis=0)
+    # clamping can exceed half-step only at group extremes; allow a full step
+    assert np.all(np.abs(w - w_hat) <= step + 1e-5)
+
+
+def test_binarize_matches_eq4():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    bits01, alpha = packing.binarize(w)
+    np.testing.assert_allclose(alpha, np.abs(w).sum(axis=0) / 64, rtol=1e-6)
+    np.testing.assert_array_equal(bits01, (w >= 0).astype(np.uint8))

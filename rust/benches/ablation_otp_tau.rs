@@ -1,0 +1,63 @@
+//! Ablation: Gumbel-Softmax temperature schedule for OTP training
+//! (Eq. 13 — "as τ→0 the predicted value approaches one-hot"). Compares
+//! the annealed default (4 → 0.5) against fixed-high, fixed-low, and a
+//! no-anneal mid temperature, at λ=1, reporting the learned pruning
+//! ratio and post-pruning PPL.
+//!
+//! Expected shape: annealing explores early (high τ ⇒ soft masks, stable
+//! gradients) and commits late (low τ ⇒ near-one-hot), reaching an equal
+//! or better ratio/PPL trade-off than any fixed temperature; fixed-low
+//! risks premature collapse, fixed-high never sharpens.
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::config::OtpConfig;
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::moe::Pruner;
+use mcsharp::otp::{train_otp, OtpPruner};
+use mcsharp::pmq::Strategy;
+use mcsharp::util::bench::Table;
+
+fn main() {
+    println!("== Ablation: OTP Gumbel-Softmax temperature schedule ==\n");
+    let s = common::setup("mix-tiny");
+    let q = s.quantize(Strategy::Pmq, 2.0, 0xAB3C);
+    let ppl_unpruned = s.ppl(&q);
+    println!("PMQ@2.0 unpruned PPL {ppl_unpruned:.3}\n");
+
+    let schedules: &[(&str, f32, f32)] = &[
+        ("anneal 4→0.5", 4.0, 0.5),
+        ("fixed 4.0", 4.0, 4.0),
+        ("fixed 1.0", 1.0, 1.0),
+        ("fixed 0.2", 0.2, 0.2),
+    ];
+    let mut t = Table::new(&["schedule", "trained mask %", "eval pruned %", "PPL"]);
+    for &(name, t0, t1) in schedules {
+        let oc = OtpConfig { tau_start: t0, tau_end: t1, steps: 200, ..Default::default() };
+        let rep = train_otp(&q, &s.calib_seqs, &oc, 0xAB3D);
+        let trained_ratio = rep.curve.last().map(|c| c.1).unwrap_or(0.0);
+        let mut pruner = OtpPruner { routers: rep.routers };
+        let mut counter = (0u64, 0u64);
+        let ppl = q.model.perplexity(
+            &s.eval_seqs,
+            &mut ForwardOpts {
+                provider: Some(&q),
+                pruner: Some(&mut pruner as &mut dyn Pruner),
+                pruning_counter: Some(&mut counter),
+                ..Default::default()
+            },
+        );
+        let eval_ratio = 1.0 - counter.0 as f64 / counter.1.max(1) as f64;
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", 100.0 * trained_ratio),
+            format!("{:.1}", 100.0 * eval_ratio),
+            format!("{ppl:.3}"),
+        ]);
+    }
+    t.print();
+    println!("\nshape: the annealed schedule matches or beats fixed temperatures on");
+    println!("the (pruning ratio, PPL) trade-off; fixed-high stays soft in training");
+    println!("(trained%≠eval%), fixed-low can lock in early masks.");
+}

@@ -1,0 +1,76 @@
+//! Shared setup for the paper-table benches: pretrained models (cached
+//! under checkpoints/), calibration, ε tables, and strategy quantization.
+//! Every bench prints the corresponding paper table/figure structure;
+//! absolute values are testbed-specific, orderings are the reproduction
+//! target (DESIGN.md §5).
+
+#![allow(dead_code)]
+
+use mcsharp::config::{ModelConfig, PmqConfig};
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::moe::model::{ForwardOpts, MoeModel};
+use mcsharp::pmq::{calibrate, strategies, Calibration, Strategy};
+use mcsharp::quant::error::{eps_table, EpsTable};
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::rng::Rng;
+
+/// Pretrain steps per model (big models get fewer steps to keep `cargo
+/// bench` tractable on the 1-core testbed; checkpoints are cached).
+pub fn steps_for(name: &str) -> usize {
+    match name {
+        "mix-tiny" | "dsvl-s" => 300,
+        "dsvl-t" => 200,
+        _ => 150,
+    }
+}
+
+pub struct Setup {
+    pub base: MoeModel,
+    pub cal: Calibration,
+    pub eps: EpsTable,
+    pub pmq: PmqConfig,
+    pub corpus: Corpus,
+    pub eval_seqs: Vec<Vec<u16>>,
+    pub calib_seqs: Vec<Vec<u16>>,
+}
+
+/// Train-or-load + calibrate a model by zoo name.
+pub fn setup(name: &str) -> Setup {
+    let cfg = ModelConfig::load(name).expect("config");
+    let base = train_or_load(name, steps_for(name), true).expect("pretrain");
+    let kind = if cfg.modalities > 1 { CorpusKind::Multimodal } else { CorpusKind::General };
+    let corpus = Corpus::new(kind, 0xDA7A);
+    let mut rng = Rng::new(0xBE7C);
+    let calib_seqs = corpus.batch(8, 64, &mut rng);
+    let cal = calibrate(&base, &calib_seqs, 256);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let eval_seqs = corpus.batch(4, 48, &mut rng);
+    Setup { base, cal, eps, pmq, corpus, eval_seqs, calib_seqs }
+}
+
+impl Setup {
+    /// Quantize with a strategy at an average expert bit-width (GPTQ).
+    pub fn quantize(&self, s: Strategy, avg_bits: f64, seed: u64) -> QuantModel {
+        let mut rng = Rng::new(seed);
+        let alloc =
+            strategies::allocation(s, &self.base, &self.cal, &self.eps, &self.pmq, avg_bits, &mut rng);
+        QuantModel::quantize(&self.base, &alloc, &self.pmq, &QuantMethod::Gptq(&self.cal.hessians))
+    }
+
+    /// Held-out perplexity of a quantized model.
+    pub fn ppl(&self, q: &QuantModel) -> f64 {
+        q.model.perplexity(
+            &self.eval_seqs,
+            &mut ForwardOpts { provider: Some(q), ..Default::default() },
+        )
+    }
+
+    pub fn ppl_fp(&self) -> f64 {
+        self.base.perplexity(&self.eval_seqs, &mut ForwardOpts::default())
+    }
+}
+
+/// The paper's reported bit points (expert-average) used across tables.
+pub const PAPER_BIT_POINTS: [f64; 5] = [2.54, 2.30, 2.05, 1.81, 1.57];

@@ -1,0 +1,33 @@
+//! Fig. 6/7 reproduction: PMQ bit-allocation maps at an average of 2
+//! bits — Mixtral-analog (Fig. 6) and DeepSeek-VL2-analog (Fig. 7).
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::pmq::Strategy;
+
+fn show(name: &str) {
+    let s = common::setup(name);
+    let q = s.quantize(Strategy::Pmq, 2.0, 0x516);
+    println!("--- {name}: per-expert bits (rows = MoE layers) ---");
+    for (l, row) in q.allocation.iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|b| b.to_string()).collect();
+        println!("layer {l:>2}: {}", cells.join(" "));
+    }
+    let counts = [1u8, 2, 3].map(|b| {
+        q.allocation.iter().flatten().filter(|&&x| x == b).count()
+    });
+    println!(
+        "distribution: 1-bit {} | 2-bit {} | 3-bit {}  (avg {:.2})\n",
+        counts[0],
+        counts[1],
+        counts[2],
+        q.avg_expert_bits()
+    );
+}
+
+fn main() {
+    println!("== Fig. 6 / Fig. 7: bit-width allocation maps @ avg 2-bit ==\n");
+    show("mix-tiny"); // Fig. 6 analog (8 experts / layer)
+    show("dsvl-s"); // Fig. 7 analog (16 experts / layer, top-6 + shared)
+}

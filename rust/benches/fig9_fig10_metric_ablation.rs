@@ -1,0 +1,111 @@
+//! Fig. 9/10 reproduction: the allocation-metric ablation. Fig. 9 plots
+//! WikiText2-PPL-vs-bits for Mixtral; Fig. 10 plots VLM suite average for
+//! DeepSeek-VL2-S. Shape: PMQ at/near the best curve at every bit point
+//! with its edge concentrated below 2 bits; single-factor metrics
+//! (weights-only, frequency-only) and Hessian trail.
+//!
+//! Both evaluations are deliberately larger than the other benches' (16
+//! held-out sequences for PPL, 32 items/task for the suite): strategy
+//! gaps at matched average bits are fractions of a PPL point on a tiny
+//! model, so a small eval set is noise-dominated.
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::eval::vlm_suite::score_vlm;
+use mcsharp::eval::EvalOpts;
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::pmq::Strategy;
+use mcsharp::util::bench::Table;
+use mcsharp::util::rng::Rng;
+
+const STRATS: [Strategy; 5] = [
+    Strategy::WeightsOnly,
+    Strategy::FrequencyOnly,
+    Strategy::Hessian,
+    Strategy::FNorm,
+    Strategy::Pmq,
+];
+
+fn main() {
+    let bits = [2.5f64, 2.25, 2.0, 1.75, 1.5];
+
+    println!("== Fig. 9: Mixtral-analog PPL vs avg bits per strategy ==\n");
+    let s = common::setup("mix-tiny");
+    // larger held-out set than Setup::eval_seqs — see module doc
+    let mut rng = Rng::new(0xF9EA);
+    let eval = s.corpus.batch(16, 64, &mut rng);
+    let ppl = |q: &mcsharp::quant::QuantModel| -> f64 {
+        q.model
+            .perplexity(&eval, &mut ForwardOpts { provider: Some(q), ..Default::default() })
+    };
+    let mut t = Table::new(&["strategy", "2.50", "2.25", "2.00", "1.75", "1.50"]);
+    let mut low_bit: Vec<(Strategy, f64)> = Vec::new();
+    for strat in STRATS {
+        let mut cells = vec![strat.name().to_string()];
+        for &b in &bits {
+            let q = s.quantize(strat, b, 0xF19);
+            let p = ppl(&q);
+            if b == 1.5 {
+                low_bit.push((strat, p));
+            }
+            cells.push(format!("{p:.2}"));
+        }
+        t.row(cells);
+    }
+    let fp = s.base.perplexity(&eval, &mut ForwardOpts::default());
+    t.row(vec![
+        "fp16".into(),
+        format!("{fp:.2}"),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+    ]);
+    t.print();
+    let pmq_low = low_bit.iter().find(|(st, _)| *st == Strategy::Pmq).unwrap().1;
+    let best_other = low_bit
+        .iter()
+        .filter(|(st, _)| *st != Strategy::Pmq)
+        .map(|&(_, p)| p)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "\nfig9 @1.5 bits: PMQ {pmq_low:.2} vs best single-factor {best_other:.2} — {}",
+        if pmq_low <= best_other * 1.02 { "PMQ at/near the frontier" } else { "PMQ behind (investigate)" }
+    );
+
+    println!("\n== Fig. 10: dsvl-s VLM-suite avg vs avg bits per strategy ==\n");
+    let s2 = common::setup("dsvl-s");
+    let items = std::env::var("BENCH_ITEMS").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let mut t2 = Table::new(&["strategy", "2.50", "2.00", "1.50"]);
+    let mut low_vlm: Vec<(Strategy, f64)> = Vec::new();
+    for strat in STRATS {
+        let mut cells = vec![strat.name().to_string()];
+        for &b in &[2.5f64, 2.0, 1.5] {
+            let q = s2.quantize(strat, b, 0xF19);
+            let mut opts = EvalOpts { provider: Some(&q), ..Default::default() };
+            let r = score_vlm(&q.model, &mut opts, items, 0xF10);
+            if b == 1.5 {
+                low_vlm.push((strat, r.avg));
+            }
+            cells.push(format!("{:.1}", r.avg));
+        }
+        t2.row(cells);
+    }
+    let fp_vlm = score_vlm(&s2.base, &mut EvalOpts::default(), items, 0xF10);
+    t2.row(vec!["fp16".into(), format!("{:.1}", fp_vlm.avg), "".into(), "".into()]);
+    t2.print();
+    let pmq_v = low_vlm.iter().find(|(st, _)| *st == Strategy::Pmq).unwrap().1;
+    let best_other_v = low_vlm
+        .iter()
+        .filter(|(st, _)| *st != Strategy::Pmq)
+        .map(|&(_, sc)| sc)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nfig10 @1.5 bits: PMQ {pmq_v:.1} vs best single-factor {best_other_v:.1} — {}",
+        if pmq_v >= best_other_v - 1.0 { "PMQ at/near the frontier" } else { "PMQ behind (investigate)" }
+    );
+    println!("\npaper shape: PMQ at/near the best curve everywhere, edge <2 bits;");
+    println!("single-factor metrics and Hessian trail (exact orderings vary with");
+    println!("the tiny-model noise floor — the paper's 46-point gaps need 47B params).");
+}

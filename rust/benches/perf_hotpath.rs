@@ -1,0 +1,148 @@
+//! §Perf instrument: microbenchmarks of every hot path, used for the
+//! optimization pass (EXPERIMENTS.md §Perf). Not a paper table — this is
+//! the profiler for L3 (native kernels, engine step, batcher overhead)
+//! plus the PJRT call path, and prints the L1 VMEM/MXU structure
+//! estimates for the Pallas kernels.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use mcsharp::backend::{ExpertBackend, NativeBackend, PjrtBackend};
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel, SeqState};
+use mcsharp::pmq::Strategy;
+use mcsharp::profile::dequant_matmul_estimate;
+use mcsharp::quant::{binary::BinaryMatrix, packed::PackedMatrix, rtn};
+use mcsharp::runtime::Runtime;
+use mcsharp::tensor::Tensor2;
+use mcsharp::util::bench::{report, time};
+use mcsharp::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut rng = Rng::new(0x9E2F);
+    let (h, f) = (128usize, 256usize);
+    let w = Tensor2::randn(h, f, &mut rng, 1.0);
+    let x: Vec<f32> = (0..h).map(|_| rng.normal()).collect();
+
+    println!("== matvec kernels (one [128]x[128,256] matvec) ==");
+    {
+        let mut y = vec![0.0f32; f];
+        let s = time(budget, 20_000, || {
+            y.fill(0.0);
+            for (r, &xr) in x.iter().enumerate() {
+                mcsharp::tensor::axpy(xr, w.row(r), &mut y);
+            }
+            std::hint::black_box(&y);
+        });
+        report("matvec f32", &s);
+    }
+    for bits in [2u8, 3] {
+        let (c, sc, z) = rtn::quantize_rtn(&w, bits, 32);
+        let pm = PackedMatrix::from_codes(&c, sc, z, h, f, bits, 32);
+        let mut y = vec![0.0f32; f];
+        let s = time(budget, 20_000, || {
+            y.fill(0.0);
+            pm.matvec_fused(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        report(&format!("matvec packed {bits}-bit (fused dequant)"), &s);
+    }
+    {
+        let bm = BinaryMatrix::binarize(&w);
+        let mut y = vec![0.0f32; f];
+        let s = time(budget, 20_000, || {
+            y.fill(0.0);
+            bm.matvec_fused(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        report("matvec binary 1-bit (Eq. 9)", &s);
+    }
+
+    println!("\n== engine step (batch 8, mix-tiny PMQ@2, native) ==");
+    let s = common::setup("mix-tiny");
+    let q = s.quantize(Strategy::Pmq, 2.0, 0x9E2F);
+    {
+        let be = NativeBackend::quant(&q);
+        let mut eng = DecodeEngine::new(EngineModel::Quant(&q), &be, None);
+        let mut seqs: Vec<SeqState> = (0..8)
+            .map(|i| SeqState::new(i, vec![1, 17, 30, 40], 1_000_000, s.base.cfg.n_layers))
+            .collect();
+        let st = time(budget, 2_000, || {
+            let mut batch: Vec<&mut SeqState> = seqs.iter_mut().collect();
+            eng.step(&mut batch).unwrap();
+        });
+        report("engine.step native-quant (8 seqs)", &st);
+    }
+    {
+        let be = NativeBackend::fp(&s.base);
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&s.base), &be, None);
+        let mut seqs: Vec<SeqState> = (0..8)
+            .map(|i| SeqState::new(i, vec![1, 17, 30, 40], 1_000_000, s.base.cfg.n_layers))
+            .collect();
+        let st = time(budget, 2_000, || {
+            let mut batch: Vec<&mut SeqState> = seqs.iter_mut().collect();
+            eng.step(&mut batch).unwrap();
+        });
+        report("engine.step native-fp (8 seqs)", &st);
+    }
+
+    // The paper's Table 5/8 speedup claim is a *memory-bound* effect: it
+    // appears once weights exceed cache and decode streams them from
+    // DRAM. mix-small (~24M params, ~94 MB f32) exceeds this core's LLC;
+    // mix-tiny above (cache-resident) shows parity instead.
+    println!("\n== engine step (batch 8, mix-small, native — memory-bound regime) ==");
+    {
+        let cfg = mcsharp::config::ModelConfig::load("mix-small").expect("config");
+        let base = mcsharp::train::trainer::train_or_load("mix-small", common::steps_for("mix-small"), true)
+            .expect("pretrain");
+        // RTN here: quantizer choice does not affect throughput and GPTQ
+        // on mix-small would dominate the bench's setup time
+        let alloc = vec![vec![2u8; cfg.n_experts]; cfg.n_layers];
+        let q = mcsharp::quant::qmodel::QuantModel::quantize(
+            &base,
+            &alloc,
+            &mcsharp::config::PmqConfig::default(),
+            &mcsharp::quant::qmodel::QuantMethod::Rtn,
+        );
+        let run = |em: EngineModel, be: &dyn ExpertBackend, label: &str| {
+            let mut eng = DecodeEngine::new(em, be, None);
+            let mut seqs: Vec<SeqState> = (0..8)
+                .map(|i| SeqState::new(i, vec![1, 17, 30, 40], 1_000_000, cfg.n_layers))
+                .collect();
+            let st = time(budget, 200, || {
+                let mut batch: Vec<&mut SeqState> = seqs.iter_mut().collect();
+                eng.step(&mut batch).unwrap();
+            });
+            report(label, &st);
+        };
+        let be_q = NativeBackend::quant(&q);
+        run(EngineModel::Quant(&q), &be_q, "engine.step native-quant mix-small");
+        let be_f = NativeBackend::fp(&base);
+        run(EngineModel::Fp(&base), &be_f, "engine.step native-fp    mix-small");
+    }
+
+    println!("\n== PJRT expert call (per bucket) ==");
+    if let Ok(rt) = Runtime::open_default() {
+        let be = PjrtBackend::new(&rt, &q, true).unwrap();
+        for t_tok in [4usize, 16, 64] {
+            let xb = Tensor2::randn(t_tok, 128, &mut rng, 1.0);
+            let st = time(budget, 2_000, || {
+                std::hint::black_box(be.expert_batch(0, 0, &xb).unwrap());
+            });
+            report(&format!("pjrt expert_ffn_q* bucket t{t_tok}"), &st);
+        }
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT numbers)");
+    }
+
+    println!("\n== L1 structure estimates (TPU roofline inputs, DESIGN.md §8) ==");
+    for bits in [1u8, 2, 3, 4] {
+        let e = dequant_matmul_estimate(16, 128, 128, bits, 32);
+        println!(
+            "dequant tile bits={bits}: VMEM {} B, intensity {:.1} FLOP/B, {:.2}x f32 HBM traffic",
+            e.vmem_bytes, e.intensity, e.traffic_ratio
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Table 2 reproduction: quantized Mixtral-analog on the 8-task zero-shot
+//! suite — Uniform vs BSP vs Hessian vs PMQ across the paper's bit range —
+//! plus the WikiText2-analog PPL column (the paper's primary LM metric,
+//! Tables 2+6 combined).
+//!
+//! Testbed honesty: a 4-layer tiny model quantizes far more gracefully
+//! than 32-layer Mixtral (quantization error compounds with depth), so
+//! the paper's −28.6 % Uni@2 *collapse magnitude* does not reproduce
+//! here and the easy zero-shot tasks saturate near fp16 at every bit
+//! point. What transfers — and what the computed verdict below checks —
+//! is the *ordering*: PPL(PMQ) ≤ PPL(Uniform) at matched 2-bit budgets,
+//! with monotonic degradation as bits shrink.
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::eval::{lm_suite, mc::score_suite, EvalOpts};
+use mcsharp::pmq::Strategy;
+use mcsharp::util::bench::Table;
+
+fn main() {
+    println!("== Table 2: Mixtral-analog zero-shot suite ==\n");
+    let s = common::setup("mix-tiny");
+    let items = std::env::var("BENCH_ITEMS").ok().and_then(|v| v.parse().ok()).unwrap_or(16);
+    let tasks = lm_suite::build(items, 0x7AB1E2);
+    let mut header = vec!["Method".to_string(), "Bits".to_string()];
+    header.extend(lm_suite::TASKS.iter().map(|t| t.to_string()));
+    header.push("Avg.%".into());
+    header.push("drop".into());
+    header.push("PPL".into());
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    let (rows_fp, avg_fp) = score_suite(&s.base, &mut EvalOpts::default(), &tasks);
+    push(&mut table, "fp16", 16.0, &rows_fp, avg_fp, avg_fp, s.ppl_fp());
+
+    let mut ppls: Vec<(String, f64, f64)> = Vec::new(); // (method, expert bits, ppl)
+    let mut run = |name: &str, strat: Strategy, bits: f64, ppls: &mut Vec<(String, f64, f64)>| {
+        let q = s.quantize(strat, bits, 0x7AB1E);
+        let mut opts = EvalOpts { provider: Some(&q), ..Default::default() };
+        let (rows, avg) = score_suite(&q.model, &mut opts, &tasks);
+        let ppl = s.ppl(&q);
+        ppls.push((name.to_string(), bits, ppl));
+        push(&mut table, name, q.avg_model_bits(), &rows, avg, avg_fp, ppl);
+    };
+    run("Uni", Strategy::Uniform, 3.0, &mut ppls);
+    run("Uni", Strategy::Uniform, 2.0, &mut ppls);
+    run("BSP", Strategy::BspLike, 2.5, &mut ppls);
+    for &b in &[2.5, 2.0, 1.57] {
+        run("Hessian", Strategy::Hessian, b, &mut ppls);
+    }
+    for &b in &common::PAPER_BIT_POINTS {
+        run("PMQ", Strategy::Pmq, b, &mut ppls);
+    }
+    table.print();
+
+    // computed verdict on the transferring claims (module doc)
+    let find = |m: &str, b: f64| {
+        ppls.iter()
+            .find(|(n, bb, _)| n == m && (bb - b).abs() < 0.26)
+            .map(|&(_, _, p)| p)
+    };
+    let uni2 = find("Uni", 2.0);
+    let pmq2 = find("PMQ", 2.05);
+    let pmq16 = find("PMQ", 1.57);
+    println!();
+    if let (Some(u), Some(p)) = (uni2, pmq2) {
+        println!(
+            "PPL @2-bit budget: PMQ {p:.2} vs Uniform {u:.2} — {}",
+            if p <= u { "PMQ ahead (paper shape)" } else { "uniform ahead (noise floor)" }
+        );
+    }
+    if let (Some(hi), Some(lo)) = (pmq2, pmq16) {
+        println!(
+            "PMQ degradation 2.05→1.57 bits: {hi:.2} → {lo:.2} ({})",
+            if lo >= hi { "monotone, paper shape" } else { "non-monotone" }
+        );
+    }
+    println!("(collapse *magnitude* needs 32-layer depth — see module doc)");
+}
+
+fn push(
+    table: &mut Table,
+    name: &str,
+    bits: f64,
+    rows: &[(String, f64)],
+    avg: f64,
+    avg_fp: f64,
+    ppl: f64,
+) {
+    let mut cells = vec![name.to_string(), format!("{bits:.2}")];
+    cells.extend(rows.iter().map(|(_, v)| format!("{v:.1}")));
+    cells.push(format!("{avg:.2}"));
+    cells.push(format!("{:+.1}%", avg - avg_fp));
+    cells.push(format!("{ppl:.2}"));
+    table.row(cells);
+}

@@ -1,0 +1,52 @@
+//! Table 4 reproduction: quantized DeepSeek-VL2-analogs (T/S/L) on the
+//! 6-task multimodal suite. Shape: Uni-2bit collapses (catastrophically
+//! on the tiny model); PMQ > Hessian at every bit point; bigger models
+//! lose less at the same bits.
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::eval::vlm_suite::{score_vlm, TASKS};
+use mcsharp::eval::EvalOpts;
+use mcsharp::pmq::Strategy;
+use mcsharp::util::bench::Table;
+
+fn main() {
+    println!("== Table 4: DeepSeek-VL2-analog multimodal suite ==\n");
+    let items = std::env::var("BENCH_ITEMS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    for model in ["dsvl-t", "dsvl-s", "dsvl-l"] {
+        println!("--- {model} ---");
+        let s = common::setup(model);
+        let mut header = vec!["Method".to_string(), "Bits".to_string()];
+        header.extend(TASKS.iter().map(|t| t.to_string()));
+        header.push("Avg.%".into());
+        let hdr: Vec<&str> = header.iter().map(|x| x.as_str()).collect();
+        let mut table = Table::new(&hdr);
+        let fp = score_vlm(&s.base, &mut EvalOpts::default(), items, 0x7AB1E4);
+        push(&mut table, "fp16", 16.0, &fp.scores, fp.avg);
+        let mut run = |name: &str, strat: Strategy, bits: f64| {
+            let q = s.quantize(strat, bits, 0x7AB1E4);
+            let mut opts = EvalOpts { provider: Some(&q), ..Default::default() };
+            let r = score_vlm(&q.model, &mut opts, items, 0x7AB1E4);
+            push(&mut table, name, q.avg_model_bits(), &r.scores, r.avg);
+        };
+        run("Uni", Strategy::Uniform, 3.0);
+        run("Uni", Strategy::Uniform, 2.0);
+        for &b in &[2.5, 2.0, 1.57] {
+            run("Hessian", Strategy::Hessian, b);
+        }
+        for &b in &[2.5, 2.0, 1.57] {
+            run("PMQ", Strategy::Pmq, b);
+        }
+        table.print();
+        println!();
+    }
+    println!("paper shape: PMQ > Hessian at same bits; larger model = smaller drop.");
+}
+
+fn push(table: &mut Table, name: &str, bits: f64, scores: &[(String, f64)], avg: f64) {
+    let mut cells = vec![name.to_string(), format!("{bits:.2}")];
+    cells.extend(scores.iter().map(|(_, v)| format!("{v:.1}")));
+    cells.push(format!("{avg:.2}"));
+    table.row(cells);
+}

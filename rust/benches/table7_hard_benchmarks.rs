@@ -1,0 +1,114 @@
+//! Table 7 reproduction: challenging benchmarks (GSM8K-analog,
+//! HumanEval-analog pass@10, NIAH-analog long-context retrieval) across
+//! quantization methods. Shape: hard tasks degrade first; Uniform-2bit
+//! scores ~0; PMQ keeps NIAH intact and stays ahead of BSP/Hessian;
+//! PMQ+OTP costs ≈nothing on top.
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::{repo_path, ModelConfig, OtpConfig, PmqConfig};
+use mcsharp::coordinator::engine::EngineModel;
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::eval::hard_suite::score_hard;
+use mcsharp::moe::MoeModel;
+use mcsharp::otp::{train_otp, OtpPruner};
+use mcsharp::pmq::{calibrate, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::train::{TrainConfig, Trainer};
+use mcsharp::util::bench::Table;
+use mcsharp::util::rng::Rng;
+
+/// The hard tasks need digit / NEEDLE / QUERY tokens, which only the
+/// MATH-analog corpus emits — a model pretrained purely on the general
+/// corpus floors at 0 on them *at fp16* (capability, not compression).
+/// Table 7 therefore uses a mix-tiny pretrained on an alternating
+/// General+Math curriculum (cached like the other checkpoints), with
+/// calibration/eval sets blended the same way.
+fn blended_setup() -> common::Setup {
+    let cfg = ModelConfig::load("mix-tiny").expect("config");
+    let path = repo_path("checkpoints/mix-tiny-blend-s1500.bin");
+    let base = match MoeModel::load(&path) {
+        Ok(m) if m.cfg == cfg => m,
+        _ => {
+            let tc = TrainConfig { steps: 1500, ..Default::default() };
+            let mut t = Trainer::new(&cfg, tc);
+            let gen = Corpus::new(CorpusKind::General, 0xDA7A);
+            let math = Corpus::new(CorpusKind::Math, 0xDA7A);
+            println!("(pretraining blended mix-tiny, 1500 steps...)");
+            for i in 0..1500 {
+                t.step(if i % 2 == 0 { &gen } else { &math });
+            }
+            t.model.save(&path).expect("save");
+            t.model
+        }
+    };
+    let gen = Corpus::new(CorpusKind::General, 0xDA7A);
+    let math = Corpus::new(CorpusKind::Math, 0xDA7A);
+    let mut rng = Rng::new(0xBE7C);
+    let mut calib_seqs = gen.batch(4, 64, &mut rng);
+    calib_seqs.extend(math.batch(4, 64, &mut rng));
+    let cal = calibrate(&base, &calib_seqs, 256);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let mut eval_seqs = gen.batch(2, 48, &mut rng);
+    eval_seqs.extend(math.batch(2, 48, &mut rng));
+    common::Setup { base, cal, eps, pmq, corpus: gen, eval_seqs, calib_seqs }
+}
+
+fn main() {
+    println!("== Table 7: GSM8K~ / HumanEval~(p@10) / NIAH~ ==\n");
+    let s = blended_setup();
+    let n = std::env::var("BENCH_ITEMS").ok().and_then(|v| v.parse().ok()).unwrap_or(24);
+    let ctx = 48;
+    let mut t = Table::new(&["method", "bits", "GSM8K~", "HumanEval~", "NIAH~"]);
+
+    // fp16
+    {
+        let be = NativeBackend::fp(&s.base);
+        let sc = score_hard(EngineModel::Fp(&s.base), &be, None, n, ctx, 0x7AB7);
+        t.row(vec![
+            "fp16".into(),
+            "16.00".into(),
+            format!("{:.1}", sc.gsm),
+            format!("{:.1}", sc.humaneval_p10),
+            format!("{:.1}", sc.niah),
+        ]);
+    }
+    let mut run = |name: &str, strat: Strategy, bits: f64, otp: bool| {
+        let q = s.quantize(strat, bits, 0x7AB7);
+        let be = NativeBackend::quant(&q);
+        let pruner = if otp {
+            let oc = OtpConfig { steps: 150, ..Default::default() };
+            let rep = train_otp(&q, &s.calib_seqs, &oc, 0x7AB7D);
+            Some(Box::new(OtpPruner { routers: rep.routers }) as Box<dyn mcsharp::moe::Pruner>)
+        } else {
+            None
+        };
+        let sc = score_hard(EngineModel::Quant(&q), &be, pruner, n, ctx, 0x7AB7);
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", q.avg_model_bits()),
+            format!("{:.1}", sc.gsm),
+            format!("{:.1}", sc.humaneval_p10),
+            format!("{:.1}", sc.niah),
+        ]);
+    };
+    run("Uniform", Strategy::Uniform, 3.0, false);
+    run("Uniform", Strategy::Uniform, 2.0, false);
+    run("BSP", Strategy::BspLike, 2.5, false);
+    run("Hessian", Strategy::Hessian, 2.5, false);
+    run("Hessian", Strategy::Hessian, 2.0, false);
+    run("PMQ", Strategy::Pmq, 2.5, false);
+    run("PMQ+OTP", Strategy::Pmq, 2.5, true);
+    run("PMQ", Strategy::Pmq, 2.0, false);
+    run("PMQ+OTP", Strategy::Pmq, 2.0, true);
+    t.print();
+    println!("\ntestbed honesty: fp16 itself sits near the per-digit chance floor");
+    println!("(~10%) on these generation tasks — a 3.5M-param model has marginal");
+    println!("arithmetic/retrieval capability, so method orderings here are noise.");
+    println!("The transferable Table 7 claim (hard tasks degrade before MC tasks)");
+    println!("is visible against §T2: the MC suite moves ≤2% under 2-bit");
+    println!("compression while these tasks sit at/near floor at every width.");
+}

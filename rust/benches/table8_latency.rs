@@ -1,0 +1,85 @@
+//! Table 8 reproduction: loading memory + decode tokens/s across
+//! platforms. The paper's point is (a) fp16 MoE OOMs consumer GPUs while
+//! MC# fits, (b) the compressed model decodes *faster* because decode is
+//! memory-bound. We scale our tiny models to the paper's footprints and
+//! drive the roofline model with the real packed-byte ratios measured
+//! from the quantized models, plus the measured single-core ratio.
+
+#[path = "common.rs"]
+mod common;
+
+use mcsharp::config::PmqConfig;
+use mcsharp::pmq::{strategies, Strategy};
+use mcsharp::profile::{Deployment, A100_80G, RTX_3090};
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::util::bench::Table;
+use mcsharp::util::human_bytes;
+use mcsharp::util::rng::Rng;
+
+fn main() {
+    println!("== Table 8: platform latency / memory (roofline-simulated) ==\n");
+    let s = common::setup("mix-tiny");
+    // The paper quantizes with GPTQ at group 128; our default group is 32
+    // (pinned by the AOT artifacts), whose f32 scale/zero vectors add
+    // ~2 bits/weight of overhead and would mask the paper's fits-vs-OOM
+    // point. Table 8 is native-accounting only (no artifacts on this
+    // path), so quantize at the paper's group here. mix-tiny's dims are
+    // 128-divisible; dsvl-s (d_ff=160) below keeps group 32.
+    let pmq128 = PmqConfig { group: 128, ..PmqConfig::default() };
+    let q = {
+        let mut rng = Rng::new(0x7AB8);
+        let alloc = strategies::allocation(
+            Strategy::Pmq, &s.base, &s.cal, &s.eps, &pmq128, 2.05, &mut rng,
+        );
+        QuantModel::quantize(&s.base, &alloc, &pmq128, &QuantMethod::Gptq(&s.cal.hessians))
+    };
+
+    // scale mix-tiny to Mixtral-8x7b's published footprint (96.8 GB fp16)
+    let scale = 96.8e9 / s.base.nbytes_fp16() as f64;
+    let fp = Deployment::fp16(&s.base.cfg, scale);
+    let mc = Deployment::quantized(&q, 1.0, scale);
+    let mc_otp = Deployment::quantized(&q, 0.77, scale); // OTP ~23% pruning
+
+    let mut t = Table::new(&["model", "GPU", "loading memory", "tok/s (roofline)"]);
+    let mut row = |name: &str, dep: &Deployment, dev: &mcsharp::profile::DeviceProfile, half: bool| {
+        // `half`: model sharded over 2 GPUs (paper's 2×A100 row)
+        let eff = if half {
+            Deployment { weight_bytes: dep.weight_bytes / 2, act_bytes_per_token: dep.act_bytes_per_token }
+        } else {
+            dep.clone()
+        };
+        let fits = eff.fits(dev);
+        t.row(vec![
+            name.into(),
+            format!("{}{}", if half { "2x " } else { "1x " }, dev.name),
+            if fits { human_bytes(dep.weight_bytes) } else { format!("OOM ({})", human_bytes(dep.weight_bytes)) },
+            match eff.tokens_per_sec(dev) {
+                Some(tps) if fits => format!("{tps:.0}"),
+                _ => "-".into(),
+            },
+        ]);
+    };
+    row("Mixtral-scale fp16", &fp, &A100_80G, true);
+    row("Mixtral-scale fp16", &fp, &RTX_3090, false);
+    row(&format!("MC# {:.2}-bit", q.avg_model_bits()), &mc, &RTX_3090, false);
+    row(&format!("MC# {:.2}-bit +OTP", q.avg_model_bits()), &mc_otp, &RTX_3090, false);
+
+    // DeepSeek-VL2-L-scale rows
+    let s2 = common::setup("dsvl-s");
+    let q2 = s2.quantize(Strategy::Pmq, 2.5, 0x7AB8);
+    let scale2 = 55.0e9 / s2.base.nbytes_fp16() as f64;
+    let fp2 = Deployment::fp16(&s2.base.cfg, scale2);
+    let mc2 = Deployment::quantized(&q2, 1.0, scale2);
+    row("DSVL-L-scale fp16", &fp2, &A100_80G, false);
+    row("DSVL-L-scale fp16", &fp2, &RTX_3090, false);
+    row(&format!("MC# {:.2}-bit (VLM)", q2.avg_model_bits()), &mc2, &RTX_3090, false);
+    t.print();
+
+    println!(
+        "\nmeasured packed ratios driving the roofline: mix {:.1}x, dsvl {:.1}x",
+        s.base.nbytes_fp16() as f64 / q.nbytes() as f64,
+        s2.base.nbytes_fp16() as f64 / q2.nbytes() as f64
+    );
+    println!("paper shape: fp16 OOMs the 3090; MC# fits AND decodes faster than");
+    println!("the fp16 model does on the bigger GPU (memory-bound decode).");
+}

@@ -1,0 +1,29 @@
+//! Expert-execution backends behind one trait.
+//!
+//! * [`NativeBackend`] — pure-Rust fused dequant matvecs (`quant`),
+//!   used for evaluation sweeps and as the CPU-reference semantics.
+//! * [`PjrtBackend`] — executes the AOT Pallas/JAX artifacts through the
+//!   `runtime` registry: packed expert weights are staged as PJRT
+//!   literals once at startup; per step the coordinator sends padded
+//!   token blocks. This is the "real" serving path (L1/L2 compute, L3
+//!   control).
+//!
+//! `rust/tests/pjrt_integration.rs` pins the two within f32 tolerance.
+
+pub mod native;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor2;
+
+pub trait ExpertBackend {
+    /// Run routed expert `expert` of `layer` over token rows `x [n, H]`.
+    fn expert_batch(&self, layer: usize, expert: usize, x: &Tensor2) -> Result<Tensor2>;
+    /// Run shared expert `idx` of `layer`.
+    fn shared_batch(&self, layer: usize, idx: usize, x: &Tensor2) -> Result<Tensor2>;
+    fn name(&self) -> &'static str;
+}
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;

@@ -1,0 +1,194 @@
+//! Configuration system: the model zoo (`configs/*.json`, shared with the
+//! python AOT path), quantization settings, serving settings.
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// Quantization group size along the reduction axis. Must match
+/// `python/compile/model.py::GROUP` — pinned by a manifest check in the
+/// runtime and by cross-language packing tests.
+pub const GROUP: usize = 32;
+
+/// A model architecture (mirrors `configs/<name>.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_shared_experts: usize,
+    pub max_seq_len: usize,
+    pub rope_theta: f32,
+    /// 1 = text-only (MoE-LLM analog), 2 = text+patch (MoE-VLM analog).
+    pub modalities: usize,
+    /// Token-count buckets the AOT artifacts were lowered for.
+    pub buckets: Vec<usize>,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            family: v.get("family")?.as_str()?.to_string(),
+            vocab_size: v.get("vocab_size")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            n_experts: v.get("n_experts")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            n_shared_experts: v.get("n_shared_experts")?.as_usize()?,
+            max_seq_len: v.get("max_seq_len")?.as_usize()?,
+            rope_theta: v.get("rope_theta")?.as_f64()? as f32,
+            modalities: v.get("modalities")?.as_usize()?,
+            buckets: v
+                .get("buckets")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Load `configs/<name>.json` relative to the repo root.
+    pub fn load(name: &str) -> Result<ModelConfig> {
+        let path = repo_path(&format!("configs/{name}.json"));
+        ModelConfig::from_json(&Value::from_file(&path)?)
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter count of one expert (SwiGLU: gate+up+down).
+    pub fn expert_params(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    /// Total parameters (embedding, attention, gates, experts, head).
+    pub fn total_params(&self) -> usize {
+        let h = self.d_model;
+        let per_layer_attn = 4 * h * h + h; // qkv+o + norm gains
+        let per_layer_moe = h * self.n_experts // gate
+            + (self.n_experts + self.n_shared_experts) * self.expert_params()
+            + h; // norm
+        self.vocab_size * h * 2 // embed + head
+            + h // final norm
+            + self.n_layers * (per_layer_attn + per_layer_moe)
+    }
+
+    /// Parameters activated for one token (top-k + shared experts only).
+    pub fn activated_params(&self) -> usize {
+        let h = self.d_model;
+        let per_layer_attn = 4 * h * h + h;
+        let per_layer_moe = h * self.n_experts
+            + (self.top_k + self.n_shared_experts) * self.expert_params()
+            + h;
+        self.vocab_size * h * 2 + h + self.n_layers * (per_layer_attn + per_layer_moe)
+    }
+}
+
+/// The named model zoo (see DESIGN.md §3 substitution table).
+pub const MODEL_ZOO: &[&str] = &["mix-tiny", "mix-small", "dsvl-t", "dsvl-s", "dsvl-l"];
+
+/// Resolve a path relative to the repository root (works from `cargo
+/// test`, benches, and installed binaries run from the repo).
+pub fn repo_path(rel: &str) -> String {
+    // CARGO_MANIFEST_DIR is baked in at compile time and is the repo root.
+    let root = env!("CARGO_MANIFEST_DIR");
+    format!("{root}/{rel}")
+}
+
+/// PMQ hyper-parameters (paper Eq. 7: α, β weight the significance
+/// factors; γ weights the quantization error).
+#[derive(Clone, Debug)]
+pub struct PmqConfig {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    /// Candidate bit-widths for experts.
+    pub bit_options: Vec<u8>,
+    /// Uniform bit-width for attention/gate/shared-expert weights.
+    pub other_bits: u8,
+    pub group: usize,
+}
+
+impl Default for PmqConfig {
+    fn default() -> Self {
+        PmqConfig {
+            alpha: 0.5,
+            beta: 0.5,
+            gamma: 2.0,
+            bit_options: vec![1, 2, 3],
+            other_bits: 4,
+            group: GROUP,
+        }
+    }
+}
+
+/// OTP training hyper-parameters (paper §3.4.2, Fig. 13).
+#[derive(Clone, Debug)]
+pub struct OtpConfig {
+    /// Sparsity-regularizer weight λ in Eq. 14.
+    pub lambda: f32,
+    /// Gumbel-Softmax temperature anneal (start → end).
+    pub tau_start: f32,
+    pub tau_end: f32,
+    pub lr: f32,
+    pub steps: usize,
+    pub batch_tokens: usize,
+}
+
+impl Default for OtpConfig {
+    fn default() -> Self {
+        OtpConfig {
+            lambda: 1.0,
+            tau_start: 4.0,
+            tau_end: 0.5,
+            lr: 1e-2,
+            steps: 300,
+            batch_tokens: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_zoo() {
+        for name in MODEL_ZOO {
+            let c = ModelConfig::load(name).unwrap();
+            assert_eq!(&c.name, name);
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}: head split");
+            assert_eq!(c.d_model % GROUP, 0, "{name}: group split");
+            assert_eq!(c.d_ff % GROUP, 0, "{name}: group split (ff)");
+            assert!(c.top_k <= c.n_experts);
+        }
+    }
+
+    #[test]
+    fn family_shapes_match_paper_structure() {
+        let mix = ModelConfig::load("mix-tiny").unwrap();
+        assert_eq!((mix.n_experts, mix.top_k, mix.n_shared_experts), (8, 2, 0));
+        let dsvl = ModelConfig::load("dsvl-s").unwrap();
+        assert_eq!(dsvl.top_k, 6);
+        assert!(dsvl.n_experts >= 16 && dsvl.n_shared_experts >= 1);
+    }
+
+    #[test]
+    fn activated_less_than_total() {
+        let c = ModelConfig::load("mix-tiny").unwrap();
+        assert!(c.activated_params() < c.total_params());
+        // experts dominate total params (the paper's premise)
+        let expert_total = c.n_layers * c.n_experts * c.expert_params();
+        assert!(expert_total as f64 / c.total_params() as f64 > 0.5);
+    }
+}

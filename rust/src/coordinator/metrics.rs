@@ -1,0 +1,110 @@
+//! Serving metrics: latency percentiles, throughput, expert-activation
+//! and activated-parameter accounting (feeds Tables 5/6/8).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Per-request end-to-end latency (µs).
+    pub latencies_us: Vec<u64>,
+    /// Decoded tokens total.
+    pub tokens_out: u64,
+    /// Prompt tokens processed.
+    pub tokens_in: u64,
+    /// (kept, offered) expert slots across all token-layer decisions.
+    pub experts_kept: u64,
+    pub experts_offered: u64,
+    /// Packed bytes of routed experts actually executed.
+    pub routed_bytes: u64,
+    /// Engine steps taken.
+    pub steps: u64,
+    /// Wall-clock of the serving run.
+    pub started: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn finish(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn wall_secs(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let w = self.wall_secs();
+        if w > 0.0 {
+            self.tokens_out as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    pub fn pruning_ratio(&self) -> f64 {
+        if self.experts_offered == 0 {
+            return 0.0;
+        }
+        1.0 - self.experts_kept as f64 / self.experts_offered as f64
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        v[((v.len() - 1) as f64 * p).round() as usize]
+    }
+
+    /// Mean activated routed-expert bytes per decoded token.
+    pub fn routed_bytes_per_token(&self) -> f64 {
+        if self.tokens_out == 0 {
+            return 0.0;
+        }
+        self.routed_bytes as f64 / self.tokens_out as f64
+    }
+
+    /// JSON snapshot for the server's `METRICS` command (monitoring
+    /// scrape format — every quantity the operator dashboards need).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("tokens_out", num(self.tokens_out as f64)),
+            ("tokens_in", num(self.tokens_in as f64)),
+            ("steps", num(self.steps as f64)),
+            ("requests", num(self.latencies_us.len() as f64)),
+            ("tokens_per_sec", num(self.tokens_per_sec())),
+            ("latency_p50_us", num(self.latency_percentile_us(0.5) as f64)),
+            ("latency_p95_us", num(self.latency_percentile_us(0.95) as f64)),
+            ("latency_p99_us", num(self.latency_percentile_us(0.99) as f64)),
+            ("pruning_ratio", num(self.pruning_ratio())),
+            ("routed_bytes_per_token", num(self.routed_bytes_per_token())),
+            ("experts_kept", num(self.experts_kept as f64)),
+            ("experts_offered", num(self.experts_offered as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_ratio() {
+        let mut m = Metrics::default();
+        m.latencies_us = vec![10, 20, 30, 40, 100];
+        assert_eq!(m.latency_percentile_us(0.5), 30);
+        assert_eq!(m.latency_percentile_us(1.0), 100);
+        m.experts_kept = 80;
+        m.experts_offered = 100;
+        assert!((m.pruning_ratio() - 0.2).abs() < 1e-12);
+    }
+}

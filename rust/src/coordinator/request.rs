@@ -1,0 +1,55 @@
+//! Request/response types for the generation service.
+
+/// A generation request (tokens in, tokens out — tokenization is the
+//  synthetic vocabulary, so clients speak token ids directly).
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    /// Greedy if None, else temperature sampling with this seed.
+    pub sample: Option<(f32, u64)>,
+    /// Scheduling class for [`Policy::Priority`](crate::coordinator::batcher::Policy):
+    /// higher admits first. 0 = default/batch traffic.
+    pub priority: u8,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    /// Wall-clock from admission to completion (µs).
+    pub latency_us: u64,
+    /// Time the request waited in queue before admission (µs).
+    pub queue_us: u64,
+    pub prompt_len: usize,
+}
+
+impl GenRequest {
+    pub fn greedy(id: u64, prompt: Vec<u16>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens, sample: None, priority: 0 }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> GenRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// Total token footprint (admission-control unit).
+    pub fn footprint(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_constructor() {
+        let r = GenRequest::greedy(7, vec![1, 2, 3], 16);
+        assert_eq!(r.id, 7);
+        assert!(r.sample.is_none());
+        assert_eq!(r.max_new_tokens, 16);
+    }
+}

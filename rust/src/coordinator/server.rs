@@ -1,0 +1,168 @@
+//! TCP serving front-end (std::net + threads — tokio is unavailable in
+//! this offline environment; see DESIGN.md §3).
+//!
+//! Line protocol, one request per line:
+//!
+//! ```text
+//! GEN <max_new_tokens> <tok>,<tok>,...\n   →  OK <tok>,<tok>,...\n
+//! PING\n                                  →  PONG\n
+//! STATS\n                                 →  STATS tokens_out=.. tps=..\n
+//! METRICS\n                               →  METRICS {json snapshot}\n
+//! ```
+//!
+//! The listener thread accumulates a micro-batch window, then runs the
+//! batcher over the engine. Engine access is serialized behind a mutex —
+//! on this single-core testbed parallel engine steps would not help; the
+//! batching provides the throughput.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::DecodeEngine;
+use crate::coordinator::request::GenRequest;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Parse one protocol line into a request.
+pub fn parse_line(line: &str) -> Result<Option<GenRequest>> {
+    let line = line.trim();
+    if line == "PING" || line == "STATS" || line == "METRICS" || line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.splitn(3, ' ');
+    match parts.next() {
+        Some("GEN") => {
+            let max_new: usize = parts
+                .next()
+                .ok_or_else(|| anyhow!("GEN missing max_new"))?
+                .parse()?;
+            let toks: Vec<u16> = parts
+                .next()
+                .ok_or_else(|| anyhow!("GEN missing tokens"))?
+                .split(',')
+                .map(|t| t.trim().parse::<u16>())
+                .collect::<Result<_, _>>()?;
+            if toks.is_empty() {
+                bail!("empty prompt");
+            }
+            Ok(Some(GenRequest::greedy(
+                NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                toks,
+                max_new,
+            )))
+        }
+        Some(cmd) => bail!("unknown command {cmd:?}"),
+        None => Ok(None),
+    }
+}
+
+pub fn format_result(tokens: &[u16]) -> String {
+    let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    format!("OK {}\n", toks.join(","))
+}
+
+/// Serve until `max_requests` have been answered (None = forever).
+/// Single-connection-at-a-time handling per line keeps the protocol
+/// trivial; batching happens across lines pending in one connection.
+pub fn serve(
+    listener: TcpListener,
+    engine: &Mutex<DecodeEngine>,
+    max_batch: usize,
+    max_requests: Option<usize>,
+) -> Result<usize> {
+    let mut answered = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        answered += handle_conn(stream, engine, max_batch)?;
+        if let Some(m) = max_requests {
+            if answered >= m {
+                break;
+            }
+        }
+    }
+    Ok(answered)
+}
+
+fn handle_conn(stream: TcpStream, engine: &Mutex<DecodeEngine>, max_batch: usize) -> Result<usize> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut answered = 0usize;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(answered); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed == "PING" {
+            out.write_all(b"PONG\n")?;
+            continue;
+        }
+        if trimmed == "STATS" {
+            let eng = engine.lock().unwrap();
+            let msg = format!(
+                "STATS tokens_out={} steps={} pruning={:.3}\n",
+                eng.metrics.tokens_out,
+                eng.metrics.steps,
+                eng.metrics.pruning_ratio()
+            );
+            drop(eng);
+            out.write_all(msg.as_bytes())?;
+            continue;
+        }
+        if trimmed == "METRICS" {
+            let eng = engine.lock().unwrap();
+            let msg = format!("METRICS {}\n", eng.metrics.to_json().to_json());
+            drop(eng);
+            out.write_all(msg.as_bytes())?;
+            continue;
+        }
+        if trimmed == "QUIT" {
+            return Ok(answered);
+        }
+        match parse_line(trimmed) {
+            Ok(Some(req)) => {
+                let mut eng = engine.lock().unwrap();
+                let mut b = Batcher::new(max_batch, 4096);
+                let id = req.id;
+                b.submit(req);
+                let results = b.run(&mut eng)?;
+                drop(eng);
+                let r = results
+                    .into_iter()
+                    .find(|r| r.id == id)
+                    .ok_or_else(|| anyhow!("result lost"))?;
+                out.write_all(format_result(&r.tokens).as_bytes())?;
+                answered += 1;
+            }
+            Ok(None) => {}
+            Err(e) => {
+                out.write_all(format!("ERR {e}\n").as_bytes())?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_format() {
+        let r = parse_line("GEN 8 1,2,3").unwrap().unwrap();
+        assert_eq!(r.max_new_tokens, 8);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert!(parse_line("PING").unwrap().is_none());
+        assert!(parse_line("NOPE 1").is_err());
+        assert!(parse_line("GEN 8").is_err());
+        assert!(parse_line("GEN x 1,2").is_err());
+        assert_eq!(format_result(&[5, 6]), "OK 5,6\n");
+    }
+
+    // full TCP round-trip lives in rust/tests/server_roundtrip.rs
+}

@@ -1,0 +1,320 @@
+//! Synthetic corpus generators (C4 / MATH / M4 analogs).
+
+use crate::util::rng::Rng;
+
+use super::vocab::*;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// Broad topic-mixture text ("C4").
+    General,
+    /// Narrow arithmetic domain ("MATH").
+    Math,
+    /// Interleaved patch+caption sequences ("M4").
+    Multimodal,
+}
+
+/// A generator producing token sequences from a fixed, seeded
+/// distribution. The distribution parameters (topic transition tables,
+/// patch classes) are themselves derived from the seed, so two `Corpus`
+/// instances with the same (kind, seed) are identical.
+pub struct Corpus {
+    pub kind: CorpusKind,
+    n_topics: usize,
+    /// Per-topic bigram tables: `trans[topic][prev_bucket]` = distribution
+    /// over next-token buckets (dense, NEXT_BUCKETS wide).
+    trans: Vec<Vec<Vec<f32>>>,
+    /// Per-topic token offset — topics occupy overlapping slices of the
+    /// text region so they share some tokens (like natural language).
+    topic_base: Vec<u16>,
+    topic_span: u16,
+    /// Patch classes for the multimodal corpus: each class is a small set
+    /// of preferred patch tokens + the caption topic it maps to.
+    patch_class_center: Vec<u16>,
+}
+
+const NEXT_BUCKETS: usize = 16;
+
+impl Corpus {
+    pub fn new(kind: CorpusKind, seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed ^ 0xC0_47B5);
+        let n_topics = 8;
+        let topic_span: u16 = 96;
+        let mut trans = Vec::new();
+        let mut topic_base = Vec::new();
+        for t in 0..n_topics {
+            // overlapping topic slices across the text region
+            let base = TEXT_BASE + ((t as u16 * 37) % (TEXT_END - TEXT_BASE - topic_span));
+            topic_base.push(base);
+            let mut table = Vec::new();
+            for _ in 0..NEXT_BUCKETS {
+                // sparse-ish bigram rows: a few strong transitions + noise
+                let mut row = vec![0.05f32; NEXT_BUCKETS];
+                for _ in 0..3 {
+                    row[rng.below(NEXT_BUCKETS)] += 1.0 + rng.f32() * 3.0;
+                }
+                table.push(row);
+            }
+            trans.push(table);
+        }
+        let patch_class_center: Vec<u16> = (0..n_topics)
+            .map(|t| PATCH_BASE + (t as u16 * N_PATCH as u16 / n_topics as u16))
+            .collect();
+        Corpus { kind, n_topics, trans, topic_base, topic_span, patch_class_center }
+    }
+
+    /// Generate one sequence of exactly `len` tokens (BOS-prefixed).
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<u16> {
+        match self.kind {
+            CorpusKind::General => self.sample_general(len, rng),
+            CorpusKind::Math => self.sample_math(len, rng),
+            CorpusKind::Multimodal => self.sample_multimodal(len, rng),
+        }
+    }
+
+    /// Generate `n` sequences.
+    pub fn batch(&self, n: usize, len: usize, rng: &mut Rng) -> Vec<Vec<u16>> {
+        (0..n).map(|_| self.sample(len, rng)).collect()
+    }
+
+    fn topic_token(&self, topic: usize, bucket: usize) -> u16 {
+        self.topic_base[topic] + (bucket as u16 * self.topic_span / NEXT_BUCKETS as u16)
+    }
+
+    fn sample_topic_text(&self, topic: usize, len: usize, rng: &mut Rng, out: &mut Vec<u16>) {
+        let mut bucket = rng.below(NEXT_BUCKETS);
+        for _ in 0..len {
+            // token = bucket anchor + small intra-bucket jitter (Zipf-ish:
+            // anchor token is most likely)
+            let jitter = if rng.f32() < 0.6 { 0 } else { rng.below(6) as u16 };
+            out.push((self.topic_token(topic, bucket) + jitter).min(TEXT_END - 1));
+            bucket = rng.categorical(&self.trans[topic][bucket]);
+        }
+    }
+
+    fn sample_general(&self, len: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut out = vec![BOS];
+        while out.len() < len {
+            // ~8% of spans are needle/retrieval patterns so models learn
+            // the copy skill the NIAH-analog task (Table 7) probes:
+            //   NEEDLE d d d  <filler...>  QUERY d d d
+            if rng.f32() < 0.08 && len - out.len() > 16 {
+                let digits: Vec<u16> =
+                    (0..3).map(|_| DIGIT_BASE + rng.below(10) as u16).collect();
+                out.push(NEEDLE);
+                out.extend(&digits);
+                let filler = (4 + rng.below(12)).min(len.saturating_sub(out.len() + 5));
+                let topic = rng.below(self.n_topics);
+                self.sample_topic_text(topic, filler, rng, &mut out);
+                out.push(QUERY);
+                out.extend(&digits);
+            } else {
+                let topic = rng.below(self.n_topics);
+                let span = (8 + rng.below(24)).min(len - out.len());
+                self.sample_topic_text(topic, span, rng, &mut out);
+            }
+            if out.len() < len {
+                out.push(SEP);
+            }
+        }
+        out.truncate(len);
+        out
+    }
+
+    fn sample_math(&self, len: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut out = vec![BOS];
+        let mut prev: Option<u32> = None;
+        while out.len() < len {
+            // ~30% of equations chain on the previous result (GSM-analog
+            // multi-step skill: "a+b=c SEP c+d=e")
+            let a = match prev {
+                Some(p) if rng.f32() < 0.3 => p.min(99),
+                _ => rng.below(100) as u32,
+            };
+            let b = rng.below(100) as u32;
+            let (op, c) = match rng.below(3) {
+                0 => (OP_PLUS, a + b),
+                1 => (OP_MINUS, a.saturating_sub(b)),
+                _ => (OP_TIMES, (a % 12) * (b % 12)),
+            };
+            let (a, b) = if op == OP_TIMES { (a % 12, b % 12) } else { (a, b) };
+            encode_number(a, &mut out);
+            out.push(op);
+            encode_number(b, &mut out);
+            out.push(EQUALS);
+            encode_number(c, &mut out);
+            out.push(SEP);
+            prev = Some(c);
+        }
+        out.truncate(len);
+        out
+    }
+
+    fn sample_multimodal(&self, len: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut out = vec![BOS];
+        while out.len() < len {
+            let class = rng.below(self.n_topics);
+            // image span: patches clustered around the class center
+            out.push(IMG_START);
+            let n_patch = 8 + rng.below(8);
+            let center = self.patch_class_center[class];
+            for _ in 0..n_patch {
+                let off = rng.below(N_PATCH / self.n_topics) as u16;
+                out.push((center + off).min(PATCH_END - 1));
+            }
+            out.push(IMG_END);
+            // caption: text from the correlated topic
+            let cap = 6 + rng.below(12);
+            self.sample_topic_text(class, cap, rng, &mut out);
+            out.push(SEP);
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// The caption topic a patch-class index maps to (used by eval tasks).
+    pub fn n_classes(&self) -> usize {
+        self.n_topics
+    }
+
+    /// Patch tokens for class `c` (used by VLM eval task construction).
+    pub fn class_patches(&self, class: usize, n: usize, rng: &mut Rng) -> Vec<u16> {
+        let center = self.patch_class_center[class];
+        (0..n)
+            .map(|_| (center + rng.below(N_PATCH / self.n_topics) as u16).min(PATCH_END - 1))
+            .collect()
+    }
+
+    /// A caption snippet for class `c`.
+    pub fn class_caption(&self, class: usize, n: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut out = Vec::new();
+        self.sample_topic_text(class, n, rng, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c1 = Corpus::new(CorpusKind::General, 9);
+        let c2 = Corpus::new(CorpusKind::General, 9);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(c1.sample(128, &mut r1), c2.sample(128, &mut r2));
+    }
+
+    #[test]
+    fn lengths_exact() {
+        prop::for_all(21, 20, |rng, case| {
+            let kind = [CorpusKind::General, CorpusKind::Math, CorpusKind::Multimodal][case % 3];
+            let c = Corpus::new(kind, 5);
+            let len = 16 + rng.below(200);
+            assert_eq!(c.sample(len, rng).len(), len);
+        });
+    }
+
+    #[test]
+    fn general_stays_in_text_region() {
+        let c = Corpus::new(CorpusKind::General, 3);
+        let mut rng = Rng::new(4);
+        for &t in c.sample(512, &mut rng).iter() {
+            // text + structure specials (needle spans included, §NIAH)
+            assert!(
+                t == BOS || t == SEP || t == NEEDLE || t == QUERY || is_text(t),
+                "tok {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn general_contains_needle_patterns() {
+        let c = Corpus::new(CorpusKind::General, 3);
+        let mut rng = Rng::new(4);
+        let seq = c.sample(2000, &mut rng);
+        // needle spans: NEEDLE d d d ... QUERY d d d with matching digits
+        let needles: Vec<usize> =
+            seq.iter().enumerate().filter(|(_, &t)| t == NEEDLE).map(|(i, _)| i).collect();
+        assert!(!needles.is_empty(), "no needle spans generated");
+        let mut verified = 0;
+        for &ni in &needles {
+            if ni + 3 >= seq.len() {
+                continue;
+            }
+            let digits = &seq[ni + 1..ni + 4];
+            if let Some(qi) = seq[ni..].iter().position(|&t| t == QUERY) {
+                let qi = ni + qi;
+                if qi + 3 < seq.len() && &seq[qi + 1..qi + 4] == digits {
+                    verified += 1;
+                }
+            }
+        }
+        assert!(verified > 0, "no verifiable needle/query pair");
+    }
+
+    #[test]
+    fn math_equations_are_correct() {
+        let c = Corpus::new(CorpusKind::Math, 3);
+        let mut rng = Rng::new(4);
+        let seq = c.sample(400, &mut rng);
+        // parse complete "a op b = c SEP" groups and check arithmetic
+        let mut checked = 0;
+        let mut i = 1;
+        while i < seq.len() {
+            let start = i;
+            let mut j = i;
+            while j < seq.len() && seq[j] != SEP {
+                j += 1;
+            }
+            if j >= seq.len() {
+                break;
+            }
+            let eq = &seq[start..j];
+            if let Some(pos_op) = eq.iter().position(|&t| matches!(t, OP_PLUS | OP_MINUS | OP_TIMES)) {
+                if let Some(pos_eq) = eq.iter().position(|&t| t == EQUALS) {
+                    let a = decode_number(&eq[..pos_op]);
+                    let b = decode_number(&eq[pos_op + 1..pos_eq]);
+                    let cc = decode_number(&eq[pos_eq + 1..]);
+                    if let (Some(a), Some(b), Some(cc)) = (a, b, cc) {
+                        let want = match eq[pos_op] {
+                            OP_PLUS => a + b,
+                            OP_MINUS => a.saturating_sub(b),
+                            _ => a * b,
+                        };
+                        assert_eq!(cc, want, "equation mismatch");
+                        checked += 1;
+                    }
+                }
+            }
+            i = j + 1;
+        }
+        assert!(checked >= 5, "only {checked} complete equations parsed");
+    }
+
+    #[test]
+    fn multimodal_contains_both_modalities() {
+        let c = Corpus::new(CorpusKind::Multimodal, 3);
+        let mut rng = Rng::new(4);
+        let seq = c.sample(256, &mut rng);
+        assert!(seq.iter().any(|&t| is_patch(t)));
+        assert!(seq.iter().any(|&t| is_text(t)));
+        assert!(seq.iter().any(|&t| t == IMG_START));
+    }
+
+    #[test]
+    fn math_distribution_is_narrower_than_general() {
+        // unique-token count: math uses digits+ops only
+        let mut rng = Rng::new(7);
+        let gen = Corpus::new(CorpusKind::General, 1).sample(2000, &mut rng);
+        let math = Corpus::new(CorpusKind::Math, 1).sample(2000, &mut rng);
+        let uniq = |s: &[u16]| {
+            let mut set = std::collections::BTreeSet::new();
+            set.extend(s.iter().cloned());
+            set.len()
+        };
+        assert!(uniq(&math) < uniq(&gen) / 2, "math {} vs general {}", uniq(&math), uniq(&gen));
+    }
+}

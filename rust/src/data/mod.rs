@@ -1,0 +1,23 @@
+//! Synthetic corpora standing in for C4 / MATH / M4 (see DESIGN.md §3).
+//!
+//! Three generators over a shared 512-token vocabulary:
+//!
+//! * `general` ("C4-analog"): a mixture of topic-specific bigram Markov
+//!   chains with Zipf-ish marginals — broad distribution, activates many
+//!   experts.
+//! * `math` ("MATH-analog"): tokenized arithmetic equations
+//!   `a OP b = c` — narrow domain distribution; the paper's Fig. 4 shows
+//!   far sparser expert activation on such data.
+//! * `multimodal` ("M4-analog"): interleaved `[IMG] patch… [/IMG]
+//!   caption…` sequences where the patch "class" determines the caption
+//!   topic. Modality-clustered token statistics drive the stronger expert
+//!   imbalance the paper reports for MoE-VLMs (Fig. 5).
+//!
+//! Token-id layout (shared with the eval suites):
+//! `0..16` specials, `16..384` text, `384..512` patch tokens.
+
+pub mod corpus;
+pub mod vocab;
+
+pub use corpus::{Corpus, CorpusKind};
+pub use vocab::*;

@@ -1,0 +1,100 @@
+//! Fixed 512-token vocabulary layout shared by generators and eval suites.
+
+pub const VOCAB_SIZE: usize = 512;
+
+// -- special tokens --------------------------------------------------------
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const EOS: u16 = 2;
+pub const SEP: u16 = 3;
+pub const IMG_START: u16 = 4;
+pub const IMG_END: u16 = 5;
+/// Needle marker for the NIAH-analog long-context task.
+pub const NEEDLE: u16 = 6;
+pub const QUERY: u16 = 7;
+pub const ANSWER: u16 = 8;
+pub const N_SPECIAL: u16 = 16;
+
+// -- text region ------------------------------------------------------------
+pub const TEXT_BASE: u16 = 16;
+pub const TEXT_END: u16 = 384; // exclusive
+pub const N_TEXT: usize = (TEXT_END - TEXT_BASE) as usize;
+
+// digits/operators live at the start of the text region (math corpus)
+pub const DIGIT_BASE: u16 = TEXT_BASE; // tokens 16..26 are digits 0..9
+pub const OP_PLUS: u16 = 26;
+pub const OP_MINUS: u16 = 27;
+pub const OP_TIMES: u16 = 28;
+pub const EQUALS: u16 = 29;
+
+// -- patch (visual) region ---------------------------------------------------
+pub const PATCH_BASE: u16 = 384;
+pub const PATCH_END: u16 = 512; // exclusive
+pub const N_PATCH: usize = (PATCH_END - PATCH_BASE) as usize;
+
+/// Encode a non-negative number as digit tokens (most significant first).
+pub fn encode_number(mut n: u32, out: &mut Vec<u16>) {
+    let mut digits = [0u16; 10];
+    let mut len = 0;
+    loop {
+        digits[len] = DIGIT_BASE + (n % 10) as u16;
+        len += 1;
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    for i in (0..len).rev() {
+        out.push(digits[i]);
+    }
+}
+
+/// Decode digit tokens back to a number; `None` on any non-digit token.
+pub fn decode_number(tokens: &[u16]) -> Option<u32> {
+    if tokens.is_empty() {
+        return None;
+    }
+    let mut n: u32 = 0;
+    for &t in tokens {
+        if !(DIGIT_BASE..DIGIT_BASE + 10).contains(&t) {
+            return None;
+        }
+        n = n.checked_mul(10)?.checked_add((t - DIGIT_BASE) as u32)?;
+    }
+    Some(n)
+}
+
+pub fn is_text(t: u16) -> bool {
+    (TEXT_BASE..TEXT_END).contains(&t)
+}
+
+pub fn is_patch(t: u16) -> bool {
+    (PATCH_BASE..PATCH_END).contains(&t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_roundtrip() {
+        for n in [0u32, 7, 10, 999, 123456] {
+            let mut toks = Vec::new();
+            encode_number(n, &mut toks);
+            assert_eq!(decode_number(&toks), Some(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_nondigits() {
+        assert_eq!(decode_number(&[OP_PLUS]), None);
+        assert_eq!(decode_number(&[]), None);
+    }
+
+    #[test]
+    fn regions_disjoint() {
+        assert!(N_SPECIAL <= TEXT_BASE);
+        assert!(TEXT_END <= PATCH_BASE);
+        assert_eq!(PATCH_END as usize, VOCAB_SIZE);
+    }
+}

@@ -1,0 +1,210 @@
+//! Table 7's challenging benchmarks: GSM8K-analog (multi-step
+//! arithmetic, exact-match generation), HumanEval-analog (pattern
+//! synthesis, pass@10 sampling) and NIAH-analog (long-context needle
+//! retrieval). These require *generation*, not choice-scoring, so they
+//! degrade first under compression — the paper's Table 7 observation.
+
+use crate::backend::ExpertBackend;
+use crate::coordinator::engine::{DecodeEngine, EngineModel};
+use crate::data::vocab::*;
+use crate::data::{Corpus, CorpusKind};
+use crate::moe::model::Pruner;
+use crate::util::rng::Rng;
+
+pub struct HardScores {
+    pub gsm: f64,
+    pub humaneval_p10: f64,
+    pub niah: f64,
+}
+
+struct GenItem {
+    prompt: Vec<u16>,
+    answer: Vec<u16>,
+}
+
+/// GSM-analog: `a+b=c SEP c+d=` → the model must produce `e = c+d`,
+/// having to carry `c` across the step boundary.
+fn gsm_items(n: usize, seed: u64) -> Vec<GenItem> {
+    let mut rng = Rng::new(seed ^ 0x65E1);
+    (0..n)
+        .map(|_| {
+            let a = rng.below(50) as u32;
+            let b = rng.below(50) as u32;
+            let c = a + b;
+            let d = rng.below(50) as u32;
+            let mut prompt = vec![BOS];
+            encode_number(a, &mut prompt);
+            prompt.push(OP_PLUS);
+            encode_number(b, &mut prompt);
+            prompt.push(EQUALS);
+            encode_number(c, &mut prompt);
+            prompt.push(SEP);
+            encode_number(c, &mut prompt);
+            prompt.push(OP_PLUS);
+            encode_number(d, &mut prompt);
+            prompt.push(EQUALS);
+            let mut answer = Vec::new();
+            encode_number(c + d, &mut answer);
+            GenItem { prompt, answer }
+        })
+        .collect()
+}
+
+/// NIAH-analog: needle digits buried in a long filler context, retrieved
+/// at the QUERY marker.
+fn niah_items(n: usize, ctx_len: usize, seed: u64) -> Vec<GenItem> {
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    let mut rng = Rng::new(seed ^ 0x41A7);
+    (0..n)
+        .map(|_| {
+            let digits: Vec<u16> = (0..3).map(|_| DIGIT_BASE + rng.below(10) as u16).collect();
+            let mut prompt = vec![BOS, NEEDLE];
+            prompt.extend(&digits);
+            // long filler from the training distribution
+            let filler = corpus.sample(ctx_len, &mut rng);
+            prompt.extend(&filler[1..]); // skip its BOS
+            prompt.push(QUERY);
+            GenItem { prompt, answer: digits }
+        })
+        .collect()
+}
+
+/// Token-level answer accuracy (%): mean fraction of answer tokens the
+/// greedy generation gets right. The paper reports exact match; on this
+/// testbed's ~3.5M-parameter models full-sequence exact match floors at
+/// 0 for *fp16 as well* (generation capability, not compression, is the
+/// limit), so degradation-under-compression — the quantity Table 7
+/// tests — is measured at token granularity instead.
+fn exact_match_score(
+    engine: &mut DecodeEngine,
+    items: &[GenItem],
+) -> f64 {
+    let mut credit = 0.0f64;
+    for it in items {
+        let out = engine.generate(&it.prompt, it.answer.len()).unwrap_or_default();
+        let got = &out[it.prompt.len().min(out.len())..];
+        let hit = it
+            .answer
+            .iter()
+            .zip(got)
+            .filter(|(a, b)| a == b)
+            .count();
+        credit += hit as f64 / it.answer.len().max(1) as f64;
+    }
+    100.0 * credit / items.len().max(1) as f64
+}
+
+/// HumanEval-analog pass@10: given a repeating token pattern
+/// `x y z x y z x y`, any of 10 temperature samples must complete the
+/// next `m` tokens exactly.
+fn humaneval_p10(engine: &mut DecodeEngine, n: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0x4E1);
+    let mut ok = 0usize;
+    for _ in 0..n {
+        let period = 2 + rng.below(2);
+        let motif: Vec<u16> =
+            (0..period).map(|_| TEXT_BASE + rng.below(N_TEXT) as u16).collect();
+        let reps = 4;
+        let mut prompt = vec![BOS];
+        for _ in 0..reps {
+            prompt.extend(&motif);
+        }
+        let m = period; // complete one more period
+        let answer = motif.clone();
+        let mut passed = false;
+        for s in 0..10 {
+            let out = {
+                // temperature sampling via SeqState.sample
+                let model = engine.em.model();
+                let n_layers = model.cfg.n_layers;
+                let mut seq = crate::coordinator::engine::SeqState::new(
+                    s,
+                    prompt.clone(),
+                    m,
+                    n_layers,
+                );
+                seq.sample = Some((0.7, seed + s));
+                while !seq.done() {
+                    let mut batch = [&mut seq];
+                    if engine.step(&mut batch).is_err() {
+                        break;
+                    }
+                }
+                seq.tokens
+            };
+            if out.len() >= prompt.len() + m && out[prompt.len()..prompt.len() + m] == answer[..m]
+            {
+                passed = true;
+                break;
+            }
+        }
+        if passed {
+            ok += 1;
+        }
+    }
+    100.0 * ok as f64 / n.max(1) as f64
+}
+
+/// Run all three hard tasks through a decode engine.
+pub fn score_hard(
+    em: EngineModel,
+    backend: &dyn ExpertBackend,
+    pruner: Option<Box<dyn Pruner + '_>>,
+    n: usize,
+    ctx_len: usize,
+    seed: u64,
+) -> HardScores {
+    let mut engine = DecodeEngine::new(em, backend, pruner);
+    let gsm = exact_match_score(&mut engine, &gsm_items(n, seed));
+    let humaneval_p10 = humaneval_p10(&mut engine, n, seed);
+    let niah = exact_match_score(&mut engine, &niah_items(n, ctx_len, seed));
+    HardScores { gsm, humaneval_p10, niah }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::config::ModelConfig;
+    use crate::moe::MoeModel;
+
+    #[test]
+    fn items_are_wellformed() {
+        for it in gsm_items(10, 1) {
+            assert!(it.prompt.len() > 6);
+            assert!(!it.answer.is_empty());
+            assert!(it.answer.iter().all(|&t| (DIGIT_BASE..DIGIT_BASE + 10).contains(&t)));
+        }
+        for it in niah_items(5, 40, 2) {
+            assert_eq!(it.prompt[1], NEEDLE);
+            assert_eq!(*it.prompt.last().unwrap(), QUERY);
+            assert!(it.prompt.len() > 40);
+        }
+    }
+
+    #[test]
+    fn scores_in_range_on_random_model() {
+        let cfg = ModelConfig {
+            name: "hard-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 512,
+            d_model: 24,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            n_experts: 2,
+            top_k: 1,
+            n_shared_experts: 0,
+            max_seq_len: 128,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let m = MoeModel::new(&cfg, 91);
+        let be = NativeBackend::fp(&m);
+        let s = score_hard(EngineModel::Fp(&m), &be, None, 4, 24, 3);
+        for v in [s.gsm, s.humaneval_p10, s.niah] {
+            assert!((0.0..=100.0).contains(&v));
+        }
+    }
+}

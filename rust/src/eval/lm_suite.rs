@@ -1,0 +1,203 @@
+//! The 8-task LM suite (Table 2 analog).
+//!
+//! Each task builds seeded multiple-choice items from held-out corpus
+//! draws; the "correct" choice is a genuine continuation from the
+//! generating distribution, distractors are corruptions of increasing
+//! subtlety (matching the paper's easy→hard task spread).
+
+use crate::data::{vocab::*, Corpus, CorpusKind};
+use crate::util::rng::Rng;
+
+use super::mc::McItem;
+
+/// The task list mirrors the Table 2 columns.
+pub const TASKS: [&str; 8] = [
+    "piqa~", "arc-e~", "arc-c~", "boolq~", "hellas~", "wino~", "mathqa~", "mmlu~",
+];
+
+/// Build the full 8-task suite: `n` items per task, held-out seed.
+pub fn build(n: usize, seed: u64) -> Vec<(String, Vec<McItem>)> {
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A); // same dist as training
+    let math = Corpus::new(CorpusKind::Math, 0xDA7A);
+    let mut rng = Rng::new(seed ^ 0xE7A1);
+    TASKS
+        .iter()
+        .map(|&name| {
+            let items: Vec<McItem> = (0..n)
+                .map(|_| match name {
+                    "piqa~" => continuation_item(&corpus, &mut rng, 12, 4, 2, 0),
+                    "arc-e~" => continuation_item(&corpus, &mut rng, 10, 3, 4, 0),
+                    "arc-c~" => continuation_item(&corpus, &mut rng, 10, 3, 4, 1),
+                    "boolq~" => topic_match_item(&corpus, &mut rng),
+                    "hellas~" => continuation_item(&corpus, &mut rng, 16, 6, 4, 0),
+                    "wino~" => one_token_item(&corpus, &mut rng),
+                    "mathqa~" => math_item(&math, &mut rng),
+                    "mmlu~" => continuation_item(&corpus, &mut rng, 8, 4, 4, 1),
+                    _ => unreachable!(),
+                })
+                .collect();
+            (name.to_string(), items)
+        })
+        .collect()
+}
+
+/// Context + true continuation vs corrupted continuations.
+/// `hardness` 0: distractors from *other* topics (easy);
+/// `hardness` 1: distractors are shuffled same-topic tokens (hard).
+fn continuation_item(
+    corpus: &Corpus,
+    rng: &mut Rng,
+    ctx_len: usize,
+    cont_len: usize,
+    n_choices: usize,
+    hardness: u8,
+) -> McItem {
+    let class = rng.below(corpus.n_classes());
+    let full = corpus.class_caption(class, ctx_len + cont_len, rng);
+    let context: Vec<u16> =
+        std::iter::once(BOS).chain(full[..ctx_len].iter().cloned()).collect();
+    let true_cont = full[ctx_len..].to_vec();
+    let mut choices = vec![true_cont.clone()];
+    while choices.len() < n_choices {
+        let d = if hardness == 0 {
+            let other = (class + 1 + rng.below(corpus.n_classes() - 1)) % corpus.n_classes();
+            corpus.class_caption(other, cont_len, rng)
+        } else {
+            let mut d = true_cont.clone();
+            rng.shuffle(&mut d);
+            // ensure actually different
+            if d == true_cont {
+                d[0] = (d[0] + 7).min(TEXT_END - 1);
+            }
+            d
+        };
+        choices.push(d);
+    }
+    let correct = rng.below(choices.len());
+    choices.swap(0, correct);
+    McItem { context, choices, correct }
+}
+
+/// BoolQ-analog: "does this continuation match the topic?" via two
+/// candidate continuations, one on-topic one off-topic.
+fn topic_match_item(corpus: &Corpus, rng: &mut Rng) -> McItem {
+    continuation_item(corpus, rng, 12, 4, 2, 0)
+}
+
+/// Winogrande-analog: two choices differing in a single token.
+fn one_token_item(corpus: &Corpus, rng: &mut Rng) -> McItem {
+    let class = rng.below(corpus.n_classes());
+    let full = corpus.class_caption(class, 14, rng);
+    let context: Vec<u16> = std::iter::once(BOS).chain(full[..10].iter().cloned()).collect();
+    let true_cont = full[10..].to_vec();
+    let mut alt = true_cont.clone();
+    let i = rng.below(alt.len());
+    alt[i] = TEXT_BASE + rng.below(N_TEXT) as u16;
+    if alt == true_cont {
+        alt[i] = (alt[i] + 11) % (TEXT_END - TEXT_BASE) + TEXT_BASE;
+    }
+    let correct = rng.below(2);
+    let choices = if correct == 0 { vec![true_cont, alt] } else { vec![alt, true_cont] };
+    McItem { context, choices, correct }
+}
+
+/// MathQA-analog: `a + b =` with numeric choices.
+fn math_item(_math: &Corpus, rng: &mut Rng) -> McItem {
+    let a = rng.below(50) as u32;
+    let b = rng.below(50) as u32;
+    let mut context = vec![BOS];
+    encode_number(a, &mut context);
+    context.push(OP_PLUS);
+    encode_number(b, &mut context);
+    context.push(EQUALS);
+    let enc = |n: u32| {
+        let mut v = Vec::new();
+        encode_number(n, &mut v);
+        v
+    };
+    let mut wrongs = Vec::new();
+    while wrongs.len() < 3 {
+        let delta = 1 + rng.below(10) as u32;
+        let w = if rng.f32() < 0.5 { a + b + delta } else { (a + b).saturating_sub(delta) };
+        if w != a + b && !wrongs.contains(&w) {
+            wrongs.push(w);
+        }
+    }
+    let correct = rng.below(4);
+    let mut choices: Vec<Vec<u16>> = wrongs.into_iter().map(enc).collect();
+    choices.insert(correct, enc(a + b));
+    McItem { context, choices, correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_shape() {
+        let suite = build(5, 1);
+        assert_eq!(suite.len(), 8);
+        for (name, items) in &suite {
+            assert_eq!(items.len(), 5, "{name}");
+            for it in items {
+                assert!(it.correct < it.choices.len());
+                assert!(!it.context.is_empty());
+                for c in &it.choices {
+                    assert!(!c.is_empty());
+                }
+                // correct choice differs from every distractor
+                for (ci, c) in it.choices.iter().enumerate() {
+                    if ci != it.correct {
+                        assert_ne!(c, &it.choices[it.correct], "{name}: duplicate choice");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = build(3, 7);
+        let b = build(3, 7);
+        for ((n1, i1), (n2, i2)) in a.iter().zip(&b) {
+            assert_eq!(n1, n2);
+            for (x, y) in i1.iter().zip(i2) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.correct, y.correct);
+            }
+        }
+    }
+
+    #[test]
+    fn trained_model_beats_chance_on_easy_tasks() {
+        // quick smoke: a briefly-trained tiny model should beat chance on
+        // the easy continuation task (this also guards the item design:
+        // if items were unanswerable, accuracy would pin at chance)
+        use crate::config::ModelConfig;
+        use crate::train::{TrainConfig, Trainer};
+        let cfg = ModelConfig {
+            name: "lm-suite-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 512,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 48,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let tc = TrainConfig { steps: 60, batch: 4, seq_len: 32, lr: 4e-3, ..Default::default() };
+        let mut t = Trainer::new(&cfg, tc);
+        let corpus = Trainer::default_corpus(&cfg);
+        t.train(&corpus, true).unwrap();
+        let suite = build(30, 99);
+        let piqa = &suite[0].1;
+        let acc = super::super::mc::score_items(&t.model, &mut Default::default(), piqa);
+        assert!(acc > 0.6, "trained model only {acc} on 2-choice easy task");
+    }
+}

@@ -1,0 +1,25 @@
+//! Evaluation suites — synthetic analogs of the paper's benchmarks.
+//!
+//! * [`mc`] — generic multiple-choice scoring (length-normalized logprob)
+//!   shared by all suites.
+//! * [`lm_suite`] — 8 zero-shot tasks standing in for Table 2's
+//!   PIQA / ARC-e / ARC-c / BoolQ / HellaSwag / Winogrande / MathQA /
+//!   MMLU columns.
+//! * [`vlm_suite`] — 6 multimodal tasks standing in for Table 4's
+//!   MMBench / MMStar / MME / MMMU / AI2D / OCRBench columns (MME-analog
+//!   reports the paper's ~0–2000 scale).
+//! * [`hard_suite`] — Table 7's GSM8K (multi-step arithmetic, exact
+//!   match), HumanEval (pattern synthesis, pass@10) and
+//!   Needle-in-a-haystack (long-context retrieval) analogs.
+//!
+//! Every task is generated from the same seeded synthetic distributions
+//! the models were trained on, with held-out seeds. Absolute scores are
+//! not comparable to the paper's; *relative orderings across compression
+//! methods* are the reproduced quantity (DESIGN.md §3/§5).
+
+pub mod hard_suite;
+pub mod lm_suite;
+pub mod mc;
+pub mod vlm_suite;
+
+pub use mc::{score_suite, EvalOpts, McItem};

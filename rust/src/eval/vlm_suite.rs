@@ -1,0 +1,178 @@
+//! The 6-task multimodal suite (Table 4 analog): caption-matching and
+//! patch-reasoning items over the M4-analog corpus. The MME-analog
+//! reports on the paper's ~0–2000 scale; the suite average (like the
+//! paper) excludes it.
+
+use crate::data::{vocab::*, Corpus, CorpusKind};
+use crate::moe::model::MoeModel;
+use crate::util::rng::Rng;
+
+use super::mc::{score_items, EvalOpts, McItem};
+
+pub const TASKS: [&str; 6] = ["mmbench~", "mmstar~", "mme~", "mmmu~", "ai2d~", "ocrbench~"];
+
+/// Build all 6 tasks (`n` items each).
+pub fn build(n: usize, seed: u64) -> Vec<(String, Vec<McItem>)> {
+    let corpus = Corpus::new(CorpusKind::Multimodal, 0xDA7A);
+    let mut rng = Rng::new(seed ^ 0x77AA);
+    TASKS
+        .iter()
+        .map(|&name| {
+            let items: Vec<McItem> = (0..n)
+                .map(|_| match name {
+                    // image → which caption (2 / 4 choices, diff hardness)
+                    "mmbench~" => caption_item(&corpus, &mut rng, 2, 10),
+                    "mmstar~" => caption_item(&corpus, &mut rng, 4, 8),
+                    "mme~" => caption_item(&corpus, &mut rng, 2, 6),
+                    "mmmu~" => caption_item(&corpus, &mut rng, 4, 6),
+                    // caption → which image (inverse direction)
+                    "ai2d~" => image_item(&corpus, &mut rng, 4),
+                    // digits embedded after IMG span must be read back
+                    "ocrbench~" => ocr_item(&corpus, &mut rng),
+                    _ => unreachable!(),
+                })
+                .collect();
+            (name.to_string(), items)
+        })
+        .collect()
+}
+
+/// `[IMG] patches [\IMG]` context; choices are captions, one from the
+/// image's class.
+fn caption_item(corpus: &Corpus, rng: &mut Rng, n_choices: usize, cap_len: usize) -> McItem {
+    let class = rng.below(corpus.n_classes());
+    let mut context = vec![BOS, IMG_START];
+    context.extend(corpus.class_patches(class, 10, rng));
+    context.push(IMG_END);
+    let mut choices = vec![corpus.class_caption(class, cap_len, rng)];
+    while choices.len() < n_choices {
+        let other = (class + 1 + rng.below(corpus.n_classes() - 1)) % corpus.n_classes();
+        choices.push(corpus.class_caption(other, cap_len, rng));
+    }
+    let correct = rng.below(n_choices);
+    choices.swap(0, correct);
+    McItem { context, choices, correct }
+}
+
+/// Caption context; choices are image spans (patch sequences).
+fn image_item(corpus: &Corpus, rng: &mut Rng, n_choices: usize) -> McItem {
+    let class = rng.below(corpus.n_classes());
+    let mut context = vec![BOS];
+    context.extend(corpus.class_caption(class, 10, rng));
+    context.push(SEP);
+    let make_img = |cl: usize, rng: &mut Rng| {
+        let mut v = vec![IMG_START];
+        v.extend(corpus.class_patches(cl, 8, rng));
+        v.push(IMG_END);
+        v
+    };
+    let mut choices = vec![make_img(class, rng)];
+    while choices.len() < n_choices {
+        let other = (class + 1 + rng.below(corpus.n_classes() - 1)) % corpus.n_classes();
+        choices.push(make_img(other, rng));
+    }
+    let correct = rng.below(n_choices);
+    choices.swap(0, correct);
+    McItem { context, choices, correct }
+}
+
+/// OCR-analog: the needle/copy pattern inside a multimodal context.
+fn ocr_item(corpus: &Corpus, rng: &mut Rng) -> McItem {
+    let class = rng.below(corpus.n_classes());
+    let digits: Vec<u16> = (0..3).map(|_| DIGIT_BASE + rng.below(10) as u16).collect();
+    let mut context = vec![BOS, IMG_START];
+    context.extend(corpus.class_patches(class, 8, rng));
+    context.push(IMG_END);
+    context.push(NEEDLE);
+    context.extend(&digits);
+    context.push(QUERY);
+    let mut alt = digits.clone();
+    let i = rng.below(3);
+    alt[i] = DIGIT_BASE + ((alt[i] - DIGIT_BASE + 1 + rng.below(9) as u16) % 10);
+    let correct = rng.below(2);
+    let choices = if correct == 0 { vec![digits, alt] } else { vec![alt, digits] };
+    McItem { context, choices, correct }
+}
+
+/// Table 4 row: per-task scores with the MME-analog on its 0–2000 scale,
+/// plus the average over the other five (the paper's "Avg.%" convention).
+pub struct VlmRow {
+    pub scores: Vec<(String, f64)>,
+    pub avg: f64,
+}
+
+pub fn score_vlm(model: &MoeModel, opts: &mut EvalOpts, n: usize, seed: u64) -> VlmRow {
+    let tasks = build(n, seed);
+    let mut scores = Vec::new();
+    let mut avg_sum = 0.0;
+    let mut avg_n = 0usize;
+    for (name, items) in &tasks {
+        let acc = 100.0 * score_items(model, opts, items);
+        if name == "mme~" {
+            // MME reports a ~0–2000 aggregate (2 subtasks × 1000)
+            scores.push((name.clone(), acc * 20.0));
+        } else {
+            scores.push((name.clone(), acc));
+            avg_sum += acc;
+            avg_n += 1;
+        }
+    }
+    VlmRow { scores, avg: avg_sum / avg_n.max(1) as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_shape_and_determinism() {
+        let a = build(4, 3);
+        assert_eq!(a.len(), 6);
+        let b = build(4, 3);
+        for ((n1, i1), (_n2, i2)) in a.iter().zip(&b) {
+            assert_eq!(i1.len(), 4, "{n1}");
+            for (x, y) in i1.iter().zip(i2) {
+                assert_eq!(x.context, y.context);
+            }
+        }
+    }
+
+    #[test]
+    fn items_are_multimodal() {
+        let suite = build(4, 5);
+        for (name, items) in &suite {
+            if name == "ai2d~" {
+                continue; // images are in the choices there
+            }
+            for it in items {
+                assert!(it.context.iter().any(|&t| is_patch(t)), "{name}: no patches");
+            }
+        }
+    }
+
+    #[test]
+    fn mme_scale() {
+        use crate::config::ModelConfig;
+        let cfg = ModelConfig {
+            name: "vlm-test".into(),
+            family: "deepseek-vl2".into(),
+            vocab_size: 512,
+            d_model: 24,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 1,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 2,
+            buckets: vec![4],
+        };
+        let m = MoeModel::new(&cfg, 90);
+        let row = score_vlm(&m, &mut EvalOpts::default(), 6, 1);
+        let mme = row.scores.iter().find(|s| s.0 == "mme~").unwrap().1;
+        assert!((0.0..=2000.0).contains(&mme));
+        assert!((0.0..=100.0).contains(&row.avg));
+    }
+}

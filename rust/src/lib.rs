@@ -1,0 +1,37 @@
+//! # MC# — Mixture Compressor for Mixture-of-Experts large models
+//!
+//! A from-scratch reproduction of *"MC#: Mixture Compressor for
+//! Mixture-of-Experts Large Models"* as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request batching,
+//!   top-k routing, OTP dynamic expert pruning, per-expert token grouping,
+//!   KV-cache management, metrics.
+//! * **L2/L1 (python/compile)** — JAX graphs + Pallas kernels
+//!   (dequant-matmul, binary-matmul, fused expert FFN, gating, OTP
+//!   router), AOT-lowered once to HLO text under `artifacts/` and executed
+//!   here through PJRT (`runtime`).
+//!
+//! The paper's two contributions live in [`pmq`] (Pre-loading
+//! Mixed-precision Quantization: expert-significance-weighted integer
+//! programming over per-expert bit-widths) and [`otp`] (Online Top-any
+//! Pruning: a learnable Gumbel-Softmax router that prunes activated
+//! experts per token). Everything they depend on — the MoE model, a
+//! training loop, GPTQ, bit-packed storage, synthetic corpora, evaluation
+//! suites, a roofline model — is implemented here as well; see DESIGN.md
+//! for the full inventory and the per-experiment index.
+
+pub mod backend;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod moe;
+pub mod otp;
+pub mod pmq;
+pub mod profile;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,208 @@
+//! `mcsharp` — the MC# command line.
+//!
+//! ```text
+//! mcsharp train     --model mix-tiny --steps 300          pretrain + checkpoint
+//! mcsharp compress  --model mix-tiny --bits 2.05          calibrate → PMQ → pack
+//!                   [--out q.bin]                         … and save the packed model
+//! mcsharp eval      --model mix-tiny --bits 2.05 [--otp]  LM suite scores
+//! mcsharp serve     --model mix-tiny --port 7077          TCP generation server
+//!                   [--qckpt q.bin]                       serve a pre-compressed model
+//! mcsharp info      --model mix-tiny                      model zoo facts
+//! ```
+//!
+//! Subcommands compose the library exactly the way the examples do; see
+//! `examples/` for richer end-to-end drivers.
+
+use anyhow::Result;
+
+use mcsharp::backend::{NativeBackend, PjrtBackend};
+use mcsharp::config::{ModelConfig, OtpConfig, PmqConfig, MODEL_ZOO};
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+use mcsharp::coordinator::server;
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::eval::{lm_suite, mc::score_suite, EvalOpts};
+use mcsharp::otp::{train_otp, OtpPruner};
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::trainer::train_or_load;
+use mcsharp::util::cli::Args;
+use mcsharp::util::human_bytes;
+use mcsharp::util::rng::Rng;
+
+const FLAGS: &[&str] = &[
+    "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
+    "calib-seqs", "lambda", "out", "qckpt",
+];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: mcsharp <train|compress|eval|serve|info> [--model NAME] ...");
+            eprintln!("models: {}", MODEL_ZOO.join(", "));
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mix-tiny");
+    let steps = args.usize_or("steps", 300)?;
+    let m = train_or_load(model, steps, false)?;
+    println!("trained {model}: {} params ({} fp16)", m.n_params(), human_bytes(m.nbytes_fp16()));
+    Ok(())
+}
+
+/// Shared pipeline: load → calibrate → allocate → quantize.
+fn compress(
+    model_name: &str,
+    avg_bits: f64,
+    steps: usize,
+) -> Result<(mcsharp::moe::MoeModel, QuantModel)> {
+    let cfg = ModelConfig::load(model_name)?;
+    let base = train_or_load(model_name, steps, true)?;
+    let kind = if cfg.modalities > 1 { CorpusKind::Multimodal } else { CorpusKind::General };
+    let corpus = Corpus::new(kind, 0xDA7A);
+    let mut rng = Rng::new(0xCA11B);
+    let calib = corpus.batch(8, 64, &mut rng);
+    let cal = calibrate(&base, &calib, 256);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let alloc =
+        strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, avg_bits, &mut rng);
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    Ok((base, q))
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mix-tiny");
+    let bits = args.f64_or("bits", 2.0)?;
+    let steps = args.usize_or("steps", 300)?;
+    let (base, q) = compress(model, bits, steps)?;
+    if let Some(out) = args.get("out") {
+        mcsharp::quant::qcheckpoint::save(&q, out)?;
+        println!("wrote quantized checkpoint {out} ({})", human_bytes(std::fs::metadata(out)?.len()));
+    }
+    println!("PMQ allocation for {model} (avg expert bits target {bits}):");
+    for (l, row) in q.allocation.iter().enumerate() {
+        let row_s: Vec<String> = row.iter().map(|b| b.to_string()).collect();
+        println!("  layer {l:>2}: [{}]", row_s.join(" "));
+    }
+    println!(
+        "avg expert bits {:.2} | model bits {:.2} | packed {} (fp16 {}) | {:.1}x smaller",
+        q.avg_expert_bits(),
+        q.avg_model_bits(),
+        human_bytes(q.nbytes()),
+        human_bytes(base.nbytes_fp16()),
+        base.nbytes_fp16() as f64 / q.nbytes() as f64
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mix-tiny");
+    let bits = args.f64_or("bits", 2.0)?;
+    let steps = args.usize_or("steps", 300)?;
+    let items = args.usize_or("items", 30)?;
+    let (base, q) = compress(model, bits, steps)?;
+    let tasks = lm_suite::build(items, 0xBEEF);
+    let (rows, avg) = score_suite(&base, &mut EvalOpts::default(), &tasks);
+    println!("fp16   : avg {avg:.2}%  ({})", fmt_rows(&rows));
+    let mut opts = EvalOpts { provider: Some(&q), ..Default::default() };
+    let (rows, avg_q) = score_suite(&q.model, &mut opts, &tasks);
+    println!("PMQ    : avg {avg_q:.2}%  ({})", fmt_rows(&rows));
+    if args.has("otp") {
+        let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+        let mut rng = Rng::new(9);
+        let seqs = corpus.batch(8, 48, &mut rng);
+        let oc = OtpConfig { lambda: args.f64_or("lambda", 1.0)? as f32, ..Default::default() };
+        let rep = train_otp(&q, &seqs, &oc, 0xF00D);
+        let mut pruner = OtpPruner { routers: rep.routers };
+        let mut counter = (0u64, 0u64);
+        let mut opts = EvalOpts {
+            provider: Some(&q),
+            pruner: Some(&mut pruner),
+            pruning_counter: Some(&mut counter),
+        };
+        let (rows, avg_o) = score_suite(&q.model, &mut opts, &tasks);
+        let ratio = 1.0 - counter.0 as f64 / counter.1.max(1) as f64;
+        println!(
+            "PMQ+OTP: avg {avg_o:.2}%  (pruned {:.1}%)  ({})",
+            100.0 * ratio,
+            fmt_rows(&rows)
+        );
+    }
+    Ok(())
+}
+
+fn fmt_rows(rows: &[(String, f64)]) -> String {
+    rows.iter().map(|(n, v)| format!("{n} {v:.1}")).collect::<Vec<_>>().join(", ")
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mix-tiny");
+    let port = args.usize_or("port", 7077)?;
+    let steps = args.usize_or("steps", 300)?;
+    let bits = args.f64_or("bits", 2.0)?;
+    let max_requests = args.usize_or("max-requests", 0)?;
+    // `--qckpt path` serves straight from a pre-compressed checkpoint —
+    // the paper's pre-loading deployment story (no calibration at boot)
+    let q = if let Some(path) = args.get("qckpt") {
+        println!("loading quantized checkpoint {path}");
+        mcsharp::quant::qcheckpoint::load(path)?
+    } else {
+        compress(model, bits, steps)?.1
+    };
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    println!("serving {model} (PMQ {:.2}-bit) on 127.0.0.1:{port}", q.avg_model_bits());
+    let max = if max_requests == 0 { None } else { Some(max_requests) };
+    if args.has("pjrt") {
+        let rt = mcsharp::runtime::Runtime::open_default()?;
+        let be = PjrtBackend::new(&rt, &q, true)?;
+        let engine =
+            std::sync::Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
+        let n = server::serve(listener, &engine, 8, max)?;
+        println!("served {n} requests (pjrt backend)");
+    } else {
+        let be = NativeBackend::quant(&q);
+        let engine =
+            std::sync::Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
+        let n = server::serve(listener, &engine, 8, max)?;
+        println!("served {n} requests (native backend)");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let only = args.get("model");
+    println!(
+        "{:<10} {:>12} {:>14} {:>8} {:>6} {:>4} {:>3} {:>7}",
+        "model", "params", "act-params", "layers", "H", "E", "k", "shared"
+    );
+    for name in MODEL_ZOO {
+        if let Some(o) = only {
+            if o != *name {
+                continue;
+            }
+        }
+        let c = ModelConfig::load(name)?;
+        println!(
+            "{:<10} {:>12} {:>14} {:>8} {:>6} {:>4} {:>3} {:>7}",
+            name,
+            c.total_params(),
+            c.activated_params(),
+            c.n_layers,
+            c.d_model,
+            c.n_experts,
+            c.top_k,
+            c.n_shared_experts
+        );
+    }
+    Ok(())
+}

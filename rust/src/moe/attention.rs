@@ -1,0 +1,229 @@
+//! Multi-head causal self-attention with RoPE.
+//!
+//! Two paths share the same weights:
+//! * [`Attention::forward`] — full-sequence (training / PPL / calibration);
+//! * [`Attention::forward_step`] — single-position decode against a
+//!   [`KvCache`] (the serving hot path).
+//!
+//! A property test asserts the two are numerically identical.
+
+use crate::tensor::{softmax, Tensor2};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Attention {
+    pub wq: Tensor2,
+    pub wk: Tensor2,
+    pub wv: Tensor2,
+    pub wo: Tensor2,
+    pub n_heads: usize,
+    pub rope_theta: f32,
+}
+
+/// Per-sequence KV cache: K and V rows appended per decoded position.
+#[derive(Clone, Debug, Default)]
+pub struct KvCache {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn len(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty()
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|r| (r.len() * 4) as u64)
+            .sum()
+    }
+}
+
+/// Apply RoPE in place to one `[H]` row at position `pos` (per head).
+pub fn rope(x: &mut [f32], pos: usize, n_heads: usize, theta: f32) {
+    let d_head = x.len() / n_heads;
+    for h in 0..n_heads {
+        let base = h * d_head;
+        let mut i = 0;
+        while i + 1 < d_head {
+            let freq = 1.0 / theta.powf(i as f32 / d_head as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let (a, b) = (x[base + i], x[base + i + 1]);
+            x[base + i] = a * cos - b * sin;
+            x[base + i + 1] = a * sin + b * cos;
+            i += 2;
+        }
+    }
+}
+
+impl Attention {
+    pub fn new(d_model: usize, n_heads: usize, rope_theta: f32, rng: &mut Rng) -> Attention {
+        let s = 1.0 / (d_model as f32).sqrt();
+        Attention {
+            wq: Tensor2::randn(d_model, d_model, rng, s),
+            wk: Tensor2::randn(d_model, d_model, rng, s),
+            wv: Tensor2::randn(d_model, d_model, rng, s),
+            wo: Tensor2::randn(d_model, d_model, rng, s),
+            n_heads,
+            rope_theta,
+        }
+    }
+
+    /// Full-sequence causal attention over `x [T, H]` starting at absolute
+    /// position `pos0` (0 for training).
+    pub fn forward(&self, x: &Tensor2, pos0: usize) -> Tensor2 {
+        let (t, h) = (x.rows, x.cols);
+        let d_head = h / self.n_heads;
+        let scale = 1.0 / (d_head as f32).sqrt();
+        let mut q = x.matmul(&self.wq);
+        let mut k = x.matmul(&self.wk);
+        let v = x.matmul(&self.wv);
+        for i in 0..t {
+            rope(q.row_mut(i), pos0 + i, self.n_heads, self.rope_theta);
+            rope(k.row_mut(i), pos0 + i, self.n_heads, self.rope_theta);
+        }
+        let mut ctx = Tensor2::zeros(t, h);
+        let mut scores = vec![0.0f32; t];
+        for head in 0..self.n_heads {
+            let base = head * d_head;
+            for i in 0..t {
+                let qi = &q.row(i)[base..base + d_head];
+                for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
+                    let kj = &k.row(j)[base..base + d_head];
+                    *s = qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                softmax(&mut scores[..i + 1]);
+                let orow = ctx.row_mut(i);
+                for j in 0..=i {
+                    let w = scores[j];
+                    let vj = &v.row(j)[base..base + d_head];
+                    for (d, &vv) in vj.iter().enumerate() {
+                        orow[base + d] += w * vv;
+                    }
+                }
+            }
+        }
+        ctx.matmul(&self.wo)
+    }
+
+    /// Single-token decode: append this position's K/V to `cache`, attend
+    /// over the whole cache. `x` is the `[H]` input row at absolute
+    /// position `cache.len()`.
+    pub fn forward_step(&self, x: &[f32], cache: &mut KvCache) -> Vec<f32> {
+        let h = x.len();
+        let d_head = h / self.n_heads;
+        let scale = 1.0 / (d_head as f32).sqrt();
+        let pos = cache.len();
+        let mut q = mat_vec(&self.wq, x);
+        let mut k = mat_vec(&self.wk, x);
+        let v = mat_vec(&self.wv, x);
+        rope(&mut q, pos, self.n_heads, self.rope_theta);
+        rope(&mut k, pos, self.n_heads, self.rope_theta);
+        cache.k.push(k);
+        cache.v.push(v);
+        let t = cache.len();
+        let mut ctx = vec![0.0f32; h];
+        let mut scores = vec![0.0f32; t];
+        for head in 0..self.n_heads {
+            let base = head * d_head;
+            let qh = &q[base..base + d_head];
+            for j in 0..t {
+                let kj = &cache.k[j][base..base + d_head];
+                scores[j] = qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            softmax(&mut scores[..t]);
+            for j in 0..t {
+                let w = scores[j];
+                let vj = &cache.v[j][base..base + d_head];
+                for (d, &vv) in vj.iter().enumerate() {
+                    ctx[base + d] += w * vv;
+                }
+            }
+        }
+        mat_vec(&self.wo, &ctx)
+    }
+
+    pub fn n_params(&self) -> usize {
+        4 * self.wq.data.len()
+    }
+}
+
+/// `w^T`-free row-major mat-vec: `y[j] = Σ_k x[k] * w[k, j]`.
+pub fn mat_vec(w: &Tensor2, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; w.cols];
+    for (k, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        crate::tensor::axpy(xk, w.row(k), &mut y);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn step_matches_full_sequence() {
+        prop::for_all(51, 10, |rng, _| {
+            let (h, heads, t) = (32, 4, 1 + rng.below(12));
+            let attn = Attention::new(h, heads, 10_000.0, rng);
+            let x = Tensor2::randn(t, h, rng, 1.0);
+            let full = attn.forward(&x, 0);
+            let mut cache = KvCache::default();
+            for i in 0..t {
+                let step = attn.forward_step(x.row(i), &mut cache);
+                for (a, b) in step.iter().zip(full.row(i)) {
+                    assert!((a - b).abs() < 1e-4, "pos {i}: {a} vs {b}");
+                }
+            }
+            assert_eq!(cache.len(), t);
+        });
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(5);
+        let mut x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope(&mut x, 17, 4, 10_000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut rng = Rng::new(6);
+        let x0: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let mut x = x0.clone();
+        rope(&mut x, 0, 2, 10_000.0);
+        for (a, b) in x.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causal_prefix_invariance() {
+        // output at position i must not depend on tokens after i
+        let mut rng = Rng::new(7);
+        let attn = Attention::new(16, 2, 10_000.0, &mut rng);
+        let x = Tensor2::randn(6, 16, &mut rng, 1.0);
+        let full = attn.forward(&x, 0);
+        let prefix = Tensor2::from_vec(3, 16, x.data[..3 * 16].to_vec());
+        let part = attn.forward(&prefix, 0);
+        for i in 0..3 {
+            for (a, b) in part.row(i).iter().zip(full.row(i)) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+}

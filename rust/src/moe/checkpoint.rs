@@ -1,0 +1,200 @@
+//! Checkpoint format: a JSON header (config + tensor directory) followed
+//! by raw little-endian f32 payloads, so checkpoints stream without an
+//! allocation-heavy parse. Written by the trainer, read by every example
+//! and bench.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor2;
+use crate::util::json::{self, Value};
+
+use super::attention::Attention;
+use super::expert::Expert;
+use super::model::{Block, MoeModel};
+
+const MAGIC: &[u8; 8] = b"MCSHARP1";
+
+fn write_tensor(w: &mut impl Write, t: &Tensor2) -> Result<()> {
+    for &v in &t.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_vec(w: &mut impl Write, v: &[f32]) -> Result<()> {
+    for &x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_tensor(r: &mut impl Read, rows: usize, cols: usize) -> Result<Tensor2> {
+    Ok(Tensor2::from_vec(rows, cols, read_f32s(r, rows * cols)?))
+}
+
+fn config_json(c: &ModelConfig) -> Value {
+    json::obj(vec![
+        ("name", json::s(&c.name)),
+        ("family", json::s(&c.family)),
+        ("vocab_size", json::num(c.vocab_size as f64)),
+        ("d_model", json::num(c.d_model as f64)),
+        ("n_layers", json::num(c.n_layers as f64)),
+        ("n_heads", json::num(c.n_heads as f64)),
+        ("d_ff", json::num(c.d_ff as f64)),
+        ("n_experts", json::num(c.n_experts as f64)),
+        ("top_k", json::num(c.top_k as f64)),
+        ("n_shared_experts", json::num(c.n_shared_experts as f64)),
+        ("max_seq_len", json::num(c.max_seq_len as f64)),
+        ("rope_theta", json::num(c.rope_theta as f64)),
+        ("modalities", json::num(c.modalities as f64)),
+        (
+            "buckets",
+            Value::Arr(c.buckets.iter().map(|&b| json::num(b as f64)).collect()),
+        ),
+    ])
+}
+
+pub fn save(model: &MoeModel, path: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    let header = config_json(&model.cfg).to_json();
+    w.write_all(&(header.len() as u64).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    write_tensor(&mut w, &model.embed)?;
+    for b in &model.blocks {
+        write_vec(&mut w, &b.attn_norm)?;
+        write_tensor(&mut w, &b.attn.wq)?;
+        write_tensor(&mut w, &b.attn.wk)?;
+        write_tensor(&mut w, &b.attn.wv)?;
+        write_tensor(&mut w, &b.attn.wo)?;
+        write_vec(&mut w, &b.moe_norm)?;
+        write_tensor(&mut w, &b.gate)?;
+        for e in b.experts.iter().chain(&b.shared) {
+            write_tensor(&mut w, &e.wg)?;
+            write_tensor(&mut w, &e.wu)?;
+            write_tensor(&mut w, &e.wd)?;
+        }
+    }
+    write_vec(&mut w, &model.final_norm)?;
+    write_tensor(&mut w, &model.lm_head)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &str) -> Result<MoeModel> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path}: not an MC# checkpoint");
+    }
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let mut header = vec![0u8; u64::from_le_bytes(len) as usize];
+    r.read_exact(&mut header)?;
+    let cfg = ModelConfig::from_json(&Value::parse(std::str::from_utf8(&header)?)?)?;
+    let h = cfg.d_model;
+    let embed = read_tensor(&mut r, cfg.vocab_size, h)?;
+    let mut blocks = Vec::new();
+    for _ in 0..cfg.n_layers {
+        let attn_norm = read_f32s(&mut r, h)?;
+        let wq = read_tensor(&mut r, h, h)?;
+        let wk = read_tensor(&mut r, h, h)?;
+        let wv = read_tensor(&mut r, h, h)?;
+        let wo = read_tensor(&mut r, h, h)?;
+        let moe_norm = read_f32s(&mut r, h)?;
+        let gate = read_tensor(&mut r, h, cfg.n_experts)?;
+        let read_expert = |r: &mut BufReader<std::fs::File>| -> Result<Expert> {
+            Ok(Expert {
+                wg: read_tensor(r, h, cfg.d_ff)?,
+                wu: read_tensor(r, h, cfg.d_ff)?,
+                wd: read_tensor(r, cfg.d_ff, h)?,
+            })
+        };
+        let experts: Vec<Expert> = (0..cfg.n_experts)
+            .map(|_| read_expert(&mut r))
+            .collect::<Result<_>>()?;
+        let shared: Vec<Expert> = (0..cfg.n_shared_experts)
+            .map(|_| read_expert(&mut r))
+            .collect::<Result<_>>()?;
+        blocks.push(Block {
+            attn_norm,
+            attn: Attention {
+                wq,
+                wk,
+                wv,
+                wo,
+                n_heads: cfg.n_heads,
+                rope_theta: cfg.rope_theta,
+            },
+            moe_norm,
+            gate,
+            experts,
+            shared,
+        });
+    }
+    let final_norm = read_f32s(&mut r, h)?;
+    let lm_head = read_tensor(&mut r, h, cfg.vocab_size)?;
+    Ok(MoeModel { cfg, embed, blocks, final_norm, lm_head })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let cfg = ModelConfig {
+            name: "ckpt-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            n_experts: 3,
+            top_k: 2,
+            n_shared_experts: 1,
+            max_seq_len: 32,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4, 16],
+        };
+        let m = MoeModel::new(&cfg, 99);
+        let path = std::env::temp_dir().join("mcsharp_ckpt_test.bin");
+        let path = path.to_str().unwrap();
+        save(&m, path).unwrap();
+        let m2 = load(path).unwrap();
+        assert_eq!(m2.cfg, cfg);
+        let toks = [1u16, 5, 9, 30];
+        let a = m.forward(&toks);
+        let b = m2.forward(&toks);
+        assert_eq!(a.data, b.data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("mcsharp_badmagic.bin");
+        std::fs::write(&path, b"NOTMAGIC........").unwrap();
+        assert!(load(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

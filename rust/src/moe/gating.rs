@@ -1,0 +1,87 @@
+//! Top-k softmax routing (paper Eq. 1).
+//!
+//! `route` returns the top-k experts for one token, **rank-sorted by
+//! routing weight descending** and renormalized to sum to 1 — the same
+//! ordering contract the OTP candidate masks C_k rely on (Eq. 10 prunes
+//! from the lowest-ranked expert upward).
+
+use crate::tensor::{softmax, top_k_indices, Tensor2};
+
+/// Routing decision for one token.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Route {
+    /// Expert indices, rank-sorted by weight descending, length k.
+    pub experts: Vec<usize>,
+    /// Renormalized weights aligned with `experts`, summing to 1.
+    pub weights: Vec<f32>,
+    /// Full softmax scores over all experts (needed by stats & aux loss).
+    pub scores: Vec<f32>,
+}
+
+/// Route one token `x` through gate matrix `[H, E]`.
+pub fn route(x: &[f32], gate: &Tensor2, k: usize) -> Route {
+    let e = gate.cols;
+    let mut scores = vec![0.0f32; e];
+    for (kk, &xk) in x.iter().enumerate() {
+        if xk == 0.0 {
+            continue;
+        }
+        let row = gate.row(kk);
+        for j in 0..e {
+            scores[j] += xk * row[j];
+        }
+    }
+    softmax(&mut scores);
+    let experts = top_k_indices(&scores, k);
+    let mut weights: Vec<f32> = experts.iter().map(|&i| scores[i]).collect();
+    let sum: f32 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= sum;
+    }
+    Route { experts, weights, scores }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn weights_sorted_and_normalized() {
+        prop::for_all(41, 30, |rng, _| {
+            let (h, e) = (16, 2 + rng.below(14));
+            let k = 1 + rng.below(e.min(6));
+            let gate = Tensor2::randn(h, e, rng, 1.0);
+            let x: Vec<f32> = (0..h).map(|_| rng.normal()).collect();
+            let r = route(&x, &gate, k);
+            assert_eq!(r.experts.len(), k);
+            assert!((r.weights.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            for w in r.weights.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6, "not rank-sorted");
+            }
+            // experts unique
+            let mut uniq = r.experts.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), k);
+            // scores form a distribution
+            assert!((r.scores.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn picks_argmax_expert_first() {
+        let mut rng = Rng::new(42);
+        let gate = Tensor2::randn(8, 4, &mut rng, 1.0);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let r = route(&x, &gate, 2);
+        let best = r
+            .scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(r.experts[0], best);
+    }
+}

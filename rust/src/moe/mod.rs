@@ -1,0 +1,20 @@
+//! The MoE decoder model substrate (Mixtral / DeepSeek-VL2 analog).
+//!
+//! Decoder-only transformer where every FFN is an MoE layer: softmax
+//! top-k routing over `E` experts plus always-on shared experts
+//! (paper Eq. 1). This module owns the f32 weights and the full-sequence
+//! forward used by training, calibration and perplexity evaluation; the
+//! serving decode path (KV cache, batching, quantized/PJRT execution)
+//! lives in `backend`/`coordinator`.
+
+pub mod attention;
+pub mod checkpoint;
+pub mod expert;
+pub mod gating;
+pub mod model;
+pub mod stats;
+
+pub use expert::Expert;
+pub use gating::route;
+pub use model::{ExpertId, ExpertProvider, ForwardOpts, MoeModel, Pruner};
+pub use stats::RoutingStats;

@@ -1,0 +1,339 @@
+//! The full MoE decoder: embedding → N × (attention + MoE FFN) → head.
+//!
+//! `forward_opts` is the single full-sequence forward shared by training
+//! -adjacent code paths (PPL eval, calibration, ε-table construction,
+//! OTP distillation). Hooks:
+//!
+//! * [`ForwardOpts::stats`] — collect routing statistics (PMQ §3.2.2);
+//! * [`ForwardOpts::provider`] — substitute expert execution (quantized
+//!   experts, single-expert-quantized ε probes, PJRT execution);
+//! * [`ForwardOpts::pruner`] — drop low-rank experts per token (OTP/ODP).
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::tensor::{rmsnorm, Tensor2};
+use crate::util::rng::Rng;
+
+use super::attention::{mat_vec, Attention};
+use super::expert::Expert;
+use super::gating::{route, Route};
+use super::stats::RoutingStats;
+
+/// Identifies an expert within a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExpertId {
+    Routed(usize),
+    Shared(usize),
+}
+
+/// Pluggable expert execution (native f32, quantized, PJRT, ε-probe...).
+pub trait ExpertProvider {
+    /// Compute `out += w * F_e(x)` for expert `id` in `layer`.
+    fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]);
+}
+
+/// Token-wise dynamic expert pruning (OTP learnable router, ODP rule,
+/// random baseline). Returns how many of the rank-sorted top-k experts to
+/// KEEP (1..=k).
+pub trait Pruner {
+    fn keep(&mut self, layer: usize, x: &[f32], route: &Route) -> usize;
+}
+
+#[derive(Default)]
+pub struct ForwardOpts<'a> {
+    pub stats: Option<&'a mut RoutingStats>,
+    pub provider: Option<&'a dyn ExpertProvider>,
+    pub pruner: Option<&'a mut dyn Pruner>,
+    /// Accumulates (kept, k) pairs per token-layer for pruning-ratio
+    /// accounting (Table 6).
+    pub pruning_counter: Option<&'a mut (u64, u64)>,
+    /// Capture per-layer MoE inputs (post-norm token rows) for PMQ
+    /// calibration: `capture[layer].push(x)`. Must be pre-sized to
+    /// `n_layers` empty vecs.
+    pub capture_moe_inputs: Option<&'a mut Vec<Vec<Vec<f32>>>>,
+}
+
+pub struct Block {
+    pub attn_norm: Vec<f32>,
+    pub attn: Attention,
+    pub moe_norm: Vec<f32>,
+    pub gate: Tensor2,
+    pub experts: Vec<Expert>,
+    pub shared: Vec<Expert>,
+}
+
+pub struct MoeModel {
+    pub cfg: ModelConfig,
+    pub embed: Tensor2,
+    pub blocks: Vec<Block>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Tensor2,
+}
+
+impl MoeModel {
+    /// Random init from a seed (deterministic).
+    pub fn new(cfg: &ModelConfig, seed: u64) -> MoeModel {
+        let mut rng = Rng::new(seed);
+        let h = cfg.d_model;
+        let blocks = (0..cfg.n_layers)
+            .map(|_| Block {
+                attn_norm: vec![1.0; h],
+                attn: Attention::new(h, cfg.n_heads, cfg.rope_theta, &mut rng),
+                moe_norm: vec![1.0; h],
+                gate: Tensor2::randn(h, cfg.n_experts, &mut rng, 1.0 / (h as f32).sqrt()),
+                experts: (0..cfg.n_experts).map(|_| Expert::new(h, cfg.d_ff, &mut rng)).collect(),
+                shared: (0..cfg.n_shared_experts)
+                    .map(|_| Expert::new(h, cfg.d_ff, &mut rng))
+                    .collect(),
+            })
+            .collect();
+        MoeModel {
+            cfg: cfg.clone(),
+            embed: Tensor2::randn(cfg.vocab_size, h, &mut rng, 0.02),
+            blocks,
+            final_norm: vec![1.0; h],
+            lm_head: Tensor2::randn(h, cfg.vocab_size, &mut rng, 1.0 / (h as f32).sqrt()),
+        }
+    }
+
+    /// Full-sequence forward → logits `[T, V]`.
+    pub fn forward(&self, tokens: &[u16]) -> Tensor2 {
+        self.forward_opts(tokens, &mut ForwardOpts::default())
+    }
+
+    pub fn forward_opts(&self, tokens: &[u16], opts: &mut ForwardOpts) -> Tensor2 {
+        let h = self.cfg.d_model;
+        let t = tokens.len();
+        let mut x = Tensor2::zeros(t, h);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let mut normed = Tensor2::zeros(t, h);
+        for (l, block) in self.blocks.iter().enumerate() {
+            // attention sub-layer
+            for i in 0..t {
+                rmsnorm(x.row(i), &block.attn_norm, normed.row_mut(i));
+            }
+            let attn_out = block.attn.forward(&normed, 0);
+            x.add_assign(&attn_out);
+            // MoE sub-layer
+            for i in 0..t {
+                rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
+            }
+            for i in 0..t {
+                let xin = normed.row(i).to_vec();
+                let mut acc = vec![0.0f32; h];
+                self.moe_token(l, block, &xin, opts, &mut acc);
+                let xr = x.row_mut(i);
+                for (a, o) in xr.iter_mut().zip(&acc) {
+                    *a += o;
+                }
+                if l == 0 {
+                    if let Some(stats) = opts.stats.as_deref_mut() {
+                        stats.bump_tokens();
+                    }
+                }
+            }
+        }
+        let mut logits = Tensor2::zeros(t, self.cfg.vocab_size);
+        for i in 0..t {
+            rmsnorm(x.row(i), &self.final_norm, normed.row_mut(i));
+            let row = mat_vec(&self.lm_head, normed.row(i));
+            logits.row_mut(i).copy_from_slice(&row);
+        }
+        logits
+    }
+
+    /// One token through one MoE layer (shared across full & decode paths).
+    pub fn moe_token(
+        &self,
+        layer: usize,
+        block: &Block,
+        xin: &[f32],
+        opts: &mut ForwardOpts,
+        acc: &mut [f32],
+    ) {
+        if let Some(cap) = opts.capture_moe_inputs.as_deref_mut() {
+            cap[layer].push(xin.to_vec());
+        }
+        let r = route(xin, &block.gate, self.cfg.top_k);
+        let keep = match opts.pruner.as_deref_mut() {
+            Some(p) => p.keep(layer, xin, &r).clamp(1, r.experts.len()),
+            None => r.experts.len(),
+        };
+        if let Some(counter) = opts.pruning_counter.as_deref_mut() {
+            counter.0 += keep as u64;
+            counter.1 += r.experts.len() as u64;
+        }
+        // renormalize kept weights (pruned experts' mass is redistributed)
+        let wsum: f32 = r.weights[..keep].iter().sum();
+        for rank in 0..keep {
+            let e = r.experts[rank];
+            let w = r.weights[rank] / wsum;
+            if let Some(stats) = opts.stats.as_deref_mut() {
+                stats.record(layer, e, r.weights[rank]);
+            }
+            match opts.provider {
+                Some(p) => p.expert_ffn_acc(layer, ExpertId::Routed(e), xin, w, acc),
+                None => block.experts[e].ffn_row_acc(xin, w, acc),
+            }
+        }
+        for (s, shared) in block.shared.iter().enumerate() {
+            match opts.provider {
+                Some(p) => p.expert_ffn_acc(layer, ExpertId::Shared(s), xin, 1.0, acc),
+                None => shared.ffn_row_acc(xin, 1.0, acc),
+            }
+        }
+    }
+
+    /// Mean cross-entropy (nats/token) of next-token prediction.
+    pub fn nll(&self, tokens: &[u16], opts: &mut ForwardOpts) -> f64 {
+        let logits = self.forward_opts(tokens, opts);
+        nll_from_logits(&logits, tokens)
+    }
+
+    /// Perplexity over a set of sequences.
+    pub fn perplexity(&self, seqs: &[Vec<u16>], opts: &mut ForwardOpts) -> f64 {
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for s in seqs {
+            total += self.nll(s, opts) * (s.len() - 1) as f64;
+            count += s.len() - 1;
+        }
+        (total / count.max(1) as f64).exp()
+    }
+
+    pub fn n_params(&self) -> usize {
+        let mut n = self.embed.data.len() + self.lm_head.data.len() + self.final_norm.len();
+        for b in &self.blocks {
+            n += b.attn.n_params() + b.attn_norm.len() + b.moe_norm.len() + b.gate.data.len();
+            n += b.experts.iter().map(|e| e.n_params()).sum::<usize>();
+            n += b.shared.iter().map(|e| e.n_params()).sum::<usize>();
+        }
+        n
+    }
+
+    /// f16-equivalent parameter bytes (the paper reports 16-bit params).
+    pub fn nbytes_fp16(&self) -> u64 {
+        (self.n_params() * 2) as u64
+    }
+
+    pub fn load(path: &str) -> Result<MoeModel> {
+        super::checkpoint::load(path)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        super::checkpoint::save(self, path)
+    }
+}
+
+/// Mean next-token cross-entropy from `[T, V]` logits.
+pub fn nll_from_logits(logits: &Tensor2, tokens: &[u16]) -> f64 {
+    let t = tokens.len();
+    let mut total = 0.0f64;
+    for i in 0..t - 1 {
+        let row = logits.row(i);
+        let target = tokens[i + 1] as usize;
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+        total += (lse - row[target]) as f64;
+    }
+    total / (t - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 48,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 1,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = MoeModel::new(&tiny_cfg(), 1);
+        let logits = m.forward(&[1, 17, 20, 33, 5]);
+        assert_eq!((logits.rows, logits.cols), (5, 64));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn stats_collected() {
+        let m = MoeModel::new(&tiny_cfg(), 1);
+        let mut stats = RoutingStats::new(2, 4);
+        let mut opts = ForwardOpts { stats: Some(&mut stats), ..Default::default() };
+        m.forward_opts(&[1, 17, 20, 33, 5, 40, 41, 42], &mut opts);
+        assert_eq!(stats.tokens, 8);
+        // every token activates exactly top_k experts per layer
+        let layer0: u64 = (0..4).map(|e| stats.counts[e]).sum();
+        assert_eq!(layer0, 8 * 2);
+    }
+
+    #[test]
+    fn pruner_reduces_activation() {
+        struct KeepOne;
+        impl Pruner for KeepOne {
+            fn keep(&mut self, _l: usize, _x: &[f32], _r: &Route) -> usize {
+                1
+            }
+        }
+        let m = MoeModel::new(&tiny_cfg(), 1);
+        let mut counter = (0u64, 0u64);
+        let mut p = KeepOne;
+        let mut opts = ForwardOpts {
+            pruner: Some(&mut p),
+            pruning_counter: Some(&mut counter),
+            ..Default::default()
+        };
+        let out = m.forward_opts(&[1, 17, 20, 33], &mut opts);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        assert_eq!(counter.0, 4 * 2); // kept 1 of 2 per token-layer
+        assert_eq!(counter.1, 4 * 2 * 2);
+    }
+
+    #[test]
+    fn provider_substitution_changes_nothing_when_identical() {
+        struct Mirror<'a>(&'a MoeModel);
+        impl ExpertProvider for Mirror<'_> {
+            fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]) {
+                let b = &self.0.blocks[layer];
+                match id {
+                    ExpertId::Routed(e) => b.experts[e].ffn_row_acc(x, w, out),
+                    ExpertId::Shared(s) => b.shared[s].ffn_row_acc(x, w, out),
+                }
+            }
+        }
+        let m = MoeModel::new(&tiny_cfg(), 2);
+        let toks = [1u16, 17, 20, 33, 60];
+        let base = m.forward(&toks);
+        let mirror = Mirror(&m);
+        let mut opts = ForwardOpts { provider: Some(&mirror), ..Default::default() };
+        let got = m.forward_opts(&toks, &mut opts);
+        for (a, b) in got.data.iter().zip(&base.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nll_of_uniform_logits_is_log_v() {
+        let logits = Tensor2::zeros(3, 64);
+        let nll = nll_from_logits(&logits, &[1, 2, 3]);
+        assert!((nll - (64f64).ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,123 @@
+//! Routing statistics collected during calibration forward passes —
+//! the raw material for PMQ's significance factors (paper §3.2.2):
+//! activation frequency `φ_i = n_i / N` and mean routing weight
+//! `w_i = Σ σ_j / N` per (layer, expert), exactly the quantities the
+//! Fig. 4/5 heatmaps plot.
+
+#[derive(Clone, Debug)]
+pub struct RoutingStats {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Activation counts per (layer, expert).
+    pub counts: Vec<u64>,
+    /// Sum of routing weights per (layer, expert) over *all* tokens.
+    pub weight_sums: Vec<f64>,
+    /// Total routed tokens (per layer each token routes once).
+    pub tokens: u64,
+}
+
+impl RoutingStats {
+    pub fn new(n_layers: usize, n_experts: usize) -> RoutingStats {
+        RoutingStats {
+            n_layers,
+            n_experts,
+            counts: vec![0; n_layers * n_experts],
+            weight_sums: vec![0.0; n_layers * n_experts],
+            tokens: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, layer: usize, expert: usize, weight: f32) {
+        let i = layer * self.n_experts + expert;
+        self.counts[i] += 1;
+        self.weight_sums[i] += weight as f64;
+    }
+
+    /// Called once per token (after all layers recorded). We count tokens
+    /// layer-independently, so record layer 0's visit.
+    #[inline]
+    pub fn bump_tokens(&mut self) {
+        self.tokens += 1;
+    }
+
+    /// Activation frequency φ for (layer, expert).
+    pub fn frequency(&self, layer: usize, expert: usize) -> f64 {
+        if self.tokens == 0 {
+            return 0.0;
+        }
+        self.counts[layer * self.n_experts + expert] as f64 / self.tokens as f64
+    }
+
+    /// Mean routing weight w for (layer, expert) (averaged over all
+    /// tokens, activated or not — matching the paper's Σσ/N).
+    pub fn mean_weight(&self, layer: usize, expert: usize) -> f64 {
+        if self.tokens == 0 {
+            return 0.0;
+        }
+        self.weight_sums[layer * self.n_experts + expert] / self.tokens as f64
+    }
+
+    /// Gini-style imbalance of activation counts in one layer — used to
+    /// quantify the LLM-vs-VLM imbalance claim (Fig. 5).
+    pub fn layer_imbalance(&self, layer: usize) -> f64 {
+        let row: Vec<f64> = (0..self.n_experts)
+            .map(|e| self.counts[layer * self.n_experts + e] as f64)
+            .collect();
+        gini(&row)
+    }
+
+    pub fn mean_imbalance(&self) -> f64 {
+        (0..self.n_layers).map(|l| self.layer_imbalance(l)).sum::<f64>() / self.n_layers as f64
+    }
+}
+
+/// Gini coefficient of a non-negative vector (0 = perfectly even).
+pub fn gini(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sum: f64 = sorted.iter().sum();
+    if sum == 0.0 {
+        return 0.0;
+    }
+    let mut cum = 0.0;
+    let mut b = 0.0;
+    for &x in &sorted {
+        cum += x;
+        b += cum;
+    }
+    (n as f64 + 1.0 - 2.0 * b / sum) / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequency_and_weight() {
+        let mut s = RoutingStats::new(2, 4);
+        for _ in 0..10 {
+            s.bump_tokens();
+            s.record(0, 1, 0.6);
+            s.record(0, 2, 0.4);
+            s.record(1, 0, 1.0);
+        }
+        assert!((s.frequency(0, 1) - 1.0).abs() < 1e-9);
+        assert!((s.frequency(0, 3) - 0.0).abs() < 1e-9);
+        // f32 weights accumulate into f64 sums: allow f32 rounding
+        assert!((s.mean_weight(0, 2) - 0.4).abs() < 1e-6);
+        assert!((s.mean_weight(1, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gini_bounds() {
+        assert!(gini(&[1.0, 1.0, 1.0, 1.0]) < 1e-9);
+        assert!(gini(&[0.0, 0.0, 0.0, 10.0]) > 0.7);
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! The nested top-any candidate set C_k (paper Eq. 10).
+//!
+//! Candidate `c` keeps the first `k - c` rank-sorted experts; `|C| = k`,
+//! so candidate 0 prunes nothing and candidate k-1 keeps only the top
+//! expert. Must match `python/compile/kernels/ref.py::candidate_masks`.
+
+/// Row-major `[k, k]` candidate matrix: `C[c][r] = 1` iff rank `r` is
+/// kept by candidate `c`.
+pub fn candidate_masks(k: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|c| (0..k).map(|r| if r < k - c { 1.0 } else { 0.0 }).collect())
+        .collect()
+}
+
+/// Number of experts candidate `c` keeps.
+pub fn keep_of_candidate(k: usize, c: usize) -> usize {
+    k - c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_eq10_for_k6() {
+        let c = candidate_masks(6);
+        assert_eq!(c[0], vec![1.0; 6]);
+        assert_eq!(c[1], vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(c[5], vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn nested_and_keep_counts() {
+        for k in 1..=8 {
+            let c = candidate_masks(k);
+            assert_eq!(c.len(), k);
+            for (ci, row) in c.iter().enumerate() {
+                let kept: usize = row.iter().map(|&v| v as usize).sum();
+                assert_eq!(kept, keep_of_candidate(k, ci));
+                // masks are monotone non-increasing across ranks
+                for w in row.windows(2) {
+                    assert!(w[0] >= w[1]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! OTP — Online Top-any Pruning (paper §3.4).
+//!
+//! A tiny learnable router per MoE layer picks, per token, one of the
+//! nested candidate masks `C_k` over the rank-sorted top-k experts
+//! (Eq. 10). Training samples masks through Gumbel-Softmax (Eq. 12–13)
+//! against a distillation + λ·ℓ1-sparsity objective (Eq. 14); inference
+//! takes the argmax candidate and skips the pruned experts entirely.
+//!
+//! Baselines: [`odp`] (the rule-based top-k skipping of the conference
+//! version / ref. \[8\], Eq. 5) and [`random`].
+
+pub mod mask;
+pub mod odp;
+pub mod random;
+pub mod router;
+pub mod train;
+
+pub use mask::candidate_masks;
+pub use odp::OdpPruner;
+pub use random::RandomPruner;
+pub use router::{OtpPruner, OtpRouter};
+pub use train::{train_otp, OtpTrainReport};

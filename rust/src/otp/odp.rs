@@ -1,0 +1,117 @@
+//! ODP — the rule-based dynamic pruning baseline (paper Eq. 5, the
+//! conference version \[1\] / Lu et al. \[8\]).
+//!
+//! For k = 2: skip the second expert when `w1/w0 < μ`, with μ the median
+//! of that ratio on calibration data, per layer. For k > 2 we use the
+//! natural generalization the paper alludes to (and shows is brittle):
+//! keep rank r while `w_r / w_0 ≥ μ` — a fixed per-layer threshold that
+//! cannot adapt per token, which is exactly the weakness OTP fixes.
+
+use crate::moe::gating::Route;
+use crate::moe::model::{ForwardOpts, MoeModel, Pruner};
+
+pub struct OdpPruner {
+    /// Per-layer threshold μ.
+    pub mu: Vec<f32>,
+}
+
+impl OdpPruner {
+    /// Calibrate μ per layer = median of `w1/w0` over calibration tokens
+    /// (paper: "set at the median value of w1/w0 derived from
+    /// calibration data").
+    pub fn calibrate(model: &MoeModel, seqs: &[Vec<u16>]) -> OdpPruner {
+        struct Collect {
+            ratios: Vec<Vec<f32>>,
+        }
+        impl Pruner for Collect {
+            fn keep(&mut self, layer: usize, _x: &[f32], r: &Route) -> usize {
+                if r.weights.len() >= 2 && r.weights[0] > 0.0 {
+                    self.ratios[layer].push(r.weights[1] / r.weights[0]);
+                }
+                r.experts.len() // keep everything while calibrating
+            }
+        }
+        let mut c = Collect { ratios: vec![Vec::new(); model.cfg.n_layers] };
+        for s in seqs {
+            let mut opts = ForwardOpts { pruner: Some(&mut c), ..Default::default() };
+            model.forward_opts(s, &mut opts);
+        }
+        let mu = c
+            .ratios
+            .into_iter()
+            .map(|mut rs| {
+                if rs.is_empty() {
+                    return 0.5;
+                }
+                rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                rs[rs.len() / 2]
+            })
+            .collect();
+        OdpPruner { mu }
+    }
+}
+
+impl Pruner for OdpPruner {
+    fn keep(&mut self, layer: usize, _x: &[f32], r: &Route) -> usize {
+        let mu = self.mu[layer];
+        let w0 = r.weights[0].max(1e-9);
+        let mut keep = 1;
+        for w in r.weights.iter().skip(1) {
+            if w / w0 >= mu {
+                keep += 1;
+            } else {
+                break; // weights are rank-sorted; the tail is below too
+            }
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{Corpus, CorpusKind};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn calibrated_odp_prunes_roughly_half_of_rank2() {
+        let cfg = ModelConfig {
+            name: "odp-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 512,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let model = MoeModel::new(&cfg, 16);
+        let corpus = Corpus::new(CorpusKind::General, 3);
+        let mut rng = Rng::new(5);
+        let calib = corpus.batch(4, 32, &mut rng);
+        let mut odp = OdpPruner::calibrate(&model, &calib);
+        // μ is the median ⇒ about half the tokens prune the 2nd expert
+        let eval = corpus.batch(4, 32, &mut rng);
+        let mut counter = (0u64, 0u64);
+        for s in &eval {
+            let mut opts = ForwardOpts {
+                pruner: Some(&mut odp),
+                pruning_counter: Some(&mut counter),
+                ..Default::default()
+            };
+            model.forward_opts(s, &mut opts);
+        }
+        let ratio = 1.0 - counter.0 as f64 / counter.1 as f64;
+        assert!(
+            ratio > 0.1 && ratio < 0.4,
+            "pruning ratio {ratio} not near the ~25% median rule"
+        );
+    }
+}

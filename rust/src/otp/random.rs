@@ -1,0 +1,72 @@
+//! Random dynamic pruning baseline (Table 6's "PMQ+random" row): each
+//! token independently prunes a uniformly-chosen number of tail experts
+//! to hit a target expected pruning ratio — importance-blind, so it
+//! degrades much faster than OTP at the same ratio.
+
+use crate::moe::gating::Route;
+use crate::moe::model::Pruner;
+use crate::util::rng::Rng;
+
+pub struct RandomPruner {
+    /// Target expected fraction of activated experts to prune (0..1).
+    pub ratio: f64,
+    pub rng: Rng,
+}
+
+impl RandomPruner {
+    pub fn new(ratio: f64, seed: u64) -> RandomPruner {
+        RandomPruner { ratio, rng: Rng::new(seed) }
+    }
+}
+
+impl Pruner for RandomPruner {
+    fn keep(&mut self, _layer: usize, _x: &[f32], r: &Route) -> usize {
+        let k = r.experts.len();
+        // prune each non-top rank independently with p = ratio * k/(k-1)
+        // so the expectation over all k slots is `ratio`
+        let p = (self.ratio * k as f64 / (k - 1).max(1) as f64).min(1.0);
+        let mut keep = 1;
+        for _ in 1..k {
+            if self.rng.f64() >= p {
+                keep += 1;
+            }
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::gating::Route;
+
+    fn dummy_route(k: usize) -> Route {
+        Route {
+            experts: (0..k).collect(),
+            weights: vec![1.0 / k as f32; k],
+            scores: vec![1.0 / k as f32; k],
+        }
+    }
+
+    #[test]
+    fn hits_target_ratio_in_expectation() {
+        let mut p = RandomPruner::new(1.0 / 6.0, 42);
+        let r = dummy_route(6);
+        let mut kept = 0u64;
+        let n = 20_000;
+        for _ in 0..n {
+            kept += p.keep(0, &[], &r) as u64;
+        }
+        let ratio = 1.0 - kept as f64 / (n as f64 * 6.0);
+        assert!((ratio - 1.0 / 6.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn always_keeps_at_least_one() {
+        let mut p = RandomPruner::new(0.99, 43);
+        let r = dummy_route(4);
+        for _ in 0..100 {
+            assert!(p.keep(0, &[], &r) >= 1);
+        }
+    }
+}

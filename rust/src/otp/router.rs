@@ -1,0 +1,190 @@
+//! The learnable top-any router `DM(·)` (paper §3.4.1, Table 1).
+//!
+//! Two linear layers per MoE block: `FC1: H→k` over the token, then
+//! `FC2: 2k→|C|` over `concat(relu(FC1(x)), w_topk)` — exactly the
+//! parameter shapes of Table 1 (e.g. DeepSeek-VL2-S: 2048×6, 12×6, mask
+//! 6×6). Training samples candidates via Gumbel-Softmax; inference takes
+//! the argmax candidate (no noise) and prunes the tail experts.
+
+use crate::moe::gating::Route;
+use crate::moe::model::Pruner;
+use crate::tensor::{softmax, Tensor2};
+use crate::util::rng::Rng;
+
+use super::mask::{candidate_masks, keep_of_candidate};
+
+#[derive(Clone, Debug)]
+pub struct OtpRouter {
+    pub k: usize,
+    pub fc1_w: Tensor2, // [H, k]
+    pub fc1_b: Vec<f32>,
+    pub fc2_w: Tensor2, // [2k, |C|=k]
+    pub fc2_b: Vec<f32>,
+}
+
+/// Cached intermediates for the backward pass.
+pub struct RouterFwd {
+    pub h1: Vec<f32>,     // relu(fc1)
+    pub concat: Vec<f32>, // [h1 ; gate_w]
+    pub z: Vec<f32>,      // logits over candidates
+    pub y: Vec<f32>,      // gumbel-softmax probabilities
+    pub mask: Vec<f32>,   // y @ C_k (soft mask over ranks)
+}
+
+impl OtpRouter {
+    pub fn new(d_model: usize, k: usize, rng: &mut Rng) -> OtpRouter {
+        let s1 = 1.0 / (d_model as f32).sqrt();
+        let s2 = 1.0 / (2.0 * k as f32).sqrt();
+        OtpRouter {
+            k,
+            fc1_w: Tensor2::randn(d_model, k, rng, s1),
+            fc1_b: vec![0.0; k],
+            fc2_w: Tensor2::randn(2 * k, k, rng, s2),
+            fc2_b: vec![0.0; k],
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.fc1_w.data.len() + self.fc1_b.len() + self.fc2_w.data.len() + self.fc2_b.len()
+    }
+
+    /// Candidate logits for one token (inference: no noise).
+    pub fn logits(&self, x: &[f32], gate_w: &[f32]) -> Vec<f32> {
+        let k = self.k;
+        let mut h1 = self.fc1_b.clone();
+        for (r, &xr) in x.iter().enumerate() {
+            if xr != 0.0 {
+                crate::tensor::axpy(xr, self.fc1_w.row(r), &mut h1);
+            }
+        }
+        for v in h1.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let mut z = self.fc2_b.clone();
+        for (r, &c) in h1.iter().chain(gate_w.iter()).enumerate() {
+            if c != 0.0 {
+                crate::tensor::axpy(c, self.fc2_w.row(r), &mut z);
+            }
+        }
+        debug_assert_eq!(z.len(), k);
+        z
+    }
+
+    /// Training forward: Gumbel-Softmax sample at temperature `tau`
+    /// (Eq. 13). Noise is passed in so runs replay.
+    pub fn forward_gumbel(&self, x: &[f32], gate_w: &[f32], noise: &[f32], tau: f32) -> RouterFwd {
+        let k = self.k;
+        let mut h1 = self.fc1_b.clone();
+        for (r, &xr) in x.iter().enumerate() {
+            if xr != 0.0 {
+                crate::tensor::axpy(xr, self.fc1_w.row(r), &mut h1);
+            }
+        }
+        for v in h1.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let concat: Vec<f32> = h1.iter().chain(gate_w.iter()).cloned().collect();
+        let mut z = self.fc2_b.clone();
+        for (r, &c) in concat.iter().enumerate() {
+            if c != 0.0 {
+                crate::tensor::axpy(c, self.fc2_w.row(r), &mut z);
+            }
+        }
+        let mut y: Vec<f32> = z.iter().zip(noise).map(|(&zi, &n)| (zi + n) / tau).collect();
+        softmax(&mut y);
+        let cand = candidate_masks(k);
+        let mut mask = vec![0.0f32; k];
+        for (c, yc) in y.iter().enumerate() {
+            for r in 0..k {
+                mask[r] += yc * cand[c][r];
+            }
+        }
+        RouterFwd { h1, concat, z, y, mask }
+    }
+
+    /// Inference decision: keep count from the argmax candidate.
+    pub fn keep(&self, x: &[f32], gate_w: &[f32]) -> usize {
+        let z = self.logits(x, gate_w);
+        let c = z
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        keep_of_candidate(self.k, c)
+    }
+}
+
+/// Per-layer routers acting as a [`Pruner`] in the shared forward.
+pub struct OtpPruner {
+    pub routers: Vec<OtpRouter>,
+}
+
+impl Pruner for OtpPruner {
+    fn keep(&mut self, layer: usize, x: &[f32], route: &Route) -> usize {
+        self.routers[layer].keep(x, &route.weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parameter_shapes() {
+        let mut rng = Rng::new(1);
+        // DeepSeek-VL2-S analog: H=2048 in the paper (FC1 2048×6, FC2
+        // 12×6, mask 6×6); we check the shape *rule*, paper Table 1.
+        let r = OtpRouter::new(2048, 6, &mut rng);
+        assert_eq!((r.fc1_w.rows, r.fc1_w.cols), (2048, 6));
+        assert_eq!((r.fc2_w.rows, r.fc2_w.cols), (12, 6));
+        assert_eq!(candidate_masks(6).len(), 6);
+        // Mixtral analog: FC1 4096×2, FC2 4×2, mask 2×2
+        let r2 = OtpRouter::new(4096, 2, &mut rng);
+        assert_eq!((r2.fc1_w.rows, r2.fc1_w.cols), (4096, 2));
+        assert_eq!((r2.fc2_w.rows, r2.fc2_w.cols), (4, 2));
+    }
+
+    #[test]
+    fn gumbel_forward_consistent_with_logits_at_zero_noise() {
+        let mut rng = Rng::new(2);
+        let r = OtpRouter::new(32, 4, &mut rng);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let gw = vec![0.5, 0.3, 0.15, 0.05];
+        let z = r.logits(&x, &gw);
+        let f = r.forward_gumbel(&x, &gw, &[0.0; 4], 1.0);
+        for (a, b) in z.iter().zip(&f.z) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((f.y.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        // soft mask monotone across ranks
+        for w in f.mask.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn keep_in_valid_range() {
+        let mut rng = Rng::new(3);
+        let r = OtpRouter::new(16, 6, &mut rng);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+            let gw: Vec<f32> = (0..6).map(|_| rng.f32()).collect();
+            let k = r.keep(&x, &gw);
+            assert!((1..=6).contains(&k));
+        }
+    }
+
+    #[test]
+    fn low_tau_sharpens_y() {
+        let mut rng = Rng::new(4);
+        let r = OtpRouter::new(16, 4, &mut rng);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal() * 3.0).collect();
+        let gw = vec![0.4, 0.3, 0.2, 0.1];
+        let hi = r.forward_gumbel(&x, &gw, &[0.0; 4], 4.0);
+        let lo = r.forward_gumbel(&x, &gw, &[0.0; 4], 0.05);
+        let peak = |y: &[f32]| y.iter().cloned().fold(0.0f32, f32::max);
+        assert!(peak(&lo.y) > peak(&hi.y));
+        assert!(peak(&lo.y) > 0.95);
+    }
+}

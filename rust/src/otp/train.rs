@@ -1,0 +1,287 @@
+//! OTP training (paper §3.4.2, Eq. 14).
+//!
+//! Loss per token and layer: `‖Σ_r m_r w_r F_r(x) − Σ_r w_r F_r(x)‖² / H
+//! + λ · mean(m)` — a layer-local distillation of the unmasked quantized
+//! model plus the ℓ1 sparsity *pressure* on the soft mask. (The paper
+//! distills final logits; layer-local distillation is the telescoped
+//! surrogate — each layer's masked output is pushed toward the unmasked
+//! one, which bounds the logit drift. Documented in DESIGN.md §6.)
+//!
+//! The mask samples through Gumbel-Softmax (temperature annealed
+//! `tau_start → tau_end`), so gradients reach FC1/FC2 through the
+//! candidate probabilities exactly as in Eq. 13. Expert outputs are
+//! precomputed per calibration token — routers never change routing, so
+//! the distillation targets are static and training is fast.
+
+use crate::config::OtpConfig;
+use crate::moe::model::ForwardOpts;
+use crate::quant::qmodel::QuantModel;
+use crate::util::rng::Rng;
+
+use super::mask::candidate_masks;
+use super::router::OtpRouter;
+
+/// One cached training token for one layer.
+struct TokenSample {
+    x: Vec<f32>,
+    /// Rank-sorted routing weights (len k).
+    gate_w: Vec<f32>,
+    /// Per rank: w_r * F_r(x) (quantized expert output, pre-weighted).
+    weighted_outs: Vec<Vec<f32>>,
+    /// Σ_r w_r F_r(x) — the unmasked target.
+    full: Vec<f32>,
+}
+
+/// Training curve data (Fig. 13): mask ratio & loss per logged step.
+pub struct OtpTrainReport {
+    pub routers: Vec<OtpRouter>,
+    /// (step, mean mask ratio pruned, distill loss) samples.
+    pub curve: Vec<(usize, f64, f64)>,
+}
+
+fn collect_samples(
+    q: &QuantModel,
+    seqs: &[Vec<u16>],
+    max_per_layer: usize,
+) -> Vec<Vec<TokenSample>> {
+    let cfg = &q.model.cfg;
+    let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.n_layers];
+    for s in seqs {
+        let mut opts = ForwardOpts {
+            provider: Some(q),
+            capture_moe_inputs: Some(&mut captured),
+            ..Default::default()
+        };
+        q.model.forward_opts(s, &mut opts);
+    }
+    captured
+        .into_iter()
+        .enumerate()
+        .map(|(l, mut xs)| {
+            xs.truncate(max_per_layer);
+            xs.into_iter()
+                .map(|x| {
+                    let r = crate::moe::gating::route(&x, &q.model.blocks[l].gate, cfg.top_k);
+                    let mut weighted_outs = Vec::with_capacity(cfg.top_k);
+                    let mut full = vec![0.0f32; cfg.d_model];
+                    for (rank, &e) in r.experts.iter().enumerate() {
+                        let mut out = vec![0.0f32; cfg.d_model];
+                        q.experts[l][e].ffn_row_acc(&x, r.weights[rank], &mut out);
+                        for (f, &o) in full.iter_mut().zip(&out) {
+                            *f += o;
+                        }
+                        weighted_outs.push(out);
+                    }
+                    TokenSample { x, gate_w: r.weights, weighted_outs, full }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Adam state for one router.
+struct RouterAdam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl RouterAdam {
+    fn new(n: usize) -> RouterAdam {
+        RouterAdam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [&mut f32], grads: &[f32], lr: f32) {
+        self.t += 1;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for (i, p) in params.iter_mut().enumerate() {
+            let g = grads[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            **p -= lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + eps);
+        }
+    }
+}
+
+/// Train one router per MoE layer of the quantized model.
+pub fn train_otp(q: &QuantModel, seqs: &[Vec<u16>], oc: &OtpConfig, seed: u64) -> OtpTrainReport {
+    let cfg = &q.model.cfg;
+    let k = cfg.top_k;
+    let h = cfg.d_model;
+    let mut rng = Rng::new(seed);
+    let samples = collect_samples(q, seqs, 1024);
+    let mut routers: Vec<OtpRouter> =
+        (0..cfg.n_layers).map(|_| OtpRouter::new(h, k, &mut rng)).collect();
+    let mut adams: Vec<RouterAdam> =
+        routers.iter().map(|r| RouterAdam::new(r.n_params())).collect();
+    let cand = candidate_masks(k);
+    let mut curve = Vec::new();
+
+    for step in 0..oc.steps {
+        let frac = step as f32 / oc.steps.max(1) as f32;
+        let tau = oc.tau_start + (oc.tau_end - oc.tau_start) * frac;
+        let mut step_loss = 0.0f64;
+        let mut step_mask = 0.0f64;
+        let mut n_tok = 0usize;
+        for (l, router) in routers.iter_mut().enumerate() {
+            let pool = &samples[l];
+            if pool.is_empty() {
+                continue;
+            }
+            // gradient accumulators (canonical order: fc1_w, fc1_b, fc2_w, fc2_b)
+            let n1 = router.fc1_w.data.len();
+            let n1b = router.fc1_b.len();
+            let n2 = router.fc2_w.data.len();
+            let mut grads = vec![0.0f32; router.n_params()];
+            for _ in 0..oc.batch_tokens {
+                let s = &pool[rng.below(pool.len())];
+                let noise: Vec<f32> = (0..k).map(|_| rng.gumbel()).collect();
+                let f = router.forward_gumbel(&s.x, &s.gate_w, &noise, tau);
+                // masked output & distill loss
+                let mut masked = vec![0.0f32; h];
+                for (r, out) in s.weighted_outs.iter().enumerate() {
+                    let m = f.mask[r];
+                    if m != 0.0 {
+                        crate::tensor::axpy(m, out, &mut masked);
+                    }
+                }
+                let mut dmask = vec![0.0f32; k];
+                let mut dist = 0.0f32;
+                for r in 0..k {
+                    let mut dot = 0.0f32;
+                    for d in 0..h {
+                        let diff = masked[d] - s.full[d];
+                        if r == 0 {
+                            dist += diff * diff;
+                        }
+                        dot += diff * s.weighted_outs[r][d];
+                    }
+                    dmask[r] = 2.0 * dot / h as f32 + oc.lambda / k as f32;
+                }
+                dist /= h as f32;
+                step_loss += dist as f64;
+                step_mask += f.mask.iter().map(|&m| 1.0 - m as f64).sum::<f64>() / k as f64;
+                n_tok += 1;
+                // mask = y @ C  ⇒ dy_c = Σ_r dmask_r C[c][r]
+                let mut dy = vec![0.0f32; k];
+                for c in 0..k {
+                    for r in 0..k {
+                        dy[c] += dmask[r] * cand[c][r];
+                    }
+                }
+                // softmax((z+n)/tau) backward
+                let dot: f32 = dy.iter().zip(&f.y).map(|(a, b)| a * b).sum();
+                let dz: Vec<f32> =
+                    (0..k).map(|c| f.y[c] * (dy[c] - dot) / tau).collect();
+                // fc2 backward
+                for (r, &cv) in f.concat.iter().enumerate() {
+                    for c in 0..k {
+                        grads[n1 + n1b + r * k + c] += cv * dz[c];
+                    }
+                }
+                for c in 0..k {
+                    grads[n1 + n1b + n2 + c] += dz[c];
+                }
+                // into h1 (first k rows of fc2) through relu
+                for r in 0..k {
+                    if f.h1[r] > 0.0 {
+                        let mut dh = 0.0f32;
+                        for c in 0..k {
+                            dh += router.fc2_w.at(r, c) * dz[c];
+                        }
+                        // fc1 backward
+                        for (xi, &xv) in s.x.iter().enumerate() {
+                            grads[xi * k + r] += xv * dh;
+                        }
+                        grads[n1 + r] += dh;
+                    }
+                }
+            }
+            let inv = 1.0 / oc.batch_tokens as f32;
+            for g in grads.iter_mut() {
+                *g *= inv;
+            }
+            // apply Adam
+            let mut params: Vec<&mut f32> = Vec::with_capacity(router.n_params());
+            params.extend(router.fc1_w.data.iter_mut());
+            params.extend(router.fc1_b.iter_mut());
+            params.extend(router.fc2_w.data.iter_mut());
+            params.extend(router.fc2_b.iter_mut());
+            adams[l].step(&mut params, &grads, oc.lr);
+        }
+        if step % 10 == 0 || step + 1 == oc.steps {
+            curve.push((
+                step,
+                step_mask / n_tok.max(1) as f64,
+                step_loss / n_tok.max(1) as f64,
+            ));
+        }
+    }
+    OtpTrainReport { routers, curve }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, PmqConfig};
+    use crate::moe::MoeModel;
+    use crate::quant::qmodel::QuantMethod;
+
+    fn quick_qmodel() -> QuantModel {
+        let cfg = ModelConfig {
+            name: "otp-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 512,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            n_experts: 6,
+            top_k: 3,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let base = MoeModel::new(&cfg, 17);
+        QuantModel::quantize(
+            &base,
+            &vec![vec![2u8; 6]; 2],
+            &PmqConfig::default(),
+            &QuantMethod::Rtn,
+        )
+    }
+
+    #[test]
+    fn training_learns_nonzero_pruning_with_low_loss() {
+        let q = quick_qmodel();
+        let corpus = crate::data::Corpus::new(crate::data::CorpusKind::General, 6);
+        let mut rng = Rng::new(7);
+        let seqs = corpus.batch(4, 32, &mut rng);
+        let oc = OtpConfig { steps: 80, batch_tokens: 32, lambda: 1.0, ..Default::default() };
+        let rep = train_otp(&q, &seqs, &oc, 99);
+        assert_eq!(rep.routers.len(), 2);
+        let (_, final_mask, _) = *rep.curve.last().unwrap();
+        // λ=1 should push some pruning (paper Fig. 13: ~30%) but not all
+        assert!(final_mask > 0.02 && final_mask < 0.9, "mask ratio {final_mask}");
+    }
+
+    #[test]
+    fn higher_lambda_prunes_more() {
+        let q = quick_qmodel();
+        let corpus = crate::data::Corpus::new(crate::data::CorpusKind::General, 6);
+        let mut rng = Rng::new(8);
+        let seqs = corpus.batch(4, 32, &mut rng);
+        let run = |lambda: f32| {
+            let oc = OtpConfig { steps: 60, batch_tokens: 32, lambda, ..Default::default() };
+            let rep = train_otp(&q, &seqs, &oc, 100);
+            rep.curve.last().unwrap().1
+        };
+        let lo = run(0.25);
+        let hi = run(4.0);
+        assert!(hi > lo, "λ=4 mask {hi} not > λ=0.25 mask {lo}");
+    }
+}

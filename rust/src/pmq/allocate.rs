@@ -1,0 +1,292 @@
+//! The Eq. 7 integer program, solved exactly.
+//!
+//! Per MoE block: minimize `Σ_i Σ_j φ_i^α w_i^β (ε_{ij})^γ x_{ij}`
+//! subject to `Σ_ij j·x_ij = round(n·b̄)` (exact bit budget),
+//! `Σ_j x_ij = 1`, `Σ_i x_{i,3} ≥ 1`, `Σ_i x_{i,2} ≥ 1`, `x ∈ {0,1}`.
+//!
+//! With bit options {1,2,3} the state space is tiny, so we solve by
+//! dynamic programming over (expert prefix, bits used, has-3-bit,
+//! has-2-bit) — provably optimal; a brute-force cross-check lives in the
+//! tests (`prop` sweep, E ≤ 8).
+
+/// One block's allocation problem: `cost[i][j]` for expert `i` at
+/// `bit_options[j]` bits.
+pub struct AllocProblem {
+    pub cost: Vec<Vec<f64>>,
+    pub bit_options: Vec<u8>,
+    /// Exact total bit budget for the block (`round(n * avg_bits)`).
+    pub budget: usize,
+    /// Enforce the paper's ≥1-expert-at-3-bit / ≥1-at-2-bit constraints.
+    pub anchor_constraints: bool,
+}
+
+const INF: f64 = f64::INFINITY;
+
+/// Solve one block. Returns per-expert bit-widths, or `None` if the
+/// budget is infeasible.
+pub fn solve_block(p: &AllocProblem) -> Option<Vec<u8>> {
+    let n = p.cost.len();
+    let m = p.bit_options.len();
+    let maxb = p.budget;
+    let flags = if p.anchor_constraints { 4 } else { 1 };
+    // dp[b][flag] after processing experts 0..e; flag bit0 = has max-bit
+    // anchor, bit1 = has second-bit anchor. Indices into bit_options that
+    // anchor: highest option and second-highest option.
+    let hi_idx = m - 1;
+    let lo_idx = m.saturating_sub(2);
+    let idx = |b: usize, f: usize| b * flags + f;
+    let flag_of = |j: usize, f: usize| -> usize {
+        if !p.anchor_constraints {
+            return 0;
+        }
+        let mut nf = f;
+        if j == hi_idx {
+            nf |= 1;
+        }
+        if j == lo_idx {
+            nf |= 2;
+        }
+        nf
+    };
+    // dp[e] = cost table after assigning experts 0..e
+    let mut dp: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+    let mut first = vec![INF; (maxb + 1) * flags];
+    first[idx(0, 0)] = 0.0;
+    dp.push(first);
+    for e in 0..n {
+        let mut next = vec![INF; (maxb + 1) * flags];
+        for b in 0..=maxb {
+            for f in 0..flags {
+                let cur = dp[e][idx(b, f)];
+                if cur == INF {
+                    continue;
+                }
+                for (j, &bits) in p.bit_options.iter().enumerate() {
+                    let nb = b + bits as usize;
+                    if nb > maxb {
+                        continue;
+                    }
+                    let nf = flag_of(j, f);
+                    let c = cur + p.cost[e][j];
+                    if c < next[idx(nb, nf)] {
+                        next[idx(nb, nf)] = c;
+                    }
+                }
+            }
+        }
+        dp.push(next);
+    }
+    let goal_flag = if p.anchor_constraints { 3 } else { 0 };
+    let mut best: Option<(f64, usize)> = None;
+    for f in 0..flags {
+        if f & goal_flag == goal_flag && dp[n][idx(maxb, f)] < INF {
+            let v = dp[n][idx(maxb, f)];
+            if best.map_or(true, |(bv, _)| v < bv) {
+                best = Some((v, f));
+            }
+        }
+    }
+    // Constraints can be infeasible for tiny n or extreme budgets — the
+    // paper's fallback is to drop the anchors.
+    let (_, mut f) = match best {
+        Some(b) => b,
+        None if p.anchor_constraints => {
+            return solve_block(&AllocProblem {
+                cost: p.cost.clone(),
+                bit_options: p.bit_options.clone(),
+                budget: p.budget,
+                anchor_constraints: false,
+            })
+        }
+        None => return None,
+    };
+    // exact backtrack: find (j, predecessor flag) reproducing dp[e+1]
+    let mut b = maxb;
+    let mut out = vec![0u8; n];
+    for e in (0..n).rev() {
+        let target = dp[e + 1][idx(b, f)];
+        let mut found = false;
+        'search: for (j, &bits) in p.bit_options.iter().enumerate() {
+            if (bits as usize) > b {
+                continue;
+            }
+            let pb = b - bits as usize;
+            for pf in 0..flags {
+                if flag_of(j, pf) != f {
+                    continue;
+                }
+                let prev = dp[e][idx(pb, pf)];
+                if prev < INF && (prev + p.cost[e][j] - target).abs() <= 1e-12 * (1.0 + target.abs()) {
+                    out[e] = bits;
+                    b = pb;
+                    f = pf;
+                    found = true;
+                    break 'search;
+                }
+            }
+        }
+        debug_assert!(found, "backtrack failed at expert {e}");
+        if !found {
+            return None;
+        }
+    }
+    Some(out)
+}
+
+/// Solve every MoE block of a model for a target average expert
+/// bit-width. `costs[layer][expert][bit_idx]`.
+pub fn allocate_bits(
+    costs: &[Vec<Vec<f64>>],
+    bit_options: &[u8],
+    avg_bits: f64,
+    anchors: bool,
+) -> Vec<Vec<u8>> {
+    costs
+        .iter()
+        .map(|block| {
+            let n = block.len();
+            let budget = (avg_bits * n as f64).round() as usize;
+            let lo = bit_options[0] as usize * n;
+            let hi = *bit_options.last().unwrap() as usize * n;
+            let budget = budget.clamp(lo, hi);
+            solve_block(&AllocProblem {
+                cost: block.clone(),
+                bit_options: bit_options.to_vec(),
+                budget,
+                anchor_constraints: anchors,
+            })
+            .expect("clamped budget must be feasible")
+        })
+        .collect()
+}
+
+/// Brute-force optimum (tests only, m^n enumeration).
+pub fn brute_force(p: &AllocProblem) -> Option<(f64, Vec<u8>)> {
+    let n = p.cost.len();
+    let m = p.bit_options.len();
+    let mut best: Option<(f64, Vec<u8>)> = None;
+    let mut assign = vec![0usize; n];
+    loop {
+        let bits: usize = assign.iter().map(|&j| p.bit_options[j] as usize).sum();
+        if bits == p.budget {
+            let ok = !p.anchor_constraints
+                || (assign.iter().any(|&j| j == m - 1)
+                    && assign.iter().any(|&j| j == m.saturating_sub(2)));
+            if ok {
+                let c: f64 = assign.iter().enumerate().map(|(e, &j)| p.cost[e][j]).sum();
+                if best.as_ref().map_or(true, |(bc, _)| c < *bc) {
+                    best = Some((c, assign.iter().map(|&j| p.bit_options[j]).collect()));
+                }
+            }
+        }
+        // increment odometer
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            assign[i] += 1;
+            if assign[i] < m {
+                break;
+            }
+            assign[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_problem(rng: &mut crate::util::rng::Rng, n: usize, anchors: bool) -> AllocProblem {
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                // monotone-decreasing cost in bits, like real ε tables
+                let base = rng.f64() + 0.05;
+                vec![base, base * (0.2 + 0.5 * rng.f64()), base * 0.1 * rng.f64()]
+            })
+            .collect();
+        let budget = n + rng.below(2 * n + 1); // within [n, 3n]
+        AllocProblem { cost, bit_options: vec![1, 2, 3], budget, anchor_constraints: anchors }
+    }
+
+    #[test]
+    fn dp_matches_brute_force() {
+        prop::for_all(91, 40, |rng, case| {
+            let n = 2 + rng.below(6);
+            let p = random_problem(rng, n, case % 2 == 0);
+            let dp = solve_block(&p);
+            let bf = brute_force(&p);
+            match (dp, bf) {
+                (Some(d), Some((bc, _))) => {
+                    let dc: f64 = d
+                        .iter()
+                        .enumerate()
+                        .map(|(e, &b)| {
+                            let j = p.bit_options.iter().position(|&x| x == b).unwrap();
+                            p.cost[e][j]
+                        })
+                        .sum();
+                    let bits: usize = d.iter().map(|&b| b as usize).sum();
+                    assert_eq!(bits, p.budget, "budget violated");
+                    // dp may legitimately fall back to anchor-free if bf
+                    // found an anchored solution — then dp cost must be ≤
+                    assert!(dc <= bc + 1e-9, "dp {dc} worse than brute force {bc}");
+                }
+                (None, Some(_)) => panic!("dp missed a feasible solution"),
+                _ => {}
+            }
+        });
+    }
+
+    #[test]
+    fn anchors_respected_when_feasible() {
+        let mut rng = crate::util::rng::Rng::new(92);
+        for _ in 0..20 {
+            let n = 4 + rng.below(4);
+            let mut p = random_problem(&mut rng, n, true);
+            p.budget = 2 * n; // avg 2-bit: plenty of room for anchors
+            let sol = solve_block(&p).unwrap();
+            assert!(sol.contains(&3), "no 3-bit anchor: {sol:?}");
+            assert!(sol.contains(&2), "no 2-bit anchor: {sol:?}");
+        }
+    }
+
+    #[test]
+    fn important_experts_get_more_bits() {
+        // expert 0 hugely sensitive, expert 3 insensitive
+        let cost = vec![
+            vec![100.0, 10.0, 0.1],
+            vec![1.0, 0.3, 0.1],
+            vec![1.0, 0.3, 0.1],
+            vec![0.01, 0.005, 0.001],
+        ];
+        let p = AllocProblem { cost, bit_options: vec![1, 2, 3], budget: 8, anchor_constraints: false };
+        let sol = solve_block(&p).unwrap();
+        assert_eq!(sol[0], 3, "{sol:?}");
+        assert_eq!(sol[3], 1, "{sol:?}");
+    }
+
+    #[test]
+    fn allocate_bits_hits_average() {
+        let costs = vec![vec![vec![1.0, 0.5, 0.1]; 8]; 3];
+        let alloc = allocate_bits(&costs, &[1, 2, 3], 2.0, true);
+        for block in &alloc {
+            let sum: usize = block.iter().map(|&b| b as usize).sum();
+            assert_eq!(sum, 16);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_none() {
+        let p = AllocProblem {
+            cost: vec![vec![1.0, 0.5, 0.1]; 3],
+            bit_options: vec![1, 2, 3],
+            budget: 100,
+            anchor_constraints: false,
+        };
+        assert!(solve_block(&p).is_none());
+    }
+}

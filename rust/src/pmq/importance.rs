@@ -1,0 +1,144 @@
+//! Calibration pass: everything PMQ needs from data, in one forward sweep
+//! (paper §3.2.1–3.2.2).
+
+use crate::moe::gating::route;
+use crate::moe::model::{ForwardOpts, MoeModel};
+use crate::moe::stats::RoutingStats;
+use crate::quant::error::LayerActivations;
+use crate::quant::gptq::GptqQuantizer;
+use crate::tensor::silu;
+
+/// Everything the allocators and quantizers consume.
+pub struct Calibration {
+    pub stats: RoutingStats,
+    /// Per-layer MoE-input token rows.
+    pub acts: Vec<LayerActivations>,
+    /// Per-layer (d_model-input, d_ff-input) GPTQ Hessian accumulators —
+    /// shared across the layer's experts (documented approximation: the
+    /// d_ff Hessian pools the post-SwiGLU activations of all routed
+    /// experts in the layer).
+    pub hessians: Vec<(GptqQuantizer, GptqQuantizer)>,
+}
+
+impl Calibration {
+    /// φ_i^α · w_i^β significance factor (paper §3.2.2).
+    pub fn significance(&self, layer: usize, expert: usize, alpha: f64, beta: f64) -> f64 {
+        let phi = self.stats.frequency(layer, expert);
+        let w = self.stats.mean_weight(layer, expert);
+        phi.powf(alpha) * w.powf(beta)
+    }
+}
+
+/// Run `seqs` through the model, collecting stats + activations + Hessians.
+///
+/// `max_tokens_per_layer` caps the retained activation rows (reservoir of
+/// the first N — calibration order is already randomized upstream).
+pub fn calibrate(model: &MoeModel, seqs: &[Vec<u16>], max_tokens_per_layer: usize) -> Calibration {
+    let cfg = &model.cfg;
+    let mut stats = RoutingStats::new(cfg.n_layers, cfg.n_experts);
+    let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.n_layers];
+    for seq in seqs {
+        let mut opts = ForwardOpts {
+            stats: Some(&mut stats),
+            capture_moe_inputs: Some(&mut captured),
+            ..Default::default()
+        };
+        model.forward_opts(seq, &mut opts);
+    }
+    for layer in captured.iter_mut() {
+        layer.truncate(max_tokens_per_layer);
+    }
+    // Hessians from the captured activations
+    let mut hessians: Vec<(GptqQuantizer, GptqQuantizer)> = (0..cfg.n_layers)
+        .map(|_| (GptqQuantizer::new(cfg.d_model), GptqQuantizer::new(cfg.d_ff)))
+        .collect();
+    for (l, block) in model.blocks.iter().enumerate() {
+        for x in &captured[l] {
+            hessians[l].0.add_sample(x);
+            let r = route(x, &block.gate, cfg.top_k);
+            for &e in &r.experts {
+                let expert = &block.experts[e];
+                let f = cfg.d_ff;
+                let mut g = vec![0.0f32; f];
+                let mut u = vec![0.0f32; f];
+                for (k, &xk) in x.iter().enumerate() {
+                    if xk != 0.0 {
+                        crate::tensor::axpy(xk, expert.wg.row(k), &mut g);
+                        crate::tensor::axpy(xk, expert.wu.row(k), &mut u);
+                    }
+                }
+                for j in 0..f {
+                    g[j] = silu(g[j]) * u[j];
+                }
+                hessians[l].1.add_sample(&g);
+            }
+        }
+    }
+    Calibration {
+        stats,
+        acts: captured.into_iter().map(|xs| LayerActivations { xs }).collect(),
+        hessians,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{Corpus, CorpusKind};
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "calib-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 512,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        }
+    }
+
+    #[test]
+    fn calibration_collects_everything() {
+        let model = MoeModel::new(&cfg(), 13);
+        let corpus = Corpus::new(CorpusKind::General, 2);
+        let mut rng = Rng::new(3);
+        let seqs = corpus.batch(4, 24, &mut rng);
+        let cal = calibrate(&model, &seqs, 64);
+        assert_eq!(cal.stats.tokens, 4 * 24);
+        assert_eq!(cal.acts.len(), 2);
+        assert_eq!(cal.acts[0].xs.len(), 64);
+        assert!(cal.hessians[0].0.n_samples > 0);
+        assert!(cal.hessians[0].1.n_samples > 0);
+        // frequencies sum to top_k per layer
+        let fsum: f64 = (0..4).map(|e| cal.stats.frequency(0, e)).sum();
+        assert!((fsum - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn significance_monotone_in_factors() {
+        let model = MoeModel::new(&cfg(), 14);
+        let corpus = Corpus::new(CorpusKind::General, 2);
+        let mut rng = Rng::new(4);
+        let seqs = corpus.batch(4, 24, &mut rng);
+        let cal = calibrate(&model, &seqs, 64);
+        // find two experts with different frequency; higher φ ⇒ higher
+        // significance at β=0
+        let mut freqs: Vec<(usize, f64)> =
+            (0..4).map(|e| (e, cal.stats.frequency(0, e))).collect();
+        freqs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let (lo, hi) = (freqs[0], freqs[3]);
+        if hi.1 > lo.1 {
+            assert!(cal.significance(0, hi.0, 1.0, 0.0) > cal.significance(0, lo.0, 1.0, 0.0));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! PMQ — Pre-Loading Mixed-Precision Quantization (paper §3.2).
+//!
+//! Pipeline: [`importance::calibrate`] runs the 16-bit model over a
+//! calibration set collecting routing statistics, per-layer MoE inputs
+//! and GPTQ Hessians → [`eps_table`](crate::quant::error::eps_table) builds the Eq. 6
+//! sensitivity table → [`allocate::allocate_bits`] solves the Eq. 7
+//! integer program per MoE block → `quant::QuantModel::quantize` packs
+//! the experts. [`strategies`] implements every allocation baseline the
+//! paper compares against (uniform / random / weights / frequency /
+//! F-norm / Hessian / BSP-like).
+
+pub mod allocate;
+pub mod importance;
+pub mod strategies;
+
+pub use allocate::{allocate_bits, AllocProblem};
+pub use importance::{calibrate, Calibration};
+pub use strategies::Strategy;

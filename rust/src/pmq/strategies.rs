@@ -1,0 +1,321 @@
+//! Every bit-allocation strategy the paper compares (Figs. 9–12, Tables
+//! 2/4/7): the full PMQ objective plus uniform, random, routing-weight-
+//! only, frequency-only, F-norm-only, Hessian(HAWQ-trace)-style, and the
+//! BSP-like layer-granularity baseline.
+
+use crate::config::PmqConfig;
+use crate::moe::model::MoeModel;
+use crate::quant::error::EpsTable;
+use crate::quant::{binary::BinaryMatrix, packed::PackedMatrix, rtn};
+use crate::tensor::Tensor2;
+use crate::util::rng::Rng;
+
+use super::allocate::allocate_bits;
+use super::importance::Calibration;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Full PMQ objective: φ^α w^β ε^γ through the integer program.
+    Pmq,
+    /// Uniform bit-width for every expert.
+    Uniform,
+    /// Random feasible allocation (Pareto "others", Figs. 11/12).
+    Random,
+    /// Routing-weight significance only.
+    WeightsOnly,
+    /// Activation-frequency significance only.
+    FrequencyOnly,
+    /// Quantization F-norm error only (no routing factors).
+    FNorm,
+    /// HAWQ-style: Tr(H) · ‖ΔW‖² sensitivity.
+    Hessian,
+    /// BSP-like layer-granularity mix: top-¼ layers 3-bit, rest filled to
+    /// budget at layer granularity (the ref.-\[6\] baseline in Table 2).
+    BspLike,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Pmq => "PMQ",
+            Strategy::Uniform => "Uni",
+            Strategy::Random => "Random",
+            Strategy::WeightsOnly => "Weights",
+            Strategy::FrequencyOnly => "Frequency",
+            Strategy::FNorm => "F-norm",
+            Strategy::Hessian => "Hessian",
+            Strategy::BspLike => "BSP",
+        }
+    }
+
+    pub const ALL: [Strategy; 8] = [
+        Strategy::Pmq,
+        Strategy::Uniform,
+        Strategy::Random,
+        Strategy::WeightsOnly,
+        Strategy::FrequencyOnly,
+        Strategy::FNorm,
+        Strategy::Hessian,
+        Strategy::BspLike,
+    ];
+}
+
+/// HAWQ-style sensitivity: mean Hessian diagonal (input second moment)
+/// times the squared weight perturbation at each bit-width.
+fn hessian_costs(model: &MoeModel, cal: &Calibration, pmq: &PmqConfig) -> Vec<Vec<Vec<f64>>> {
+    let cfg = &model.cfg;
+    let mut costs = Vec::new();
+    for (l, block) in model.blocks.iter().enumerate() {
+        let trace_h = cal.hessians[l].0.mean_diag();
+        let trace_f = cal.hessians[l].1.mean_diag();
+        let mut row = Vec::new();
+        for e in &block.experts {
+            let mut per_bit = Vec::new();
+            for &bits in &pmq.bit_options {
+                let dw = |w: &Tensor2, tr: f64| -> f64 {
+                    let w_hat = match bits {
+                        1 => BinaryMatrix::binarize(w).dequantize(),
+                        b => {
+                            let (c, s, z) = rtn::quantize_rtn(w, b, pmq.group);
+                            PackedMatrix::from_codes(&c, s, z, w.rows, w.cols, b, pmq.group)
+                                .dequantize()
+                        }
+                    };
+                    tr * w
+                        .data
+                        .iter()
+                        .zip(&w_hat.data)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                };
+                per_bit.push(dw(&e.wg, trace_h) + dw(&e.wu, trace_h) + dw(&e.wd, trace_f));
+            }
+            row.push(per_bit);
+        }
+        costs.push(row);
+        let _ = cfg;
+    }
+    costs
+}
+
+/// Build `[layer][expert][bit]` costs for a strategy, then solve for the
+/// target average expert bit-width. ε must come from
+/// `quant::error::eps_table` on the same calibration set.
+pub fn allocation(
+    strategy: Strategy,
+    model: &MoeModel,
+    cal: &Calibration,
+    eps: &EpsTable,
+    pmq: &PmqConfig,
+    avg_bits: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<u8>> {
+    let cfg = &model.cfg;
+    let n = cfg.n_experts;
+    match strategy {
+        Strategy::Uniform => {
+            let b = avg_bits.round().clamp(1.0, 3.0) as u8;
+            vec![vec![b; n]; cfg.n_layers]
+        }
+        Strategy::Random => (0..cfg.n_layers)
+            .map(|_| random_feasible(n, avg_bits, &pmq.bit_options, rng))
+            .collect(),
+        Strategy::BspLike => bsp_allocation(model, cal, eps, avg_bits),
+        Strategy::Hessian => {
+            let costs = hessian_costs(model, cal, pmq);
+            allocate_bits(&costs, &pmq.bit_options, avg_bits, false)
+        }
+        _ => {
+            // score-weighted ε costs through the same IP solver
+            let mut costs = vec![vec![vec![0.0f64; pmq.bit_options.len()]; n]; cfg.n_layers];
+            for l in 0..cfg.n_layers {
+                for e in 0..n {
+                    let sig = match strategy {
+                        Strategy::Pmq => {
+                            cal.significance(l, e, pmq.alpha, pmq.beta).max(1e-8)
+                        }
+                        Strategy::WeightsOnly => cal.stats.mean_weight(l, e).max(1e-8),
+                        Strategy::FrequencyOnly => cal.stats.frequency(l, e).max(1e-8),
+                        Strategy::FNorm => 1.0,
+                        _ => unreachable!(),
+                    };
+                    for (bi, _) in pmq.bit_options.iter().enumerate() {
+                        let e_term = eps[l][e][bi].powf(pmq.gamma);
+                        costs[l][e][bi] = sig * e_term;
+                    }
+                }
+            }
+            allocate_bits(&costs, &pmq.bit_options, avg_bits, strategy == Strategy::Pmq)
+        }
+    }
+}
+
+/// Random allocation meeting the exact per-block budget.
+pub fn random_feasible(n: usize, avg_bits: f64, options: &[u8], rng: &mut Rng) -> Vec<u8> {
+    let lo = options[0] as usize;
+    let hi = *options.last().unwrap() as usize;
+    let budget = ((avg_bits * n as f64).round() as usize).clamp(lo * n, hi * n);
+    let mut alloc = vec![options[0]; n];
+    let mut total = lo * n;
+    // greedily bump random experts until budget is met
+    while total < budget {
+        let i = rng.below(n);
+        let cur = alloc[i];
+        if let Some(&next) = options.iter().find(|&&o| o > cur) {
+            let delta = (next - cur) as usize;
+            if total + delta <= budget {
+                alloc[i] = next;
+                total += delta;
+            } else if budget - total >= 1 && options.contains(&(cur + 1)) {
+                alloc[i] = cur + 1;
+                total += 1;
+            }
+        }
+        // tiny chance of stalls when only +2 jumps remain; resolve by +1s
+        if options.contains(&2) && total < budget && alloc.iter().all(|&b| b as usize >= hi - 1)
+        {
+            for a in alloc.iter_mut() {
+                if total == budget {
+                    break;
+                }
+                if (*a as usize) < hi {
+                    *a += 1;
+                    total += 1;
+                }
+            }
+        }
+    }
+    alloc
+}
+
+/// BSP-like: layer-granularity allocation. Rank layers by mean ε at
+/// 2-bit; the most sensitive quarter gets the max bit option, the rest
+/// get a uniform width chosen to land on the global budget.
+fn bsp_allocation(
+    model: &MoeModel,
+    _cal: &Calibration,
+    eps: &EpsTable,
+    avg_bits: f64,
+) -> Vec<Vec<u8>> {
+    let cfg = &model.cfg;
+    let l = cfg.n_layers;
+    let n = cfg.n_experts;
+    let mut sens: Vec<(usize, f64)> = (0..l)
+        .map(|li| (li, (0..n).map(|e| eps[li][e][1]).sum::<f64>()))
+        .collect();
+    sens.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let n_hi = (l as f64 * 0.25).ceil() as usize;
+    let hi_layers: Vec<usize> = sens[..n_hi].iter().map(|&(i, _)| i).collect();
+    // remaining layers uniform: solve for the width meeting the budget
+    let total_budget = (avg_bits * (l * n) as f64).round() as usize;
+    let hi_bits = 3usize * n_hi * n;
+    let rest_layers = l - n_hi;
+    let per_rest = if rest_layers == 0 {
+        2.0
+    } else {
+        (total_budget.saturating_sub(hi_bits)) as f64 / (rest_layers * n) as f64
+    };
+    let rest_b = per_rest.round().clamp(1.0, 3.0) as u8;
+    (0..l)
+        .map(|li| {
+            if hi_layers.contains(&li) {
+                vec![3u8; n]
+            } else {
+                vec![rest_b; n]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{Corpus, CorpusKind};
+    use crate::pmq::importance::calibrate;
+    use crate::quant::error::eps_table;
+
+    fn setup() -> (MoeModel, Calibration, EpsTable, PmqConfig) {
+        let cfg = ModelConfig {
+            name: "strat-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 512,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let model = MoeModel::new(&cfg, 15);
+        let corpus = Corpus::new(CorpusKind::General, 5);
+        let mut rng = Rng::new(6);
+        let seqs = corpus.batch(4, 24, &mut rng);
+        let cal = calibrate(&model, &seqs, 48);
+        let pmq = PmqConfig::default();
+        let eps = eps_table(&model, &cal.acts, &pmq);
+        (model, cal, eps, pmq)
+    }
+
+    #[test]
+    fn all_strategies_meet_budget() {
+        let (model, cal, eps, pmq) = setup();
+        let mut rng = Rng::new(7);
+        for s in Strategy::ALL {
+            for &avg in &[1.5f64, 2.0, 2.5] {
+                let alloc = allocation(s, &model, &cal, &eps, &pmq, avg, &mut rng);
+                assert_eq!(alloc.len(), 2);
+                let total: usize = alloc.iter().flatten().map(|&b| b as usize).sum();
+                let target = (avg * 8.0).round() as usize;
+                // uniform & BSP quantize at coarser granularity — allow slack
+                let slack = match s {
+                    Strategy::Uniform | Strategy::BspLike => 8,
+                    _ => 0,
+                };
+                assert!(
+                    (total as i64 - target as i64).unsigned_abs() as usize <= slack,
+                    "{s:?} avg {avg}: total {total} target {target}"
+                );
+                for &b in alloc.iter().flatten() {
+                    assert!((1..=3).contains(&b), "{s:?} produced bit {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_feasible_exact() {
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let n = 4 + rng.below(12);
+            let avg = 1.5 + rng.f64();
+            let a = random_feasible(n, avg, &[1, 2, 3], &mut rng);
+            let total: usize = a.iter().map(|&b| b as usize).sum();
+            assert_eq!(total, (avg * n as f64).round() as usize);
+        }
+    }
+
+    #[test]
+    fn pmq_assigns_more_bits_to_significant_experts_on_average() {
+        let (model, cal, eps, pmq) = setup();
+        let mut rng = Rng::new(9);
+        let alloc = allocation(Strategy::Pmq, &model, &cal, &eps, &pmq, 2.0, &mut rng);
+        // correlation between significance*eps and bits should be ≥ 0
+        let mut pairs = Vec::new();
+        for l in 0..2 {
+            for e in 0..4 {
+                let sig = cal.significance(l, e, pmq.alpha, pmq.beta) * eps[l][e][1];
+                pairs.push((sig, alloc[l][e] as f64));
+            }
+        }
+        let mean_s: f64 = pairs.iter().map(|p| p.0).sum::<f64>() / pairs.len() as f64;
+        let mean_b: f64 = pairs.iter().map(|p| p.1).sum::<f64>() / pairs.len() as f64;
+        let cov: f64 = pairs.iter().map(|p| (p.0 - mean_s) * (p.1 - mean_b)).sum();
+        assert!(cov >= 0.0, "PMQ anti-correlated with significance: {cov}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Device profiles + roofline model (Table 8) and the L1 VMEM/MXU
+//! estimator (DESIGN.md §8 — interpret-mode Pallas gives no TPU timing,
+//! so kernel efficiency is estimated from its memory/compute structure).
+
+use crate::config::ModelConfig;
+use crate::quant::qmodel::QuantModel;
+
+/// A simulated deployment platform (paper Table 8 rows).
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub mem_bytes: u64,
+    /// Memory bandwidth, bytes/s.
+    pub bw: f64,
+    /// Peak f16 compute, FLOP/s.
+    pub flops: f64,
+}
+
+pub const A100_80G: DeviceProfile = DeviceProfile {
+    name: "A100-80GB",
+    mem_bytes: 80 * 1024 * 1024 * 1024,
+    bw: 2.0e12,
+    flops: 312e12,
+};
+
+pub const RTX_3090: DeviceProfile = DeviceProfile {
+    name: "RTX-3090",
+    mem_bytes: 24 * 1024 * 1024 * 1024,
+    bw: 0.936e12,
+    flops: 71e12,
+};
+
+/// What a model weighs on a device, scaled so our tiny zoo maps onto the
+/// paper's model sizes: `scale` multiplies parameter bytes (the paper's
+/// Mixtral 8×7b ≈ 13000× our mix-tiny; Table 8's point — fits vs OOM and
+/// the decode-speed ratio — is scale-invariant).
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub weight_bytes: u64,
+    pub act_bytes_per_token: u64,
+}
+
+impl Deployment {
+    pub fn fp16(cfg: &ModelConfig, scale: f64) -> Deployment {
+        Deployment {
+            weight_bytes: ((cfg.total_params() * 2) as f64 * scale) as u64,
+            act_bytes_per_token: ((cfg.activated_params() * 2) as f64 * scale) as u64,
+        }
+    }
+
+    pub fn quantized(q: &QuantModel, keep_ratio: f64, scale: f64) -> Deployment {
+        Deployment {
+            weight_bytes: (q.nbytes() as f64 * scale) as u64,
+            act_bytes_per_token: (q.activated_bytes_per_token(keep_ratio) as f64 * scale) as u64,
+        }
+    }
+
+    pub fn fits(&self, dev: &DeviceProfile) -> bool {
+        // leave 20% headroom for KV cache + activations
+        (self.weight_bytes as f64) < dev.mem_bytes as f64 * 0.8
+    }
+
+    /// Roofline decode latency per token: max(bytes/bw, flops/peak).
+    /// Decode is memory-bound on every platform the paper tests, so the
+    /// bytes term dominates; FLOPs ≈ 2·activated-params.
+    pub fn decode_latency_s(&self, dev: &DeviceProfile) -> f64 {
+        let mem_t = self.act_bytes_per_token as f64 / dev.bw;
+        // activated params ≈ act_bytes at fp16 / 2 → FLOPs = 2·params
+        let flop_t = self.act_bytes_per_token as f64 / dev.flops;
+        mem_t.max(flop_t)
+    }
+
+    pub fn tokens_per_sec(&self, dev: &DeviceProfile) -> Option<f64> {
+        if !self.fits(dev) {
+            return None; // OOM
+        }
+        Some(1.0 / self.decode_latency_s(dev))
+    }
+}
+
+/// L1 kernel VMEM/MXU estimate for a dequant-matmul tile (DESIGN.md §8).
+#[derive(Clone, Debug)]
+pub struct KernelEstimate {
+    pub vmem_bytes: u64,
+    /// Arithmetic intensity: FLOPs per HBM byte.
+    pub intensity: f64,
+    /// Fraction of f32 HBM traffic this kernel moves.
+    pub traffic_ratio: f64,
+}
+
+/// Estimate the Pallas dequant-matmul at `(t, d_in, tile_o)` and `bits`.
+pub fn dequant_matmul_estimate(
+    t: usize,
+    d_in: usize,
+    tile_o: usize,
+    bits: u8,
+    group: usize,
+) -> KernelEstimate {
+    let planes = bits as u64 * (d_in as u64 / 8) * tile_o as u64;
+    let params = 2 * (d_in as u64 / group as u64) * tile_o as u64 * 4;
+    let x = (t * d_in * 4) as u64;
+    let w_expanded = (d_in * tile_o * 4) as u64; // dequantized in VMEM
+    let out = (t * tile_o * 4) as u64;
+    let vmem = planes + params + x + w_expanded + out;
+    let flops = 2.0 * t as f64 * d_in as f64 * tile_o as f64;
+    let hbm = (planes + params + x + out) as f64;
+    let f32_hbm = (d_in * tile_o * 4 + t * d_in * 4 + t * tile_o * 4) as f64;
+    KernelEstimate {
+        vmem_bytes: vmem,
+        intensity: flops / hbm,
+        traffic_ratio: hbm / f32_hbm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn fp16_mixtral_scale_ooms_3090() {
+        // scale mix-tiny to Mixtral-8x7b's 96.8 GB weight footprint
+        let cfg = ModelConfig::load("mix-tiny").unwrap();
+        let base = (cfg.total_params() * 2) as f64;
+        let scale = 96.8e9 / base;
+        let dep = Deployment::fp16(&cfg, scale);
+        assert!(!dep.fits(&RTX_3090), "96.8GB should OOM a 3090");
+        assert!(!dep.fits(&A100_80G), "needs 2 GPUs, not one");
+        // ~6.2x compression fits the 3090 (paper Table 8)
+        let dep_q = Deployment {
+            weight_bytes: (dep.weight_bytes as f64 / 6.2) as u64,
+            act_bytes_per_token: (dep.act_bytes_per_token as f64 / 7.0) as u64,
+        };
+        assert!(dep_q.fits(&RTX_3090));
+    }
+
+    #[test]
+    fn decode_is_memory_bound_and_quant_speeds_up() {
+        let cfg = ModelConfig::load("mix-tiny").unwrap();
+        let scale = 1e4;
+        let fp = Deployment::fp16(&cfg, scale);
+        let q = Deployment {
+            weight_bytes: fp.weight_bytes / 6,
+            act_bytes_per_token: fp.act_bytes_per_token / 6,
+        };
+        let t_fp = fp.decode_latency_s(&A100_80G);
+        let t_q = q.decode_latency_s(&A100_80G);
+        let speedup = t_fp / t_q;
+        assert!(speedup > 3.0, "roofline speedup {speedup}");
+    }
+
+    #[test]
+    fn kernel_estimate_sane() {
+        let e2 = dequant_matmul_estimate(16, 128, 128, 2, 32);
+        let e4 = dequant_matmul_estimate(16, 128, 128, 4, 32);
+        assert!(e2.traffic_ratio < e4.traffic_ratio);
+        assert!(e2.traffic_ratio < 0.5, "2-bit should move <50% of f32 traffic");
+        assert!(e2.vmem_bytes < 16 * 1024 * 1024, "tile must fit VMEM");
+        assert!(e2.intensity > e4.intensity);
+    }
+}

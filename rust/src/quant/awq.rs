@@ -1,0 +1,220 @@
+//! AWQ-style activation-aware weight scaling (Lin et al. 2024, paper
+//! ref. \[26\]) — one of the PTQ backends the paper declares PMQ orthogonal
+//! to (§3.2.3: "Current PTQ methods \[14\], \[26\] … can be deployed for
+//! MC#"). This module makes that claim executable: the PMQ allocation can
+//! drive RTN, GPTQ *or* AWQ per-expert quantization and the ablation
+//! bench (`ablation_ptq`) compares them.
+//!
+//! AWQ's core observation: a small fraction of weight channels are
+//! *salient* because their input activations are large; scaling those
+//! channels **up** before quantization (and the activations down by the
+//! same factor at runtime) shrinks their relative quantization error.
+//! Per input channel `i`:
+//!
+//! ```text
+//! s_i = (mag_i / geomean(mag))^α,   mag_i = E[|x_i|]
+//! Ŵ  = Q(diag(s) · W)              stored packed
+//! y   = (x ⊘ s) · Ŵ                 at runtime (inv_s folded into matvec)
+//! ```
+//!
+//! α is grid-searched per matrix to minimize the activation-space
+//! reconstruction error on calibration rows — exactly the AWQ recipe,
+//! with our group-wise RTN as the inner quantizer.
+
+use crate::tensor::Tensor2;
+
+use super::packed::PackedMatrix;
+use super::qlinear::QuantLinear;
+use super::rtn;
+
+/// The α grid AWQ searches (0 = plain RTN, 1 = fully activation-scaled).
+pub const ALPHA_GRID: [f32; 9] =
+    [0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0];
+
+/// Mean absolute activation per input channel over calibration rows.
+pub fn channel_mags(xs: &[Vec<f32>], d_in: usize) -> Vec<f32> {
+    let mut mags = vec![0.0f32; d_in];
+    if xs.is_empty() {
+        return vec![1.0; d_in];
+    }
+    for x in xs {
+        for (m, &v) in mags.iter_mut().zip(x) {
+            *m += v.abs();
+        }
+    }
+    let inv = 1.0 / xs.len() as f32;
+    for m in mags.iter_mut() {
+        *m = (*m * inv).max(1e-6);
+    }
+    mags
+}
+
+/// Per-channel scales for a given α, normalized so geomean(s) = 1 (keeps
+/// the overall weight magnitude — and the min/max quantization grids —
+/// in the same range as the unscaled matrix).
+pub fn scales_for_alpha(mags: &[f32], alpha: f32) -> Vec<f32> {
+    let log_gm: f32 =
+        mags.iter().map(|&m| m.ln()).sum::<f32>() / mags.len() as f32;
+    let gm = log_gm.exp();
+    mags.iter().map(|&m| (m / gm).powf(alpha).clamp(1e-3, 1e3)).collect()
+}
+
+/// Activation-space squared reconstruction error of `x·W ≈ (x⊘s)·Ŵ` over
+/// sample rows.
+fn recon_err(xs: &[Vec<f32>], w: &Tensor2, w_hat_unscaled: &Tensor2) -> f64 {
+    // `w_hat_unscaled` is already diag(1/s)·Ŵ, i.e. the effective weights;
+    // compare x·W vs x·W_eff directly.
+    let d_out = w.cols;
+    let mut err = 0.0f64;
+    for x in xs {
+        for o in 0..d_out {
+            let mut a = 0.0f32;
+            let mut b = 0.0f32;
+            for (r, &xr) in x.iter().enumerate() {
+                a += xr * w.at(r, o);
+                b += xr * w_hat_unscaled.at(r, o);
+            }
+            err += ((a - b) as f64).powi(2);
+        }
+    }
+    err
+}
+
+/// Quantize one matrix with AWQ scaling: grid-search α on a subsample of
+/// calibration rows, return `(best_alpha, QuantLinear::Scaled)`. `bits`
+/// must be ≥ 2 (1-bit binarization is scale-invariant per channel — the
+/// sign pattern of `diag(s)·W` equals that of `W` — so AWQ degenerates
+/// to plain binarization there and callers should use it directly).
+pub fn awq_quantize(
+    w: &Tensor2,
+    xs: &[Vec<f32>],
+    bits: u8,
+    group: usize,
+) -> (f32, QuantLinear) {
+    assert!(bits >= 2, "AWQ needs a linear quantizer (bits >= 2)");
+    let d_in = w.rows;
+    let mags = channel_mags(xs, d_in);
+    // error probe on a bounded subsample to keep the grid search cheap
+    let probe: Vec<Vec<f32>> = xs.iter().take(32).cloned().collect();
+    let mut best: Option<(f32, f64, PackedMatrix, Vec<f32>)> = None;
+    for &alpha in &ALPHA_GRID {
+        let s = scales_for_alpha(&mags, alpha);
+        // scale rows of W up by s
+        let mut ws = w.clone();
+        for r in 0..d_in {
+            let sr = s[r];
+            for v in ws.row_mut(r) {
+                *v *= sr;
+            }
+        }
+        let (c, sc, z) = rtn::quantize_rtn(&ws, bits, group);
+        let pm = PackedMatrix::from_codes(&c, sc, z, ws.rows, ws.cols, bits, group);
+        // effective reconstruction: diag(1/s) · dequant(pm)
+        let mut w_eff = pm.dequantize();
+        for r in 0..d_in {
+            let inv = 1.0 / s[r];
+            for v in w_eff.row_mut(r) {
+                *v *= inv;
+            }
+        }
+        let err = recon_err(&probe, w, &w_eff);
+        if best.as_ref().map(|b| err < b.1).unwrap_or(true) {
+            let inv_s: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+            best = Some((alpha, err, pm, inv_s));
+        }
+    }
+    let (alpha, _, pm, inv_s) = best.unwrap();
+    (alpha, QuantLinear::Scaled { inv_s, inner: pm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Calibration rows where a few channels carry much larger
+    /// activations — the regime AWQ is built for.
+    fn salient_acts(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                (0..d)
+                    .map(|i| {
+                        let boost = if i % 16 == 0 { 12.0 } else { 1.0 };
+                        boost * rng.normal()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn channel_mags_reflect_salience() {
+        let mut rng = Rng::new(40);
+        let xs = salient_acts(&mut rng, 64, 32);
+        let mags = channel_mags(&xs, 32);
+        // boosted channels (0, 16) should dominate the others
+        let hot = (mags[0] + mags[16]) / 2.0;
+        let cold: f32 =
+            (1..32).filter(|&i| i != 16).map(|i| mags[i]).sum::<f32>() / 30.0;
+        assert!(hot > 4.0 * cold, "hot {hot} cold {cold}");
+    }
+
+    #[test]
+    fn scales_geomean_normalized() {
+        let mut rng = Rng::new(41);
+        let xs = salient_acts(&mut rng, 32, 64);
+        let mags = channel_mags(&xs, 64);
+        for &a in &[0.25f32, 0.5, 1.0] {
+            let s = scales_for_alpha(&mags, a);
+            let log_gm: f32 = s.iter().map(|v| v.ln()).sum::<f32>() / 64.0;
+            assert!(log_gm.abs() < 0.05, "alpha {a}: log-geomean {log_gm}");
+            assert!(s.iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn awq_beats_plain_rtn_on_salient_activations() {
+        let mut rng = Rng::new(42);
+        let (d_in, d_out) = (64, 24);
+        let w = Tensor2::randn(d_in, d_out, &mut rng, 1.0);
+        let xs = salient_acts(&mut rng, 96, d_in);
+        for bits in [2u8, 3] {
+            let (_, ql) = awq_quantize(&w, &xs, bits, 32);
+            let awq_err = recon_err(&xs, &w, &ql.dequantize());
+            let rtn_hat = rtn::fake_quant(&w, bits, 32);
+            let rtn_err = recon_err(&xs, &w, &rtn_hat);
+            assert!(
+                awq_err <= rtn_err,
+                "bits={bits}: awq {awq_err:.3} !<= rtn {rtn_err:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_matvec_matches_dequant_reference() {
+        let mut rng = Rng::new(43);
+        let w = Tensor2::randn(64, 16, &mut rng, 1.0);
+        let xs = salient_acts(&mut rng, 48, 64);
+        let (_, ql) = awq_quantize(&w, &xs, 3, 32);
+        let wd = ql.dequantize();
+        let x = &xs[0];
+        let mut want = vec![0.0f32; 16];
+        for (r, &xr) in x.iter().enumerate() {
+            for o in 0..16 {
+                want[o] += xr * wd.at(r, o);
+            }
+        }
+        let mut got = vec![0.0f32; 16];
+        ql.matvec_acc(x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn alpha_zero_is_plain_rtn() {
+        let mags = vec![1.0f32; 32];
+        let s = scales_for_alpha(&mags, 0.77);
+        assert!(s.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+}

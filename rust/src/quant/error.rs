@@ -1,0 +1,211 @@
+//! Per-expert, per-bit reconstruction-error table ε_{i,j} (paper Eq. 6).
+//!
+//! For each (layer l, expert i, bit j): run the calibration tokens
+//! through the **MoE block output** twice — all experts full-precision vs
+//! only expert i quantized to j bits — and take the Frobenius norm of the
+//! difference, normalized per token. This is PMQ's loss-sensitivity
+//! signal; the same probe with the expert *dropped* gives the "expert
+//! drop F-norm" of Fig. 4.
+
+use crate::config::PmqConfig;
+use crate::moe::gating::route;
+use crate::moe::model::MoeModel;
+use crate::quant::qlinear::QuantLinear;
+use crate::quant::{binary::BinaryMatrix, packed::PackedMatrix, rtn};
+use crate::tensor::silu;
+
+/// ε table: `eps[layer][expert][bit_idx]` aligned with `pmq.bit_options`.
+pub type EpsTable = Vec<Vec<Vec<f64>>>;
+
+/// Calibration token activations per layer: the *MoE-layer inputs*
+/// (post-norm), collected once by `pmq::importance::calibrate`.
+pub struct LayerActivations {
+    /// `[n_tokens][d_model]` rows.
+    pub xs: Vec<Vec<f32>>,
+}
+
+/// Quantize one expert matrix to `bits` and return the dequantized f32
+/// reconstruction (probe path — storage format irrelevant here).
+fn fake_quant_expert_mat(w: &crate::tensor::Tensor2, bits: u8, group: usize) -> crate::tensor::Tensor2 {
+    match bits {
+        1 => BinaryMatrix::binarize(w).dequantize(),
+        b => {
+            let (c, s, z) = rtn::quantize_rtn(w, b, group);
+            PackedMatrix::from_codes(&c, s, z, w.rows, w.cols, b, group).dequantize()
+        }
+    }
+}
+
+/// Compute the full ε table from per-layer calibration activations.
+///
+/// The block output for token x is `Σ_{j∈topk} w_j F_j(x) (+ shared)`;
+/// quantizing expert i only changes the `w_i F_i(x)` term of tokens that
+/// route to i, so ε_{i,j} reduces to `‖w_i (F_i(x) − F̂_i(x))‖` summed
+/// over routed tokens — which is what we compute (exactly Eq. 6, cheaper).
+pub fn eps_table(model: &MoeModel, acts: &[LayerActivations], pmq: &PmqConfig) -> EpsTable {
+    let cfg = &model.cfg;
+    let mut table =
+        vec![vec![vec![0.0f64; pmq.bit_options.len()]; cfg.n_experts]; cfg.n_layers];
+    for (l, block) in model.blocks.iter().enumerate() {
+        let xs = &acts[l].xs;
+        // routing of each calibration token at this layer
+        let routes: Vec<_> = xs.iter().map(|x| route(x, &block.gate, cfg.top_k)).collect();
+        for (e, expert) in block.experts.iter().enumerate() {
+            // tokens that use expert e, with their routing weights
+            let users: Vec<(usize, f32)> = routes
+                .iter()
+                .enumerate()
+                .filter_map(|(t, r)| {
+                    r.experts
+                        .iter()
+                        .position(|&ei| ei == e)
+                        .map(|rank| (t, r.weights[rank]))
+                })
+                .collect();
+            if users.is_empty() {
+                // never-activated expert: quantization is free
+                continue;
+            }
+            // full-precision outputs once
+            let fp_outs: Vec<Vec<f32>> = users
+                .iter()
+                .map(|&(t, _)| {
+                    let mut out = vec![0.0f32; cfg.d_model];
+                    expert.ffn_row_acc(&xs[t], 1.0, &mut out);
+                    out
+                })
+                .collect();
+            for (bi, &bits) in pmq.bit_options.iter().enumerate() {
+                let qg = fake_quant_expert_mat(&expert.wg, bits, pmq.group);
+                let qu = fake_quant_expert_mat(&expert.wu, bits, pmq.group);
+                let qd = fake_quant_expert_mat(&expert.wd, bits, pmq.group);
+                let mut err = 0.0f64;
+                for (ui, &(t, w)) in users.iter().enumerate() {
+                    let x = &xs[t];
+                    let f = cfg.d_ff;
+                    let mut g = vec![0.0f32; f];
+                    let mut u = vec![0.0f32; f];
+                    for (k, &xk) in x.iter().enumerate() {
+                        if xk != 0.0 {
+                            crate::tensor::axpy(xk, qg.row(k), &mut g);
+                            crate::tensor::axpy(xk, qu.row(k), &mut u);
+                        }
+                    }
+                    let mut out = vec![0.0f32; cfg.d_model];
+                    for j in 0..f {
+                        let hj = silu(g[j]) * u[j];
+                        if hj != 0.0 {
+                            crate::tensor::axpy(hj, qd.row(j), &mut out);
+                        }
+                    }
+                    let fp = &fp_outs[ui];
+                    err += out
+                        .iter()
+                        .zip(fp)
+                        .map(|(a, b)| {
+                            let d = (w * (a - b)) as f64;
+                            d * d
+                        })
+                        .sum::<f64>();
+                }
+                table[l][e][bi] = (err / xs.len() as f64).sqrt();
+            }
+        }
+    }
+    table
+}
+
+/// Fig. 4's "expert drop F-norm": block-output error when expert i is
+/// removed entirely (its routing weight redistributed).
+pub fn drop_fnorm(model: &MoeModel, acts: &[LayerActivations]) -> Vec<Vec<f64>> {
+    let cfg = &model.cfg;
+    let mut table = vec![vec![0.0f64; cfg.n_experts]; cfg.n_layers];
+    for (l, block) in model.blocks.iter().enumerate() {
+        let xs = &acts[l].xs;
+        for x in xs {
+            let r = route(x, &block.gate, cfg.top_k);
+            for (rank, &e) in r.experts.iter().enumerate() {
+                let mut out = vec![0.0f32; cfg.d_model];
+                block.experts[e].ffn_row_acc(x, r.weights[rank], &mut out);
+                let n: f64 = out.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+                table[l][e] += n;
+            }
+        }
+        for e in 0..cfg.n_experts {
+            table[l][e] = (table[l][e] / xs.len() as f64).sqrt();
+        }
+    }
+    table
+}
+
+// QuantLinear referenced for doc cohesion.
+#[allow(unused_imports)]
+use QuantLinear as _;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (MoeModel, Vec<LayerActivations>, PmqConfig) {
+        let cfg = ModelConfig {
+            name: "eps-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 32,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let model = MoeModel::new(&cfg, 11);
+        let mut rng = Rng::new(12);
+        let acts = (0..2)
+            .map(|_| LayerActivations {
+                xs: (0..32).map(|_| rng.normal_vec(32, 1.0)).collect(),
+            })
+            .collect();
+        (model, acts, PmqConfig::default())
+    }
+
+    #[test]
+    fn eps_decreases_with_bits() {
+        let (model, acts, pmq) = setup();
+        let table = eps_table(&model, &acts, &pmq);
+        // ε flows through the SwiGLU nonlinearity, so strict per-expert
+        // monotonicity between 1-bit (sign/α) and 2-bit is not guaranteed;
+        // 3-bit must beat both, and the mean must be monotone.
+        let mut checked = 0;
+        let mut mean = [0.0f64; 3];
+        for l in 0..2 {
+            for e in 0..4 {
+                let row = &table[l][e];
+                if row[0] == 0.0 {
+                    continue; // never activated
+                }
+                assert!(row[0] > row[2] && row[1] > row[2], "3-bit not best: {row:?}");
+                for (m, &v) in mean.iter_mut().zip(row.iter()) {
+                    *m += v;
+                }
+                checked += 1;
+            }
+        }
+        assert!(checked >= 4);
+        assert!(mean[0] >= mean[1] && mean[1] >= mean[2], "mean ε not monotone: {mean:?}");
+    }
+
+    #[test]
+    fn drop_fnorm_positive_for_used_experts() {
+        let (model, acts, _) = setup();
+        let t = drop_fnorm(&model, &acts);
+        let used: usize = t.iter().flatten().filter(|&&v| v > 0.0).count();
+        assert!(used >= 4);
+    }
+}

@@ -1,0 +1,20 @@
+//! Quantization substrate: round-to-nearest + GPTQ quantizers, 1-bit
+//! binarization (paper Eq. 4/8/9), bit-plane packed storage (the HQQ-role
+//! store shared byte-for-byte with the Pallas kernels), quantized linear
+//! execution and the per-expert reconstruction-error table (Eq. 6).
+
+pub mod awq;
+pub mod binary;
+pub mod error;
+pub mod gptq;
+pub mod packed;
+pub mod qcheckpoint;
+pub mod qlinear;
+pub mod qmodel;
+pub mod rtn;
+
+pub use binary::BinaryMatrix;
+pub use gptq::GptqQuantizer;
+pub use packed::PackedMatrix;
+pub use qlinear::QuantLinear;
+pub use qmodel::{QuantExpert, QuantModel};

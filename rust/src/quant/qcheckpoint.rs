@@ -1,0 +1,522 @@
+//! Quantized-model checkpoints — PMQ's *pre-loading* artifact (paper
+//! §3.2/§3.3): the packed expert planes, group scale/zero vectors, the
+//! bit allocation and the 4-bit-round-tripped dense weights, all in one
+//! streamable file. `compress` writes it once; `serve`/`eval` load it
+//! without re-running calibration or GPTQ — exactly the deployment story
+//! the paper's "pre-loading" phase describes.
+//!
+//! Layout: `MCSHARPQ1` magic, u64-length JSON header (model config + PMQ
+//! hyper-params + allocation), the dense base payload (same field order
+//! as `moe::checkpoint`, *without* the routed experts — those live only
+//! in packed form), then one tagged [`QuantLinear`] record per expert
+//! matrix.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::PmqConfig;
+use crate::moe::model::MoeModel;
+use crate::tensor::Tensor2;
+use crate::util::json::{self, Value};
+
+use super::binary::BinaryMatrix;
+use super::packed::PackedMatrix;
+use super::qlinear::QuantLinear;
+use super::qmodel::{QuantExpert, QuantModel};
+
+const MAGIC: &[u8; 9] = b"MCSHARPQ1";
+
+// ------------------------------------------------------------ primitives
+
+fn write_f32s(w: &mut impl Write, v: &[f32]) -> Result<()> {
+    for &x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_bytes(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ----------------------------------------------------- QuantLinear codec
+
+const TAG_FP: u8 = 0;
+const TAG_PACKED: u8 = 1;
+const TAG_BINARY: u8 = 2;
+const TAG_SCALED: u8 = 3;
+
+fn write_packed(w: &mut impl Write, p: &PackedMatrix) -> Result<()> {
+    w.write_all(&[p.bits])?;
+    write_u64(w, p.d_in as u64)?;
+    write_u64(w, p.d_out as u64)?;
+    write_u64(w, p.group as u64)?;
+    w.write_all(&p.planes)?;
+    write_f32s(w, &p.scales)?;
+    write_f32s(w, &p.zeros)?;
+    Ok(())
+}
+
+fn read_packed(r: &mut impl Read) -> Result<PackedMatrix> {
+    let mut bits = [0u8; 1];
+    r.read_exact(&mut bits)?;
+    let bits = bits[0];
+    let d_in = read_u64(r)? as usize;
+    let d_out = read_u64(r)? as usize;
+    let group = read_u64(r)? as usize;
+    if bits == 0 || bits > 8 || d_in == 0 || d_out == 0 || group == 0 || d_in % 8 != 0 {
+        bail!("corrupt packed-matrix header (bits {bits}, {d_in}x{d_out}, group {group})");
+    }
+    let planes = read_bytes(r, bits as usize * d_in / 8 * d_out)?;
+    let n_groups = d_in / group;
+    let scales = read_f32s(r, n_groups * d_out)?;
+    let zeros = read_f32s(r, n_groups * d_out)?;
+    Ok(PackedMatrix { d_in, d_out, bits, group, planes, scales, zeros })
+}
+
+fn write_qlinear(w: &mut impl Write, q: &QuantLinear) -> Result<()> {
+    match q {
+        QuantLinear::Fp(t) => {
+            w.write_all(&[TAG_FP])?;
+            write_u64(w, t.rows as u64)?;
+            write_u64(w, t.cols as u64)?;
+            write_f32s(w, &t.data)?;
+        }
+        QuantLinear::Packed(p) => {
+            w.write_all(&[TAG_PACKED])?;
+            write_packed(w, p)?;
+        }
+        QuantLinear::Binary(b) => {
+            w.write_all(&[TAG_BINARY])?;
+            write_u64(w, b.d_in as u64)?;
+            write_u64(w, b.d_out as u64)?;
+            w.write_all(&b.plane)?;
+            write_f32s(w, &b.alpha)?;
+        }
+        QuantLinear::Scaled { inv_s, inner } => {
+            w.write_all(&[TAG_SCALED])?;
+            write_u64(w, inv_s.len() as u64)?;
+            write_f32s(w, inv_s)?;
+            write_packed(w, inner)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_qlinear(r: &mut impl Read) -> Result<QuantLinear> {
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    Ok(match tag[0] {
+        TAG_FP => {
+            let rows = read_u64(r)? as usize;
+            let cols = read_u64(r)? as usize;
+            if rows == 0 || cols == 0 || rows * cols > (1 << 30) {
+                bail!("corrupt fp tensor header {rows}x{cols}");
+            }
+            QuantLinear::Fp(Tensor2::from_vec(rows, cols, read_f32s(r, rows * cols)?))
+        }
+        TAG_PACKED => QuantLinear::Packed(read_packed(r)?),
+        TAG_BINARY => {
+            let d_in = read_u64(r)? as usize;
+            let d_out = read_u64(r)? as usize;
+            if d_in == 0 || d_out == 0 || d_in % 8 != 0 {
+                bail!("corrupt binary-matrix header {d_in}x{d_out}");
+            }
+            let plane = read_bytes(r, d_in / 8 * d_out)?;
+            let alpha = read_f32s(r, d_out)?;
+            QuantLinear::Binary(BinaryMatrix { d_in, d_out, plane, alpha })
+        }
+        TAG_SCALED => {
+            let n = read_u64(r)? as usize;
+            if n == 0 || n > (1 << 24) {
+                bail!("corrupt scaled-matrix header (inv_s len {n})");
+            }
+            let inv_s = read_f32s(r, n)?;
+            let inner = read_packed(r)?;
+            if inner.d_in != n {
+                bail!("inv_s length {n} != packed d_in {}", inner.d_in);
+            }
+            QuantLinear::Scaled { inv_s, inner }
+        }
+        t => bail!("unknown QuantLinear tag {t}"),
+    })
+}
+
+// ------------------------------------------------------------- top level
+
+fn pmq_json(p: &PmqConfig, allocation: &[Vec<u8>]) -> Value {
+    json::obj(vec![
+        ("alpha", json::num(p.alpha)),
+        ("beta", json::num(p.beta)),
+        ("gamma", json::num(p.gamma)),
+        (
+            "bit_options",
+            Value::Arr(p.bit_options.iter().map(|&b| json::num(b as f64)).collect()),
+        ),
+        ("other_bits", json::num(p.other_bits as f64)),
+        ("group", json::num(p.group as f64)),
+        (
+            "allocation",
+            Value::Arr(
+                allocation
+                    .iter()
+                    .map(|row| {
+                        Value::Arr(row.iter().map(|&b| json::num(b as f64)).collect())
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn pmq_from_json(v: &Value) -> Result<(PmqConfig, Vec<Vec<u8>>)> {
+    let pmq = PmqConfig {
+        alpha: v.get("alpha")?.as_f64()?,
+        beta: v.get("beta")?.as_f64()?,
+        gamma: v.get("gamma")?.as_f64()?,
+        bit_options: v
+            .get("bit_options")?
+            .as_arr()?
+            .iter()
+            .map(|b| Ok(b.as_usize()? as u8))
+            .collect::<Result<_>>()?,
+        other_bits: v.get("other_bits")?.as_usize()? as u8,
+        group: v.get("group")?.as_usize()?,
+    };
+    let allocation = v
+        .get("allocation")?
+        .as_arr()?
+        .iter()
+        .map(|row| {
+            row.as_arr()?
+                .iter()
+                .map(|b| Ok(b.as_usize()? as u8))
+                .collect::<Result<Vec<u8>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((pmq, allocation))
+}
+
+/// Save a quantized model (packed experts + 4-bit-round-tripped dense
+/// base) to `path`.
+pub fn save(q: &QuantModel, path: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    let header = json::obj(vec![
+        ("config", config_json(&q.model)),
+        ("pmq", pmq_json(&q.pmq, &q.allocation)),
+    ])
+    .to_json();
+    write_u64(&mut w, header.len() as u64)?;
+    w.write_all(header.as_bytes())?;
+    // dense base (routed experts excluded — they only exist packed)
+    write_f32s(&mut w, &q.model.embed.data)?;
+    for b in &q.model.blocks {
+        write_f32s(&mut w, &b.attn_norm)?;
+        for t in [&b.attn.wq, &b.attn.wk, &b.attn.wv, &b.attn.wo] {
+            write_f32s(&mut w, &t.data)?;
+        }
+        write_f32s(&mut w, &b.moe_norm)?;
+        write_f32s(&mut w, &b.gate.data)?;
+        for e in &b.shared {
+            write_f32s(&mut w, &e.wg.data)?;
+            write_f32s(&mut w, &e.wu.data)?;
+            write_f32s(&mut w, &e.wd.data)?;
+        }
+    }
+    write_f32s(&mut w, &q.model.final_norm)?;
+    write_f32s(&mut w, &q.model.lm_head.data)?;
+    // packed experts
+    for row in &q.experts {
+        for e in row {
+            w.write_all(&[e.bits])?;
+            write_qlinear(&mut w, &e.wg)?;
+            write_qlinear(&mut w, &e.wu)?;
+            write_qlinear(&mut w, &e.wd)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn config_json(m: &MoeModel) -> Value {
+    let c = &m.cfg;
+    json::obj(vec![
+        ("name", json::s(&c.name)),
+        ("family", json::s(&c.family)),
+        ("vocab_size", json::num(c.vocab_size as f64)),
+        ("d_model", json::num(c.d_model as f64)),
+        ("n_layers", json::num(c.n_layers as f64)),
+        ("n_heads", json::num(c.n_heads as f64)),
+        ("d_ff", json::num(c.d_ff as f64)),
+        ("n_experts", json::num(c.n_experts as f64)),
+        ("top_k", json::num(c.top_k as f64)),
+        ("n_shared_experts", json::num(c.n_shared_experts as f64)),
+        ("max_seq_len", json::num(c.max_seq_len as f64)),
+        ("rope_theta", json::num(c.rope_theta as f64)),
+        ("modalities", json::num(c.modalities as f64)),
+        (
+            "buckets",
+            Value::Arr(c.buckets.iter().map(|&b| json::num(b as f64)).collect()),
+        ),
+    ])
+}
+
+/// Load a quantized model saved by [`save`].
+pub fn load(path: &str) -> Result<QuantModel> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 9];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path}: not an MC# quantized checkpoint");
+    }
+    let hlen = read_u64(&mut r)? as usize;
+    if hlen > (1 << 24) {
+        bail!("{path}: implausible header length {hlen}");
+    }
+    let header = read_bytes(&mut r, hlen)?;
+    let v = Value::parse(std::str::from_utf8(&header)?)?;
+    let cfg = crate::config::ModelConfig::from_json(v.get("config")?)?;
+    let (pmq, allocation) = pmq_from_json(v.get("pmq")?)?;
+    if allocation.len() != cfg.n_layers
+        || allocation.iter().any(|row| row.len() != cfg.n_experts)
+    {
+        bail!("{path}: allocation shape does not match config");
+    }
+    // dense base — routed experts are placeholders (provider intercepts)
+    let h = cfg.d_model;
+    let read_t = |r: &mut BufReader<std::fs::File>, rows: usize, cols: usize| -> Result<Tensor2> {
+        Ok(Tensor2::from_vec(rows, cols, read_f32s(r, rows * cols)?))
+    };
+    let embed = read_t(&mut r, cfg.vocab_size, h)?;
+    let mut blocks = Vec::new();
+    for _ in 0..cfg.n_layers {
+        let attn_norm = read_f32s(&mut r, h)?;
+        let wq = read_t(&mut r, h, h)?;
+        let wk = read_t(&mut r, h, h)?;
+        let wv = read_t(&mut r, h, h)?;
+        let wo = read_t(&mut r, h, h)?;
+        let moe_norm = read_f32s(&mut r, h)?;
+        let gate = read_t(&mut r, h, cfg.n_experts)?;
+        let shared: Vec<crate::moe::Expert> = (0..cfg.n_shared_experts)
+            .map(|_| {
+                Ok(crate::moe::Expert {
+                    wg: read_t(&mut r, h, cfg.d_ff)?,
+                    wu: read_t(&mut r, h, cfg.d_ff)?,
+                    wd: read_t(&mut r, cfg.d_ff, h)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        // routed experts: zero placeholders (never read at inference)
+        let experts: Vec<crate::moe::Expert> = (0..cfg.n_experts)
+            .map(|_| crate::moe::Expert {
+                wg: Tensor2::zeros(h, cfg.d_ff),
+                wu: Tensor2::zeros(h, cfg.d_ff),
+                wd: Tensor2::zeros(cfg.d_ff, h),
+            })
+            .collect();
+        blocks.push(crate::moe::model::Block {
+            attn_norm,
+            attn: crate::moe::attention::Attention {
+                wq,
+                wk,
+                wv,
+                wo,
+                n_heads: cfg.n_heads,
+                rope_theta: cfg.rope_theta,
+            },
+            moe_norm,
+            gate,
+            experts,
+            shared,
+        });
+    }
+    let final_norm = read_f32s(&mut r, h)?;
+    let lm_head = read_t(&mut r, h, cfg.vocab_size)?;
+    let model = MoeModel { cfg: cfg.clone(), embed, blocks, final_norm, lm_head };
+    // packed experts
+    let mut experts = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let mut row = Vec::with_capacity(cfg.n_experts);
+        for e in 0..cfg.n_experts {
+            let mut bits = [0u8; 1];
+            r.read_exact(&mut bits)?;
+            if bits[0] != allocation[l][e] && bits[0] != 16 {
+                bail!("{path}: expert ({l},{e}) bits {} != allocation {}", bits[0], allocation[l][e]);
+            }
+            row.push(QuantExpert {
+                wg: read_qlinear(&mut r)?,
+                wu: read_qlinear(&mut r)?,
+                wd: read_qlinear(&mut r)?,
+                bits: bits[0],
+            });
+        }
+        experts.push(row);
+    }
+    Ok(QuantModel { model, experts, allocation, pmq })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::ForwardOpts;
+    use crate::quant::qmodel::QuantMethod;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "qckpt-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: 1,
+            max_seq_len: 32,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        }
+    }
+
+    fn tmppath(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("mcsharp-qckpt-{name}-{}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn roundtrip_preserves_forward_exactly() {
+        let base = MoeModel::new(&cfg(), 50);
+        let alloc = vec![vec![1u8, 2, 3, 2], vec![2, 3, 1, 2]];
+        let pmq = PmqConfig::default();
+        let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Rtn);
+        let path = tmppath("rt");
+        save(&q, &path).unwrap();
+        let q2 = load(&path).unwrap();
+        assert_eq!(q2.allocation, alloc);
+        assert_eq!(q2.pmq.group, pmq.group);
+        let toks: Vec<u16> = vec![1, 9, 30, 45, 8, 22];
+        let a = q
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+        let b = q2
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q2), ..Default::default() });
+        assert_eq!(a.data, b.data, "quantized forward changed across save/load");
+        assert_eq!(q.nbytes(), q2.nbytes());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_scaled_awq_variant() {
+        let base = MoeModel::new(&cfg(), 51);
+        let toks: Vec<u16> = (0..24).map(|i| (i * 5 % 60 + 1) as u16).collect();
+        let mut captured: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 2];
+        base.forward_opts(
+            &toks,
+            &mut ForwardOpts { capture_moe_inputs: Some(&mut captured), ..Default::default() },
+        );
+        let acts: Vec<crate::quant::error::LayerActivations> = captured
+            .into_iter()
+            .map(|xs| crate::quant::error::LayerActivations { xs })
+            .collect();
+        let alloc = vec![vec![2u8; 4]; 2];
+        let q = QuantModel::quantize(
+            &base,
+            &alloc,
+            &PmqConfig::default(),
+            &QuantMethod::Awq(&acts),
+        );
+        let path = tmppath("awq");
+        save(&q, &path).unwrap();
+        let q2 = load(&path).unwrap();
+        let a = q
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+        let b = q2
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q2), ..Default::default() });
+        assert_eq!(a.data, b.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_qcheckpoint_is_an_error() {
+        let base = MoeModel::new(&cfg(), 52);
+        let q = QuantModel::quantize(
+            &base,
+            &vec![vec![2u8; 4]; 2],
+            &PmqConfig::default(),
+            &QuantMethod::Rtn,
+        );
+        let path = tmppath("trunc");
+        save(&q, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() * 2 / 3]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_is_an_error() {
+        let path = tmppath("magic");
+        std::fs::write(&path, b"MCSHARP1\0garbage....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_smaller_than_fp16_checkpoint() {
+        let base = MoeModel::new(&cfg(), 53);
+        let q = QuantModel::quantize(
+            &base,
+            &vec![vec![2u8; 4]; 2],
+            &PmqConfig::default(),
+            &QuantMethod::Rtn,
+        );
+        let qpath = tmppath("size-q");
+        let fpath = tmppath("size-f");
+        save(&q, &qpath).unwrap();
+        base.save(&fpath).unwrap();
+        let qsize = std::fs::metadata(&qpath).unwrap().len();
+        let fsize = std::fs::metadata(&fpath).unwrap().len();
+        // dense base dominates at this toy size, but the packed expert
+        // payload must still shrink the file
+        assert!(qsize < fsize, "quantized {qsize} !< fp {fsize}");
+        std::fs::remove_file(&qpath).ok();
+        std::fs::remove_file(&fpath).ok();
+    }
+}

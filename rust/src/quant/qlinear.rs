@@ -1,0 +1,179 @@
+//! A linear layer in any of the precisions MC# mixes: f32, bit-plane
+//! packed 2–4-bit, or 1-bit binary. One enum so the expert engine and the
+//! memory accounting treat them uniformly.
+
+use crate::tensor::Tensor2;
+
+use super::binary::BinaryMatrix;
+use super::packed::PackedMatrix;
+
+#[derive(Clone, Debug)]
+pub enum QuantLinear {
+    Fp(Tensor2),
+    Packed(PackedMatrix),
+    Binary(BinaryMatrix),
+    /// AWQ-scaled packed weights: stored codes quantize `diag(s)·W`, the
+    /// per-input-channel `inv_s = 1/s` is applied to the activation at
+    /// matvec time (`y = (x ⊘ s) · Ŵ`). See `quant::awq`.
+    Scaled { inv_s: Vec<f32>, inner: PackedMatrix },
+}
+
+impl QuantLinear {
+    /// `y += x @ W` in whatever format the layer is stored.
+    pub fn matvec_acc(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            QuantLinear::Fp(w) => {
+                for (r, &xr) in x.iter().enumerate() {
+                    if xr != 0.0 {
+                        crate::tensor::axpy(xr, w.row(r), y);
+                    }
+                }
+            }
+            QuantLinear::Packed(p) => p.matvec_fused(x, y),
+            QuantLinear::Binary(b) => b.matvec_fused(x, y),
+            QuantLinear::Scaled { inv_s, inner } => {
+                let xs: Vec<f32> =
+                    x.iter().zip(inv_s).map(|(&v, &s)| v * s).collect();
+                inner.matvec_fused(&xs, y);
+            }
+        }
+    }
+
+    /// Batched `y += x @ W` over a token block — packed/binary formats
+    /// decode each weight tile once and reuse it for every row (the
+    /// serving hot path; see `PackedMatrix::matmul_fused`).
+    pub fn matmul_acc(&self, x: &Tensor2, y: &mut Tensor2) {
+        match self {
+            QuantLinear::Fp(w) => {
+                for ti in 0..x.rows {
+                    let yrow = y.row_mut(ti);
+                    for (r, &xr) in x.row(ti).iter().enumerate() {
+                        if xr != 0.0 {
+                            crate::tensor::axpy(xr, w.row(r), yrow);
+                        }
+                    }
+                }
+            }
+            QuantLinear::Packed(p) => p.matmul_fused(x, y),
+            QuantLinear::Binary(b) => b.matmul_fused(x, y),
+            QuantLinear::Scaled { inv_s, inner } => {
+                let mut xs = x.clone();
+                for ti in 0..xs.rows {
+                    for (v, &s) in xs.row_mut(ti).iter_mut().zip(inv_s) {
+                        *v *= s;
+                    }
+                }
+                inner.matmul_fused(&xs, y);
+            }
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        match self {
+            QuantLinear::Fp(w) => w.rows,
+            QuantLinear::Packed(p) => p.d_in,
+            QuantLinear::Binary(b) => b.d_in,
+            QuantLinear::Scaled { inner, .. } => inner.d_in,
+        }
+    }
+
+    pub fn d_out(&self) -> usize {
+        match self {
+            QuantLinear::Fp(w) => w.cols,
+            QuantLinear::Packed(p) => p.d_out,
+            QuantLinear::Binary(b) => b.d_out,
+            QuantLinear::Scaled { inner, .. } => inner.d_out,
+        }
+    }
+
+    /// Nominal code bit-width (f32 counted as 16 — the paper treats
+    /// 16-bit as "one standard parameter").
+    pub fn bits(&self) -> u8 {
+        match self {
+            QuantLinear::Fp(_) => 16,
+            QuantLinear::Packed(p) => p.bits,
+            QuantLinear::Binary(_) => 1,
+            QuantLinear::Scaled { inner, .. } => inner.bits,
+        }
+    }
+
+    /// Stored bytes (f32 counted at fp16 to match the paper's baseline).
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            QuantLinear::Fp(w) => (w.data.len() * 2) as u64,
+            QuantLinear::Packed(p) => p.nbytes(),
+            QuantLinear::Binary(b) => b.nbytes(),
+            // inv_s stored at fp16 alongside the group scales
+            QuantLinear::Scaled { inv_s, inner } => {
+                inner.nbytes() + (inv_s.len() * 2) as u64
+            }
+        }
+    }
+
+    /// Dense f32 reconstruction (ε probes, PJRT staging of fp variants).
+    pub fn dequantize(&self) -> Tensor2 {
+        match self {
+            QuantLinear::Fp(w) => w.clone(),
+            QuantLinear::Packed(p) => p.dequantize(),
+            QuantLinear::Binary(b) => b.dequantize(),
+            QuantLinear::Scaled { inv_s, inner } => {
+                let mut w = inner.dequantize();
+                for r in 0..w.rows {
+                    let s = inv_s[r];
+                    for v in w.row_mut(r) {
+                        *v *= s;
+                    }
+                }
+                w
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::quantize_rtn;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn formats_agree_on_matvec_of_their_own_dequant() {
+        let mut rng = Rng::new(30);
+        let w = Tensor2::randn(64, 16, &mut rng, 1.0);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let variants: Vec<QuantLinear> = vec![
+            QuantLinear::Fp(w.clone()),
+            {
+                let (c, s, z) = quantize_rtn(&w, 3, 32);
+                QuantLinear::Packed(PackedMatrix::from_codes(&c, s, z, 64, 16, 3, 32))
+            },
+            QuantLinear::Binary(BinaryMatrix::binarize(&w)),
+        ];
+        for v in &variants {
+            let wd = v.dequantize();
+            let mut want = vec![0.0f32; 16];
+            for (r, &xr) in x.iter().enumerate() {
+                for o in 0..16 {
+                    want[o] += xr * wd.at(r, o);
+                }
+            }
+            let mut got = vec![0.0f32; 16];
+            v.matvec_acc(&x, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn nbytes_ordering() {
+        let mut rng = Rng::new(31);
+        let w = Tensor2::randn(128, 64, &mut rng, 1.0);
+        let fp = QuantLinear::Fp(w.clone());
+        let (c, s, z) = quantize_rtn(&w, 2, 32);
+        let p2 = QuantLinear::Packed(PackedMatrix::from_codes(&c, s, z, 128, 64, 2, 32));
+        let b1 = QuantLinear::Binary(BinaryMatrix::binarize(&w));
+        assert!(b1.nbytes() < p2.nbytes());
+        assert!(p2.nbytes() < fp.nbytes());
+    }
+}

@@ -1,0 +1,118 @@
+//! Group-wise round-to-nearest (asymmetric min/max) quantizer — paper
+//! Eq. 3. The bit-exact Rust mirror of
+//! `python/compile/kernels/packing.py::quantize_rtn`.
+
+use crate::tensor::Tensor2;
+
+/// Quantize `w [d_in, d_out]` group-wise along `d_in`.
+/// Returns `(codes [d_in*d_out] u8, scales [g*d_out], zeros [g*d_out])`
+/// with `g = d_in / group`; dequant is `(code - zero) * scale`.
+pub fn quantize_rtn(w: &Tensor2, bits: u8, group: usize) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    let (d_in, d_out) = (w.rows, w.cols);
+    assert_eq!(d_in % group, 0, "d_in {d_in} % group {group}");
+    let g = d_in / group;
+    let levels = (1u32 << bits) - 1;
+    let mut codes = vec![0u8; d_in * d_out];
+    let mut scales = vec![0f32; g * d_out];
+    let mut zeros = vec![0f32; g * d_out];
+    for gi in 0..g {
+        for o in 0..d_out {
+            let mut wmin = f32::INFINITY;
+            let mut wmax = f32::NEG_INFINITY;
+            for r in 0..group {
+                let v = w.at(gi * group + r, o);
+                wmin = wmin.min(v);
+                wmax = wmax.max(v);
+            }
+            let span = (wmax - wmin).max(1e-8);
+            let scale = span / levels as f32;
+            let zero = (-wmin / scale).round();
+            scales[gi * d_out + o] = scale;
+            zeros[gi * d_out + o] = zero;
+            for r in 0..group {
+                let v = w.at(gi * group + r, o);
+                let q = ((v / scale).round() + zero).clamp(0.0, levels as f32);
+                codes[(gi * group + r) * d_out + o] = q as u8;
+            }
+        }
+    }
+    (codes, scales, zeros)
+}
+
+/// Dequantize codes back to an f32 matrix (reference / 4-bit "others").
+pub fn dequantize(
+    codes: &[u8],
+    scales: &[f32],
+    zeros: &[f32],
+    d_in: usize,
+    d_out: usize,
+    group: usize,
+) -> Tensor2 {
+    let mut out = Tensor2::zeros(d_in, d_out);
+    for r in 0..d_in {
+        let gi = r / group;
+        for o in 0..d_out {
+            let s = scales[gi * d_out + o];
+            let z = zeros[gi * d_out + o];
+            out.set(r, o, (codes[r * d_out + o] as f32 - z) * s);
+        }
+    }
+    out
+}
+
+/// RTN round-trip a matrix at `bits` (used to simulate the uniform 4-bit
+/// quantization of attention/gate/shared weights).
+pub fn fake_quant(w: &Tensor2, bits: u8, group: usize) -> Tensor2 {
+    let (codes, scales, zeros) = quantize_rtn(w, bits, group);
+    dequantize(&codes, &scales, &zeros, w.rows, w.cols, group)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn reconstruction_error_bounded_by_step() {
+        prop::for_all(61, 20, |rng, _| {
+            let bits = 2 + rng.below(3) as u8; // 2..4
+            let d_in = prop::dim(rng, 32, 128, 32);
+            let d_out = 1 + rng.below(20);
+            let w = Tensor2::randn(d_in, d_out, rng, 1.0);
+            let (codes, scales, zeros) = quantize_rtn(&w, bits, 32);
+            let w_hat = dequantize(&codes, &scales, &zeros, d_in, d_out, 32);
+            for r in 0..d_in {
+                let gi = r / 32;
+                for o in 0..d_out {
+                    let step = scales[gi * d_out + o];
+                    assert!(
+                        (w.at(r, o) - w_hat.at(r, o)).abs() <= step + 1e-5,
+                        "bits={bits} err {} step {step}",
+                        (w.at(r, o) - w_hat.at(r, o)).abs()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(8);
+        let w = Tensor2::randn(128, 16, &mut rng, 1.0);
+        let err = |bits: u8| {
+            let q = fake_quant(&w, bits, 32);
+            w.data.iter().zip(&q.data).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+        };
+        assert!(err(4) < err(3) && err(3) < err(2));
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(9);
+        let w = Tensor2::randn(64, 8, &mut rng, 2.0);
+        for bits in [2u8, 3, 4] {
+            let (codes, _, _) = quantize_rtn(&w, bits, 32);
+            assert!(codes.iter().all(|&c| (c as u32) < (1 << bits)));
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Artifact registry: manifest-driven loading, compilation and cached
+//! execution of the AOT HLO-text graphs.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::repo_path;
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct ArgMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub key: String,
+    pub file: String,
+    pub config: String,
+    pub graph: String,
+    pub bucket: usize,
+    pub args: Vec<ArgMeta>,
+    pub n_outputs: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub group: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let v = Value::from_file(&format!("{dir}/manifest.json"))?;
+        let group = v.get("group")?.as_usize()?;
+        let mut artifacts = BTreeMap::new();
+        for (key, meta) in v.get("artifacts")?.as_obj()? {
+            let args = meta
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgMeta {
+                        shape: a
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                key.clone(),
+                ArtifactMeta {
+                    key: key.clone(),
+                    file: meta.get("file")?.as_str()?.to_string(),
+                    config: meta.get("config")?.as_str()?.to_string(),
+                    graph: meta.get("graph")?.as_str()?.to_string(),
+                    bucket: meta.get("bucket")?.as_usize()?,
+                    args,
+                    n_outputs: meta.get("n_outputs")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest { group, artifacts })
+    }
+
+    /// Buckets available for (config, graph), ascending.
+    pub fn buckets(&self, config: &str, graph: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.config == config && a.graph == graph)
+            .map(|a| a.bucket)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Smallest bucket ≥ `tokens` (or the largest available).
+    pub fn pick_bucket(&self, config: &str, graph: &str, tokens: usize) -> Result<usize> {
+        let buckets = self.buckets(config, graph);
+        if buckets.is_empty() {
+            bail!("no artifacts for {config}/{graph}");
+        }
+        Ok(*buckets.iter().find(|&&b| b >= tokens).unwrap_or(buckets.last().unwrap()))
+    }
+}
+
+/// A PJRT CPU client + compiled-executable cache over the artifact dir.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub dir: String,
+    cache: RefCell<BTreeMap<String, PjRtLoadedExecutable>>,
+    /// (compiles, executions) counters for perf accounting.
+    pub stats: RefCell<(u64, u64)>,
+}
+
+impl Runtime {
+    /// Open the default `artifacts/` directory at the repo root.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::open(&repo_path("artifacts"))
+    }
+
+    pub fn open(dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).with_context(|| {
+            format!("loading {dir}/manifest.json — run `make artifacts` first")
+        })?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_string(),
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new((0, 0)),
+        })
+    }
+
+    pub fn meta(&self, key: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown artifact {key}"))
+    }
+
+    /// Compile (cached) and return nothing — used to pre-warm at startup
+    /// so compilation never happens on the request path.
+    pub fn warmup(&self, key: &str) -> Result<()> {
+        self.with_exe(key, |_| Ok(()))
+    }
+
+    fn with_exe<T>(&self, key: &str, f: impl FnOnce(&PjRtLoadedExecutable) -> Result<T>) -> Result<T> {
+        if !self.cache.borrow().contains_key(key) {
+            let meta = self.meta(key)?;
+            let path = format!("{}/{}", self.dir, meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+            self.stats.borrow_mut().0 += 1;
+            self.cache.borrow_mut().insert(key.to_string(), exe);
+        }
+        let cache = self.cache.borrow();
+        f(cache.get(key).unwrap())
+    }
+
+    /// Execute artifact `key` with `args`; returns the flattened tuple of
+    /// output literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        key: &str,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        let meta = self.meta(key)?;
+        if args.len() != meta.args.len() {
+            bail!("{key}: expected {} args, got {}", meta.args.len(), args.len());
+        }
+        for (i, (l, am)) in args.iter().zip(&meta.args).enumerate() {
+            let n: usize = am.shape.iter().product();
+            if l.borrow().element_count() != n {
+                bail!(
+                    "{key}: arg {i} has {} elements, manifest says {n}",
+                    l.borrow().element_count()
+                );
+            }
+        }
+        let n_out = meta.n_outputs;
+        let result = self.with_exe(key, |exe| {
+            exe.execute::<L>(args).map_err(|e| anyhow!("executing {key}: {e}"))
+        })?;
+        self.stats.borrow_mut().1 += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {key}: {e}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("untuple {key}: {e}"))?;
+        if outs.len() != n_out {
+            bail!("{key}: {} outputs, manifest says {n_out}", outs.len());
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime-against-artifacts integration tests live in
+    // rust/tests/pjrt_integration.rs (they need `make artifacts`).
+    #[test]
+    fn manifest_parse_smoke() {
+        let dir = std::env::temp_dir().join("mcsharp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"group":32,"artifacts":{"m_g_t4":{"file":"m_g_t4.hlo.txt","config":"m","graph":"g","bucket":4,"args":[{"shape":[4,8],"dtype":"float32"}],"n_outputs":1}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.group, 32);
+        let a = &m.artifacts["m_g_t4"];
+        assert_eq!(a.bucket, 4);
+        assert_eq!(a.args[0].shape, vec![4, 8]);
+        assert_eq!(m.pick_bucket("m", "g", 3).unwrap(), 4);
+        assert_eq!(m.pick_bucket("m", "g", 100).unwrap(), 4);
+        assert!(m.pick_bucket("m", "nope", 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

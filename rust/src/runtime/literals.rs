@@ -1,0 +1,65 @@
+//! Literal staging helpers: Rust buffers → PJRT literals and back.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+use crate::tensor::Tensor2;
+
+/// f32 slice → literal of the given dims.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+/// u8 slice → literal (packed planes).
+pub fn u8_literal(data: &[u8], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)?)
+}
+
+pub fn tensor_literal(t: &Tensor2) -> Result<Literal> {
+    f32_literal(&t.data, &[t.rows, t.cols])
+}
+
+/// Literal → f32 vec.
+pub fn to_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Literal → i32 vec.
+pub fn to_i32(l: &Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.0, 9.5];
+        let l = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), data);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let data = vec![0xAAu8, 0xCC, 1, 2];
+        let l = u8_literal(&data, &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<u8>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(u8_literal(&[1], &[2]).is_err());
+    }
+}

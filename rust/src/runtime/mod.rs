@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the serving hot path.
+//!
+//! Artifacts are shape-static per (model config, graph, token bucket);
+//! `Runtime` compiles lazily and caches executables. The manifest written
+//! by `aot.py` describes the exact argument shapes/dtypes and output
+//! arity so mismatches fail loudly at load time, not deep inside PJRT.
+//!
+//! Interchange is HLO *text* — see aot.py for the jax≥0.5 ↔ xla_extension
+//! 0.5.1 proto-id incompatibility that rules out serialized protos.
+
+pub mod artifacts;
+pub mod literals;
+
+pub use artifacts::{ArtifactMeta, Manifest, Runtime};

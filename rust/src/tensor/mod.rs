@@ -1,0 +1,339 @@
+//! Row-major f32 matrix substrate.
+//!
+//! Everything in the model, trainer and quantizers runs on [`Tensor2`]:
+//! a flat `Vec<f32>` with (rows, cols). The matmul kernels here are the
+//! native-backend hot path — `matmul` is blocked over K with an
+//! 8-wide-unrolled inner loop so the release build autovectorizes it
+//! (see EXPERIMENTS.md §Perf for the measured effect).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Tensor2 {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Tensor2 {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    /// Kaiming-ish init: N(0, std²) with std = gain / sqrt(fan_in).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng, std: f32) -> Tensor2 {
+        Tensor2 { rows, cols, data: rng.normal_vec(rows * cols, std) }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `self @ other` — blocked matmul, output written into a fresh tensor.
+    pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.rows, other.cols);
+        matmul_into(self, other, &mut out);
+        out
+    }
+
+    /// `self @ other^T`.
+    pub fn matmul_t(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.cols, "matmul_t inner dim");
+        let mut out = Tensor2::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..other.rows {
+                orow[j] = dot(a, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` (used by backward passes for weight grads).
+    pub fn t_matmul(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.rows, other.rows, "t_matmul outer dim");
+        let mut out = Tensor2::zeros(self.cols, other.cols);
+        for r in 0..self.rows {
+            let a = self.row(r);
+            let b = other.row(r);
+            for (i, &ai) in a.iter().enumerate() {
+                if ai == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                axpy(ai, b, orow);
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor2) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Row-wise softmax in place.
+    pub fn softmax_rows(&mut self) {
+        for r in 0..self.rows {
+            softmax(self.row_mut(r));
+        }
+    }
+
+    /// Bytes of an f32 tensor (for memory accounting).
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+/// `out = a @ b`, blocked over K for cache friendliness.
+pub fn matmul_into(a: &Tensor2, b: &Tensor2, out: &mut Tensor2) {
+    assert_eq!(a.cols, b.rows, "matmul inner dim {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.cols);
+    out.data.fill(0.0);
+    const KB: usize = 64;
+    let n = b.cols;
+    for k0 in (0..a.cols).step_by(KB) {
+        let k1 = (k0 + KB).min(a.cols);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for k in k0..k1 {
+                let aik = arow[k];
+                if aik != 0.0 {
+                    axpy(aik, &b.data[k * n..(k + 1) * n], orow);
+                }
+            }
+        }
+    }
+}
+
+/// `y += alpha * x`, 8-wide unrolled so LLVM vectorizes it.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        y[i] += alpha * x[i];
+        y[i + 1] += alpha * x[i + 1];
+        y[i + 2] += alpha * x[i + 2];
+        y[i + 3] += alpha * x[i + 3];
+        y[i + 4] += alpha * x[i + 4];
+        y[i + 5] += alpha * x[i + 5];
+        y[i + 6] += alpha * x[i + 6];
+        y[i + 7] += alpha * x[i + 7];
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Dot product, 8-wide unrolled.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// SiLU activation `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d/dx silu(x).
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Indices of the top-k values, descending (stable on ties by lower index).
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// RMSNorm: `x * g / rms(x)` row-wise.
+pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * gain[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor2::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_matches_transpose() {
+        prop::for_all(11, 20, |rng, _| {
+            let (m, k, n) = (1 + rng.below(8), 1 + rng.below(12), 1 + rng.below(8));
+            let a = Tensor2::randn(m, k, rng, 1.0);
+            let b = Tensor2::randn(n, k, rng, 1.0);
+            let got = a.matmul_t(&b);
+            let want = a.matmul(&b.transpose());
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose() {
+        prop::for_all(12, 20, |rng, _| {
+            let (m, k, n) = (1 + rng.below(8), 1 + rng.below(8), 1 + rng.below(8));
+            let a = Tensor2::randn(m, k, rng, 1.0);
+            let b = Tensor2::randn(m, n, rng, 1.0);
+            let got = a.t_matmul(&b);
+            let want = a.transpose().matmul(&b);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -100.0];
+        softmax(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0] && xs[0] > xs[3]);
+    }
+
+    #[test]
+    fn softmax_extreme_stable() {
+        let mut xs = vec![1000.0, 999.0];
+        softmax(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_order() {
+        assert_eq!(top_k_indices(&[0.1, 0.9, 0.5, 0.9], 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn silu_grad_numeric() {
+        for &x in &[-3.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let eps = 1e-3;
+            let num = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((num - silu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0, 4.0];
+        let g = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &g, &mut out);
+        let rms = ((9.0 + 16.0) / 2.0f32).sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_axpy_consistent() {
+        prop::for_all(13, 30, |rng, _| {
+            let n = 1 + rng.below(50);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut y: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y0 = y.clone();
+            let alpha = rng.normal();
+            axpy(alpha, &x, &mut y);
+            for i in 0..n {
+                assert!((y[i] - (y0[i] + alpha * x[i])).abs() < 1e-4);
+            }
+            let d = dot(&x, &y0);
+            let naive: f32 = x.iter().zip(&y0).map(|(a, b)| a * b).sum();
+            assert!((d - naive).abs() < 1e-3 * (1.0 + naive.abs()));
+        });
+    }
+}

@@ -1,0 +1,71 @@
+//! Adam optimizer over the canonical flat parameter-group ordering shared
+//! by `MoeModel` and `Grads` (see `backward::model_param_vecs`).
+
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl Adam {
+    /// `shapes` are the lengths of each parameter group, in canonical order.
+    pub fn new(lr: f32, shapes: &[usize]) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            t: 0,
+        }
+    }
+
+    /// One update: `params[g][i] -= lr * m̂ / (sqrt(v̂) + eps)`.
+    pub fn step(&mut self, params: &mut [&mut Vec<f32>], grads: &[&mut Vec<f32>]) {
+        assert_eq!(params.len(), self.m.len(), "param group count");
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for g in 0..params.len() {
+            let p = &mut *params[g];
+            let gr = &*grads[g];
+            let m = &mut self.m[g];
+            let v = &mut self.v[g];
+            for i in 0..p.len() {
+                let grad = gr[i] + self.weight_decay * p[i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad * grad;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = Σ (x_i - c_i)²
+        let c = [3.0f32, -2.0, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut adam = Adam::new(0.1, &[3]);
+        for _ in 0..500 {
+            let mut g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            adam.step(&mut [&mut x], &[&mut g]);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+    }
+}

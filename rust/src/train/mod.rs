@@ -1,0 +1,21 @@
+//! Training substrate: manual backprop through the full MoE decoder plus
+//! an Adam optimizer and an LM pretraining loop.
+//!
+//! The paper compresses *pretrained* MoE models whose experts have
+//! genuinely uneven importance; we reproduce that precondition by
+//! pretraining the model zoo from scratch on the synthetic corpora
+//! (topic-/modality-clustered data ⇒ expert specialization ⇒ the Fig. 4/5
+//! imbalance PMQ exploits). The trainer is also reused by OTP's
+//! distillation loop (`otp::train`), which backprops only through the
+//! tiny mask routers.
+//!
+//! Correctness is pinned by finite-difference gradient checks over every
+//! parameter group (`backward::tests`).
+
+pub mod adam;
+pub mod backward;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use backward::{backward, Grads};
+pub use trainer::{TrainConfig, Trainer};

@@ -1,0 +1,149 @@
+//! Hand-rolled bench harness (criterion is not available offline).
+//!
+//! Used by every `rust/benches/*.rs` target (declared with
+//! `harness = false`): adaptive iteration count, warmup, and robust
+//! statistics (mean / p50 / p95 / min), plus Markdown-style table
+//! printers that the paper-table benches share so `cargo bench` output
+//! lines up with the paper's rows.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Time `f` adaptively: warm up, then run until `budget` elapses or
+/// `max_iters` samples are collected (at least 5).
+pub fn time<F: FnMut()>(budget: Duration, max_iters: usize, mut f: F) -> Stats {
+    // warmup
+    for _ in 0..2 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 5 || (start.elapsed() < budget && samples.len() < max_iters) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        iters: samples.len(),
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_ns: percentile(&samples, 0.5),
+        p95_ns: percentile(&samples, 0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// One-line report in criterion-ish style.
+pub fn report(name: &str, s: &Stats) {
+    println!(
+        "{name:<44} time: [{:>10.3} ms  p50 {:>10.3} ms  p95 {:>10.3} ms]  ({} iters)",
+        s.mean_ms(),
+        s.p50_ns / 1e6,
+        s.p95_ns / 1e6,
+        s.iters
+    );
+}
+
+/// Markdown-style table printer used by the paper-table benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Format an f64 with fixed decimals (bench tables).
+pub fn fmt(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_counts_and_orders() {
+        let s = time(Duration::from_millis(20), 50, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_wrong_arity_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

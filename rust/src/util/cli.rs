@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
+//! flags + `--switch` booleans + positionals, with defaults and typed
+//! getters. Unknown flags are an error, so typos fail fast.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; the first non-flag token becomes the subcommand.
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> Result<Args> {
+        let mut a = Args {
+            known: known_flags.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if !a.known.iter().any(|k| k == name) {
+                    bail!("unknown flag --{name} (known: {})", a.known.join(", "));
+                }
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if a.subcommand.is_none() {
+                    a.subcommand = Some(tok.clone());
+                } else {
+                    a.positional.push(tok.clone());
+                }
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, known_flags)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // note: `--verbose extra` would bind "extra" as the flag's value
+        // (flags are greedy); trailing switches are unambiguous.
+        let a = Args::parse(
+            &argv("serve --model mix-tiny --steps 200 extra --verbose"),
+            &["model", "steps", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("mix-tiny"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 200);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&argv("run --nope 1"), &["model"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("run"), &["x"]).unwrap();
+        assert_eq!(a.usize_or("x", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("run --x abc"), &["x"]).unwrap();
+        assert!(a.usize_or("x", 0).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Mini property-testing helper (proptest is not available offline).
+//!
+//! `for_all` runs `cases` seeded random trials; on failure it reports the
+//! failing seed so the case replays deterministically:
+//!
+//! ```text
+//! prop failed at case 17 (seed 0xdeadbeef...): <your message>
+//! ```
+//!
+//! Invariant sweeps in this crate (DP-vs-brute-force allocator
+//! optimality, pack/unpack round-trips, batcher token conservation,
+//! KV-cache equivalence, ...) all run through here.
+
+use super::rng::Rng;
+
+/// Run `check(rng, case_idx)` for `cases` independent seeded trials.
+/// `check` should panic (assert!) on violation.
+pub fn for_all<F: FnMut(&mut Rng, usize)>(base_seed: u64, cases: usize, mut check: F) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!("prop failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random dimensions helper: multiple-of-`m` value in [lo, hi].
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize, m: usize) -> usize {
+    let steps = (hi - lo) / m;
+    lo + m * rng.below(steps + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        for_all(1, 25, |_, _| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn dim_respects_bounds_and_multiple() {
+        for_all(2, 50, |rng, _| {
+            let d = dim(rng, 32, 256, 32);
+            assert!((32..=256).contains(&d));
+            assert_eq!(d % 32, 0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        for_all(3, 10, |rng, _| {
+            assert!(rng.f32() < 0.9, "expected failure eventually");
+        });
+    }
+}

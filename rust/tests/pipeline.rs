@@ -1,0 +1,207 @@
+//! End-to-end pipeline integration: train → calibrate → allocate (all
+//! strategies) → quantize (GPTQ) → evaluate → OTP — the full MC# flow on
+//! a small model, asserting the paper's *orderings* hold.
+
+use mcsharp::config::{ModelConfig, OtpConfig, PmqConfig};
+use mcsharp::data::{Corpus, CorpusKind};
+use mcsharp::eval::{lm_suite, mc::score_suite, EvalOpts};
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::otp::{train_otp, OtpPruner, RandomPruner};
+use mcsharp::pmq::{calibrate, strategies, Strategy};
+use mcsharp::quant::error::eps_table;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::train::{TrainConfig, Trainer};
+use mcsharp::util::rng::Rng;
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "pipe-test".into(),
+        family: "mixtral".into(),
+        vocab_size: 512,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        n_experts: 6,
+        top_k: 2,
+        n_shared_experts: 0,
+        max_seq_len: 64,
+        rope_theta: 10_000.0,
+        modalities: 1,
+        buckets: vec![4],
+    }
+}
+
+#[test]
+fn full_mc_sharp_pipeline() {
+    // 1. pretrain briefly so experts specialize
+    let cfg = small_cfg();
+    let tc = TrainConfig { steps: 80, batch: 4, seq_len: 32, lr: 4e-3, ..Default::default() };
+    let mut trainer = Trainer::new(&cfg, tc);
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    trainer.train(&corpus, true).unwrap();
+    let base = trainer.model;
+
+    // 2. calibrate
+    let mut rng = Rng::new(11);
+    let calib = corpus.batch(6, 32, &mut rng);
+    let cal = calibrate(&base, &calib, 128);
+    assert!(cal.stats.tokens > 0);
+
+    // 3. ε table + PMQ allocation at 2-bit average
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let alloc_pmq =
+        strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    let alloc_uni =
+        strategies::allocation(Strategy::Uniform, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+
+    // 4. quantize with GPTQ
+    let q_pmq = QuantModel::quantize(&base, &alloc_pmq, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    let q_uni = QuantModel::quantize(&base, &alloc_uni, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    assert!((q_pmq.avg_expert_bits() - 2.0).abs() < 0.1);
+    // whole-model compression is diluted by fp16 embeddings on this toy
+    // config; experts themselves must compress ≥ 3×
+    assert!(q_pmq.nbytes() < base.nbytes_fp16() / 2, "compression < 2x");
+    let expert_bytes: u64 = q_pmq.experts.iter().flatten().map(|e| e.nbytes()).sum();
+    let expert_fp16: u64 =
+        (cfg.n_layers * cfg.n_experts * cfg.expert_params() * 2) as u64;
+    assert!(expert_bytes * 3 < expert_fp16, "expert compression < 3x");
+
+    // 5. perplexity ordering: fp ≤ pmq@2 and pmq not catastrophically
+    //    worse; uniform-2bit ≥ pmq (the paper's central claim)
+    let eval_seqs = corpus.batch(4, 32, &mut rng);
+    let ppl_fp = base.perplexity(&eval_seqs, &mut ForwardOpts::default());
+    let ppl_pmq = q_pmq
+        .model
+        .perplexity(&eval_seqs, &mut ForwardOpts { provider: Some(&q_pmq), ..Default::default() });
+    let ppl_uni = q_uni
+        .model
+        .perplexity(&eval_seqs, &mut ForwardOpts { provider: Some(&q_uni), ..Default::default() });
+    assert!(ppl_fp < ppl_pmq, "quantization must cost something: {ppl_fp} vs {ppl_pmq}");
+    assert!(
+        ppl_pmq <= ppl_uni * 1.10,
+        "PMQ ({ppl_pmq:.2}) should not lose to uniform ({ppl_uni:.2})"
+    );
+
+    // 6. OTP training on the quantized model; beats random pruning at a
+    //    comparable measured ratio
+    let oc = OtpConfig { steps: 60, batch_tokens: 32, ..Default::default() };
+    let rep = train_otp(&q_pmq, &calib, &oc, 0xF00D);
+    let mut otp = OtpPruner { routers: rep.routers };
+    let mut counter = (0u64, 0u64);
+    let ppl_otp = q_pmq.model.perplexity(
+        &eval_seqs,
+        &mut ForwardOpts {
+            provider: Some(&q_pmq),
+            pruner: Some(&mut otp),
+            pruning_counter: Some(&mut counter),
+            ..Default::default()
+        },
+    );
+    let otp_ratio = 1.0 - counter.0 as f64 / counter.1.max(1) as f64;
+    let mut rnd = RandomPruner::new(otp_ratio.max(0.05), 3);
+    let ppl_rnd = q_pmq.model.perplexity(
+        &eval_seqs,
+        &mut ForwardOpts {
+            provider: Some(&q_pmq),
+            pruner: Some(&mut rnd),
+            ..Default::default()
+        },
+    );
+    assert!(ppl_otp.is_finite() && ppl_rnd.is_finite());
+    if otp_ratio > 0.03 {
+        assert!(
+            ppl_otp <= ppl_rnd * 1.05,
+            "OTP ({ppl_otp:.2} @ {otp_ratio:.2}) should beat random ({ppl_rnd:.2})"
+        );
+    }
+}
+
+/// The full deployment path: quantize → write the packed checkpoint →
+/// reload → train OTP on the *reloaded* model → serve through the
+/// engine — outputs must match the never-serialized model exactly under
+/// the same pruner (the `deploy_qckpt` example's invariant, as a test).
+#[test]
+fn qcheckpoint_deploys_identically_with_otp() {
+    use mcsharp::backend::NativeBackend;
+    use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+    use mcsharp::quant::qcheckpoint;
+
+    let cfg = small_cfg();
+    let tc = TrainConfig { steps: 60, batch: 4, seq_len: 32, lr: 4e-3, ..Default::default() };
+    let mut trainer = Trainer::new(&cfg, tc);
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    trainer.train(&corpus, true).unwrap();
+    let base = trainer.model;
+    let mut rng = Rng::new(21);
+    let calib = corpus.batch(6, 32, &mut rng);
+    let cal = calibrate(&base, &calib, 128);
+    let pmq = PmqConfig::default();
+    let eps = eps_table(&base, &cal.acts, &pmq);
+    let alloc = strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, 2.0, &mut rng);
+    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+
+    let path = std::env::temp_dir()
+        .join(format!("mcsharp-pipe-deploy-{}.bin", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    qcheckpoint::save(&q, &path).unwrap();
+    let q2 = qcheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // OTP training must be reproducible on the reloaded weights
+    let oc = OtpConfig { steps: 40, batch_tokens: 32, ..Default::default() };
+    let rep_a = train_otp(&q, &calib, &oc, 0xD0E);
+    let rep_b = train_otp(&q2, &calib, &oc, 0xD0E);
+
+    // serve the same prompts through both engines with their pruners
+    let be_a = NativeBackend::quant(&q);
+    let be_b = NativeBackend::quant(&q2);
+    let mut eng_a = DecodeEngine::new(
+        EngineModel::Quant(&q),
+        &be_a,
+        Some(Box::new(OtpPruner { routers: rep_a.routers })),
+    );
+    let mut eng_b = DecodeEngine::new(
+        EngineModel::Quant(&q2),
+        &be_b,
+        Some(Box::new(OtpPruner { routers: rep_b.routers })),
+    );
+    for seed in 0..4u16 {
+        let prompt = vec![1, 30 + seed * 7, 100 + seed * 3, 60];
+        let a = eng_a.generate(&prompt, 8).unwrap();
+        let b = eng_b.generate(&prompt, 8).unwrap();
+        assert_eq!(a, b, "deployment diverged for seed {seed}");
+    }
+    assert_eq!(
+        eng_a.metrics.experts_kept, eng_b.metrics.experts_kept,
+        "pruning decisions diverged across save/load"
+    );
+}
+
+#[test]
+fn suite_scores_degrade_monotonically_with_bits() {
+    let cfg = small_cfg();
+    let tc = TrainConfig { steps: 60, batch: 4, seq_len: 32, lr: 4e-3, ..Default::default() };
+    let mut trainer = Trainer::new(&cfg, tc);
+    let corpus = Corpus::new(CorpusKind::General, 0xDA7A);
+    trainer.train(&corpus, true).unwrap();
+    let base = trainer.model;
+    let pmq = PmqConfig::default();
+    let tasks = lm_suite::build(12, 0xAB);
+    let (_, acc_fp) = score_suite(&base, &mut EvalOpts::default(), &tasks);
+    let acc_at = |bits: u8| {
+        let alloc = vec![vec![bits; cfg.n_experts]; cfg.n_layers];
+        let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Rtn);
+        let mut opts = EvalOpts { provider: Some(&q), ..Default::default() };
+        let (_, acc) = score_suite(&q.model, &mut opts, &tasks);
+        acc
+    };
+    let acc3 = acc_at(3);
+    let acc1 = acc_at(1);
+    // 3-bit stays close to fp; 1-bit falls behind 3-bit (paper Tables 2/4
+    // shape). Tiny-suite noise tolerance: ±6 points.
+    assert!(acc3 >= acc1 - 6.0, "3-bit {acc3} vs 1-bit {acc1}");
+    assert!(acc_fp >= acc3 - 6.0, "fp {acc_fp} vs 3-bit {acc3}");
+}

@@ -1,0 +1,146 @@
+//! PJRT ↔ native parity: the AOT-compiled Pallas kernels (via the xla
+//! runtime) must agree with the pure-Rust fused implementations on the
+//! same packed weights. Requires `make artifacts`.
+
+use mcsharp::backend::{ExpertBackend, NativeBackend, PjrtBackend};
+use mcsharp::config::{ModelConfig, PmqConfig};
+use mcsharp::moe::MoeModel;
+use mcsharp::otp::OtpRouter;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::runtime::literals::{f32_literal, to_f32, to_i32};
+use mcsharp::runtime::Runtime;
+use mcsharp::tensor::Tensor2;
+use mcsharp::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` before cargo test")
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn expert_ffn_parity_all_bitwidths() {
+    let rt = runtime();
+    let cfg = ModelConfig::load("mix-tiny").unwrap();
+    let base = MoeModel::new(&cfg, 123);
+    // mixed allocation covering 1/2/3-bit experts
+    let mut alloc = vec![vec![2u8; cfg.n_experts]; cfg.n_layers];
+    alloc[0][0] = 1;
+    alloc[0][1] = 3;
+    alloc[0][2] = 2;
+    let q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+    let native = NativeBackend::quant(&q);
+    let pjrt = PjrtBackend::new(&rt, &q, false).unwrap();
+    let mut rng = Rng::new(7);
+    for &(layer, expert) in &[(0usize, 0usize), (0, 1), (0, 2), (1, 4)] {
+        for &t in &[1usize, 4, 16, 30] {
+            let x = Tensor2::randn(t, cfg.d_model, &mut rng, 1.0);
+            let a = native.expert_batch(layer, expert, &x).unwrap();
+            let b = pjrt.expert_batch(layer, expert, &x).unwrap();
+            close(&a.data, &b.data, 2e-3, &format!("expert l{layer}e{expert} t{t}"));
+        }
+    }
+}
+
+#[test]
+fn gating_artifact_matches_native_route() {
+    let rt = runtime();
+    let cfg = ModelConfig::load("mix-tiny").unwrap();
+    let base = MoeModel::new(&cfg, 124);
+    let mut rng = Rng::new(8);
+    let t = 16usize;
+    let x = Tensor2::randn(t, cfg.d_model, &mut rng, 1.0);
+    let gate = &base.blocks[0].gate;
+    let key = format!("mix-tiny_gating_topk_t{t}");
+    let outs = rt
+        .execute(
+            &key,
+            &[
+                f32_literal(&x.data, &[t, cfg.d_model]).unwrap(),
+                f32_literal(&gate.data, &[cfg.d_model, cfg.n_experts]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let weights = to_f32(&outs[0]).unwrap();
+    let idx = to_i32(&outs[1]).unwrap();
+    for i in 0..t {
+        let r = mcsharp::moe::route(x.row(i), gate, cfg.top_k);
+        for k in 0..cfg.top_k {
+            assert_eq!(idx[i * cfg.top_k + k] as usize, r.experts[k], "row {i} rank {k}");
+            let w = weights[i * cfg.top_k + k];
+            assert!((w - r.weights[k]).abs() < 1e-4, "row {i} rank {k}: {w} vs {}", r.weights[k]);
+        }
+    }
+}
+
+#[test]
+fn otp_router_artifact_matches_rust_router() {
+    let rt = runtime();
+    let cfg = ModelConfig::load("mix-tiny").unwrap();
+    let mut rng = Rng::new(9);
+    let router = OtpRouter::new(cfg.d_model, cfg.top_k, &mut rng);
+    let t = 4usize;
+    let k = cfg.top_k;
+    let x = Tensor2::randn(t, cfg.d_model, &mut rng, 1.0);
+    let gate_w: Vec<f32> = (0..t * k).map(|_| rng.f32()).collect();
+    let noise: Vec<f32> = (0..t * k).map(|_| rng.gumbel()).collect();
+    let tau = 1.3f32;
+    let key = format!("mix-tiny_otp_router_t{t}");
+    let outs = rt
+        .execute(
+            &key,
+            &[
+                f32_literal(&x.data, &[t, cfg.d_model]).unwrap(),
+                f32_literal(&gate_w, &[t, k]).unwrap(),
+                f32_literal(&router.fc1_w.data, &[cfg.d_model, k]).unwrap(),
+                f32_literal(&router.fc1_b, &[k]).unwrap(),
+                f32_literal(&router.fc2_w.data, &[2 * k, k]).unwrap(),
+                f32_literal(&router.fc2_b, &[k]).unwrap(),
+                f32_literal(&noise, &[t, k]).unwrap(),
+                f32_literal(&[tau], &[1]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let y = to_f32(&outs[0]).unwrap();
+    let mask = to_f32(&outs[1]).unwrap();
+    for i in 0..t {
+        let f = router.forward_gumbel(
+            x.row(i),
+            &gate_w[i * k..(i + 1) * k],
+            &noise[i * k..(i + 1) * k],
+            tau,
+        );
+        close(&y[i * k..(i + 1) * k], &f.y, 1e-3, &format!("y row {i}"));
+        close(&mask[i * k..(i + 1) * k], &f.mask, 1e-3, &format!("mask row {i}"));
+    }
+}
+
+#[test]
+fn manifest_group_matches_rust_constant() {
+    let rt = runtime();
+    assert_eq!(rt.manifest.group, mcsharp::config::GROUP);
+}
+
+#[test]
+fn oversize_batch_splits_across_buckets() {
+    let rt = runtime();
+    let cfg = ModelConfig::load("mix-tiny").unwrap();
+    let base = MoeModel::new(&cfg, 125);
+    let alloc = vec![vec![2u8; cfg.n_experts]; cfg.n_layers];
+    let q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+    let native = NativeBackend::quant(&q);
+    let pjrt = PjrtBackend::new(&rt, &q, false).unwrap();
+    let mut rng = Rng::new(10);
+    let x = Tensor2::randn(100, cfg.d_model, &mut rng, 1.0); // > max bucket 64
+    let a = native.expert_batch(0, 0, &x).unwrap();
+    let b = pjrt.expert_batch(0, 0, &x).unwrap();
+    close(&a.data, &b.data, 2e-3, "oversize split");
+}

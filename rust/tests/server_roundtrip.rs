@@ -1,0 +1,130 @@
+//! TCP server round-trip: the line protocol must return exactly the
+//! tokens the engine produces for the same prompt.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::ModelConfig;
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+use mcsharp::coordinator::server;
+use mcsharp::moe::MoeModel;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "srv-test".into(),
+        family: "mixtral".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        n_experts: 4,
+        top_k: 2,
+        n_shared_experts: 0,
+        max_seq_len: 64,
+        rope_theta: 10_000.0,
+        modalities: 1,
+        buckets: vec![4],
+    }
+}
+
+#[test]
+fn tcp_roundtrip_matches_direct_generation() {
+    let m = MoeModel::new(&tiny_cfg(), 200);
+    // expected output straight from the engine
+    let be = NativeBackend::fp(&m);
+    let mut direct = DecodeEngine::new(EngineModel::Fp(&m), &be, None);
+    let want = direct.generate(&[1, 17, 30], 5).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let be = NativeBackend::fp(&m);
+            let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+            server::serve(listener, &engine, 4, Some(2)).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // ping first
+        stream.write_all(b"PING\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+        // two generation requests (server exits after 2)
+        for _ in 0..2 {
+            stream.write_all(b"GEN 5 1,17,30\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let got: Vec<u16> = line
+                .trim()
+                .strip_prefix("OK ")
+                .unwrap()
+                .split(',')
+                .map(|t| t.parse().unwrap())
+                .collect();
+            assert_eq!(got, want);
+        }
+    });
+}
+
+#[test]
+fn metrics_command_returns_json_snapshot() {
+    let m = MoeModel::new(&tiny_cfg(), 202);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let be = NativeBackend::fp(&m);
+            let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+            server::serve(listener, &engine, 4, Some(1)).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        // generate, then scrape
+        stream.write_all(b"GEN 4 1,17,30\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "{line}");
+        line.clear();
+        stream.write_all(b"METRICS\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let json = line.trim().strip_prefix("METRICS ").expect("prefix");
+        let v = mcsharp::util::json::Value::parse(json).expect("valid json");
+        assert_eq!(v.get("tokens_out").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 1);
+        assert!(v.get("latency_p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("pruning_ratio").unwrap().as_f64().unwrap() == 0.0);
+    });
+}
+
+#[test]
+fn malformed_requests_get_err() {
+    let m = MoeModel::new(&tiny_cfg(), 201);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let be = NativeBackend::fp(&m);
+            let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+            server::serve(listener, &engine, 4, Some(1)).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream.write_all(b"GEN notanumber 1,2\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "), "{line}");
+        line.clear();
+        stream.write_all(b"BOGUS\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "), "{line}");
+        // finish with one good request so the server's quota drains
+        line.clear();
+        stream.write_all(b"GEN 2 1,5\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "{line}");
+    });
+}
