@@ -148,7 +148,7 @@ fn main() -> Result<()> {
         }
         let results = b.run(&mut eng)?;
         push_row(&mut table, "PMQ (pjrt)", &eng);
-        let (compiles, execs) = *rt.stats.borrow();
+        let (compiles, execs) = *rt.stats.lock().unwrap();
         println!(
             "pjrt: {} executable compiles (warmup), {} kernel executions, {} results\n",
             compiles,

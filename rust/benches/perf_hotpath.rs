@@ -11,13 +11,27 @@ use std::time::Duration;
 
 use mcsharp::backend::{ExpertBackend, NativeBackend, PjrtBackend};
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel, SeqState};
+use mcsharp::moe::model::{ExpertId, ExpertProvider, ForwardOpts};
 use mcsharp::pmq::Strategy;
 use mcsharp::profile::dequant_matmul_estimate;
+use mcsharp::quant::qlinear::QuantLinear;
+use mcsharp::quant::qmodel::{QuantExpert, QuantModel};
 use mcsharp::quant::{binary::BinaryMatrix, packed::PackedMatrix, rtn};
 use mcsharp::runtime::Runtime;
 use mcsharp::tensor::Tensor2;
 use mcsharp::util::bench::{report, time};
 use mcsharp::util::rng::Rng;
+
+/// Forces the degenerate per-token path through the same dispatcher: the
+/// default `expert_ffn_batch_acc` loops this row method, re-decoding
+/// every packed tile per token — the pre-refactor eval behaviour.
+struct RowOnly<'a>(&'a QuantModel);
+
+impl ExpertProvider for RowOnly<'_> {
+    fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]) {
+        self.0.expert_ffn_acc(layer, id, x, w, out);
+    }
+}
 
 fn main() {
     let budget = Duration::from_millis(300);
@@ -60,9 +74,69 @@ fn main() {
         report("matvec binary 1-bit (Eq. 9)", &s);
     }
 
-    println!("\n== engine step (batch 8, mix-tiny PMQ@2, native) ==");
+    // The acceptance metric for the expert-grouped dispatch refactor
+    // (EXPERIMENTS.md §Perf): one packed expert over a G-row token group,
+    // per-token (G tile decodes) vs grouped (1 tile decode).
+    println!("\n== grouped vs per-token quant expert (2-bit [128->256->128], G-row group) ==");
+    {
+        let pack = |w: &Tensor2| {
+            let (c, sc, z) = rtn::quantize_rtn(w, 2, 32);
+            QuantLinear::Packed(PackedMatrix::from_codes(&c, sc, z, w.rows, w.cols, 2, 32))
+        };
+        let qe = QuantExpert {
+            wg: pack(&Tensor2::randn(h, f, &mut rng, 1.0)),
+            wu: pack(&Tensor2::randn(h, f, &mut rng, 1.0)),
+            wd: pack(&Tensor2::randn(f, h, &mut rng, 1.0)),
+            bits: 2,
+        };
+        for g in [1usize, 2, 4, 8, 16] {
+            let xb = Tensor2::randn(g, h, &mut rng, 1.0);
+            let mut out = Tensor2::zeros(g, h);
+            let st = time(budget, 5_000, || {
+                out.data.fill(0.0);
+                for i in 0..g {
+                    qe.ffn_row_acc(xb.row(i), 1.0, out.row_mut(i));
+                }
+                std::hint::black_box(&out);
+            });
+            report(&format!("per-token x{g} (decode {g}x)"), &st);
+            let st = time(budget, 5_000, || {
+                out.data.fill(0.0);
+                qe.ffn_batch_acc(&xb, &mut out);
+                std::hint::black_box(&out);
+            });
+            report(&format!("grouped   x{g} (decode 1x)"), &st);
+        }
+    }
+
     let s = common::setup("mix-tiny");
     let q = s.quantize(Strategy::Pmq, 2.0, 0x9E2F);
+    // End-to-end form of the same comparison: quantized perplexity eval
+    // through forward_opts, per-token provider vs grouped provider (the
+    // dispatcher is identical; only the tile-decode granularity differs).
+    println!("\n== quantized eval (mix-tiny PMQ@2): per-token vs grouped provider ==");
+    {
+        let seqs = s.eval_seqs.clone();
+        let row_only = RowOnly(&q);
+        let st = time(budget, 50, || {
+            let ppl = q.model.perplexity(
+                &seqs,
+                &mut ForwardOpts { provider: Some(&row_only), ..Default::default() },
+            );
+            std::hint::black_box(ppl);
+        });
+        report("eval ppl per-token provider", &st);
+        let st = time(budget, 50, || {
+            let ppl = q.model.perplexity(
+                &seqs,
+                &mut ForwardOpts { provider: Some(&q), ..Default::default() },
+            );
+            std::hint::black_box(ppl);
+        });
+        report("eval ppl grouped provider  ", &st);
+    }
+
+    println!("\n== engine step (batch 8, mix-tiny PMQ@2, native) ==");
     {
         let be = NativeBackend::quant(&q);
         let mut eng = DecodeEngine::new(EngineModel::Quant(&q), &be, None);
@@ -90,7 +164,7 @@ fn main() {
 
     // The paper's Table 5/8 speedup claim is a *memory-bound* effect: it
     // appears once weights exceed cache and decode streams them from
-    // DRAM. mix-small (~24M params, ~94 MB f32) exceeds this core's LLC;
+    // DRAM. mix-small (~28M params, ~110 MB f32) exceeds this core's LLC;
     // mix-tiny above (cache-resident) shows parity instead.
     println!("\n== engine step (batch 8, mix-small, native — memory-bound regime) ==");
     {
@@ -127,7 +201,7 @@ fn main() {
     if let Ok(rt) = Runtime::open_default() {
         let be = PjrtBackend::new(&rt, &q, true).unwrap();
         for t_tok in [4usize, 16, 64] {
-            let xb = Tensor2::randn(t_tok, 128, &mut rng, 1.0);
+            let xb = Tensor2::randn(t_tok, s.base.cfg.d_model, &mut rng, 1.0);
             let st = time(budget, 2_000, || {
                 std::hint::black_box(be.expert_batch(0, 0, &xb).unwrap());
             });

@@ -17,7 +17,9 @@ use anyhow::Result;
 
 use crate::tensor::Tensor2;
 
-pub trait ExpertBackend {
+/// `Sync` because the expert-grouped dispatcher executes independent
+/// expert groups of one layer on scoped threads.
+pub trait ExpertBackend: Sync {
     /// Run routed expert `expert` of `layer` over token rows `x [n, H]`.
     fn expert_batch(&self, layer: usize, expert: usize, x: &Tensor2) -> Result<Tensor2>;
     /// Run shared expert `idx` of `layer`.

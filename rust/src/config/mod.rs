@@ -100,9 +100,10 @@ pub const MODEL_ZOO: &[&str] = &["mix-tiny", "mix-small", "dsvl-t", "dsvl-s", "d
 /// Resolve a path relative to the repository root (works from `cargo
 /// test`, benches, and installed binaries run from the repo).
 pub fn repo_path(rel: &str) -> String {
-    // CARGO_MANIFEST_DIR is baked in at compile time and is the repo root.
-    let root = env!("CARGO_MANIFEST_DIR");
-    format!("{root}/{rel}")
+    // CARGO_MANIFEST_DIR is baked in at compile time and is `rust/`;
+    // the repo root (configs/, artifacts/, checkpoints/) is its parent.
+    let manifest = env!("CARGO_MANIFEST_DIR");
+    format!("{manifest}/../{rel}")
 }
 
 /// PMQ hyper-parameters (paper Eq. 7: α, β weight the significance

@@ -4,8 +4,8 @@ use anyhow::Result;
 
 use crate::backend::ExpertBackend;
 use crate::moe::attention::KvCache;
-use crate::moe::gating::route;
-use crate::moe::model::{MoeModel, Pruner};
+use crate::moe::dispatch::{dispatch_moe_layer, DispatchExecutor, DispatchHooks};
+use crate::moe::model::{ExpertId, MoeModel, Pruner};
 use crate::quant::qmodel::QuantModel;
 use crate::tensor::{rmsnorm, softmax, Tensor2};
 use crate::util::rng::Rng;
@@ -33,6 +33,44 @@ impl EngineModel<'_> {
                 (m.blocks[layer].experts[expert].n_params() * 2) as u64
             }
             EngineModel::Quant(q) => q.experts[layer][expert].nbytes(),
+        }
+    }
+}
+
+/// [`DispatchExecutor`] over the engine's [`ExpertBackend`] — the
+/// serving-path adapter (native fused-dequant or PJRT execution), with
+/// routed-bytes accounting from the engine's weight store.
+struct BackendExec<'s, 'a> {
+    em: &'s EngineModel<'a>,
+    be: &'s dyn ExpertBackend,
+}
+
+impl DispatchExecutor for BackendExec<'_, '_> {
+    fn expert_batch_acc(
+        &self,
+        layer: usize,
+        id: ExpertId,
+        x: &Tensor2,
+        weights: &[f32],
+        out: &mut Tensor2,
+    ) -> Result<()> {
+        let y = match id {
+            ExpertId::Routed(e) => self.be.expert_batch(layer, e, x)?,
+            ExpertId::Shared(s) => self.be.shared_batch(layer, s, x)?,
+        };
+        for i in 0..x.rows {
+            let w = weights[i];
+            for (o, v) in out.row_mut(i).iter_mut().zip(y.row(i)) {
+                *o += w * v;
+            }
+        }
+        Ok(())
+    }
+
+    fn expert_bytes(&self, layer: usize, id: ExpertId) -> u64 {
+        match id {
+            ExpertId::Routed(e) => self.em.routed_expert_bytes(layer, e),
+            ExpertId::Shared(_) => 0,
         }
     }
 }
@@ -114,53 +152,29 @@ impl<'a> DecodeEngine<'a> {
                     *a += o;
                 }
             }
-            // MoE: route + prune per token, then group by expert
+            // MoE: the shared expert-grouped dispatcher (route + prune +
+            // group + execute-once-per-expert + scatter)
             for i in 0..n {
                 rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
             }
-            // expert -> [(batch row, weight)]
-            let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); cfg.n_experts];
-            for i in 0..n {
-                let r = route(normed.row(i), &block.gate, cfg.top_k);
-                let keep = match self.pruner.as_deref_mut() {
-                    Some(p) => p.keep(l, normed.row(i), &r).clamp(1, r.experts.len()),
-                    None => r.experts.len(),
-                };
-                self.metrics.experts_kept += keep as u64;
-                self.metrics.experts_offered += r.experts.len() as u64;
-                let wsum: f32 = r.weights[..keep].iter().sum();
-                for rank in 0..keep {
-                    groups[r.experts[rank]].push((i, r.weights[rank] / wsum));
-                }
-            }
-            // execute each expert once over its token block
-            for (e, group) in groups.iter().enumerate() {
-                if group.is_empty() {
-                    continue;
-                }
-                self.metrics.routed_bytes += self.em.routed_expert_bytes(l, e);
-                let mut xg = Tensor2::zeros(group.len(), h);
-                for (gi, &(row, _)) in group.iter().enumerate() {
-                    xg.row_mut(gi).copy_from_slice(normed.row(row));
-                }
-                let out = self.backend.expert_batch(l, e, &xg)?;
-                for (gi, &(row, w)) in group.iter().enumerate() {
-                    let xr = x.row_mut(row);
-                    for (a, o) in xr.iter_mut().zip(out.row(gi)) {
-                        *a += w * o;
-                    }
-                }
-            }
-            // shared experts over the whole batch
-            for s in 0..cfg.n_shared_experts {
-                let out = self.backend.shared_batch(l, s, &normed)?;
-                for i in 0..n {
-                    let xr = x.row_mut(i);
-                    for (a, o) in xr.iter_mut().zip(out.row(i)) {
-                        *a += o;
-                    }
-                }
-            }
+            let exec = BackendExec { em: &self.em, be: self.backend };
+            let mut hooks = DispatchHooks {
+                pruner: self.pruner.as_deref_mut(),
+                ..Default::default()
+            };
+            let outcome = dispatch_moe_layer(
+                l,
+                &block.gate,
+                cfg.top_k,
+                cfg.n_shared_experts,
+                &normed,
+                &exec,
+                &mut hooks,
+                &mut x,
+            )?;
+            self.metrics.experts_kept += outcome.kept;
+            self.metrics.experts_offered += outcome.offered;
+            self.metrics.routed_bytes += outcome.routed_bytes;
         }
         // head + token transition per sequence
         for (i, seq) in batch.iter_mut().enumerate() {

@@ -21,6 +21,10 @@
 //! suites, a roofline model — is implemented here as well; see DESIGN.md
 //! for the full inventory and the per-experiment index.
 
+// Index-loop style is deliberate in the kernel code (mirrors the Pallas
+// tile loops and keeps the autovectorization-friendly shapes obvious).
+#![allow(clippy::needless_range_loop)]
+
 pub mod backend;
 pub mod config;
 pub mod coordinator;

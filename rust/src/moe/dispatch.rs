@@ -1,0 +1,463 @@
+//! Expert-grouped batched dispatch — the single routing/execution path
+//! shared by the reference forward (`MoeModel::forward_opts`, backing
+//! every perplexity/LM/VLM eval, PMQ calibration and OTP distillation
+//! pass) and the serving decode engine (`DecodeEngine::step`).
+//!
+//! Given one layer's block of post-norm token rows, [`dispatch_moe_layer`]
+//! routes every row, applies the optional [`Pruner`], renormalizes the
+//! kept weights, feeds the stats/counter/capture hooks, builds per-expert
+//! `(row, weight)` groups, gathers each group into a contiguous block,
+//! executes each expert **once** over its block, and scatters the
+//! weighted outputs back into the residual rows.
+//!
+//! Executing per *group* instead of per *token* is what makes the paper's
+//! Table 5/8 memory-and-latency wins reachable from every call site: a
+//! quantized expert's packed weight tiles are decoded once per token
+//! group rather than once per token (see `QuantLinear::matmul_acc`), and
+//! independent expert groups within a layer run in parallel on scoped
+//! threads. Group outputs are scattered in deterministic (expert-index,
+//! then shared) order after the join, so results are bitwise identical
+//! whether groups ran sequentially or in parallel.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor2;
+
+use super::gating::route;
+use super::model::{ExpertId, Pruner};
+use super::stats::RoutingStats;
+
+/// Batch-level expert execution the dispatcher drives. `Sync` because
+/// independent expert groups execute on scoped threads.
+///
+/// [`ProviderExec`] adapts any `ExpertProvider` (eval paths); the decode
+/// engine adapts its `ExpertBackend` (native / PJRT serving paths).
+pub trait DispatchExecutor: Sync {
+    /// `out.row(i) += weights[i] * F_e(x.row(i))` for expert `id` of
+    /// `layer`. `out` arrives zeroed, shaped like `x`.
+    fn expert_batch_acc(
+        &self,
+        layer: usize,
+        id: ExpertId,
+        x: &Tensor2,
+        weights: &[f32],
+        out: &mut Tensor2,
+    ) -> Result<()>;
+
+    /// Packed bytes streamed when this expert executes once (serving
+    /// metrics; 0 where untracked).
+    fn expert_bytes(&self, _layer: usize, _id: ExpertId) -> u64 {
+        0
+    }
+}
+
+/// [`DispatchExecutor`] over an [`ExpertProvider`](super::model::ExpertProvider)
+/// — the eval-path adapter (fp weights, quantized provider, ε probes).
+pub struct ProviderExec<'a>(pub &'a dyn super::model::ExpertProvider);
+
+impl DispatchExecutor for ProviderExec<'_> {
+    fn expert_batch_acc(
+        &self,
+        layer: usize,
+        id: ExpertId,
+        x: &Tensor2,
+        weights: &[f32],
+        out: &mut Tensor2,
+    ) -> Result<()> {
+        self.0.expert_ffn_batch_acc(layer, id, x, weights, out);
+        Ok(())
+    }
+}
+
+/// Mutable hook bundle threaded through the routing phase (all calls
+/// happen on the caller's thread, token-row order, before any expert
+/// executes — so hook call order matches the historical per-token path).
+#[derive(Default)]
+pub struct DispatchHooks<'h, 'p> {
+    /// Routing statistics (PMQ §3.2.2): per kept expert `record(layer,
+    /// expert, pre-renormalization weight)`, plus one `bump_tokens()` per
+    /// row on layer 0.
+    pub stats: Option<&'h mut RoutingStats>,
+    /// Token-wise dynamic pruning (OTP/ODP/random); `keep` is clamped to
+    /// `[1, k]`.
+    pub pruner: Option<&'h mut (dyn Pruner + 'p)>,
+    /// Accumulates (kept, offered) per token-layer (Table 6 accounting).
+    pub pruning_counter: Option<&'h mut (u64, u64)>,
+    /// PMQ calibration capture: `capture[layer].push(x_row)`, pre-sized
+    /// to `n_layers` empty vecs.
+    pub capture_moe_inputs: Option<&'h mut Vec<Vec<Vec<f32>>>>,
+}
+
+/// Per-layer dispatch accounting, returned to the caller (the engine
+/// folds it into its serving metrics; eval callers may ignore it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DispatchOutcome {
+    /// Σ kept experts over rows.
+    pub kept: u64,
+    /// Σ offered (top-k) experts over rows.
+    pub offered: u64,
+    /// Σ packed bytes of each routed expert executed (once per group).
+    pub routed_bytes: u64,
+}
+
+/// One gathered expert group ready to execute.
+struct GroupWork {
+    id: ExpertId,
+    /// Residual row index per gathered row.
+    rows: Vec<usize>,
+    weights: Vec<f32>,
+    /// `[G, H]` gathered input rows; `None` means the group covers the
+    /// whole block in order (shared experts) and `normed` is borrowed
+    /// directly instead of copied.
+    x: Option<Tensor2>,
+}
+
+/// Minimum total input volume (gathered rows × hidden dim, in f32s)
+/// before the scoped-thread fan-out pays for its spawn cost. Each row
+/// costs ~3·H·F FLOPs in the expert FFN, so at H=128 this threshold
+/// (~32 rows) corresponds to a few milliseconds of work; below it the
+/// per-layer thread spawns dominate (tiny test models, 1–2 sequence
+/// decode steps) and groups run inline.
+const PAR_MIN_VOLUME: usize = 4096;
+
+/// Route + prune + group + execute + scatter one MoE layer.
+///
+/// * `normed` — `[T, H]` post-norm token rows for this layer;
+/// * `residual` — `[T, H]` stream the weighted expert outputs accumulate
+///   into (row-aligned with `normed`);
+/// * shared experts run as whole-block groups with unit weights after
+///   the routed groups, preserving the historical routed-then-shared
+///   accumulation order.
+#[allow(clippy::too_many_arguments)]
+pub fn dispatch_moe_layer(
+    layer: usize,
+    gate: &Tensor2,
+    top_k: usize,
+    n_shared: usize,
+    normed: &Tensor2,
+    exec: &dyn DispatchExecutor,
+    hooks: &mut DispatchHooks,
+    residual: &mut Tensor2,
+) -> Result<DispatchOutcome> {
+    let t = normed.rows;
+    let h = normed.cols;
+    let n_experts = gate.cols;
+    let mut outcome = DispatchOutcome::default();
+    // -- routing phase: sequential, hook order == token-row order --------
+    let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_experts];
+    for i in 0..t {
+        let xin = normed.row(i);
+        if let Some(cap) = hooks.capture_moe_inputs.as_deref_mut() {
+            cap[layer].push(xin.to_vec());
+        }
+        let r = route(xin, gate, top_k);
+        let keep = match hooks.pruner.as_deref_mut() {
+            Some(p) => p.keep(layer, xin, &r).clamp(1, r.experts.len()),
+            None => r.experts.len(),
+        };
+        if let Some(counter) = hooks.pruning_counter.as_deref_mut() {
+            counter.0 += keep as u64;
+            counter.1 += r.experts.len() as u64;
+        }
+        outcome.kept += keep as u64;
+        outcome.offered += r.experts.len() as u64;
+        // renormalize kept weights (pruned experts' mass is redistributed)
+        let wsum: f32 = r.weights[..keep].iter().sum();
+        for rank in 0..keep {
+            let e = r.experts[rank];
+            if let Some(stats) = hooks.stats.as_deref_mut() {
+                stats.record(layer, e, r.weights[rank]);
+            }
+            groups[e].push((i, r.weights[rank] / wsum));
+        }
+        if layer == 0 {
+            if let Some(stats) = hooks.stats.as_deref_mut() {
+                stats.bump_tokens();
+            }
+        }
+    }
+    // -- gather phase ----------------------------------------------------
+    let mut work: Vec<GroupWork> = Vec::new();
+    for (e, group) in groups.iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        outcome.routed_bytes += exec.expert_bytes(layer, ExpertId::Routed(e));
+        let mut xg = Tensor2::zeros(group.len(), h);
+        for (gi, &(row, _)) in group.iter().enumerate() {
+            xg.row_mut(gi).copy_from_slice(normed.row(row));
+        }
+        work.push(GroupWork {
+            id: ExpertId::Routed(e),
+            rows: group.iter().map(|&(r, _)| r).collect(),
+            weights: group.iter().map(|&(_, w)| w).collect(),
+            x: Some(xg),
+        });
+    }
+    if t > 0 {
+        for s in 0..n_shared {
+            work.push(GroupWork {
+                id: ExpertId::Shared(s),
+                rows: (0..t).collect(),
+                weights: vec![1.0; t],
+                x: None,
+            });
+        }
+    }
+    // -- execute phase: each expert once over its gathered block ---------
+    let blocks = run_groups(layer, exec, normed, &work)?;
+    // -- scatter phase: deterministic group order, weights pre-applied ---
+    for (gw, block) in work.iter().zip(&blocks) {
+        for (gi, &row) in gw.rows.iter().enumerate() {
+            let xr = residual.row_mut(row);
+            for (a, o) in xr.iter_mut().zip(block.row(gi)) {
+                *a += o;
+            }
+        }
+    }
+    Ok(outcome)
+}
+
+/// Execute every group, fanning independent groups out over scoped
+/// threads when the layer carries enough rows to pay for it.
+fn run_groups(
+    layer: usize,
+    exec: &dyn DispatchExecutor,
+    normed: &Tensor2,
+    work: &[GroupWork],
+) -> Result<Vec<Tensor2>> {
+    let run_one = |g: &GroupWork| -> Result<Tensor2> {
+        let xb = g.x.as_ref().unwrap_or(normed);
+        let mut out = Tensor2::zeros(xb.rows, xb.cols);
+        exec.expert_batch_acc(layer, g.id, xb, &g.weights, &mut out)?;
+        Ok(out)
+    };
+    let n = work.len();
+    let total_rows: usize = work.iter().map(|g| g.rows.len()).sum();
+    let workers = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1)
+        .min(n);
+    if workers <= 1 || total_rows * normed.cols < PAR_MIN_VOLUME {
+        return work.iter().map(run_one).collect();
+    }
+    let mut blocks: Vec<Option<Result<Tensor2>>> = Vec::with_capacity(n);
+    blocks.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let run_one = &run_one;
+            handles.push(s.spawn(move || {
+                let mut outs = Vec::new();
+                let mut gi = w;
+                while gi < n {
+                    outs.push((gi, run_one(&work[gi])));
+                    gi += workers;
+                }
+                outs
+            }));
+        }
+        for handle in handles {
+            for (gi, r) in handle.join().expect("dispatch worker panicked") {
+                blocks[gi] = Some(r);
+            }
+        }
+    });
+    blocks
+        .into_iter()
+        .map(|b| b.expect("every group index is covered by exactly one worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::gating::Route;
+    use crate::moe::model::{ExpertProvider, MoeModel};
+    use crate::util::rng::Rng;
+
+    fn cfg(n_shared: usize) -> ModelConfig {
+        ModelConfig {
+            name: "dispatch-test".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 48,
+            n_experts: 4,
+            top_k: 2,
+            n_shared_experts: n_shared,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        }
+    }
+
+    /// Per-token reference: the historical row-at-a-time MoE layer.
+    fn reference_layer(
+        m: &MoeModel,
+        layer: usize,
+        normed: &Tensor2,
+        keep_of: impl Fn(usize) -> usize,
+        residual: &mut Tensor2,
+    ) {
+        let block = &m.blocks[layer];
+        for i in 0..normed.rows {
+            let xin = normed.row(i);
+            let r = route(xin, &block.gate, m.cfg.top_k);
+            let keep = keep_of(i).clamp(1, r.experts.len());
+            let wsum: f32 = r.weights[..keep].iter().sum();
+            let acc = residual.row_mut(i);
+            for rank in 0..keep {
+                block.experts[r.experts[rank]].ffn_row_acc(xin, r.weights[rank] / wsum, acc);
+            }
+            for shared in &block.shared {
+                shared.ffn_row_acc(xin, 1.0, acc);
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_matches_per_token_reference() {
+        let m = MoeModel::new(&cfg(1), 90);
+        let mut rng = Rng::new(91);
+        // 128 rows x 32 dims crosses PAR_MIN_VOLUME, so the scoped-thread
+        // path engages wherever the host has >1 core
+        let normed = Tensor2::randn(128, 32, &mut rng, 1.0);
+        let mut want = Tensor2::zeros(128, 32);
+        reference_layer(&m, 1, &normed, |_| usize::MAX, &mut want);
+        let mut got = Tensor2::zeros(128, 32);
+        let exec = ProviderExec(&m);
+        let out = dispatch_moe_layer(
+            1,
+            &m.blocks[1].gate,
+            2,
+            1,
+            &normed,
+            &exec,
+            &mut DispatchHooks::default(),
+            &mut got,
+        )
+        .unwrap();
+        assert_eq!(out.offered, 128 * 2);
+        assert_eq!(out.kept, out.offered);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pruner_and_hooks_fire_in_row_order() {
+        struct SeqPruner {
+            seen: Vec<usize>,
+        }
+        impl Pruner for SeqPruner {
+            fn keep(&mut self, _l: usize, _x: &[f32], r: &Route) -> usize {
+                self.seen.push(r.experts[0]);
+                1 + self.seen.len() % 2
+            }
+        }
+        let m = MoeModel::new(&cfg(0), 92);
+        let mut rng = Rng::new(93);
+        let normed = Tensor2::randn(6, 32, &mut rng, 1.0);
+        let mut pruner = SeqPruner { seen: Vec::new() };
+        let mut stats = RoutingStats::new(2, 4);
+        let mut counter = (0u64, 0u64);
+        let mut cap: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 2];
+        let mut residual = Tensor2::zeros(6, 32);
+        let exec = ProviderExec(&m);
+        let mut hooks = DispatchHooks {
+            stats: Some(&mut stats),
+            pruner: Some(&mut pruner),
+            pruning_counter: Some(&mut counter),
+            capture_moe_inputs: Some(&mut cap),
+        };
+        let out =
+            dispatch_moe_layer(0, &m.blocks[0].gate, 2, 0, &normed, &exec, &mut hooks, &mut residual)
+                .unwrap();
+        assert_eq!(pruner.seen.len(), 6, "pruner consulted once per row");
+        assert_eq!(counter, (out.kept, out.offered));
+        assert_eq!(stats.tokens, 6, "layer-0 dispatch bumps tokens per row");
+        assert_eq!(cap[0].len(), 6);
+        assert!(cap[1].is_empty());
+        for (i, x) in cap[0].iter().enumerate() {
+            assert_eq!(x.as_slice(), normed.row(i), "capture preserves row order");
+        }
+        let recorded: u64 = (0..4).map(|e| stats.counts[e]).sum();
+        assert_eq!(recorded, out.kept, "stats record only kept experts");
+    }
+
+    #[test]
+    fn empty_block_is_a_no_op() {
+        let m = MoeModel::new(&cfg(1), 94);
+        let normed = Tensor2::zeros(0, 32);
+        let mut residual = Tensor2::zeros(0, 32);
+        let exec = ProviderExec(&m);
+        let out = dispatch_moe_layer(
+            0,
+            &m.blocks[0].gate,
+            2,
+            1,
+            &normed,
+            &exec,
+            &mut DispatchHooks::default(),
+            &mut residual,
+        )
+        .unwrap();
+        assert_eq!(out, DispatchOutcome::default());
+    }
+
+    #[test]
+    fn executor_errors_propagate() {
+        struct Failing;
+        impl DispatchExecutor for Failing {
+            fn expert_batch_acc(
+                &self,
+                _layer: usize,
+                _id: ExpertId,
+                _x: &Tensor2,
+                _weights: &[f32],
+                _out: &mut Tensor2,
+            ) -> Result<()> {
+                Err(anyhow::anyhow!("backend down"))
+            }
+        }
+        let m = MoeModel::new(&cfg(0), 95);
+        let mut rng = Rng::new(96);
+        let normed = Tensor2::randn(8, 32, &mut rng, 1.0);
+        let mut residual = Tensor2::zeros(8, 32);
+        let err = dispatch_moe_layer(
+            0,
+            &m.blocks[0].gate,
+            2,
+            0,
+            &normed,
+            &Failing,
+            &mut DispatchHooks::default(),
+            &mut residual,
+        );
+        assert!(err.is_err());
+    }
+
+    /// The degenerate-row default of `ExpertProvider` and an explicit
+    /// batch override must agree (the trait's two faces).
+    #[test]
+    fn provider_row_and_batch_defaults_agree() {
+        let m = MoeModel::new(&cfg(1), 97);
+        let mut rng = Rng::new(98);
+        let x = Tensor2::randn(3, 32, &mut rng, 1.0);
+        let weights = [0.25f32, 1.0, 0.5];
+        let mut batch_out = Tensor2::zeros(3, 32);
+        m.expert_ffn_batch_acc(0, ExpertId::Routed(1), &x, &weights, &mut batch_out);
+        for i in 0..3 {
+            let mut row_out = vec![0.0f32; 32];
+            m.expert_ffn_acc(0, ExpertId::Routed(1), x.row(i), weights[i], &mut row_out);
+            for (a, b) in batch_out.row(i).iter().zip(&row_out) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+}

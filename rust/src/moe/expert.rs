@@ -1,6 +1,6 @@
 //! A single SwiGLU expert: `y = (silu(x @ wg) * (x @ wu)) @ wd`.
 
-use crate::tensor::{dot, silu, Tensor2};
+use crate::tensor::{silu, Tensor2};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -84,18 +84,6 @@ impl Expert {
         };
         (d(&self.wg, &other.wg) + d(&self.wu, &other.wu) + d(&self.wd, &other.wd)).sqrt()
     }
-}
-
-/// Dot-product helper kept for the row path (unused cols loop above is
-/// row-major friendly already).
-#[allow(dead_code)]
-fn col_dot(x: &[f32], w: &Tensor2, col: usize) -> f32 {
-    let mut s = 0.0;
-    for (k, &xk) in x.iter().enumerate() {
-        s += xk * w.at(k, col);
-    }
-    let _ = dot(&[], &[]);
-    s
 }
 
 #[cfg(test)]

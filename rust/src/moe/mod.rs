@@ -9,11 +9,13 @@
 
 pub mod attention;
 pub mod checkpoint;
+pub mod dispatch;
 pub mod expert;
 pub mod gating;
 pub mod model;
 pub mod stats;
 
+pub use dispatch::{dispatch_moe_layer, DispatchExecutor, DispatchHooks, DispatchOutcome};
 pub use expert::Expert;
 pub use gating::route;
 pub use model::{ExpertId, ExpertProvider, ForwardOpts, MoeModel, Pruner};

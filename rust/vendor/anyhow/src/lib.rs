@@ -1,0 +1,160 @@
+//! Offline stand-in for the `anyhow` crate — the API-compatible subset
+//! this workspace uses (`Error`, `Result`, `Context`, `anyhow!`,
+//! `bail!`). The build environment has no crates.io access, so the error
+//! type is vendored as a workspace path dependency; swapping back to the
+//! real crate is a one-line change in `rust/Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error with display-oriented context chaining.
+///
+/// Like the real `anyhow::Error`, this intentionally does **not**
+/// implement `std::error::Error` itself, so the blanket
+/// `From<E: std::error::Error>` conversion (what makes `?` work) stays
+/// coherent.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from a display-able message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: message.to_string().into() }
+    }
+
+    /// Wrap a concrete error type.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Prepend a context line to the message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { inner: format!("{context}: {}", self.inner).into() }
+    }
+
+    /// Innermost error in the source chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(src) = cur.source() {
+            cur = src;
+        }
+        cur
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut src = self.inner.source();
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result`s of concrete error types.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_err().with_context(|| "opening x").unwrap_err();
+        assert_eq!(e.to_string(), "opening x: disk on fire");
+        let e = io_err().context("static ctx").unwrap_err();
+        assert!(e.to_string().starts_with("static ctx: "));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn bails() -> Result<()> {
+            bail!("nope {x}", x = 3);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 3");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,229 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! Host-side [`Literal`] staging is fully functional (the
+//! `runtime::literals` round-trip tests run against it), while client
+//! construction reports unavailability: `PjRtClient::cpu()` returns an
+//! error, so `Runtime::open*` fails with a clear message and every
+//! PJRT-dependent path (integration tests, benches, `--pjrt` serving)
+//! degrades gracefully instead of failing to link. Swap in the real
+//! bindings by repointing the workspace `xla` dependency.
+//!
+//! All types here are `Send + Sync` (plain host data), matching the
+//! `ExpertBackend: Sync` bound the expert-grouped dispatcher requires.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type; converts into `anyhow::Error` at call sites.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!("{what}: built against the offline xla stub (no PJRT plugin in this environment)"))
+}
+
+/// Element dtypes the workspace stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U8,
+    S32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Native element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    const DTYPE: ElementType;
+    fn read(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const DTYPE: ElementType = ElementType::F32;
+    fn read(b: &[u8]) -> f32 {
+        f32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const DTYPE: ElementType = ElementType::S32;
+    fn read(b: &[u8]) -> i32 {
+        i32::from_ne_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u8 {
+    const DTYPE: ElementType = ElementType::U8;
+    fn read(b: &[u8]) -> u8 {
+        b[0]
+    }
+}
+
+/// Host-side literal: dtype + shape + raw bytes (or tuple elements).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dtype: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Vec<Literal>,
+    is_tuple: bool,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        dtype: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        let n: usize = dims.iter().product();
+        if n * dtype.byte_size() != data.len() {
+            return Err(XlaError(format!(
+                "shape {dims:?} of {dtype:?} needs {} bytes, got {}",
+                n * dtype.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            dtype,
+            dims: dims.to_vec(),
+            bytes: data.to_vec(),
+            tuple: Vec::new(),
+            is_tuple: false,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        if self.dtype != T::DTYPE {
+            return Err(XlaError(format!(
+                "literal is {:?}, requested {:?}",
+                self.dtype,
+                T::DTYPE
+            )));
+        }
+        let sz = self.dtype.byte_size();
+        Ok(self.bytes.chunks_exact(sz).map(T::read).collect())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        if self.is_tuple {
+            Ok(self.tuple)
+        } else {
+            Err(XlaError("not a tuple literal".to_string()))
+        }
+    }
+}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError(format!(
+            "cannot parse {path}: the offline xla stub has no HLO parser"
+        )))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+            .unwrap();
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), data);
+        assert!(l.to_vec::<u8>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::U8, &[3], &[1, 2]).is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn stub_types_are_sync() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<Literal>();
+        assert_sync::<PjRtClient>();
+        assert_sync::<PjRtLoadedExecutable>();
+    }
+}
