@@ -34,7 +34,11 @@ impl ExpertProvider for RowOnly<'_> {
 }
 
 fn main() {
-    let budget = Duration::from_millis(300);
+    // `cargo bench --bench perf_hotpath -- --smoke`: CI's bench-rot
+    // gate — compile everything, run each synthetic section for ~one
+    // iteration, and skip the sections that pretrain zoo models.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke { Duration::from_millis(2) } else { Duration::from_millis(300) };
     let mut rng = Rng::new(0x9E2F);
     let (h, f) = (128usize, 256usize);
     let w = Tensor2::randn(h, f, &mut rng, 1.0);
@@ -107,6 +111,80 @@ fn main() {
             });
             report(&format!("grouped   x{g} (decode 1x)"), &st);
         }
+    }
+
+    // The deployment half of the refactor (EXPERIMENTS.md §Memory): the
+    // same decode workload over an all-resident store vs a PagedStore at
+    // half the packed bytes — the paged row pays the paging I/O, the
+    // counters show the cache behaviour. Random-init model: no training,
+    // so this section also runs in the CI smoke gate.
+    println!("\n== expert store: resident vs paged decode (random model, 50% budget) ==");
+    {
+        let cfg = mcsharp::config::ModelConfig {
+            name: "perf-store".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            n_experts: 8,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let base = mcsharp::moe::MoeModel::new(&cfg, 0xA11CE);
+        let alloc = vec![vec![2u8; cfg.n_experts]; cfg.n_layers];
+        let qs = QuantModel::quantize(
+            &base,
+            &alloc,
+            &mcsharp::config::PmqConfig::default(),
+            &mcsharp::quant::qmodel::QuantMethod::Rtn,
+        );
+        let path = std::env::temp_dir()
+            .join(format!("mcsharp-perf-store-{}.q2", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        mcsharp::quant::qcheckpoint::save(&qs, &path).unwrap();
+        let resident = mcsharp::quant::qcheckpoint::load(&path).unwrap();
+        let paged = mcsharp::quant::qcheckpoint::load_paged(
+            &path,
+            resident.store.total_nbytes() / 2,
+        )
+        .unwrap();
+        let run = |q: &QuantModel, label: &str| {
+            let be = NativeBackend::quant(q);
+            let mut eng = DecodeEngine::new(EngineModel::Quant(q), &be, None);
+            let mut seqs: Vec<SeqState> =
+                (0..4).map(|i| SeqState::new(i, vec![1, 9, 17], 1_000_000, cfg.n_layers)).collect();
+            let st = time(budget, 2_000, || {
+                let mut batch: Vec<&mut SeqState> = seqs.iter_mut().collect();
+                eng.step(&mut batch).unwrap();
+            });
+            report(label, &st);
+        };
+        run(&resident, "engine.step resident store (4 seqs)");
+        run(&paged, "engine.step paged @50%     (4 seqs)");
+        let c = paged.store.counters();
+        println!(
+            "paged counters: hits {} misses {} evictions {} prefetch-hits {} peak {} B (budget {} B)",
+            c.hits,
+            c.misses,
+            c.evictions,
+            c.prefetch_hits,
+            c.peak_resident_bytes,
+            paged.store.budget_bytes().unwrap_or(0)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    if smoke {
+        println!("\n(--smoke: skipping pretrained-model and PJRT sections)");
+        print_l1_estimates();
+        return;
     }
 
     let s = common::setup("mix-tiny");
@@ -211,6 +289,10 @@ fn main() {
         println!("(artifacts missing — run `make artifacts` for the PJRT numbers)");
     }
 
+    print_l1_estimates();
+}
+
+fn print_l1_estimates() {
     println!("\n== L1 structure estimates (TPU roofline inputs, DESIGN.md §8) ==");
     for bits in [1u8, 2, 3, 4] {
         let e = dequant_matmul_estimate(16, 128, 128, bits, 32);

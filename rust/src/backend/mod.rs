@@ -24,6 +24,14 @@ pub trait ExpertBackend: Sync {
     fn expert_batch(&self, layer: usize, expert: usize, x: &Tensor2) -> Result<Tensor2>;
     /// Run shared expert `idx` of `layer`.
     fn shared_batch(&self, layer: usize, idx: usize, x: &Tensor2) -> Result<Tensor2>;
+    /// Whether `expert_batch` reads packed weights through the model's
+    /// `ExpertStore` at call time. The engine only runs the dispatcher's
+    /// residency pre-phase when this is true — PJRT executes from
+    /// literals staged at construction, so paging for it would be I/O
+    /// nothing consumes.
+    fn uses_expert_store(&self) -> bool {
+        false
+    }
     fn name(&self) -> &'static str;
 }
 

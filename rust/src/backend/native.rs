@@ -41,10 +41,13 @@ impl ExpertBackend for NativeBackend<'_> {
                 }
                 Ok(out)
             }
-            // batched path: decode each packed weight tile once per call
+            // batched path: decode each packed weight tile once per call.
+            // The store handle is a cache hit here whenever the dispatch
+            // pre-execute phase ran (it pages the routed set in batch);
+            // a direct call on a paged store faults the expert in.
             NativeWeights::Quant(q) => {
                 let mut out = Tensor2::zeros(x.rows, x.cols);
-                q.experts[layer][expert].ffn_batch_acc(x, &mut out);
+                q.store.get(layer, expert)?.ffn_batch_acc(x, &mut out);
                 Ok(out)
             }
         }
@@ -56,6 +59,12 @@ impl ExpertBackend for NativeBackend<'_> {
             NativeWeights::Quant(q) => &q.model,
         };
         Ok(model.blocks[layer].shared[idx].ffn(x))
+    }
+
+    /// Quantized native execution streams packed tiles from the store
+    /// per call, so the dispatcher's residency pre-phase applies.
+    fn uses_expert_store(&self) -> bool {
+        matches!(self.weights, NativeWeights::Quant(_))
     }
 
     fn name(&self) -> &'static str {

@@ -75,9 +75,13 @@ impl<'a> PjrtBackend<'a> {
     pub fn new(rt: &'a Runtime, q: &'a QuantModel, warm: bool) -> Result<PjrtBackend<'a>> {
         let cfg = &q.model.cfg;
         let mut staged = Vec::new();
-        for layer in &q.experts {
+        // staging materializes every expert as PJRT literals anyway, so a
+        // paged store is streamed through (each handle dropped after its
+        // literals are built — residency stays bounded by the budget)
+        for l in 0..cfg.n_layers {
             let mut row = Vec::new();
-            for e in layer {
+            for idx in 0..cfg.n_experts {
+                let e = q.store.get(l, idx)?;
                 // AWQ-scaled experts ride the fp graph (see stage_linear)
                 let graph = if matches!(e.wg, QuantLinear::Scaled { .. }) {
                     "expert_ffn_fp"
@@ -92,6 +96,11 @@ impl<'a> PjrtBackend<'a> {
             }
             staged.push(row);
         }
+        // staging was a one-shot bulk read: drop whatever the store
+        // cached for it and zero the gauges, so a paged store neither
+        // strands budget-bytes of records nothing will read again nor
+        // reports staging I/O as serving-time cache behaviour
+        q.store.clear_cache();
         // shared experts ride the fp graph (they are 4-bit round-tripped
         // f32 in q.model)
         let mut staged_shared = Vec::new();

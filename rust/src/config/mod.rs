@@ -133,6 +133,32 @@ impl Default for PmqConfig {
     }
 }
 
+/// Serving-side knobs, threaded from the CLI (`mcsharp serve`) through
+/// the server into the batcher and the expert store.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Max concurrently active sequences.
+    pub max_batch: usize,
+    /// Max summed (prompt + generated) tokens across the active set.
+    pub token_budget: usize,
+    /// Packed-expert residency budget in MiB (`--expert-cache-mb`).
+    /// `None` keeps every expert resident (the pre-paging behaviour).
+    pub expert_cache_mb: Option<usize>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { max_batch: 8, token_budget: 4096, expert_cache_mb: None }
+    }
+}
+
+impl ServingConfig {
+    /// Residency budget in bytes, when one is configured.
+    pub fn expert_cache_bytes(&self) -> Option<u64> {
+        self.expert_cache_mb.map(|mb| mb as u64 * 1024 * 1024)
+    }
+}
+
 /// OTP training hyper-parameters (paper §3.4.2, Fig. 13).
 #[derive(Clone, Debug)]
 pub struct OtpConfig {

@@ -47,6 +47,12 @@ impl Batcher {
         }
     }
 
+    /// Batcher for one serving configuration (the expert-cache budget in
+    /// the same config is consumed upstream, at model-load time).
+    pub fn from_config(sc: &crate::config::ServingConfig) -> Batcher {
+        Batcher::new(sc.max_batch, sc.token_budget)
+    }
+
     pub fn with_policy(mut self, policy: Policy) -> Batcher {
         self.policy = policy;
         self

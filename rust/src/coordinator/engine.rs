@@ -32,7 +32,17 @@ impl EngineModel<'_> {
             EngineModel::Fp(m) => {
                 (m.blocks[layer].experts[expert].n_params() * 2) as u64
             }
-            EngineModel::Quant(q) => q.experts[layer][expert].nbytes(),
+            // store metadata — never faults a paged expert in
+            EngineModel::Quant(q) => q.store.expert_nbytes(layer, expert),
+        }
+    }
+
+    /// Expert-cache gauges when the model serves from a store (always
+    /// for quantized models; fp weights live in the model itself).
+    pub fn cache_counters(&self) -> Option<crate::quant::store::CacheCounters> {
+        match self {
+            EngineModel::Fp(_) => None,
+            EngineModel::Quant(q) => Some(q.store.counters()),
         }
     }
 }
@@ -71,6 +81,19 @@ impl DispatchExecutor for BackendExec<'_, '_> {
         match id {
             ExpertId::Routed(e) => self.em.routed_expert_bytes(layer, e),
             ExpertId::Shared(_) => 0,
+        }
+    }
+
+    /// Serving-side residency: page the routed set in before the execute
+    /// fan-out — but only when the backend actually reads the store at
+    /// call time (PJRT executes from pre-staged literals; paging for it
+    /// would be I/O nothing consumes).
+    fn prepare(&self, layer: usize, routed: &[usize]) -> Result<()> {
+        match self.em {
+            EngineModel::Quant(q) if self.be.uses_expert_store() => {
+                q.store.ensure_resident(layer, routed)
+            }
+            _ => Ok(()),
         }
     }
 }
@@ -209,6 +232,9 @@ impl<'a> DecodeEngine<'a> {
             self.metrics.tokens_out += 1;
         }
         self.metrics.steps += 1;
+        // refresh the expert-cache gauges (monotonic counters read off
+        // the store; cheap — one small struct copy under the store lock)
+        self.metrics.cache = self.em.cache_counters();
         Ok(())
     }
 
@@ -319,5 +345,23 @@ mod tests {
         assert!(eng.metrics.experts_offered > 0);
         assert_eq!(eng.metrics.experts_kept, eng.metrics.experts_offered);
         assert!(eng.metrics.routed_bytes > 0);
+        assert!(eng.metrics.cache.is_none(), "fp model has no expert cache");
+    }
+
+    #[test]
+    fn quant_engine_reports_cache_gauges() {
+        use crate::config::PmqConfig;
+        use crate::quant::qmodel::QuantMethod;
+        let m = MoeModel::new(&cfg(), 63);
+        let alloc = vec![vec![2u8; 4]; 2];
+        let q = QuantModel::quantize(&m, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+        let be = NativeBackend::quant(&q);
+        let mut eng = DecodeEngine::new(EngineModel::Quant(&q), &be, None);
+        eng.generate(&[1, 2, 3], 4).unwrap();
+        let c = eng.metrics.cache.expect("quant engine exposes cache gauges");
+        // resident store: everything in RAM, nothing paged
+        assert_eq!(c.resident_bytes, q.store.total_nbytes());
+        assert_eq!(c.misses, 0);
+        assert_eq!(c.evictions, 0);
     }
 }

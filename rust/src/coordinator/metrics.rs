@@ -1,7 +1,11 @@
-//! Serving metrics: latency percentiles, throughput, expert-activation
-//! and activated-parameter accounting (feeds Tables 5/6/8).
+//! Serving metrics: latency percentiles, throughput, expert-activation,
+//! activated-parameter accounting (feeds Tables 5/6/8) and — when the
+//! engine serves from a paged [`ExpertStore`](crate::quant::store) — the
+//! expert-cache gauges (resident bytes, hit/miss/evict/prefetch counts).
 
 use std::time::Instant;
+
+use crate::quant::store::CacheCounters;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -21,6 +25,9 @@ pub struct Metrics {
     /// Wall-clock of the serving run.
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
+    /// Expert-cache gauges, refreshed from the store each engine step
+    /// (`None` when the model does not serve from a store, i.e. fp).
+    pub cache: Option<CacheCounters>,
 }
 
 impl Metrics {
@@ -74,8 +81,11 @@ impl Metrics {
 
     /// JSON snapshot for the server's `METRICS` command (monitoring
     /// scrape format — every quantity the operator dashboards need).
+    /// Cache gauges report zero until an engine step over a store-backed
+    /// model refreshes them.
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::{num, obj};
+        let c = self.cache.unwrap_or_default();
         obj(vec![
             ("tokens_out", num(self.tokens_out as f64)),
             ("tokens_in", num(self.tokens_in as f64)),
@@ -89,6 +99,13 @@ impl Metrics {
             ("routed_bytes_per_token", num(self.routed_bytes_per_token())),
             ("experts_kept", num(self.experts_kept as f64)),
             ("experts_offered", num(self.experts_offered as f64)),
+            ("cache_resident_bytes", num(c.resident_bytes as f64)),
+            ("cache_peak_resident_bytes", num(c.peak_resident_bytes as f64)),
+            ("cache_hits", num(c.hits as f64)),
+            ("cache_misses", num(c.misses as f64)),
+            ("cache_evictions", num(c.evictions as f64)),
+            ("cache_prefetch_hits", num(c.prefetch_hits as f64)),
+            ("cache_hit_rate", num(c.hit_rate())),
         ])
     }
 }

@@ -22,6 +22,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::config::ServingConfig;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::DecodeEngine;
 use crate::coordinator::request::GenRequest;
@@ -75,10 +76,23 @@ pub fn serve(
     max_batch: usize,
     max_requests: Option<usize>,
 ) -> Result<usize> {
+    let sc = ServingConfig { max_batch, ..Default::default() };
+    serve_with(listener, engine, &sc, max_requests)
+}
+
+/// [`serve`] with the full serving configuration (`mcsharp serve` wires
+/// the CLI flags through here; the expert-cache budget in `sc` was
+/// already consumed when the engine's model was loaded).
+pub fn serve_with(
+    listener: TcpListener,
+    engine: &Mutex<DecodeEngine>,
+    sc: &ServingConfig,
+    max_requests: Option<usize>,
+) -> Result<usize> {
     let mut answered = 0usize;
     for stream in listener.incoming() {
         let stream = stream?;
-        answered += handle_conn(stream, engine, max_batch)?;
+        answered += handle_conn(stream, engine, sc)?;
         if let Some(m) = max_requests {
             if answered >= m {
                 break;
@@ -88,7 +102,11 @@ pub fn serve(
     Ok(answered)
 }
 
-fn handle_conn(stream: TcpStream, engine: &Mutex<DecodeEngine>, max_batch: usize) -> Result<usize> {
+fn handle_conn(
+    stream: TcpStream,
+    engine: &Mutex<DecodeEngine>,
+    sc: &ServingConfig,
+) -> Result<usize> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut answered = 0usize;
@@ -105,11 +123,17 @@ fn handle_conn(stream: TcpStream, engine: &Mutex<DecodeEngine>, max_batch: usize
         }
         if trimmed == "STATS" {
             let eng = engine.lock().unwrap();
+            let cache = eng.metrics.cache.unwrap_or_default();
             let msg = format!(
-                "STATS tokens_out={} steps={} pruning={:.3}\n",
+                "STATS tokens_out={} steps={} pruning={:.3} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={}\n",
                 eng.metrics.tokens_out,
                 eng.metrics.steps,
-                eng.metrics.pruning_ratio()
+                eng.metrics.pruning_ratio(),
+                cache.resident_bytes,
+                cache.hits,
+                cache.misses,
+                cache.evictions,
+                cache.prefetch_hits,
             );
             drop(eng);
             out.write_all(msg.as_bytes())?;
@@ -128,7 +152,7 @@ fn handle_conn(stream: TcpStream, engine: &Mutex<DecodeEngine>, max_batch: usize
         match parse_line(trimmed) {
             Ok(Some(req)) => {
                 let mut eng = engine.lock().unwrap();
-                let mut b = Batcher::new(max_batch, 4096);
+                let mut b = Batcher::from_config(sc);
                 let id = req.id;
                 b.submit(req);
                 let results = b.run(&mut eng)?;

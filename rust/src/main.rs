@@ -7,6 +7,8 @@
 //! mcsharp eval      --model mix-tiny --bits 2.05 [--otp]  LM suite scores
 //! mcsharp serve     --model mix-tiny --port 7077          TCP generation server
 //!                   [--qckpt q.bin]                       serve a pre-compressed model
+//!                   [--expert-cache-mb 64]                page experts under a byte budget
+//!                                                         instead of preloading them all
 //! mcsharp info      --model mix-tiny                      model zoo facts
 //! ```
 //!
@@ -16,7 +18,7 @@
 use anyhow::Result;
 
 use mcsharp::backend::{NativeBackend, PjrtBackend};
-use mcsharp::config::{ModelConfig, OtpConfig, PmqConfig, MODEL_ZOO};
+use mcsharp::config::{ModelConfig, OtpConfig, PmqConfig, ServingConfig, MODEL_ZOO};
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
 use mcsharp::coordinator::server;
 use mcsharp::data::{Corpus, CorpusKind};
@@ -32,7 +34,7 @@ use mcsharp::util::rng::Rng;
 
 const FLAGS: &[&str] = &[
     "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
-    "calib-seqs", "lambda", "out", "qckpt",
+    "calib-seqs", "lambda", "out", "qckpt", "expert-cache-mb", "max-batch",
 ];
 
 fn main() -> Result<()> {
@@ -76,7 +78,15 @@ fn compress(
     let eps = eps_table(&base, &cal.acts, &pmq);
     let alloc =
         strategies::allocation(Strategy::Pmq, &base, &cal, &eps, &pmq, avg_bits, &mut rng);
-    let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    let mut q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Gptq(&cal.hessians));
+    // calibrated significance rides along: persisted by v2 checkpoints,
+    // used as the paged store's eviction tie-break at serve time
+    let importance: Vec<Vec<f64>> = (0..cfg.n_layers)
+        .map(|l| {
+            (0..cfg.n_experts).map(|e| cal.significance(l, e, pmq.alpha, pmq.beta)).collect()
+        })
+        .collect();
+    q.set_importance(importance);
     Ok((base, q))
 }
 
@@ -151,32 +161,92 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 300)?;
     let bits = args.f64_or("bits", 2.0)?;
     let max_requests = args.usize_or("max-requests", 0)?;
+    let sc = ServingConfig {
+        max_batch: args.usize_or("max-batch", 8)?,
+        expert_cache_mb: match args.usize_or("expert-cache-mb", 0)? {
+            0 => None,
+            mb => Some(mb),
+        },
+        ..Default::default()
+    };
     // `--qckpt path` serves straight from a pre-compressed checkpoint —
-    // the paper's pre-loading deployment story (no calibration at boot)
-    let q = if let Some(path) = args.get("qckpt") {
-        println!("loading quantized checkpoint {path}");
-        mcsharp::quant::qcheckpoint::load(path)?
-    } else {
-        compress(model, bits, steps)?.1
+    // the paper's pre-loading deployment story (no calibration at boot).
+    // With `--expert-cache-mb N` the experts page in lazily under an
+    // N-MiB residency budget instead of preloading into RAM.
+    let q = match (args.get("qckpt"), sc.expert_cache_bytes()) {
+        (Some(path), Some(budget)) => {
+            println!("opening quantized checkpoint {path} (paged, {budget} B expert budget)");
+            mcsharp::quant::qcheckpoint::load_paged(path, budget)?
+        }
+        (Some(path), None) => {
+            println!("loading quantized checkpoint {path}");
+            mcsharp::quant::qcheckpoint::load(path)?
+        }
+        (None, Some(budget)) => {
+            // no checkpoint to page from: compress, spill the v2 file,
+            // reopen it paged so the budget is enforced for real
+            let q = compress(model, bits, steps)?.1;
+            let spill = std::env::temp_dir()
+                .join(format!("mcsharp-serve-{model}-{}.q2", std::process::id()))
+                .to_string_lossy()
+                .into_owned();
+            mcsharp::quant::qcheckpoint::save(&q, &spill)?;
+            println!("spilled packed experts to {spill} ({budget} B expert budget)");
+            let paged = mcsharp::quant::qcheckpoint::load_paged(&spill, budget)?;
+            // unlink now: the paged store's open descriptor keeps the
+            // records readable, and nothing leaks when the server exits
+            std::fs::remove_file(&spill).ok();
+            paged
+        }
+        (None, None) => compress(model, bits, steps)?.1,
     };
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
-    println!("serving {model} (PMQ {:.2}-bit) on 127.0.0.1:{port}", q.avg_model_bits());
+    println!(
+        "serving {model} (PMQ {:.2}-bit, {} expert store) on 127.0.0.1:{port}",
+        q.avg_model_bits(),
+        q.store.kind()
+    );
     let max = if max_requests == 0 { None } else { Some(max_requests) };
     if args.has("pjrt") {
+        if sc.expert_cache_mb.is_some() {
+            println!(
+                "note: --expert-cache-mb bounds the native store only; PJRT stages every \
+                 expert as device literals at startup and skips the paging pre-phase"
+            );
+        }
         let rt = mcsharp::runtime::Runtime::open_default()?;
         let be = PjrtBackend::new(&rt, &q, true)?;
         let engine =
             std::sync::Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
-        let n = server::serve(listener, &engine, 8, max)?;
-        println!("served {n} requests (pjrt backend)");
+        let n = server::serve_with(listener, &engine, &sc, max)?;
+        report_served(&engine.lock().unwrap(), n, "pjrt");
     } else {
         let be = NativeBackend::quant(&q);
         let engine =
             std::sync::Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
-        let n = server::serve(listener, &engine, 8, max)?;
-        println!("served {n} requests (native backend)");
+        let n = server::serve_with(listener, &engine, &sc, max)?;
+        report_served(&engine.lock().unwrap(), n, "native");
     }
     Ok(())
+}
+
+/// Shutdown line: request count + the expert-cache gauges when the
+/// engine served from a store.
+fn report_served(eng: &DecodeEngine, n: usize, backend: &str) {
+    if let Some(c) = eng.metrics.cache {
+        println!(
+            "served {n} requests ({backend} backend) | expert cache: resident {} peak {} hits {} misses {} evictions {} prefetch-hits {} hit-rate {:.3}",
+            human_bytes(c.resident_bytes),
+            human_bytes(c.peak_resident_bytes),
+            c.hits,
+            c.misses,
+            c.evictions,
+            c.prefetch_hits,
+            c.hit_rate()
+        );
+    } else {
+        println!("served {n} requests ({backend} backend)");
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -49,6 +49,15 @@ pub trait DispatchExecutor: Sync {
     fn expert_bytes(&self, _layer: usize, _id: ExpertId) -> u64 {
         0
     }
+
+    /// Pre-execute phase: called once per layer with the deduplicated
+    /// routed expert set, after gather and before the (possibly
+    /// scoped-thread) execute. Paging executors make the set resident
+    /// here in one batched pass — so storage I/O never sits inside the
+    /// parallel region — and may prefetch the next layer.
+    fn prepare(&self, _layer: usize, _routed: &[usize]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// [`DispatchExecutor`] over an [`ExpertProvider`](super::model::ExpertProvider)
@@ -66,6 +75,10 @@ impl DispatchExecutor for ProviderExec<'_> {
     ) -> Result<()> {
         self.0.expert_ffn_batch_acc(layer, id, x, weights, out);
         Ok(())
+    }
+
+    fn prepare(&self, layer: usize, routed: &[usize]) -> Result<()> {
+        self.0.ensure_resident(layer, routed)
     }
 }
 
@@ -204,6 +217,17 @@ pub fn dispatch_moe_layer(
             });
         }
     }
+    // -- pre-execute phase: batched residency for the routed set ---------
+    // (paging I/O happens here, on the caller's thread, never inside the
+    // scoped-thread execute; the store may also prefetch layer+1)
+    let routed: Vec<usize> = work
+        .iter()
+        .filter_map(|g| match g.id {
+            ExpertId::Routed(e) => Some(e),
+            ExpertId::Shared(_) => None,
+        })
+        .collect();
+    exec.prepare(layer, &routed)?;
     // -- execute phase: each expert once over its gathered block ---------
     let blocks = run_groups(layer, exec, normed, &work)?;
     // -- scatter phase: deterministic group order, weights pre-applied ---
@@ -388,6 +412,66 @@ mod tests {
         }
         let recorded: u64 = (0..4).map(|e| stats.counts[e]).sum();
         assert_eq!(recorded, out.kept, "stats record only kept experts");
+    }
+
+    /// The pre-execute phase must hand the full deduplicated routed set
+    /// to the executor before any expert runs (the paging contract).
+    #[test]
+    fn prepare_precedes_every_execute() {
+        struct Tracking<'a> {
+            inner: ProviderExec<'a>,
+            log: std::sync::Mutex<Vec<String>>,
+        }
+        impl DispatchExecutor for Tracking<'_> {
+            fn expert_batch_acc(
+                &self,
+                layer: usize,
+                id: ExpertId,
+                x: &Tensor2,
+                weights: &[f32],
+                out: &mut Tensor2,
+            ) -> Result<()> {
+                self.log.lock().unwrap().push(format!("exec {id:?}"));
+                self.inner.expert_batch_acc(layer, id, x, weights, out)
+            }
+            fn prepare(&self, _layer: usize, routed: &[usize]) -> Result<()> {
+                self.log.lock().unwrap().push(format!("prepare {routed:?}"));
+                Ok(())
+            }
+        }
+        let m = MoeModel::new(&cfg(1), 99);
+        let mut rng = Rng::new(100);
+        // 6x32 stays under PAR_MIN_VOLUME: sequential execute, stable log
+        let normed = Tensor2::randn(6, 32, &mut rng, 1.0);
+        let mut residual = Tensor2::zeros(6, 32);
+        let exec = Tracking { inner: ProviderExec(&m), log: std::sync::Mutex::new(Vec::new()) };
+        dispatch_moe_layer(
+            0,
+            &m.blocks[0].gate,
+            2,
+            1,
+            &normed,
+            &exec,
+            &mut DispatchHooks::default(),
+            &mut residual,
+        )
+        .unwrap();
+        let log = exec.log.into_inner().unwrap();
+        assert!(log[0].starts_with("prepare ["), "first event {:?}", log[0]);
+        assert!(log.iter().skip(1).all(|l| l.starts_with("exec")));
+        // routed set is deduplicated and ascending (group order)
+        let routed: Vec<usize> = log[0]
+            .trim_start_matches("prepare [")
+            .trim_end_matches(']')
+            .split(", ")
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().unwrap())
+            .collect();
+        let mut sorted = routed.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(routed, sorted);
+        assert!(!routed.is_empty());
     }
 
     #[test]

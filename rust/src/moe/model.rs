@@ -64,6 +64,15 @@ pub trait ExpertProvider: Sync {
             self.expert_ffn_acc(layer, id, x.row(i), weights[i], out.row_mut(i));
         }
     }
+
+    /// Pre-execute residency hook: the dispatcher announces one layer's
+    /// routed expert set after routing and before any expert executes.
+    /// Providers whose weights page in from storage (`QuantModel` over a
+    /// `PagedStore`) batch their I/O here, outside the parallel execute
+    /// region; fully resident providers keep the no-op default.
+    fn ensure_resident(&self, _layer: usize, _experts: &[usize]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Token-wise dynamic expert pruning (OTP learnable router, ODP rule,
@@ -163,6 +172,8 @@ impl MoeModel {
             for i in 0..t {
                 rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
             }
+            // in-memory providers cannot fail; a paged provider's
+            // residency I/O error is fatal to a non-Result forward
             dispatch_moe_layer(
                 l,
                 &block.gate,
@@ -173,7 +184,7 @@ impl MoeModel {
                 &mut hooks,
                 &mut x,
             )
-            .expect("provider dispatch is infallible");
+            .expect("expert dispatch failed (paging I/O?)");
         }
         let mut logits = Tensor2::zeros(t, self.cfg.vocab_size);
         for i in 0..t {

@@ -14,7 +14,7 @@
 //! the distillation targets are static and training is fast.
 
 use crate::config::OtpConfig;
-use crate::moe::model::ForwardOpts;
+use crate::moe::model::{ExpertProvider, ForwardOpts};
 use crate::quant::qmodel::QuantModel;
 use crate::util::rng::Rng;
 
@@ -62,11 +62,15 @@ fn collect_samples(
             xs.into_iter()
                 .map(|x| {
                     let r = crate::moe::gating::route(&x, &q.model.blocks[l].gate, cfg.top_k);
+                    // batch the residency I/O for the routed set (paged
+                    // stores fault once here, not per ffn_row_acc below)
+                    q.ensure_resident(l, &r.experts)
+                        .expect("expert residency failed during OTP sampling");
                     let mut weighted_outs = Vec::with_capacity(cfg.top_k);
                     let mut full = vec![0.0f32; cfg.d_model];
                     for (rank, &e) in r.experts.iter().enumerate() {
                         let mut out = vec![0.0f32; cfg.d_model];
-                        q.experts[l][e].ffn_row_acc(&x, r.weights[rank], &mut out);
+                        q.expert(l, e).ffn_row_acc(&x, r.weights[rank], &mut out);
                         for (f, &o) in full.iter_mut().zip(&out) {
                             *f += o;
                         }

@@ -12,9 +12,11 @@ pub mod qcheckpoint;
 pub mod qlinear;
 pub mod qmodel;
 pub mod rtn;
+pub mod store;
 
 pub use binary::BinaryMatrix;
 pub use gptq::GptqQuantizer;
 pub use packed::PackedMatrix;
 pub use qlinear::QuantLinear;
 pub use qmodel::{QuantExpert, QuantModel};
+pub use store::{CacheCounters, ExpertStore, PagedStore, ResidentStore};

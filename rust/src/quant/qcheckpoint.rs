@@ -5,17 +5,31 @@
 //! without re-running calibration or GPTQ — exactly the deployment story
 //! the paper's "pre-loading" phase describes.
 //!
-//! Layout: `MCSHARPQ1` magic, u64-length JSON header (model config + PMQ
-//! hyper-params + allocation), the dense base payload (same field order
-//! as `moe::checkpoint`, *without* the routed experts — those live only
-//! in packed form), then one tagged [`QuantLinear`] record per expert
-//! matrix.
+//! v1 layout (`MCSHARPQ1`): magic, u64-length JSON header (model config
+//! + PMQ hyper-params + allocation), the dense base payload (same field
+//! order as `moe::checkpoint`, *without* the routed experts — those live
+//! only in packed form), then one [`QuantExpert`] record (bits byte +
+//! three tagged [`QuantLinear`]s) per routed expert, streamed in layer
+//! -major order.
+//!
+//! v2 layout (`MCSHARPQ2`, written by [`save`]): same magic/header shape
+//! plus a per-expert **index table** — `n_layers * n_experts` entries of
+//! `(layer, expert, offset, len)` little-endian u64s — directly after
+//! the header and before the dense base, so each expert record is
+//! independently seekable. That is what lets [`load_paged`] serve a
+//! model whose packed experts never fully enter RAM (`quant::store`'s
+//! `PagedStore`): the deployment half of the paper's "pre-loading" story.
+//! The v2 header additionally carries `expert_nbytes` (per-expert packed
+//! sizes, so budget accounting never faults a record in) and, when
+//! calibrated, `importance` (PMQ significance, the eviction tie-break).
+//! v1 files stay readable via [`load`]; [`save_v1`] keeps a writer for
+//! them.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::PmqConfig;
+use crate::config::{ModelConfig, PmqConfig};
 use crate::moe::model::MoeModel;
 use crate::tensor::Tensor2;
 use crate::util::json::{self, Value};
@@ -24,8 +38,10 @@ use super::binary::BinaryMatrix;
 use super::packed::PackedMatrix;
 use super::qlinear::QuantLinear;
 use super::qmodel::{QuantExpert, QuantModel};
+use super::store::{PagedStore, RecordSource, ResidentStore};
 
-const MAGIC: &[u8; 9] = b"MCSHARPQ1";
+const MAGIC_V1: &[u8; 9] = b"MCSHARPQ1";
+const MAGIC_V2: &[u8; 9] = b"MCSHARPQ2";
 
 // ------------------------------------------------------------ primitives
 
@@ -220,15 +236,254 @@ fn pmq_from_json(v: &Value) -> Result<(PmqConfig, Vec<Vec<u8>>)> {
     Ok((pmq, allocation))
 }
 
-/// Save a quantized model (packed experts + 4-bit-round-tripped dense
-/// base) to `path`.
+/// One packed expert record: bits byte + wg/wu/wd [`QuantLinear`]s. The
+/// unit of the v2 index — independently decodable from its `(offset,
+/// len)` span.
+fn write_expert_record(w: &mut impl Write, e: &QuantExpert) -> Result<()> {
+    w.write_all(&[e.bits])?;
+    write_qlinear(w, &e.wg)?;
+    write_qlinear(w, &e.wu)?;
+    write_qlinear(w, &e.wd)?;
+    Ok(())
+}
+
+fn read_expert_record(r: &mut impl Read) -> Result<QuantExpert> {
+    let mut bits = [0u8; 1];
+    r.read_exact(&mut bits)?;
+    Ok(QuantExpert {
+        wg: read_qlinear(r)?,
+        wu: read_qlinear(r)?,
+        wd: read_qlinear(r)?,
+        bits: bits[0],
+    })
+}
+
+/// Dense base payload (routed experts excluded — they only exist packed).
+fn write_dense_base(w: &mut impl Write, m: &MoeModel) -> Result<()> {
+    write_f32s(w, &m.embed.data)?;
+    for b in &m.blocks {
+        write_f32s(w, &b.attn_norm)?;
+        for t in [&b.attn.wq, &b.attn.wk, &b.attn.wv, &b.attn.wo] {
+            write_f32s(w, &t.data)?;
+        }
+        write_f32s(w, &b.moe_norm)?;
+        write_f32s(w, &b.gate.data)?;
+        for e in &b.shared {
+            write_f32s(w, &e.wg.data)?;
+            write_f32s(w, &e.wu.data)?;
+            write_f32s(w, &e.wd.data)?;
+        }
+    }
+    write_f32s(w, &m.final_norm)?;
+    write_f32s(w, &m.lm_head.data)?;
+    Ok(())
+}
+
+fn read_t(r: &mut impl Read, rows: usize, cols: usize) -> Result<Tensor2> {
+    Ok(Tensor2::from_vec(rows, cols, read_f32s(r, rows * cols)?))
+}
+
+/// Dense base — routed experts come back as zero placeholders (the
+/// provider intercepts them at inference).
+fn read_dense_base(r: &mut impl Read, cfg: &ModelConfig) -> Result<MoeModel> {
+    let h = cfg.d_model;
+    let embed = read_t(r, cfg.vocab_size, h)?;
+    let mut blocks = Vec::new();
+    for _ in 0..cfg.n_layers {
+        let attn_norm = read_f32s(r, h)?;
+        let wq = read_t(r, h, h)?;
+        let wk = read_t(r, h, h)?;
+        let wv = read_t(r, h, h)?;
+        let wo = read_t(r, h, h)?;
+        let moe_norm = read_f32s(r, h)?;
+        let gate = read_t(r, h, cfg.n_experts)?;
+        let shared: Vec<crate::moe::Expert> = (0..cfg.n_shared_experts)
+            .map(|_| {
+                Ok(crate::moe::Expert {
+                    wg: read_t(r, h, cfg.d_ff)?,
+                    wu: read_t(r, h, cfg.d_ff)?,
+                    wd: read_t(r, cfg.d_ff, h)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let experts: Vec<crate::moe::Expert> = (0..cfg.n_experts)
+            .map(|_| crate::moe::Expert {
+                wg: Tensor2::zeros(h, cfg.d_ff),
+                wu: Tensor2::zeros(h, cfg.d_ff),
+                wd: Tensor2::zeros(cfg.d_ff, h),
+            })
+            .collect();
+        blocks.push(crate::moe::model::Block {
+            attn_norm,
+            attn: crate::moe::attention::Attention {
+                wq,
+                wk,
+                wv,
+                wo,
+                n_heads: cfg.n_heads,
+                rope_theta: cfg.rope_theta,
+            },
+            moe_norm,
+            gate,
+            experts,
+            shared,
+        });
+    }
+    let final_norm = read_f32s(r, h)?;
+    let lm_head = read_t(r, h, cfg.vocab_size)?;
+    Ok(MoeModel { cfg: cfg.clone(), embed, blocks, final_norm, lm_head })
+}
+
+/// Everything the JSON header carries (both versions; optional fields
+/// are v2-only).
+struct Preamble {
+    cfg: ModelConfig,
+    pmq: PmqConfig,
+    allocation: Vec<Vec<u8>>,
+    importance: Option<Vec<Vec<f64>>>,
+    expert_nbytes: Option<Vec<Vec<u64>>>,
+}
+
+fn read_preamble(r: &mut impl Read, path: &str) -> Result<Preamble> {
+    let hlen = read_u64(r)? as usize;
+    if hlen > (1 << 24) {
+        bail!("{path}: implausible header length {hlen}");
+    }
+    let header = read_bytes(r, hlen)?;
+    let v = Value::parse(std::str::from_utf8(&header)?)?;
+    let cfg = crate::config::ModelConfig::from_json(v.get("config")?)?;
+    let (pmq, allocation) = pmq_from_json(v.get("pmq")?)?;
+    if allocation.len() != cfg.n_layers
+        || allocation.iter().any(|row| row.len() != cfg.n_experts)
+    {
+        bail!("{path}: allocation shape does not match config");
+    }
+    let table_f64 = |v: &Value| -> Result<Vec<Vec<f64>>> {
+        v.as_arr()?
+            .iter()
+            .map(|row| row.as_arr()?.iter().map(|x| x.as_f64()).collect::<Result<Vec<f64>>>())
+            .collect()
+    };
+    let check_shape = |t: &[Vec<f64>], what: &str| -> Result<()> {
+        if t.len() != cfg.n_layers || t.iter().any(|row| row.len() != cfg.n_experts) {
+            bail!("{path}: {what} shape does not match config");
+        }
+        Ok(())
+    };
+    let importance = match v.opt("importance") {
+        Some(iv) => {
+            let t = table_f64(iv)?;
+            check_shape(&t, "importance")?;
+            Some(t)
+        }
+        None => None,
+    };
+    let expert_nbytes = match v.opt("expert_nbytes") {
+        Some(nv) => {
+            let t = table_f64(nv)?;
+            check_shape(&t, "expert_nbytes")?;
+            Some(t.into_iter().map(|row| row.into_iter().map(|x| x as u64).collect()).collect())
+        }
+        None => None,
+    };
+    Ok(Preamble { cfg, pmq, allocation, importance, expert_nbytes })
+}
+
+fn read_index(
+    r: &mut impl Read,
+    n_layers: usize,
+    n_experts: usize,
+    path: &str,
+) -> Result<Vec<Vec<(u64, u64)>>> {
+    let mut index = vec![vec![(0u64, 0u64); n_experts]; n_layers];
+    for l in 0..n_layers {
+        for e in 0..n_experts {
+            let (il, ie) = (read_u64(r)? as usize, read_u64(r)? as usize);
+            if (il, ie) != (l, e) {
+                bail!("{path}: index entry ({il},{ie}) out of order (expected ({l},{e}))");
+            }
+            index[l][e] = (read_u64(r)?, read_u64(r)?);
+        }
+    }
+    Ok(index)
+}
+
+/// Save a quantized model in the v2 (indexed, pageable) layout.
 pub fn save(q: &QuantModel, path: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let cfg = &q.model.cfg;
+    // header size table from store metadata — no record I/O, no cache
+    // churn when re-saving a paged model
+    let mut nbytes = vec![vec![0u64; cfg.n_experts]; cfg.n_layers];
+    for (l, row) in nbytes.iter_mut().enumerate() {
+        for (e, nb) in row.iter_mut().enumerate() {
+            *nb = q.store.expert_nbytes(l, e);
+        }
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC_V2)?;
+    let mut fields = vec![
+        ("config", config_json(&q.model)),
+        ("pmq", pmq_json(&q.pmq, &q.allocation)),
+        (
+            "expert_nbytes",
+            Value::Arr(
+                nbytes
+                    .iter()
+                    .map(|row| {
+                        Value::Arr(row.iter().map(|&b| json::num(b as f64)).collect())
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(imp) = &q.importance {
+        fields.push((
+            "importance",
+            Value::Arr(imp.iter().map(|row| json::arr_f64(row)).collect()),
+        ));
+    }
+    let header = json::obj(fields).to_json();
+    write_u64(&mut w, header.len() as u64)?;
+    w.write_all(header.as_bytes())?;
+    // index placeholder — backpatched once the record offsets are known
+    let index_pos = w.stream_position()?;
+    let placeholder = [0u8; 32];
+    for _ in 0..cfg.n_layers * cfg.n_experts {
+        w.write_all(&placeholder)?;
+    }
+    write_dense_base(&mut w, &q.model)?;
+    let mut index: Vec<(u64, u64)> = Vec::with_capacity(cfg.n_layers * cfg.n_experts);
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let off = w.stream_position()?;
+            write_expert_record(&mut w, &q.store.get(l, e)?)?;
+            index.push((off, w.stream_position()? - off));
+        }
+    }
+    w.seek(SeekFrom::Start(index_pos))?;
+    for (i, &(off, len)) in index.iter().enumerate() {
+        write_u64(&mut w, (i / cfg.n_experts) as u64)?;
+        write_u64(&mut w, (i % cfg.n_experts) as u64)?;
+        write_u64(&mut w, off)?;
+        write_u64(&mut w, len)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Save in the legacy v1 (index-less) layout — kept so the backward
+/// -compat path stays exercised and old tooling can still be fed.
+pub fn save_v1(q: &QuantModel, path: &str) -> Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
         std::fs::create_dir_all(dir)?;
     }
     let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
+    w.write_all(MAGIC_V1)?;
     let header = json::obj(vec![
         ("config", config_json(&q.model)),
         ("pmq", pmq_json(&q.pmq, &q.allocation)),
@@ -236,30 +491,11 @@ pub fn save(q: &QuantModel, path: &str) -> Result<()> {
     .to_json();
     write_u64(&mut w, header.len() as u64)?;
     w.write_all(header.as_bytes())?;
-    // dense base (routed experts excluded — they only exist packed)
-    write_f32s(&mut w, &q.model.embed.data)?;
-    for b in &q.model.blocks {
-        write_f32s(&mut w, &b.attn_norm)?;
-        for t in [&b.attn.wq, &b.attn.wk, &b.attn.wv, &b.attn.wo] {
-            write_f32s(&mut w, &t.data)?;
-        }
-        write_f32s(&mut w, &b.moe_norm)?;
-        write_f32s(&mut w, &b.gate.data)?;
-        for e in &b.shared {
-            write_f32s(&mut w, &e.wg.data)?;
-            write_f32s(&mut w, &e.wu.data)?;
-            write_f32s(&mut w, &e.wd.data)?;
-        }
-    }
-    write_f32s(&mut w, &q.model.final_norm)?;
-    write_f32s(&mut w, &q.model.lm_head.data)?;
-    // packed experts
-    for row in &q.experts {
-        for e in row {
-            w.write_all(&[e.bits])?;
-            write_qlinear(&mut w, &e.wg)?;
-            write_qlinear(&mut w, &e.wu)?;
-            write_qlinear(&mut w, &e.wd)?;
+    write_dense_base(&mut w, &q.model)?;
+    let cfg = &q.model.cfg;
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            write_expert_record(&mut w, &q.store.get(l, e)?)?;
         }
     }
     w.flush()?;
@@ -289,99 +525,120 @@ fn config_json(m: &MoeModel) -> Value {
     ])
 }
 
-/// Load a quantized model saved by [`save`].
+fn check_bits(bits: u8, allocation: &[Vec<u8>], l: usize, e: usize, path: &str) -> Result<()> {
+    if bits != allocation[l][e] && bits != 16 {
+        bail!("{path}: expert ({l},{e}) bits {bits} != allocation {}", allocation[l][e]);
+    }
+    Ok(())
+}
+
+/// Load a quantized model (v1 or v2) fully into RAM behind a
+/// [`ResidentStore`].
 pub fn load(path: &str) -> Result<QuantModel> {
     let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 9];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path}: not an MC# quantized checkpoint");
-    }
-    let hlen = read_u64(&mut r)? as usize;
-    if hlen > (1 << 24) {
-        bail!("{path}: implausible header length {hlen}");
-    }
-    let header = read_bytes(&mut r, hlen)?;
-    let v = Value::parse(std::str::from_utf8(&header)?)?;
-    let cfg = crate::config::ModelConfig::from_json(v.get("config")?)?;
-    let (pmq, allocation) = pmq_from_json(v.get("pmq")?)?;
-    if allocation.len() != cfg.n_layers
-        || allocation.iter().any(|row| row.len() != cfg.n_experts)
-    {
-        bail!("{path}: allocation shape does not match config");
-    }
-    // dense base — routed experts are placeholders (provider intercepts)
-    let h = cfg.d_model;
-    let read_t = |r: &mut BufReader<std::fs::File>, rows: usize, cols: usize| -> Result<Tensor2> {
-        Ok(Tensor2::from_vec(rows, cols, read_f32s(r, rows * cols)?))
+    let v2 = match &magic {
+        m if m == MAGIC_V2 => true,
+        m if m == MAGIC_V1 => false,
+        _ => bail!("{path}: not an MC# quantized checkpoint"),
     };
-    let embed = read_t(&mut r, cfg.vocab_size, h)?;
-    let mut blocks = Vec::new();
-    for _ in 0..cfg.n_layers {
-        let attn_norm = read_f32s(&mut r, h)?;
-        let wq = read_t(&mut r, h, h)?;
-        let wk = read_t(&mut r, h, h)?;
-        let wv = read_t(&mut r, h, h)?;
-        let wo = read_t(&mut r, h, h)?;
-        let moe_norm = read_f32s(&mut r, h)?;
-        let gate = read_t(&mut r, h, cfg.n_experts)?;
-        let shared: Vec<crate::moe::Expert> = (0..cfg.n_shared_experts)
-            .map(|_| {
-                Ok(crate::moe::Expert {
-                    wg: read_t(&mut r, h, cfg.d_ff)?,
-                    wu: read_t(&mut r, h, cfg.d_ff)?,
-                    wd: read_t(&mut r, cfg.d_ff, h)?,
-                })
-            })
-            .collect::<Result<_>>()?;
-        // routed experts: zero placeholders (never read at inference)
-        let experts: Vec<crate::moe::Expert> = (0..cfg.n_experts)
-            .map(|_| crate::moe::Expert {
-                wg: Tensor2::zeros(h, cfg.d_ff),
-                wu: Tensor2::zeros(h, cfg.d_ff),
-                wd: Tensor2::zeros(cfg.d_ff, h),
-            })
-            .collect();
-        blocks.push(crate::moe::model::Block {
-            attn_norm,
-            attn: crate::moe::attention::Attention {
-                wq,
-                wk,
-                wv,
-                wo,
-                n_heads: cfg.n_heads,
-                rope_theta: cfg.rope_theta,
-            },
-            moe_norm,
-            gate,
-            experts,
-            shared,
-        });
+    let p = read_preamble(&mut r, path)?;
+    if v2 {
+        // records are streamed in index order right after the dense base
+        read_index(&mut r, p.cfg.n_layers, p.cfg.n_experts, path)?;
     }
-    let final_norm = read_f32s(&mut r, h)?;
-    let lm_head = read_t(&mut r, h, cfg.vocab_size)?;
-    let model = MoeModel { cfg: cfg.clone(), embed, blocks, final_norm, lm_head };
-    // packed experts
-    let mut experts = Vec::with_capacity(cfg.n_layers);
-    for l in 0..cfg.n_layers {
-        let mut row = Vec::with_capacity(cfg.n_experts);
-        for e in 0..cfg.n_experts {
-            let mut bits = [0u8; 1];
-            r.read_exact(&mut bits)?;
-            if bits[0] != allocation[l][e] && bits[0] != 16 {
-                bail!("{path}: expert ({l},{e}) bits {} != allocation {}", bits[0], allocation[l][e]);
-            }
-            row.push(QuantExpert {
-                wg: read_qlinear(&mut r)?,
-                wu: read_qlinear(&mut r)?,
-                wd: read_qlinear(&mut r)?,
-                bits: bits[0],
-            });
+    let model = read_dense_base(&mut r, &p.cfg)?;
+    let mut experts = Vec::with_capacity(p.cfg.n_layers);
+    for l in 0..p.cfg.n_layers {
+        let mut row = Vec::with_capacity(p.cfg.n_experts);
+        for e in 0..p.cfg.n_experts {
+            let rec = read_expert_record(&mut r)?;
+            check_bits(rec.bits, &p.allocation, l, e, path)?;
+            row.push(rec);
         }
         experts.push(row);
     }
-    Ok(QuantModel { model, experts, allocation, pmq })
+    let mut q = QuantModel {
+        model,
+        store: std::sync::Arc::new(ResidentStore::new(experts)),
+        allocation: p.allocation,
+        pmq: p.pmq,
+        importance: None,
+    };
+    if let Some(imp) = p.importance {
+        q.set_importance(imp);
+    }
+    Ok(q)
+}
+
+/// [`RecordSource`] over a v2 checkpoint file: one seek + read per
+/// expert record, decoded from its indexed `(offset, len)` span.
+struct FileRecordSource {
+    file: std::fs::File,
+    index: Vec<Vec<(u64, u64)>>,
+    allocation: Vec<Vec<u8>>,
+    path: String,
+}
+
+impl RecordSource for FileRecordSource {
+    fn read_record(&mut self, layer: usize, expert: usize) -> Result<QuantExpert> {
+        let (off, len) = self.index[layer][expert];
+        // plausibility guard (mirrors the header-length guard): a corrupt
+        // index must produce an error, not an allocation abort
+        if len == 0 || len > (1 << 31) {
+            bail!("{}: implausible index entry ({off},{len}) for expert ({layer},{expert})", self.path);
+        }
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut buf = vec![0u8; len as usize];
+        self.file.read_exact(&mut buf)?;
+        let rec = read_expert_record(&mut &buf[..])?;
+        check_bits(rec.bits, &self.allocation, layer, expert, &self.path)?;
+        Ok(rec)
+    }
+}
+
+/// Open a v2 checkpoint with lazily paged experts under `budget_bytes`
+/// of packed-expert residency (the `--expert-cache-mb` serving path).
+/// Only the dense base is read eagerly; experts fault in on first route
+/// and are evicted LRU (PMQ-importance tie-break) to stay under budget.
+pub fn load_paged(path: &str, budget_bytes: u64) -> Result<QuantModel> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 9];
+    r.read_exact(&mut magic)?;
+    if &magic == MAGIC_V1 {
+        bail!("{path}: v1 checkpoint has no expert index — re-save as v2 to enable paging");
+    }
+    if &magic != MAGIC_V2 {
+        bail!("{path}: not an MC# quantized checkpoint");
+    }
+    let p = read_preamble(&mut r, path)?;
+    let index = read_index(&mut r, p.cfg.n_layers, p.cfg.n_experts, path)?;
+    let model = read_dense_base(&mut r, &p.cfg)?;
+    drop(r);
+    let Some(nbytes) = p.expert_nbytes else {
+        bail!("{path}: v2 header missing expert_nbytes");
+    };
+    let importance_tbl = p
+        .importance
+        .clone()
+        .unwrap_or_else(|| super::store::bits_as_importance(&p.allocation));
+    let source = FileRecordSource {
+        file: std::fs::File::open(path).with_context(|| format!("reopening {path}"))?,
+        index,
+        allocation: p.allocation.clone(),
+        path: path.to_string(),
+    };
+    let store = PagedStore::new(Box::new(source), nbytes, importance_tbl, budget_bytes);
+    Ok(QuantModel {
+        model,
+        store: std::sync::Arc::new(store),
+        allocation: p.allocation,
+        pmq: p.pmq,
+        importance: p.importance,
+    })
 }
 
 #[cfg(test)]
@@ -470,6 +727,57 @@ mod tests {
             .model
             .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q2), ..Default::default() });
         assert_eq!(a.data, b.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_layout_still_loads() {
+        let base = MoeModel::new(&cfg(), 54);
+        let alloc = vec![vec![2u8, 1, 3, 2], vec![3, 2, 1, 2]];
+        let q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+        let path = tmppath("v1");
+        save_v1(&q, &path).unwrap();
+        let q2 = load(&path).unwrap();
+        assert_eq!(q2.allocation, alloc);
+        let toks: Vec<u16> = vec![3, 11, 27, 40, 9];
+        let a = q
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q), ..Default::default() });
+        let b = q2
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&q2), ..Default::default() });
+        assert_eq!(a.data, b.data, "v1 read path diverged");
+        // but v1 cannot page (no index)
+        assert!(load_paged(&path, 1 << 20).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_paged_load_matches_resident() {
+        let base = MoeModel::new(&cfg(), 55);
+        let alloc = vec![vec![2u8; 4]; 2];
+        let mut q =
+            QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+        q.set_importance(vec![vec![0.1, 0.4, 0.2, 0.3], vec![0.3, 0.1, 0.2, 0.4]]);
+        let path = tmppath("paged");
+        save(&q, &path).unwrap();
+        let resident = load(&path).unwrap();
+        assert_eq!(resident.importance, q.importance, "importance must persist");
+        // budget below total packed bytes forces paging + eviction
+        let budget = q.store.total_nbytes() * 3 / 5;
+        let paged = load_paged(&path, budget).unwrap();
+        assert_eq!(paged.store.kind(), "paged");
+        assert_eq!(paged.store.total_nbytes(), q.store.total_nbytes());
+        let toks: Vec<u16> = vec![2, 19, 33, 48, 7, 21];
+        let mut opts_r = ForwardOpts { provider: Some(&resident), ..Default::default() };
+        let a = resident.model.forward_opts(&toks, &mut opts_r);
+        let b = paged
+            .model
+            .forward_opts(&toks, &mut ForwardOpts { provider: Some(&paged), ..Default::default() });
+        assert_eq!(a.data, b.data, "paged experts diverged from resident");
+        let c = paged.store.counters();
+        assert!(c.misses > 0, "tiny budget must page");
+        assert!(c.peak_resident_bytes <= budget, "budget violated: {c:?}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -12,6 +12,8 @@
 //! duplicating the transformer plumbing; the serving decode path in
 //! `backend` uses the same `QuantLinear`s.
 
+use std::sync::Arc;
+
 use crate::config::PmqConfig;
 use crate::moe::model::{ExpertId, ExpertProvider, MoeModel};
 use crate::tensor::{silu, Tensor2};
@@ -19,6 +21,7 @@ use crate::tensor::{silu, Tensor2};
 use super::gptq::GptqQuantizer;
 use super::qlinear::QuantLinear;
 use super::rtn;
+use super::store::{ExpertStore, ResidentStore};
 
 /// One quantized SwiGLU expert.
 #[derive(Clone, Debug)]
@@ -74,17 +77,23 @@ impl QuantExpert {
 }
 
 /// A fully quantized model: dense parts 4-bit-round-tripped in the base
-/// `MoeModel`, routed experts packed per the allocation.
+/// `MoeModel`, routed experts packed per the allocation and owned by an
+/// [`ExpertStore`] (all-resident by default; paged from a v2 qcheckpoint
+/// under a byte budget — see `quant::store`).
 pub struct QuantModel {
     /// Base model with attention/gate/shared/embed weights replaced by
     /// their 4-bit RTN round-trips. Its routed experts are *unused* at
     /// inference (the provider intercepts them).
     pub model: MoeModel,
-    /// `[layer][expert]` quantized experts.
-    pub experts: Vec<Vec<QuantExpert>>,
+    /// Owner of the `[layer][expert]` packed experts.
+    pub store: Arc<dyn ExpertStore>,
     /// Per-(layer, expert) nominal bits of the allocation.
     pub allocation: Vec<Vec<u8>>,
     pub pmq: PmqConfig,
+    /// Calibrated PMQ significance per (layer, expert), when available —
+    /// persisted in v2 checkpoints and used as the paged store's eviction
+    /// tie-break. `None` falls back to the allocation bit-widths.
+    pub importance: Option<Vec<Vec<f64>>>,
 }
 
 /// How expert weights get quantized: plain RTN, GPTQ with per-layer
@@ -136,10 +145,26 @@ impl QuantModel {
         }
         QuantModel {
             model,
-            experts,
+            store: Arc::new(ResidentStore::new(experts)),
             allocation: allocation.to_vec(),
             pmq: pmq.clone(),
+            importance: None,
         }
+    }
+
+    /// Handle to packed expert `(layer, e)`. Panics on a paging failure —
+    /// the recoverable error path is the dispatcher's pre-execute
+    /// `ensure_resident`, after which this is a cache hit.
+    pub fn expert(&self, layer: usize, e: usize) -> Arc<QuantExpert> {
+        self.store.get(layer, e).expect("expert store read failed")
+    }
+
+    /// Attach calibrated PMQ significance (φ^α·w^β per (layer, expert)):
+    /// persisted by v2 checkpoints, consumed by the paged store's
+    /// eviction tie-break.
+    pub fn set_importance(&mut self, importance: Vec<Vec<f64>>) {
+        self.store.set_importance(&importance);
+        self.importance = Some(importance);
     }
 
     /// Nominal average expert bit-width of the allocation (the paper's
@@ -165,7 +190,7 @@ impl QuantModel {
     /// at 16-bit) — Table 5's "Params (GB→MB here)".
     pub fn nbytes(&self) -> u64 {
         let cfg = &self.model.cfg;
-        let expert_bytes: u64 = self.experts.iter().flatten().map(|e| e.nbytes()).sum();
+        let expert_bytes: u64 = self.store.total_nbytes();
         let h = cfg.d_model as u64;
         let attn = cfg.n_layers as u64 * (4 * h * h) / 2; // 4-bit
         let gate = cfg.n_layers as u64 * h * cfg.n_experts as u64 / 2;
@@ -181,13 +206,8 @@ impl QuantModel {
     /// experts when no stats are given).
     pub fn activated_bytes_per_token(&self, keep_ratio: f64) -> u64 {
         let cfg = &self.model.cfg;
-        let mean_expert_bytes: f64 = self
-            .experts
-            .iter()
-            .flatten()
-            .map(|e| e.nbytes() as f64)
-            .sum::<f64>()
-            / (cfg.n_layers * cfg.n_experts) as f64;
+        let mean_expert_bytes: f64 =
+            self.store.total_nbytes() as f64 / (cfg.n_layers * cfg.n_experts) as f64;
         let h = cfg.d_model as u64;
         let per_layer_static = (4 * h * h) / 2
             + h * cfg.n_experts as u64 / 2
@@ -202,10 +222,17 @@ impl QuantModel {
 impl ExpertProvider for QuantModel {
     fn expert_ffn_acc(&self, layer: usize, id: ExpertId, x: &[f32], w: f32, out: &mut [f32]) {
         match id {
-            ExpertId::Routed(e) => self.experts[layer][e].ffn_row_acc(x, w, out),
+            ExpertId::Routed(e) => self.expert(layer, e).ffn_row_acc(x, w, out),
             // shared experts already 4-bit round-tripped in `model`
             ExpertId::Shared(s) => self.model.blocks[layer].shared[s].ffn_row_acc(x, w, out),
         }
+    }
+
+    /// Dispatcher pre-execute: batch the paging I/O for this layer's
+    /// routed set (and let the store prefetch the next layer) before the
+    /// scoped-thread execute region starts.
+    fn ensure_resident(&self, layer: usize, experts: &[usize]) -> anyhow::Result<()> {
+        self.store.ensure_resident(layer, experts)
     }
 
     /// The expert-grouped fast path: one `ffn_batch_acc` per token group
@@ -230,7 +257,7 @@ impl ExpertProvider for QuantModel {
         };
         match id {
             ExpertId::Routed(e) => {
-                let qe = &self.experts[layer][e];
+                let qe = self.expert(layer, e);
                 if weights.iter().all(|&w| w == 1.0) {
                     qe.ffn_batch_acc(x, out);
                 } else {
@@ -420,9 +447,10 @@ mod tests {
             .collect();
         let q = QuantModel::quantize(&base, &alloc, &pmq, &QuantMethod::Awq(&acts));
         // 2/3-bit experts must be Scaled, 1-bit ones Binary
-        for (l, row) in q.experts.iter().enumerate() {
-            for (e, qe) in row.iter().enumerate() {
-                match alloc[l][e] {
+        for (l, row) in alloc.iter().enumerate() {
+            for (e, &bits) in row.iter().enumerate() {
+                let qe = q.expert(l, e);
+                match bits {
                     1 => assert!(matches!(qe.wg, QuantLinear::Binary(_))),
                     _ => assert!(matches!(qe.wg, QuantLinear::Scaled { .. })),
                 }

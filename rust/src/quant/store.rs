@@ -1,0 +1,596 @@
+//! Expert-weight residency: who owns the packed experts, and how many of
+//! them live in RAM at once.
+//!
+//! MC#'s deployment premise (paper §1, §3.2 "pre-loading") is that expert
+//! weights dominate MoE memory, so the serving stack must not assume
+//! every packed expert is resident. [`ExpertStore`] is the single trait
+//! every consumer — the quantized provider, the serving backends, the
+//! checkpoint writer, OTP distillation — goes through:
+//!
+//! * [`ResidentStore`] — all experts in RAM (the historical behaviour,
+//!   still the default for `compress`/`eval` where the model was just
+//!   quantized in memory anyway);
+//! * [`PagedStore`] — experts load lazily from a seekable record source
+//!   (the v2 qcheckpoint's per-expert index) on first touch and are
+//!   evicted under a byte budget: least-recently-used first, ties broken
+//!   by PMQ significance (`pmq::importance`) so high-significance experts
+//!   are evicted last. The dispatcher's pre-execute phase
+//!   (`moe::dispatch`) batches the paging I/O for a layer's routed expert
+//!   set *before* the scoped-thread execute, and the store prefetches the
+//!   next layer's hottest experts (by observed `moe::stats` routing
+//!   frequency) into whatever budget remains.
+//!
+//! Handles are `Arc<QuantExpert>`: eviction drops the store's reference,
+//! in-flight executions keep theirs, so no lock is held while an expert
+//! runs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::moe::stats::RoutingStats;
+
+use super::qmodel::QuantExpert;
+
+/// Monotonic cache gauges, cheap to copy into serving metrics each step.
+///
+/// The counted access unit is one **residency lookup per routed expert**:
+/// the dispatcher's `ensure_resident` batch on a paged store, or the
+/// execute-phase handle fetch on a resident store. The execute-phase
+/// `get` that follows a successful `ensure_resident` is the same logical
+/// access and is deliberately *not* re-counted as a hit (it would put a
+/// structural ~0.5 floor under the hit rate); it only counts when it has
+/// to fault a record in (a miss the batch phase did not cover).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Packed bytes currently resident.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` (the budget-honored proof).
+    pub peak_resident_bytes: u64,
+    /// Residency lookups served without touching the record source.
+    pub hits: u64,
+    /// Record faults (every read of the record source except prefetch).
+    pub misses: u64,
+    /// Experts dropped to fit the budget.
+    pub evictions: u64,
+    /// Hits on experts that were brought in speculatively.
+    pub prefetch_hits: u64,
+}
+
+impl CacheCounters {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// Allocation bit-widths as the eviction-priority fallback: PMQ gives
+/// important experts more bits, so bits are a coarse built-in proxy when
+/// no calibrated significance was persisted with the model.
+pub fn bits_as_importance(allocation: &[Vec<u8>]) -> Vec<Vec<f64>> {
+    allocation.iter().map(|row| row.iter().map(|&b| b as f64).collect()).collect()
+}
+
+/// Owner of the packed routed-expert weights.
+///
+/// `get` may do I/O on a miss; `ensure_resident` batches that I/O for a
+/// whole routed set so it never sits inside the dispatcher's parallel
+/// execute region. `expert_nbytes` must not fault anything in — serving
+/// metrics call it per executed group.
+pub trait ExpertStore: Send + Sync {
+    /// Handle to expert `(layer, expert)`, loading it on a miss.
+    fn get(&self, layer: usize, expert: usize) -> Result<Arc<QuantExpert>>;
+
+    /// Make a layer's routed expert set resident in one batched pass and
+    /// feed the store's routing history (which drives next-layer
+    /// prefetch). No-op for fully resident stores.
+    fn ensure_resident(&self, layer: usize, experts: &[usize]) -> Result<()> {
+        let _ = (layer, experts);
+        Ok(())
+    }
+
+    /// Packed bytes of one expert, from metadata (never faults it in).
+    fn expert_nbytes(&self, layer: usize, expert: usize) -> u64;
+
+    /// Σ packed bytes over every expert the store owns.
+    fn total_nbytes(&self) -> u64;
+
+    /// Current cache gauges (all-resident stores report a full cache).
+    fn counters(&self) -> CacheCounters;
+
+    /// Residency budget, if this store enforces one.
+    fn budget_bytes(&self) -> Option<u64> {
+        None
+    }
+
+    /// Per-(layer, expert) PMQ significance used as the eviction
+    /// tie-break. All-resident stores may ignore it.
+    fn set_importance(&self, importance: &[Vec<f64>]);
+
+    /// Drop every cached record and zero the gauges. For one-shot bulk
+    /// readers that stream the whole store without serving from it
+    /// (PJRT literal staging): without the reset, up to a full budget of
+    /// records nothing will read again stays resident, and the staging
+    /// misses/evictions masquerade as serving-time cache behaviour.
+    /// No-op for all-resident stores.
+    fn clear_cache(&self) {}
+
+    fn kind(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------- resident
+
+/// Every expert in RAM — the pre-paging behaviour behind the same trait.
+pub struct ResidentStore {
+    experts: Vec<Vec<Arc<QuantExpert>>>,
+    nbytes: Vec<Vec<u64>>,
+    total: u64,
+    /// Every access is a hit by construction; counted so the serving
+    /// hit-rate gauge reads 1.000 for resident stores (EXPERIMENTS.md
+    /// §Memory's resident rows) instead of a misleading 0.
+    hits: std::sync::atomic::AtomicU64,
+}
+
+impl ResidentStore {
+    pub fn new(experts: Vec<Vec<QuantExpert>>) -> ResidentStore {
+        let nbytes: Vec<Vec<u64>> =
+            experts.iter().map(|row| row.iter().map(|e| e.nbytes()).collect()).collect();
+        let total = nbytes.iter().flatten().sum();
+        ResidentStore {
+            experts: experts
+                .into_iter()
+                .map(|row| row.into_iter().map(Arc::new).collect())
+                .collect(),
+            nbytes,
+            total,
+            hits: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+}
+
+impl ExpertStore for ResidentStore {
+    fn get(&self, layer: usize, expert: usize) -> Result<Arc<QuantExpert>> {
+        self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Arc::clone(&self.experts[layer][expert]))
+    }
+
+    fn expert_nbytes(&self, layer: usize, expert: usize) -> u64 {
+        self.nbytes[layer][expert]
+    }
+
+    fn total_nbytes(&self) -> u64 {
+        self.total
+    }
+
+    fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            resident_bytes: self.total,
+            peak_resident_bytes: self.total,
+            hits: self.hits.load(std::sync::atomic::Ordering::Relaxed),
+            ..Default::default()
+        }
+    }
+
+    fn set_importance(&self, _importance: &[Vec<f64>]) {}
+
+    fn kind(&self) -> &'static str {
+        "resident"
+    }
+}
+
+// ------------------------------------------------------------------ paged
+
+/// Seekable source of individual expert records (the v2 qcheckpoint's
+/// index, or an in-memory table in tests).
+pub trait RecordSource: Send {
+    fn read_record(&mut self, layer: usize, expert: usize) -> Result<QuantExpert>;
+}
+
+struct CacheEntry {
+    expert: Arc<QuantExpert>,
+    /// Tick of the last touch; `ensure_resident` stamps a whole batch
+    /// with one tick, which is where the importance tie-break bites.
+    last_use: u64,
+    /// Loaded speculatively and not yet demanded.
+    prefetched: bool,
+}
+
+struct PagedInner {
+    source: Box<dyn RecordSource>,
+    cache: HashMap<(usize, usize), CacheEntry>,
+    tick: u64,
+    counters: CacheCounters,
+    /// Observed serve-time routing history — the prefetch signal
+    /// (activation frequency per (layer, expert), §3.2.2's φ reused as a
+    /// deployment heuristic).
+    route: RoutingStats,
+    /// PMQ significance; falls back to allocation bit-widths when no
+    /// calibration importance was persisted.
+    importance: Vec<Vec<f64>>,
+}
+
+/// Budgeted lazy store: LRU eviction, PMQ-importance tie-break,
+/// frequency-driven next-layer prefetch.
+pub struct PagedStore {
+    n_layers: usize,
+    n_experts: usize,
+    nbytes: Vec<Vec<u64>>,
+    budget: u64,
+    /// Max experts speculatively loaded per `ensure_resident` call.
+    prefetch_width: usize,
+    inner: Mutex<PagedInner>,
+}
+
+impl PagedStore {
+    /// `nbytes` is the per-(layer, expert) packed size table (from the v2
+    /// header) — budget accounting and metrics read it without faulting
+    /// records in. `importance` defaults to the allocation bit-widths
+    /// until [`ExpertStore::set_importance`] provides calibrated values.
+    pub fn new(
+        source: Box<dyn RecordSource>,
+        nbytes: Vec<Vec<u64>>,
+        importance: Vec<Vec<f64>>,
+        budget_bytes: u64,
+    ) -> PagedStore {
+        let n_layers = nbytes.len();
+        let n_experts = nbytes.first().map(|r| r.len()).unwrap_or(0);
+        PagedStore {
+            n_layers,
+            n_experts,
+            nbytes,
+            budget: budget_bytes,
+            prefetch_width: 4,
+            inner: Mutex::new(PagedInner {
+                source,
+                cache: HashMap::new(),
+                tick: 0,
+                counters: CacheCounters::default(),
+                route: RoutingStats::new(n_layers, n_experts),
+                importance,
+            }),
+        }
+    }
+
+    fn load_locked(
+        &self,
+        inner: &mut PagedInner,
+        layer: usize,
+        expert: usize,
+        tick: u64,
+        prefetched: bool,
+    ) -> Result<Arc<QuantExpert>> {
+        let rec = Arc::new(inner.source.read_record(layer, expert)?);
+        inner.counters.resident_bytes += self.nbytes[layer][expert];
+        inner.counters.peak_resident_bytes =
+            inner.counters.peak_resident_bytes.max(inner.counters.resident_bytes);
+        inner.cache.insert(
+            (layer, expert),
+            CacheEntry { expert: Arc::clone(&rec), last_use: tick, prefetched },
+        );
+        Ok(rec)
+    }
+
+    /// Free room for `incoming` bytes BEFORE the record is read, so
+    /// resident bytes never transiently exceed the budget. `protect`
+    /// entries (the working set about to execute) are never dropped — a
+    /// working set larger than the budget overflows visibly (peak
+    /// counter) instead of thrashing the experts mid-dispatch.
+    fn make_room_locked(&self, inner: &mut PagedInner, incoming: u64, protect: &[(usize, usize)]) {
+        while inner.counters.resident_bytes + incoming > self.budget {
+            let victim = inner
+                .cache
+                .iter()
+                .filter(|(k, _)| !protect.contains(*k))
+                .min_by(|(ka, a), (kb, b)| {
+                    let ia = inner.importance[ka.0][ka.1];
+                    let ib = inner.importance[kb.0][kb.1];
+                    // oldest first; among equals, least significant first
+                    a.last_use
+                        .cmp(&b.last_use)
+                        .then(ia.partial_cmp(&ib).unwrap_or(std::cmp::Ordering::Equal))
+                        .then(ka.cmp(kb))
+                })
+                .map(|(k, _)| *k);
+            let Some(k) = victim else { break };
+            inner.cache.remove(&k);
+            inner.counters.resident_bytes -= self.nbytes[k.0][k.1];
+            inner.counters.evictions += 1;
+        }
+    }
+
+    /// Speculatively load the next layer's historically hottest experts
+    /// into spare budget (never evicts anything to make room). Errors
+    /// stay internal: a record the demand path never asked for must not
+    /// fail the dispatch, so the caller drops this Result.
+    fn prefetch_locked(&self, inner: &mut PagedInner, layer: usize, tick: u64) -> Result<()> {
+        let next = layer + 1;
+        if next >= self.n_layers {
+            return Ok(());
+        }
+        let mut ranked: Vec<(u64, usize)> = (0..self.n_experts)
+            .map(|e| (inner.route.counts[next * self.n_experts + e], e))
+            .filter(|&(c, _)| c > 0)
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut loaded = 0usize;
+        for (_, e) in ranked {
+            if loaded >= self.prefetch_width {
+                break;
+            }
+            if inner.cache.contains_key(&(next, e)) {
+                continue;
+            }
+            if inner.counters.resident_bytes + self.nbytes[next][e] > self.budget {
+                continue;
+            }
+            self.load_locked(inner, next, e, tick, true)?;
+            loaded += 1;
+        }
+        Ok(())
+    }
+}
+
+impl ExpertStore for PagedStore {
+    fn get(&self, layer: usize, expert: usize) -> Result<Arc<QuantExpert>> {
+        if layer >= self.n_layers || expert >= self.n_experts {
+            bail!("expert ({layer},{expert}) out of range");
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.cache.get_mut(&(layer, expert)) {
+            entry.last_use = tick;
+            if entry.prefetched {
+                entry.prefetched = false;
+                inner.counters.prefetch_hits += 1;
+            }
+            // no hits += 1: when this follows ensure_resident it is the
+            // same logical access the batch phase already counted
+            return Ok(Arc::clone(&entry.expert));
+        }
+        inner.counters.misses += 1;
+        self.make_room_locked(inner, self.nbytes[layer][expert], &[]);
+        self.load_locked(inner, layer, expert, tick, false)
+    }
+
+    fn ensure_resident(&self, layer: usize, experts: &[usize]) -> Result<()> {
+        if experts.is_empty() {
+            return Ok(());
+        }
+        // validate before any state changes (history, tick, loads)
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (n_layers {})", self.n_layers);
+        }
+        if let Some(&e) = experts.iter().find(|&&e| e >= self.n_experts) {
+            bail!("expert ({layer},{e}) out of range (n_experts {})", self.n_experts);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        inner.tick += 1;
+        let tick = inner.tick;
+        // routing history: one observation unit per batched ensure call
+        inner.route.bump_tokens();
+        for &e in experts {
+            inner.route.record(layer, e, 1.0);
+        }
+        let protect: Vec<(usize, usize)> = experts.iter().map(|&e| (layer, e)).collect();
+        for &e in experts {
+            if let Some(entry) = inner.cache.get_mut(&(layer, e)) {
+                entry.last_use = tick;
+                if entry.prefetched {
+                    entry.prefetched = false;
+                    inner.counters.prefetch_hits += 1;
+                }
+                inner.counters.hits += 1;
+            } else {
+                inner.counters.misses += 1;
+                self.make_room_locked(inner, self.nbytes[layer][e], &protect);
+                self.load_locked(inner, layer, e, tick, false)?;
+            }
+        }
+        // speculative: a failed prefetch read is not a dispatch error
+        // (the demanded set is already resident at this point)
+        let _ = self.prefetch_locked(inner, layer, tick);
+        Ok(())
+    }
+
+    fn expert_nbytes(&self, layer: usize, expert: usize) -> u64 {
+        self.nbytes[layer][expert]
+    }
+
+    fn total_nbytes(&self) -> u64 {
+        self.nbytes.iter().flatten().sum()
+    }
+
+    fn counters(&self) -> CacheCounters {
+        self.inner.lock().unwrap().counters
+    }
+
+    fn budget_bytes(&self) -> Option<u64> {
+        Some(self.budget)
+    }
+
+    fn set_importance(&self, importance: &[Vec<f64>]) {
+        self.inner.lock().unwrap().importance = importance.to_vec();
+    }
+
+    fn clear_cache(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.cache.clear();
+        inner.counters = CacheCounters::default();
+    }
+
+    fn kind(&self) -> &'static str {
+        "paged"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qlinear::QuantLinear;
+    use crate::tensor::Tensor2;
+
+    /// In-memory record source (no file needed).
+    struct MemSource {
+        experts: Vec<Vec<QuantExpert>>,
+    }
+
+    impl RecordSource for MemSource {
+        fn read_record(&mut self, layer: usize, expert: usize) -> Result<QuantExpert> {
+            Ok(self.experts[layer][expert].clone())
+        }
+    }
+
+    fn tiny_expert(seed: f32) -> QuantExpert {
+        // fp QuantLinears keep the test independent of packing details;
+        // nbytes = 2 per value (fp counted at fp16)
+        let t = |v: f32| Tensor2::from_vec(2, 2, vec![v; 4]);
+        QuantExpert {
+            wg: QuantLinear::Fp(t(seed)),
+            wu: QuantLinear::Fp(t(seed + 0.1)),
+            wd: QuantLinear::Fp(t(seed + 0.2)),
+            bits: 16,
+        }
+    }
+
+    /// 2 layers x 3 experts, 24 bytes each (3 mats x 4 vals x 2 B).
+    fn store_with_budget(budget: u64) -> PagedStore {
+        let experts: Vec<Vec<QuantExpert>> = (0..2)
+            .map(|l| (0..3).map(|e| tiny_expert((l * 3 + e) as f32)).collect())
+            .collect();
+        let nbytes: Vec<Vec<u64>> =
+            experts.iter().map(|r| r.iter().map(|e| e.nbytes()).collect()).collect();
+        assert_eq!(nbytes[0][0], 24);
+        let importance = vec![vec![1.0, 2.0, 3.0]; 2];
+        let src = MemSource { experts };
+        PagedStore::new(Box::new(src), nbytes, importance, budget)
+    }
+
+    #[test]
+    fn resident_store_serves_and_accounts() {
+        let experts: Vec<Vec<QuantExpert>> =
+            (0..2).map(|l| (0..3).map(|e| tiny_expert((l * 3 + e) as f32)).collect()).collect();
+        let s = ResidentStore::new(experts);
+        assert_eq!(s.total_nbytes(), 2 * 3 * 24);
+        assert_eq!(s.expert_nbytes(1, 2), 24);
+        let e = s.get(1, 2).unwrap();
+        assert_eq!(e.bits, 16);
+        let c = s.counters();
+        assert_eq!(c.resident_bytes, s.total_nbytes());
+        assert_eq!(c.misses, 0);
+    }
+
+    #[test]
+    fn paged_hits_misses_and_budget() {
+        let s = store_with_budget(48); // room for 2 of 6 experts
+        s.ensure_resident(0, &[0]).unwrap(); // first fault
+        s.ensure_resident(0, &[0]).unwrap(); // still resident
+        let c = s.counters();
+        assert_eq!((c.hits, c.misses), (1, 1));
+        // the execute-phase get after ensure is the same logical access:
+        // neither a hit nor a miss is recorded
+        let a = s.get(0, 0).unwrap();
+        assert_eq!(a.bits, 16);
+        assert_eq!(s.counters(), c);
+        s.get(0, 1).unwrap(); // direct fault: miss
+        s.get(0, 2).unwrap(); // miss; evicts the LRU (0,0)
+        let c = s.counters();
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.misses, 3);
+        assert!(c.resident_bytes <= 48);
+        assert!(c.peak_resident_bytes <= 48);
+        s.ensure_resident(0, &[0]).unwrap(); // faults again after eviction
+        assert_eq!(s.counters().misses, 4);
+    }
+
+    #[test]
+    fn clear_cache_resets_residency_and_gauges() {
+        let s = store_with_budget(72);
+        s.ensure_resident(0, &[0, 1]).unwrap();
+        assert!(s.counters().resident_bytes > 0);
+        s.clear_cache();
+        assert_eq!(s.counters(), CacheCounters::default());
+        assert!(s.inner.lock().unwrap().cache.is_empty());
+        // still serviceable after the reset
+        s.ensure_resident(0, &[0]).unwrap();
+        assert_eq!(s.counters().misses, 1);
+    }
+
+    #[test]
+    fn out_of_range_requests_error_without_polluting_history() {
+        let s = store_with_budget(48);
+        assert!(s.ensure_resident(0, &[7]).is_err());
+        assert!(s.ensure_resident(9, &[0]).is_err());
+        assert!(s.get(0, 7).is_err());
+        let inner = s.inner.lock().unwrap();
+        assert_eq!(inner.route.tokens, 0, "failed ensure must not record history");
+        assert_eq!(inner.counters, CacheCounters::default());
+    }
+
+    #[test]
+    fn eviction_prefers_low_importance_on_tied_recency() {
+        let s = store_with_budget(48);
+        // one batch => one shared tick for experts 1 and 2
+        s.ensure_resident(0, &[1, 2]).unwrap();
+        // loading (0,0) must evict the tied-recency entry with the LOWER
+        // importance: expert 1 (imp 2.0) goes before expert 2 (imp 3.0)
+        s.get(0, 0).unwrap();
+        assert!(s.inner.lock().unwrap().cache.contains_key(&(0, 2)));
+        assert!(!s.inner.lock().unwrap().cache.contains_key(&(0, 1)));
+    }
+
+    #[test]
+    fn ensure_resident_protects_working_set_over_budget() {
+        let s = store_with_budget(24); // budget < 2-expert working set
+        s.ensure_resident(0, &[0, 1]).unwrap();
+        // both stay resident for the dispatch (overflow is visible in the
+        // peak, not destructive)
+        let inner = s.inner.lock().unwrap();
+        assert!(inner.cache.contains_key(&(0, 0)));
+        assert!(inner.cache.contains_key(&(0, 1)));
+        assert_eq!(inner.counters.peak_resident_bytes, 48);
+    }
+
+    #[test]
+    fn prefetch_uses_routing_history_and_counts_hits() {
+        let s = store_with_budget(72);
+        // build history: layer-1 expert 2 was routed once
+        s.ensure_resident(1, &[2]).unwrap();
+        // model it aging out of the cache (white-box: drop the entry)
+        {
+            let mut inner = s.inner.lock().unwrap();
+            inner.cache.remove(&(1, 2)).unwrap();
+            inner.counters.resident_bytes -= 24;
+        }
+        // an ensure on layer 0 demands (0,0) and should prefetch (1,2)
+        // into the spare budget
+        s.ensure_resident(0, &[0]).unwrap();
+        {
+            let inner = s.inner.lock().unwrap();
+            let entry = inner.cache.get(&(1, 2)).expect("(1,2) prefetched");
+            assert!(entry.prefetched);
+        }
+        let before = s.counters();
+        s.ensure_resident(1, &[2]).unwrap();
+        let after = s.counters();
+        assert_eq!(after.prefetch_hits, before.prefetch_hits + 1);
+        assert_eq!(after.misses, before.misses, "prefetched expert must not re-read");
+    }
+
+    #[test]
+    fn prefetch_never_evicts() {
+        let s = store_with_budget(24); // exactly one expert fits
+        s.ensure_resident(1, &[0]).unwrap();
+        s.ensure_resident(0, &[1]).unwrap(); // (1,0) history exists, no room
+        let inner = s.inner.lock().unwrap();
+        // only the demanded expert is resident; prefetch found no space
+        assert!(inner.cache.contains_key(&(0, 1)));
+        assert_eq!(inner.cache.len(), 1);
+    }
+}

@@ -63,7 +63,7 @@ fn full_mc_sharp_pipeline() {
     // whole-model compression is diluted by fp16 embeddings on this toy
     // config; experts themselves must compress ≥ 3×
     assert!(q_pmq.nbytes() < base.nbytes_fp16() / 2, "compression < 2x");
-    let expert_bytes: u64 = q_pmq.experts.iter().flatten().map(|e| e.nbytes()).sum();
+    let expert_bytes: u64 = q_pmq.store.total_nbytes();
     let expert_fp16: u64 =
         (cfg.n_layers * cfg.n_experts * cfg.expert_params() * 2) as u64;
     assert!(expert_bytes * 3 < expert_fp16, "expert compression < 3x");

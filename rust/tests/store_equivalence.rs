@@ -1,0 +1,180 @@
+//! Store-equivalence suite: a `PagedStore` under a byte budget smaller
+//! than the total packed experts must be **observationally identical** to
+//! the all-resident store — bit-identical eval logits, bit-identical
+//! served generations — while provably honoring its budget (peak
+//! resident bytes) and actually paging (miss/evict counters move).
+//!
+//! This is the acceptance gate for the ExpertStore refactor: residency is
+//! an implementation detail of `quant::store`, invisible to every
+//! numerical result.
+
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::{ModelConfig, PmqConfig};
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
+use mcsharp::moe::model::ForwardOpts;
+use mcsharp::moe::MoeModel;
+use mcsharp::quant::qcheckpoint;
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "store-eq".into(),
+        family: "mixtral".into(),
+        vocab_size: 96,
+        d_model: 32,
+        n_layers: 3,
+        n_heads: 2,
+        d_ff: 32,
+        n_experts: 6,
+        top_k: 2,
+        n_shared_experts: 1,
+        max_seq_len: 64,
+        rope_theta: 10_000.0,
+        modalities: 1,
+        buckets: vec![4],
+    }
+}
+
+fn tmppath(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("mcsharp-store-eq-{name}-{}.q2", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Quantize a random model with a mixed allocation, save v2, and return
+/// (resident reload, paged reload, budget).
+fn resident_and_paged(
+    seed: u64,
+    name: &str,
+    budget_frac: (u64, u64),
+) -> (QuantModel, QuantModel, u64, String) {
+    let base = MoeModel::new(&cfg(), seed);
+    let alloc = vec![
+        vec![2u8, 1, 3, 2, 2, 1],
+        vec![3u8, 2, 1, 2, 3, 2],
+        vec![2u8, 2, 2, 1, 1, 3],
+    ];
+    let mut q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+    // non-uniform importance so the eviction tie-break has teeth
+    let importance: Vec<Vec<f64>> = (0..3)
+        .map(|l| (0..6).map(|e| ((l * 6 + e) as f64 * 0.37).sin().abs() + 0.01).collect())
+        .collect();
+    q.set_importance(importance);
+    let path = tmppath(name);
+    qcheckpoint::save(&q, &path).unwrap();
+    let resident = qcheckpoint::load(&path).unwrap();
+    let total = resident.store.total_nbytes();
+    let budget = total * budget_frac.0 / budget_frac.1;
+    assert!(budget < total, "test must run under memory pressure");
+    let paged = qcheckpoint::load_paged(&path, budget).unwrap();
+    (resident, paged, budget, path)
+}
+
+#[test]
+fn eval_logits_bit_identical_under_tiny_budget() {
+    let (resident, paged, budget, path) = resident_and_paged(310, "eval", (3, 5));
+    let seqs: Vec<Vec<u16>> = (0..4)
+        .map(|s| (0..20).map(|i| ((i * 7 + s * 13) % 90 + 1) as u16).collect())
+        .collect();
+    for toks in &seqs {
+        let a = resident.model.forward_opts(
+            toks,
+            &mut ForwardOpts { provider: Some(&resident), ..Default::default() },
+        );
+        let b = paged.model.forward_opts(
+            toks,
+            &mut ForwardOpts { provider: Some(&paged), ..Default::default() },
+        );
+        assert_eq!(a.data, b.data, "paged eval diverged from resident");
+    }
+    // perplexity (f64 reduction over identical f32 logits) must match too
+    let ppl_r = resident.model.perplexity(
+        &seqs,
+        &mut ForwardOpts { provider: Some(&resident), ..Default::default() },
+    );
+    let ppl_p = paged.model.perplexity(
+        &seqs,
+        &mut ForwardOpts { provider: Some(&paged), ..Default::default() },
+    );
+    assert_eq!(ppl_r.to_bits(), ppl_p.to_bits());
+    let c = paged.store.counters();
+    assert!(c.misses > 0, "budget below total must page: {c:?}");
+    assert!(c.evictions > 0, "crossing layers under pressure must evict: {c:?}");
+    assert!(c.hits > 0, "repeated routing must hit the cache: {c:?}");
+    assert!(
+        c.peak_resident_bytes <= budget,
+        "budget {budget} violated: peak {}",
+        c.peak_resident_bytes
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn served_generations_bit_identical_under_tiny_budget() {
+    let (resident, paged, budget, path) = resident_and_paged(311, "serve", (3, 5));
+    let be_r = NativeBackend::quant(&resident);
+    let be_p = NativeBackend::quant(&paged);
+    let mut eng_r = DecodeEngine::new(EngineModel::Quant(&resident), &be_r, None);
+    let mut eng_p = DecodeEngine::new(EngineModel::Quant(&paged), &be_p, None);
+    for s in 0..4u16 {
+        let prompt = vec![1, 10 + s * 9, 40 + s * 5, 7];
+        let a = eng_r.generate(&prompt, 8).unwrap();
+        let b = eng_p.generate(&prompt, 8).unwrap();
+        assert_eq!(a, b, "served generation diverged for seed {s}");
+    }
+    // identical dispatch accounting: the store must not change routing
+    assert_eq!(eng_r.metrics.experts_kept, eng_p.metrics.experts_kept);
+    assert_eq!(eng_r.metrics.routed_bytes, eng_p.metrics.routed_bytes);
+    // the paged engine surfaced its gauges through the metrics
+    let c = eng_p.metrics.cache.expect("paged engine exposes cache gauges");
+    assert!(c.misses > 0);
+    assert!(c.peak_resident_bytes <= budget);
+    // resident engine reports a full cache and no paging
+    let cr = eng_r.metrics.cache.expect("resident engine exposes cache gauges");
+    assert_eq!(cr.resident_bytes, resident.store.total_nbytes());
+    assert_eq!(cr.misses, 0);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Decode steps touch few experts per layer, so a serve-shaped workload
+/// under a small budget should produce prefetch hits: the store learns
+/// layer ℓ+1's hot experts from routing history and stages them while
+/// layer ℓ executes.
+#[test]
+fn decode_workload_generates_prefetch_hits() {
+    let (_resident, paged, _budget, path) = resident_and_paged(312, "prefetch", (1, 2));
+    let be = NativeBackend::quant(&paged);
+    let mut eng = DecodeEngine::new(EngineModel::Quant(&paged), &be, None);
+    for s in 0..6u16 {
+        let prompt = vec![1, 5 + s * 11, 3 + s * 7];
+        eng.generate(&prompt, 10).unwrap();
+    }
+    let c = paged.store.counters();
+    assert!(
+        c.prefetch_hits > 0,
+        "repeating decode routes should hit prefetched experts: {c:?}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// OTP distillation reads experts through the same store handles — it
+/// must produce identical routers on resident and paged models.
+#[test]
+fn otp_training_identical_across_stores() {
+    use mcsharp::config::OtpConfig;
+    use mcsharp::otp::train_otp;
+    let (resident, paged, _budget, path) = resident_and_paged(313, "otp", (3, 5));
+    let seqs: Vec<Vec<u16>> = (0..3)
+        .map(|s| (0..16).map(|i| ((i * 11 + s * 17) % 90 + 1) as u16).collect())
+        .collect();
+    let oc = OtpConfig { steps: 30, batch_tokens: 24, ..Default::default() };
+    let rep_r = train_otp(&resident, &seqs, &oc, 0xABC);
+    let rep_p = train_otp(&paged, &seqs, &oc, 0xABC);
+    for (a, b) in rep_r.curve.iter().zip(&rep_p.curve) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "mask ratio diverged");
+        assert_eq!(a.2.to_bits(), b.2.to_bits(), "distill loss diverged");
+    }
+    std::fs::remove_file(&path).ok();
+}
