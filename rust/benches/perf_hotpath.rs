@@ -181,6 +181,89 @@ fn main() {
         std::fs::remove_file(&path).ok();
     }
 
+    // Serving-side acceptance row for the shared-scheduler serve path
+    // (EXPERIMENTS.md §Serving): the same TCP server under 1 vs 8
+    // concurrent clients. Cross-request continuous batching means the
+    // 8-client row shares engine steps across connections; the printed
+    // steps count is the structural proof (fewer steps per generated
+    // token), tok/s is the testbed-specific realization. Random-init
+    // model: no pretraining, so this section runs in the CI smoke gate.
+    println!("\n== serving throughput: 1 vs 8 concurrent clients, one scheduler ==");
+    {
+        let cfg = mcsharp::config::ModelConfig {
+            name: "perf-serve".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            n_experts: 8,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let base = mcsharp::moe::MoeModel::new(&cfg, 0x5E21E);
+        let (reqs_per_client, max_new) = if smoke { (2usize, 4usize) } else { (8, 16) };
+        for clients in [1usize, 8] {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let total = clients * reqs_per_client;
+            let steps = std::sync::atomic::AtomicU64::new(0);
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let be = NativeBackend::fp(&base);
+                    let engine = std::sync::Mutex::new(DecodeEngine::new(
+                        EngineModel::Fp(&base),
+                        &be,
+                        None,
+                    ));
+                    // no gather window: both rows run the identical
+                    // config, so the 8-client speedup comes purely from
+                    // requests overlapping in the shared active set (a
+                    // window would tax the 1-client row's idle→busy
+                    // transitions and bias the comparison)
+                    let sc = mcsharp::config::ServingConfig {
+                        max_batch: 8,
+                        ..Default::default()
+                    };
+                    mcsharp::coordinator::server::serve_with(listener, &engine, &sc, Some(total))
+                        .unwrap();
+                    let eng = engine.lock().unwrap();
+                    steps.store(eng.metrics.steps, std::sync::atomic::Ordering::Relaxed);
+                });
+                for c in 0..clients {
+                    s.spawn(move || {
+                        use std::io::{BufRead, BufReader, Write};
+                        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+                        let mut reader = BufReader::new(stream.try_clone().unwrap());
+                        let mut line = String::new();
+                        for r in 0..reqs_per_client {
+                            let prompt = format!("1,{},{}", 2 + c, 3 + r);
+                            stream
+                                .write_all(format!("GEN {max_new} {prompt}\n").as_bytes())
+                                .unwrap();
+                            line.clear();
+                            reader.read_line(&mut line).unwrap();
+                            assert!(line.starts_with("OK "), "{line}");
+                        }
+                    });
+                }
+            });
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "  {clients} client(s) x {reqs_per_client} reqs x {max_new} new tokens: \
+                 {:8.1} tok/s over {:3} engine steps",
+                (total * max_new) as f64 / dt,
+                steps.load(std::sync::atomic::Ordering::Relaxed),
+            );
+        }
+    }
+
     if smoke {
         println!("\n(--smoke: skipping pretrained-model and PJRT sections)");
         print_l1_estimates();

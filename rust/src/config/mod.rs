@@ -144,11 +144,27 @@ pub struct ServingConfig {
     /// Packed-expert residency budget in MiB (`--expert-cache-mb`).
     /// `None` keeps every expert resident (the pre-paging behaviour).
     pub expert_cache_mb: Option<usize>,
+    /// Max concurrently served client connections (`--workers`);
+    /// 0 = unbounded. Connections beyond the cap wait in the OS accept
+    /// backlog — admission control happens per token via `token_budget`,
+    /// this bounds reader threads.
+    pub workers: usize,
+    /// Micro-batch gather window in µs (`--batch-window-us`): when the
+    /// engine goes idle, its loop waits this long (or until `max_batch`
+    /// fills) after the first queued request so near-simultaneous
+    /// requests share their first step. 0 = step immediately.
+    pub batch_window_us: u64,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
-        ServingConfig { max_batch: 8, token_budget: 4096, expert_cache_mb: None }
+        ServingConfig {
+            max_batch: 8,
+            token_budget: 4096,
+            expert_cache_mb: None,
+            workers: 0,
+            batch_window_us: 0,
+        }
     }
 }
 

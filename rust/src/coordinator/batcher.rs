@@ -4,6 +4,13 @@
 //! and new sequences are admitted the moment one finishes (continuous
 //! batching, not static). A token budget caps the summed context length
 //! of the active set — the KV-memory guardrail a real server needs.
+//!
+//! The drain loop is split into three reusable pieces — [`Batcher::admit`],
+//! [`Batcher::step_active`], [`Batcher::retire`] — so the same admission
+//! policies drive both the one-shot [`Batcher::run`] (evals, benches) and
+//! the server's persistent engine loop
+//! ([`Scheduler`](crate::coordinator::scheduler::Scheduler)), which never
+//! tears down between requests.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -11,6 +18,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::engine::{DecodeEngine, SeqState};
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResult};
 
 /// Admission-ordering policy. FIFO is the default; SJF (shortest job
@@ -24,6 +32,33 @@ pub enum Policy {
     Fifo,
     Sjf,
     Priority,
+}
+
+/// One admitted sequence plus the bookkeeping its [`GenResult`] needs.
+pub struct ActiveSeq {
+    pub seq: SeqState,
+    /// When the request entered the queue.
+    pub submitted: Instant,
+    /// When it was admitted to the active set.
+    pub admitted: Instant,
+    pub prompt_len: usize,
+}
+
+impl ActiveSeq {
+    fn new(req: GenRequest, submitted: Instant, n_layers: usize) -> ActiveSeq {
+        let prompt_len = req.prompt.len();
+        let mut seq = SeqState::new(req.id, req.prompt, req.max_new_tokens, n_layers);
+        seq.sample = req.sample;
+        ActiveSeq { seq, submitted, admitted: Instant::now(), prompt_len }
+    }
+
+    /// Token footprint this sequence holds against the budget: context
+    /// held now plus tokens still to be generated. `tokens.len()` already
+    /// counts generated tokens, so the remainder is `max_new - generated`
+    /// — the sum stays `prompt + max_new` for the sequence's lifetime.
+    fn footprint(&self) -> usize {
+        self.seq.tokens.len() + self.seq.max_new.saturating_sub(self.seq.generated)
+    }
 }
 
 pub struct Batcher {
@@ -66,6 +101,12 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Drop every queued (not yet admitted) request — used when the
+    /// engine dies and nothing more will run.
+    pub fn clear_queue(&mut self) {
+        self.queue.clear();
+    }
+
     /// Index of the next request to admit under the current policy (the
     /// caller checks budget fit). Aged requests jump the line.
     fn next_index(&self) -> Option<usize> {
@@ -97,70 +138,80 @@ impl Batcher {
             .position(|(_, t)| t.elapsed().as_micros() as u64 > self.aging_us)
     }
 
+    /// Admit queued requests into `active` while there is room in both
+    /// the batch and the token budget. When `active` is empty and nothing
+    /// fits, the policy head is force-admitted so oversized requests
+    /// still progress.
+    pub fn admit(&mut self, active: &mut Vec<ActiveSeq>, n_layers: usize) {
+        let used: usize = active.iter().map(|a| a.footprint()).sum();
+        let mut budget = self.token_budget.saturating_sub(used);
+        while active.len() < self.max_batch {
+            let fits = self
+                .next_index()
+                .map(|i| (i, self.queue[i].0.footprint()))
+                .filter(|&(_, fp)| fp <= budget);
+            let Some((idx, fp)) = fits else { break };
+            let (req, submitted) = self.queue.remove(idx).unwrap();
+            budget -= fp;
+            active.push(ActiveSeq::new(req, submitted, n_layers));
+        }
+        if active.is_empty() {
+            if let Some(idx) = self.next_index() {
+                let (req, submitted) = self.queue.remove(idx).unwrap();
+                active.push(ActiveSeq::new(req, submitted, n_layers));
+            }
+        }
+    }
+
+    /// One engine step over the active set (prefill and decode share
+    /// steps — continuous batching at token granularity).
+    pub fn step_active(engine: &mut DecodeEngine, active: &mut [ActiveSeq]) -> Result<()> {
+        if active.is_empty() {
+            return Ok(());
+        }
+        let mut batch: Vec<&mut SeqState> =
+            active.iter_mut().map(|a| &mut a.seq).collect();
+        engine.step(&mut batch)
+    }
+
+    /// Remove finished sequences from `active`, recording their latency
+    /// in `metrics`. Returns results in completion order.
+    pub fn retire(active: &mut Vec<ActiveSeq>, metrics: &mut Metrics) -> Vec<GenResult> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].seq.done() {
+                let a = active.remove(i);
+                let lat = a.submitted.elapsed().as_micros() as u64;
+                metrics.latencies_us.push(lat);
+                out.push(GenResult {
+                    id: a.seq.id,
+                    tokens: a.seq.tokens,
+                    latency_us: lat,
+                    queue_us: a.admitted.duration_since(a.submitted).as_micros() as u64,
+                    prompt_len: a.prompt_len,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     /// Drive the engine until the queue drains. Returns results in
     /// completion order.
     pub fn run(&mut self, engine: &mut DecodeEngine) -> Result<Vec<GenResult>> {
         let n_layers = engine.em.model().cfg.n_layers;
-        let mut active: Vec<(SeqState, Instant, Instant, usize)> = Vec::new();
+        let mut active: Vec<ActiveSeq> = Vec::new();
         let mut results = Vec::new();
         engine.metrics.start();
         loop {
-            // admit while there is room in batch + token budget
-            let used_tokens: usize =
-                active.iter().map(|(s, ..)| s.tokens.len() + s.max_new).sum();
-            let mut budget = self.token_budget.saturating_sub(used_tokens);
-            while active.len() < self.max_batch {
-                let fits = self
-                    .next_index()
-                    .map(|i| (i, self.queue[i].0.footprint()))
-                    .filter(|&(_, fp)| fp <= budget);
-                let Some((idx, fp)) = fits else { break };
-                let (req, submitted) = self.queue.remove(idx).unwrap();
-                budget -= fp;
-                let mut seq =
-                    SeqState::new(req.id, req.prompt.clone(), req.max_new_tokens, n_layers);
-                seq.sample = req.sample;
-                let plen = req.prompt.len();
-                active.push((seq, submitted, Instant::now(), plen));
-            }
+            self.admit(&mut active, n_layers);
             if active.is_empty() {
-                if self.queue.is_empty() {
-                    break;
-                }
-                // nothing fits: force-admit the policy head to guarantee progress
-                let idx = self.next_index().unwrap_or(0);
-                let (req, submitted) = self.queue.remove(idx).unwrap();
-                let mut seq =
-                    SeqState::new(req.id, req.prompt.clone(), req.max_new_tokens, n_layers);
-                seq.sample = req.sample;
-                let plen = req.prompt.len();
-                active.push((seq, submitted, Instant::now(), plen));
+                break; // queue drained (admit force-admits when non-empty)
             }
-            // one engine step over the active set
-            {
-                let mut batch: Vec<&mut SeqState> =
-                    active.iter_mut().map(|(s, ..)| s).collect();
-                engine.step(&mut batch)?;
-            }
-            // retire finished sequences
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].0.done() {
-                    let (seq, submitted, admitted, plen) = active.remove(i);
-                    let now = Instant::now();
-                    let lat = now.duration_since(submitted).as_micros() as u64;
-                    engine.metrics.latencies_us.push(lat);
-                    results.push(GenResult {
-                        id: seq.id,
-                        tokens: seq.tokens,
-                        latency_us: lat,
-                        queue_us: admitted.duration_since(submitted).as_micros() as u64,
-                        prompt_len: plen,
-                    });
-                } else {
-                    i += 1;
-                }
-            }
+            Self::step_active(engine, &mut active)?;
+            results.append(&mut Self::retire(&mut active, &mut engine.metrics));
         }
         engine.metrics.finish();
         Ok(results)
@@ -238,6 +289,40 @@ mod tests {
         for (r, w) in results.iter().zip(&want) {
             assert_eq!(&r.tokens, w);
         }
+    }
+
+    /// Regression for the admission over-reserve bug: `used_tokens`
+    /// summed `tokens.len() + max_new`, charging already-generated tokens
+    /// twice (`tokens.len()` includes them; `max_new` is the total, not
+    /// the remainder). A sequence's charge must stay `prompt + max_new`
+    /// for its whole lifetime, so mid-generation the batcher can still
+    /// admit everything that fit at submission time.
+    #[test]
+    fn admission_does_not_double_count_generated_tokens() {
+        let mut b = Batcher::new(4, 16);
+        // long request: prompt 4 + max_new 8 = footprint 12 of budget 16
+        b.submit(GenRequest::greedy(0, vec![1, 2, 3, 4], 8));
+        let mut active: Vec<ActiveSeq> = Vec::new();
+        b.admit(&mut active, 2);
+        assert_eq!(active.len(), 1);
+        // simulate mid-flight progress: 4 of 8 tokens generated
+        active[0].seq.tokens.extend([9u16; 4]);
+        active[0].seq.generated = 4;
+        assert_eq!(active[0].footprint(), 12, "charge invariant over progress");
+        // a footprint-4 request fits the remaining 16-12 budget; the old
+        // accounting charged 8+8=16 and starved it until the long one
+        // finished
+        b.submit(GenRequest::greedy(1, vec![5, 6], 2));
+        b.admit(&mut active, 2);
+        assert_eq!(active.len(), 2, "budget double-count starved admission");
+        // once the long sequence retires, its whole footprint comes back
+        active[0].seq.generated = 8;
+        let mut metrics = Metrics::default();
+        let done = Batcher::retire(&mut active, &mut metrics);
+        assert_eq!(done.len(), 1);
+        b.submit(GenRequest::greedy(2, vec![1, 2, 3, 4], 8));
+        b.admit(&mut active, 2);
+        assert_eq!(active.len(), 2, "retired footprint must be reclaimed");
     }
 
     #[test]

@@ -1,4 +1,10 @@
 //! The decode engine: batched, KV-cached, expert-grouped generation.
+//!
+//! One engine instance now serves for the whole server lifetime (the
+//! [`Scheduler`](crate::coordinator::scheduler::Scheduler) steps it from
+//! a persistent loop), so [`Metrics`] accumulate across requests: the
+//! wall-clock window opens at the first `start()` and `tokens_per_sec`
+//! reads the lifetime rate, not the latest drain's.
 
 use anyhow::Result;
 

@@ -31,17 +31,36 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Open the wall-clock window. First call wins: counters accumulate
+    /// across every subsequent `run()`/step, so `tokens_per_sec` covers
+    /// the whole serving lifetime rather than only the latest drain
+    /// (which inflated `STATS` tps). Call [`reset`](Self::reset) for a
+    /// fresh window.
     pub fn start(&mut self) {
-        self.started = Some(Instant::now());
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
     }
 
+    /// Close (or extend) the window; the last call wins so the window
+    /// spans first `start()` → last `finish()`.
     pub fn finish(&mut self) {
         self.finished = Some(Instant::now());
     }
 
+    /// Drop every counter and the wall-clock window — the explicit
+    /// opt-in for callers that want per-run numbers.
+    pub fn reset(&mut self) {
+        *self = Metrics::default();
+    }
+
+    /// Wall-clock covered by the window. While the window is still open
+    /// (started, not finished) this reads up to now, so a live server's
+    /// `STATS`/`METRICS` report a sane lifetime tps mid-flight.
     pub fn wall_secs(&self) -> f64 {
         match (self.started, self.finished) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            (Some(a), None) => a.elapsed().as_secs_f64(),
             _ => 0.0,
         }
     }
@@ -113,6 +132,45 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// `start()` must be first-call-wins: repeated `run()`s on one
+    /// engine accumulate `tokens_out`, so the tps window has to span all
+    /// of them — the old overwrite covered only the last run and
+    /// inflated tps.
+    #[test]
+    fn start_is_first_call_wins_and_reset_reopens() {
+        let mut m = Metrics::default();
+        m.start();
+        let t0 = m.started;
+        assert!(t0.is_some());
+        m.tokens_out = 100;
+        m.finish();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.start(); // second run on the same engine
+        assert_eq!(m.started, t0, "start() must not move the window");
+        m.tokens_out += 100;
+        m.finish();
+        assert!(m.wall_secs() >= 0.002, "window must span both runs");
+        assert_eq!(m.tokens_out, 200);
+        m.reset();
+        assert!(m.started.is_none() && m.finished.is_none());
+        assert_eq!(m.tokens_out, 0);
+        m.start();
+        assert_ne!(m.started, t0, "reset() reopens the window");
+    }
+
+    /// An open window (server still running) reports live wall-clock so
+    /// STATS tps is sane before shutdown.
+    #[test]
+    fn open_window_reads_to_now() {
+        let mut m = Metrics::default();
+        assert_eq!(m.wall_secs(), 0.0);
+        m.start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(m.wall_secs() > 0.0);
+        m.tokens_out = 10;
+        assert!(m.tokens_per_sec() > 0.0);
+    }
 
     #[test]
     fn percentiles_and_ratio() {

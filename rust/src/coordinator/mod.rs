@@ -1,22 +1,27 @@
 //! L3 coordinator — the serving system around the compressed model.
 //!
-//! vLLM-router-shaped: a request queue feeds a continuous batcher; each
-//! engine step decodes one token for every active sequence. Per layer the
-//! engine routes tokens (softmax top-k), applies the OTP pruner, groups
-//! the surviving (token, expert) pairs **by expert** across the whole
-//! batch, executes each expert once over its token block through the
-//! [`backend`](crate::backend) (PJRT or native), and scatters the
-//! weighted results back. KV caches are per-sequence; metrics track
-//! latency percentiles, throughput and activated-parameter bytes — the
-//! quantities of Tables 5 and 8.
+//! vLLM-router-shaped: every client connection feeds one shared
+//! [`Scheduler`] admission queue; a single long-lived engine thread runs
+//! the continuous-batching loop (admit → step → retire, never torn down
+//! between requests), so sequences from different connections share
+//! engine steps. Each engine step decodes one token for every active
+//! sequence. Per layer the engine routes tokens (softmax top-k), applies
+//! the OTP pruner, groups the surviving (token, expert) pairs **by
+//! expert** across the whole batch, executes each expert once over its
+//! token block through the [`backend`](crate::backend) (PJRT or native),
+//! and scatters the weighted results back. KV caches are per-sequence;
+//! metrics track latency percentiles, lifetime throughput and
+//! activated-parameter bytes — the quantities of Tables 5 and 8.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batcher, Policy};
+pub use batcher::{ActiveSeq, Batcher, Policy};
 pub use engine::{DecodeEngine, EngineModel};
 pub use metrics::Metrics;
 pub use request::{GenRequest, GenResult};
+pub use scheduler::Scheduler;

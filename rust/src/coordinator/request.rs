@@ -1,7 +1,10 @@
-//! Request/response types for the generation service.
+//! Request/response types for the generation service, plus the response
+//! channel a [`Scheduler`](crate::coordinator::scheduler::Scheduler)
+//! uses to route each finished [`GenResult`] back to the connection
+//! thread that submitted it.
 
 /// A generation request (tokens in, tokens out — tokenization is the
-//  synthetic vocabulary, so clients speak token ids directly).
+/// synthetic vocabulary, so clients speak token ids directly).
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub id: u64,
@@ -23,6 +26,20 @@ pub struct GenResult {
     /// Time the request waited in queue before admission (µs).
     pub queue_us: u64,
     pub prompt_len: usize,
+}
+
+/// Sending half of a request's response route: held by the scheduler
+/// (keyed by request id) until the sequence retires. Dropping it without
+/// sending wakes the waiting connection with a recv error — the "engine
+/// died" signal.
+pub type ResponseTx = std::sync::mpsc::Sender<GenResult>;
+
+/// Receiving half: the submitting connection blocks here for its result.
+pub type ResponseRx = std::sync::mpsc::Receiver<GenResult>;
+
+/// One response route for one in-flight request.
+pub fn response_channel() -> (ResponseTx, ResponseRx) {
+    std::sync::mpsc::channel()
 }
 
 impl GenRequest {

@@ -6,34 +6,72 @@
 //! ```text
 //! GEN <max_new_tokens> <tok>,<tok>,...\n   →  OK <tok>,<tok>,...\n
 //! PING\n                                  →  PONG\n
-//! STATS\n                                 →  STATS tokens_out=.. tps=..\n
+//! STATS\n                                 →  STATS tokens_out=.. tps=.. ..\n
 //! METRICS\n                               →  METRICS {json snapshot}\n
+//! QUIT\n                                  →  (server closes this connection)
 //! ```
 //!
-//! The listener thread accumulates a micro-batch window, then runs the
-//! batcher over the engine. Engine access is serialized behind a mutex —
-//! on this single-core testbed parallel engine steps would not help; the
+//! Every line — control commands included — goes through one parser,
+//! [`parse_command`], so the protocol doc and the dispatch cannot drift.
+//!
+//! Concurrency model: the accept loop spawns one reader thread per
+//! connection; all readers feed a single shared
+//! [`Scheduler`](crate::coordinator::scheduler::Scheduler), and one
+//! dedicated engine thread runs the continuous-batching loop for the
+//! server's whole lifetime. Sequences from different connections share
+//! engine steps (and expert groups) whenever they overlap, and an idle
+//! connection never stalls anyone — it just parks its reader thread.
+//! Results return to the submitting connection over per-request
+//! channels. Engine access is serialized behind a mutex — on this
+//! single-core testbed parallel engine steps would not help; the
 //! batching provides the throughput.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::ServingConfig;
-use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::DecodeEngine;
 use crate::coordinator::request::GenRequest;
+use crate::coordinator::scheduler::Scheduler;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// Parse one protocol line into a request.
-pub fn parse_line(line: &str) -> Result<Option<GenRequest>> {
+/// Accept-loop poll period (the listener is non-blocking so the quota
+/// and worker-cap checks run without a wake-up connection). Backs off
+/// exponentially to [`POLL_MAX`] while idle so a long-lived server
+/// doesn't wake 1000x/s with no traffic; any accepted connection resets
+/// it to [`POLL`].
+const POLL: Duration = Duration::from_millis(1);
+const POLL_MAX: Duration = Duration::from_millis(50);
+
+/// One parsed protocol line.
+#[derive(Debug)]
+pub enum Command {
+    Gen(GenRequest),
+    Ping,
+    Stats,
+    Metrics,
+    Quit,
+    /// Blank line — ignored, no response.
+    Empty,
+}
+
+/// Parse one protocol line — the single dispatch point for control
+/// commands and generation requests alike.
+pub fn parse_command(line: &str) -> Result<Command> {
     let line = line.trim();
-    if line == "PING" || line == "STATS" || line == "METRICS" || line.is_empty() {
-        return Ok(None);
+    match line {
+        "" => return Ok(Command::Empty),
+        "PING" => return Ok(Command::Ping),
+        "STATS" => return Ok(Command::Stats),
+        "METRICS" => return Ok(Command::Metrics),
+        "QUIT" => return Ok(Command::Quit),
+        _ => {}
     }
     let mut parts = line.splitn(3, ' ');
     match parts.next() {
@@ -51,15 +89,26 @@ pub fn parse_line(line: &str) -> Result<Option<GenRequest>> {
             if toks.is_empty() {
                 bail!("empty prompt");
             }
-            Ok(Some(GenRequest::greedy(
+            Ok(Command::Gen(GenRequest::greedy(
                 NEXT_ID.fetch_add(1, Ordering::Relaxed),
                 toks,
                 max_new,
             )))
         }
         Some(cmd) => bail!("unknown command {cmd:?}"),
-        None => Ok(None),
+        // splitn on a non-empty string always yields a first part, and
+        // blank lines returned Command::Empty above
+        None => unreachable!("blank line handled before the verb match"),
     }
+}
+
+/// Back-compat shim over [`parse_command`]: `GEN` lines parse to a
+/// request, control lines (PING/STATS/METRICS/QUIT, blanks) to `None`.
+pub fn parse_line(line: &str) -> Result<Option<GenRequest>> {
+    Ok(match parse_command(line)? {
+        Command::Gen(req) => Some(req),
+        _ => None,
+    })
 }
 
 pub fn format_result(tokens: &[u16]) -> String {
@@ -68,8 +117,6 @@ pub fn format_result(tokens: &[u16]) -> String {
 }
 
 /// Serve until `max_requests` have been answered (None = forever).
-/// Single-connection-at-a-time handling per line keeps the protocol
-/// trivial; batching happens across lines pending in one connection.
 pub fn serve(
     listener: TcpListener,
     engine: &Mutex<DecodeEngine>,
@@ -83,88 +130,139 @@ pub fn serve(
 /// [`serve`] with the full serving configuration (`mcsharp serve` wires
 /// the CLI flags through here; the expert-cache budget in `sc` was
 /// already consumed when the engine's model was loaded).
+///
+/// The request quota is soft, matching the historical behaviour: once
+/// `max_requests` generations have been answered the listener stops
+/// accepting new connections, but connections already open are served
+/// (all commands) until their clients close; the engine loop then drains
+/// every in-flight sequence before the call returns.
 pub fn serve_with(
     listener: TcpListener,
     engine: &Mutex<DecodeEngine>,
     sc: &ServingConfig,
     max_requests: Option<usize>,
 ) -> Result<usize> {
-    let mut answered = 0usize;
-    for stream in listener.incoming() {
-        let stream = stream?;
-        answered += handle_conn(stream, engine, sc)?;
-        if let Some(m) = max_requests {
-            if answered >= m {
-                break;
+    let sched = Scheduler::from_config(sc);
+    let answered = AtomicUsize::new(0);
+    let live_conns = AtomicUsize::new(0);
+    listener.set_nonblocking(true)?;
+    let engine_result: Mutex<Option<Result<usize>>> = Mutex::new(None);
+    let serve_result: Result<()> = std::thread::scope(|s| {
+        s.spawn(|| {
+            let r = sched.run_engine(engine);
+            *engine_result.lock().unwrap() = Some(r);
+        });
+        let mut poll = POLL;
+        let accept_result = loop {
+            if let Some(m) = max_requests {
+                if answered.load(Ordering::Acquire) >= m {
+                    break Ok(());
+                }
             }
+            if engine_result.lock().unwrap().is_some() {
+                break Ok(()); // engine loop died — stop accepting
+            }
+            if sc.workers > 0 && live_conns.load(Ordering::Acquire) >= sc.workers {
+                // same backoff while pinned at the worker cap; reset on
+                // the next accept below
+                std::thread::sleep(poll);
+                poll = (poll * 2).min(POLL_MAX);
+                continue;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    poll = POLL;
+                    live_conns.fetch_add(1, Ordering::AcqRel);
+                    let (sched, answered, live) = (&sched, &answered, &live_conns);
+                    s.spawn(move || {
+                        // connection-level IO errors end that connection
+                        // only; the server keeps running
+                        let _ = handle_conn(stream, engine, sched, answered);
+                        live.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(poll);
+                    poll = (poll * 2).min(POLL_MAX);
+                }
+                Err(e) => break Err(anyhow::Error::from(e)),
+            }
+        };
+        // graceful shutdown: stop accepting, let open connections finish
+        // (their in-flight requests drain through the engine loop), then
+        // release the engine thread
+        while live_conns.load(Ordering::Acquire) > 0 {
+            std::thread::sleep(POLL);
         }
+        sched.shutdown();
+        accept_result
+    });
+    serve_result?;
+    if let Some(Err(e)) = engine_result.into_inner().unwrap() {
+        return Err(e);
     }
-    Ok(answered)
+    Ok(answered.into_inner())
 }
 
+/// One connection's reader loop: parse lines, answer control commands
+/// in place, hand `GEN` requests to the shared scheduler and block on
+/// the per-request response channel.
 fn handle_conn(
     stream: TcpStream,
     engine: &Mutex<DecodeEngine>,
-    sc: &ServingConfig,
-) -> Result<usize> {
+    sched: &Scheduler,
+    answered: &AtomicUsize,
+) -> Result<()> {
+    // accepted sockets may inherit the listener's non-blocking mode on
+    // some platforms; reader threads want blocking reads
+    stream.set_nonblocking(false)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    let mut answered = 0usize;
     let mut line = String::new();
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
-            return Ok(answered); // client closed
+            return Ok(()); // client closed
         }
-        let trimmed = line.trim();
-        if trimmed == "PING" {
-            out.write_all(b"PONG\n")?;
-            continue;
-        }
-        if trimmed == "STATS" {
-            let eng = engine.lock().unwrap();
-            let cache = eng.metrics.cache.unwrap_or_default();
-            let msg = format!(
-                "STATS tokens_out={} steps={} pruning={:.3} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={}\n",
-                eng.metrics.tokens_out,
-                eng.metrics.steps,
-                eng.metrics.pruning_ratio(),
-                cache.resident_bytes,
-                cache.hits,
-                cache.misses,
-                cache.evictions,
-                cache.prefetch_hits,
-            );
-            drop(eng);
-            out.write_all(msg.as_bytes())?;
-            continue;
-        }
-        if trimmed == "METRICS" {
-            let eng = engine.lock().unwrap();
-            let msg = format!("METRICS {}\n", eng.metrics.to_json().to_json());
-            drop(eng);
-            out.write_all(msg.as_bytes())?;
-            continue;
-        }
-        if trimmed == "QUIT" {
-            return Ok(answered);
-        }
-        match parse_line(trimmed) {
-            Ok(Some(req)) => {
-                let mut eng = engine.lock().unwrap();
-                let mut b = Batcher::from_config(sc);
-                let id = req.id;
-                b.submit(req);
-                let results = b.run(&mut eng)?;
+        match parse_command(&line) {
+            Ok(Command::Empty) => {}
+            Ok(Command::Ping) => out.write_all(b"PONG\n")?,
+            Ok(Command::Stats) => {
+                let eng = engine.lock().unwrap();
+                let cache = eng.metrics.cache.unwrap_or_default();
+                let msg = format!(
+                    "STATS tokens_out={} steps={} tps={:.3} pruning={:.3} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={}\n",
+                    eng.metrics.tokens_out,
+                    eng.metrics.steps,
+                    eng.metrics.tokens_per_sec(),
+                    eng.metrics.pruning_ratio(),
+                    cache.resident_bytes,
+                    cache.hits,
+                    cache.misses,
+                    cache.evictions,
+                    cache.prefetch_hits,
+                );
                 drop(eng);
-                let r = results
-                    .into_iter()
-                    .find(|r| r.id == id)
-                    .ok_or_else(|| anyhow!("result lost"))?;
-                out.write_all(format_result(&r.tokens).as_bytes())?;
-                answered += 1;
+                out.write_all(msg.as_bytes())?;
             }
-            Ok(None) => {}
+            Ok(Command::Metrics) => {
+                let eng = engine.lock().unwrap();
+                let msg = format!("METRICS {}\n", eng.metrics.to_json().to_json());
+                drop(eng);
+                out.write_all(msg.as_bytes())?;
+            }
+            Ok(Command::Quit) => return Ok(()),
+            Ok(Command::Gen(req)) => match sched.submit(req) {
+                Ok(rx) => match rx.recv() {
+                    Ok(r) => {
+                        out.write_all(format_result(&r.tokens).as_bytes())?;
+                        answered.fetch_add(1, Ordering::AcqRel);
+                    }
+                    // sender dropped without a result: engine loop died
+                    Err(_) => out.write_all(b"ERR engine unavailable\n")?,
+                },
+                Err(e) => out.write_all(format!("ERR {e}\n").as_bytes())?,
+            },
             Err(e) => {
                 out.write_all(format!("ERR {e}\n").as_bytes())?;
             }
@@ -188,5 +286,22 @@ mod tests {
         assert_eq!(format_result(&[5, 6]), "OK 5,6\n");
     }
 
-    // full TCP round-trip lives in rust/tests/server_roundtrip.rs
+    /// Control-command dispatch lives in exactly one place: every
+    /// protocol verb the handler answers must round-trip through
+    /// `parse_command` (this is the no-drift guarantee the old split
+    /// PING/STATS/METRICS special-casing lacked — QUIT was accepted by
+    /// the handler but unknown to the parser).
+    #[test]
+    fn every_control_verb_parses() {
+        assert!(matches!(parse_command("PING").unwrap(), Command::Ping));
+        assert!(matches!(parse_command("STATS").unwrap(), Command::Stats));
+        assert!(matches!(parse_command("METRICS").unwrap(), Command::Metrics));
+        assert!(matches!(parse_command("QUIT").unwrap(), Command::Quit));
+        assert!(matches!(parse_command("  \n").unwrap(), Command::Empty));
+        assert!(matches!(parse_command("GEN 2 7,8").unwrap(), Command::Gen(_)));
+        assert!(parse_line("QUIT").unwrap().is_none());
+    }
+
+    // full TCP round-trips (including concurrent clients sharing engine
+    // steps) live in rust/tests/server_roundtrip.rs
 }

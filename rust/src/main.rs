@@ -9,6 +9,9 @@
 //!                   [--qckpt q.bin]                       serve a pre-compressed model
 //!                   [--expert-cache-mb 64]                page experts under a byte budget
 //!                                                         instead of preloading them all
+//!                   [--max-batch 8] [--token-budget 4096] continuous-batching admission
+//!                   [--workers N]                         cap concurrent connections (0 = ∞)
+//!                   [--batch-window-us U]                 gather window before the first step
 //! mcsharp info      --model mix-tiny                      model zoo facts
 //! ```
 //!
@@ -35,6 +38,7 @@ use mcsharp::util::rng::Rng;
 const FLAGS: &[&str] = &[
     "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
     "calib-seqs", "lambda", "out", "qckpt", "expert-cache-mb", "max-batch",
+    "token-budget", "workers", "batch-window-us",
 ];
 
 fn main() -> Result<()> {
@@ -161,13 +165,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 300)?;
     let bits = args.f64_or("bits", 2.0)?;
     let max_requests = args.usize_or("max-requests", 0)?;
+    let defaults = ServingConfig::default();
     let sc = ServingConfig {
-        max_batch: args.usize_or("max-batch", 8)?,
+        max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+        token_budget: args.usize_or("token-budget", defaults.token_budget)?,
         expert_cache_mb: match args.usize_or("expert-cache-mb", 0)? {
             0 => None,
             mb => Some(mb),
         },
-        ..Default::default()
+        workers: args.usize_or("workers", defaults.workers)?,
+        batch_window_us: args.usize_or("batch-window-us", defaults.batch_window_us as usize)?
+            as u64,
     };
     // `--qckpt path` serves straight from a pre-compressed checkpoint —
     // the paper's pre-loading deployment story (no calibration at boot).

@@ -77,8 +77,9 @@ pub trait ExpertProvider: Sync {
 
 /// Token-wise dynamic expert pruning (OTP learnable router, ODP rule,
 /// random baseline). Returns how many of the rank-sorted top-k experts to
-/// KEEP (1..=k).
-pub trait Pruner {
+/// KEEP (1..=k). `Send` so an engine carrying a boxed pruner can live on
+/// the server's dedicated engine thread.
+pub trait Pruner: Send {
     fn keep(&mut self, layer: usize, x: &[f32], route: &Route) -> usize;
 }
 

@@ -1,12 +1,13 @@
 //! TCP server round-trip: the line protocol must return exactly the
-//! tokens the engine produces for the same prompt.
+//! tokens the engine produces for the same prompt — including when N
+//! clients hit the shared continuous-batching scheduler at once.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Mutex;
 
 use mcsharp::backend::NativeBackend;
-use mcsharp::config::ModelConfig;
+use mcsharp::config::{ModelConfig, ServingConfig};
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
 use mcsharp::coordinator::server;
 use mcsharp::moe::MoeModel;
@@ -97,6 +98,111 @@ fn metrics_command_returns_json_snapshot() {
         assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 1);
         assert!(v.get("latency_p50_us").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("pruning_ratio").unwrap().as_f64().unwrap() == 0.0);
+    });
+}
+
+fn send_gen(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    prompt: &[u16],
+    max_new: usize,
+) -> Vec<u16> {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    stream.write_all(format!("GEN {max_new} {}\n", toks.join(",")).as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim()
+        .strip_prefix("OK ")
+        .unwrap_or_else(|| panic!("bad response: {line}"))
+        .split(',')
+        .map(|t| t.parse().unwrap())
+        .collect()
+}
+
+/// The serving-path acceptance test for cross-request continuous
+/// batching: two clients connect at once and
+///   (a) each gets exactly the single-client greedy reference tokens,
+///   (b) the engine takes strictly fewer steps than the two requests
+///       would sequentially (proof their sequences shared steps),
+///   (c) an idle open connection (here: connected first, silent the
+///       whole time) blocks nobody, and still gets METRICS/STATS
+///       answers afterwards — with sane lifetime tps.
+#[test]
+fn concurrent_clients_share_engine_steps() {
+    let m = MoeModel::new(&tiny_cfg(), 203);
+    let be = NativeBackend::fp(&m);
+    let prompts: [Vec<u16>; 2] = [vec![1, 17, 30], vec![1, 9, 22]];
+    let mut want = Vec::new();
+    let mut sequential_steps = 0u64;
+    for p in &prompts {
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None);
+        want.push(eng.generate(p, 6).unwrap());
+        sequential_steps += eng.metrics.steps;
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let be = NativeBackend::fp(&m);
+            let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+            let sc = ServingConfig {
+                max_batch: 2,
+                // wide gather window: the engine waits for both requests
+                // before its first step (a full batch short-circuits the
+                // wait), so the step-sharing assertion is deterministic
+                batch_window_us: 5_000_000,
+                ..Default::default()
+            };
+            server::serve_with(listener, &engine, &sc, Some(2)).unwrap();
+        });
+        // (c) idle connection first — sends nothing while others work
+        let idle = TcpStream::connect(addr).unwrap();
+        let mut idle_reader = BufReader::new(idle.try_clone().unwrap());
+        // two concurrent clients
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    send_gen(&mut stream, &mut reader, p, 6)
+                })
+            })
+            .collect();
+        let got: Vec<Vec<u16>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // (a) token-for-token greedy reference
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g, w, "served tokens diverged from single-client reference");
+        }
+        // (b) + lifetime metrics, scraped over the still-open idle conn
+        let mut idle_out = idle.try_clone().unwrap();
+        idle_out.write_all(b"METRICS\n").unwrap();
+        let mut line = String::new();
+        idle_reader.read_line(&mut line).unwrap();
+        let json = line.trim().strip_prefix("METRICS ").expect("prefix");
+        let v = mcsharp::util::json::Value::parse(json).expect("valid json");
+        let steps = v.get("steps").unwrap().as_usize().unwrap() as u64;
+        assert!(
+            steps < sequential_steps,
+            "no cross-request batching: {steps} engine steps vs {sequential_steps} sequential"
+        );
+        assert_eq!(v.get("tokens_out").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 2);
+        assert!(v.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        // STATS carries the same lifetime tps
+        line.clear();
+        idle_out.write_all(b"STATS\n").unwrap();
+        idle_reader.read_line(&mut line).unwrap();
+        let tps_field = line
+            .split_whitespace()
+            .find_map(|f| f.strip_prefix("tps="))
+            .expect("STATS must report tps");
+        assert!(tps_field.parse::<f64>().unwrap() > 0.0, "lifetime tps insane: {line}");
+        // QUIT closes the idle connection server-side
+        idle_out.write_all(b"QUIT\n").unwrap();
+        line.clear();
+        assert_eq!(idle_reader.read_line(&mut line).unwrap(), 0, "QUIT must close");
     });
 }
 
