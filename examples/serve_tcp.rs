@@ -1,7 +1,8 @@
 //! Stand-alone TCP serving demo: starts the server on an ephemeral port,
 //! runs a client workload against it from another thread, prints the
 //! transcript. Demonstrates the deployable surface without needing two
-//! terminals.
+//! terminals: the protocol-v1 [`Client`] (pipelined + streaming), plus
+//! one raw legacy v0 line to show both dialects share the connection.
 //!
 //! ```bash
 //! cargo run --release --example serve_tcp
@@ -14,6 +15,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 use mcsharp::backend::NativeBackend;
 use mcsharp::config::PmqConfig;
+use mcsharp::coordinator::client::Client;
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
 use mcsharp::coordinator::server;
 use mcsharp::data::{Corpus, CorpusKind};
@@ -39,29 +41,45 @@ fn main() -> Result<()> {
     let addr = listener.local_addr()?;
     println!("server on {addr} (PMQ {:.2}-bit, native backend)", q.avg_model_bits());
 
-    let n_requests = 5usize;
+    let n_requests = 6usize; // 3 pipelined + 1 streamed + 1 lockstep + 1 legacy v0
     std::thread::scope(|s| -> Result<()> {
         s.spawn(|| {
             let be = NativeBackend::quant(&q);
             let engine = Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
             server::serve(listener, &engine, 4, Some(n_requests)).unwrap();
         });
+        let mut client = Client::connect(addr)?;
+        client.ping()?;
+        println!("client: PING → PONG");
+        let mut crng = Rng::new(77);
+        // 3 requests pipelined on this one connection: all in flight at
+        // once, sharing engine steps, responses reordered by tag
+        let reqs: Vec<(Vec<u16>, usize)> =
+            (0..3).map(|_| (corpus.sample(8, &mut crng), 8)).collect();
+        for (i, out) in client.gen_pipelined(&reqs)?.iter().enumerate() {
+            println!(
+                "client: pipelined req {i} → {:?} (latency {} µs, queued {} µs)",
+                out.tokens, out.latency_us, out.queue_us
+            );
+        }
+        // a streaming request: TOK partials arrive per engine step
+        let prompt = corpus.sample(8, &mut crng);
+        print!("client: streamed tokens →");
+        let out = client.gen_stream(&prompt, 8, |t| print!(" {t}"))?;
+        println!(" (terminal OK, {} tokens total)", out.tokens.len());
+        // plain lockstep v1
+        let prompt = corpus.sample(8, &mut crng);
+        let out = client.gen(&prompt, 8)?;
+        println!("client: lockstep req → {:?}", out.tokens);
+        println!("client: STATS → {}", client.stats()?);
+        drop(client);
+        // the legacy v0 dialect still works, raw bytes on the socket
         let mut stream = TcpStream::connect(addr)?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut line = String::new();
-        stream.write_all(b"PING\n")?;
+        stream.write_all(b"GEN 8 1,9,17\n")?;
         reader.read_line(&mut line)?;
-        print!("client: PING → {line}");
-        let mut crng = Rng::new(77);
-        for i in 0..n_requests {
-            let prompt = corpus.sample(8, &mut crng);
-            let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-            let req = format!("GEN 8 {}\n", toks.join(","));
-            stream.write_all(req.as_bytes())?;
-            line.clear();
-            reader.read_line(&mut line)?;
-            print!("client: req {i} → {line}");
-        }
+        print!("client: legacy v0 GEN → {line}");
         Ok(())
     })?;
     println!("serve_tcp OK");

@@ -10,6 +10,7 @@ mod common;
 use std::time::Duration;
 
 use mcsharp::backend::{ExpertBackend, NativeBackend, PjrtBackend};
+use mcsharp::coordinator::client::Client;
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel, SeqState};
 use mcsharp::moe::model::{ExpertId, ExpertProvider, ForwardOpts};
 use mcsharp::pmq::Strategy;
@@ -181,14 +182,17 @@ fn main() {
         std::fs::remove_file(&path).ok();
     }
 
-    // Serving-side acceptance row for the shared-scheduler serve path
-    // (EXPERIMENTS.md §Serving): the same TCP server under 1 vs 8
-    // concurrent clients. Cross-request continuous batching means the
-    // 8-client row shares engine steps across connections; the printed
-    // steps count is the structural proof (fewer steps per generated
-    // token), tok/s is the testbed-specific realization. Random-init
-    // model: no pretraining, so this section runs in the CI smoke gate.
-    println!("\n== serving throughput: 1 vs 8 concurrent clients, one scheduler ==");
+    // Serving-side acceptance rows for the serve path (EXPERIMENTS.md
+    // §Serving), all driven through the first-class protocol-v1 Client:
+    // (a) the same TCP server under 1 vs 8 concurrent clients (cross-
+    // request continuous batching), and (b) ONE connection submitting
+    // the same workload serially (lockstep, the old protocol's ceiling)
+    // vs pipelined (tagged v1, all requests in flight at once). The
+    // printed steps count is the structural proof (fewer steps per
+    // generated token), tok/s is the testbed-specific realization.
+    // Random-init model: no pretraining, so this section runs in the CI
+    // smoke gate.
+    println!("\n== serving throughput: shared scheduler, protocol v1 ==");
     {
         let cfg = mcsharp::config::ModelConfig {
             name: "perf-serve".into(),
@@ -208,10 +212,16 @@ fn main() {
         };
         let base = mcsharp::moe::MoeModel::new(&cfg, 0x5E21E);
         let (reqs_per_client, max_new) = if smoke { (2usize, 4usize) } else { (8, 16) };
-        for clients in [1usize, 8] {
+        // no gather window anywhere: every row runs the identical
+        // config, so speedups come purely from requests overlapping in
+        // the shared active set (a window would tax the serial rows'
+        // idle→busy transitions and bias the comparison)
+        let sc = mcsharp::config::ServingConfig { max_batch: 8, ..Default::default() };
+        // one serve_with run over a fresh engine; `drive` does the
+        // client work; returns (wall seconds, lifetime engine steps)
+        let run = |total: usize, drive: &(dyn Fn(std::net::SocketAddr) + Sync)| -> (f64, u64) {
             let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
-            let total = clients * reqs_per_client;
             let steps = std::sync::atomic::AtomicU64::new(0);
             let t0 = std::time::Instant::now();
             std::thread::scope(|s| {
@@ -222,46 +232,77 @@ fn main() {
                         &be,
                         None,
                     ));
-                    // no gather window: both rows run the identical
-                    // config, so the 8-client speedup comes purely from
-                    // requests overlapping in the shared active set (a
-                    // window would tax the 1-client row's idle→busy
-                    // transitions and bias the comparison)
-                    let sc = mcsharp::config::ServingConfig {
-                        max_batch: 8,
-                        ..Default::default()
-                    };
                     mcsharp::coordinator::server::serve_with(listener, &engine, &sc, Some(total))
                         .unwrap();
                     let eng = engine.lock().unwrap();
                     steps.store(eng.metrics.steps, std::sync::atomic::Ordering::Relaxed);
                 });
-                for c in 0..clients {
-                    s.spawn(move || {
-                        use std::io::{BufRead, BufReader, Write};
-                        let mut stream = std::net::TcpStream::connect(addr).unwrap();
-                        let mut reader = BufReader::new(stream.try_clone().unwrap());
-                        let mut line = String::new();
-                        for r in 0..reqs_per_client {
-                            let prompt = format!("1,{},{}", 2 + c, 3 + r);
-                            stream
-                                .write_all(format!("GEN {max_new} {prompt}\n").as_bytes())
-                                .unwrap();
-                            line.clear();
-                            reader.read_line(&mut line).unwrap();
-                            assert!(line.starts_with("OK "), "{line}");
-                        }
-                    });
-                }
+                drive(addr);
             });
             let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            (dt, steps.load(std::sync::atomic::Ordering::Relaxed))
+        };
+        fn prompt(c: usize, r: usize) -> Vec<u16> {
+            vec![1u16, (2 + c) as u16, (3 + r) as u16]
+        }
+        // (a) concurrent clients, each lockstep — batching is
+        // cross-connection
+        for clients in [1usize, 8] {
+            let total = clients * reqs_per_client;
+            let (dt, steps) = run(total, &|addr| {
+                std::thread::scope(|cs| {
+                    for c in 0..clients {
+                        cs.spawn(move || {
+                            let mut client = Client::connect(addr).unwrap();
+                            for r in 0..reqs_per_client {
+                                let out = client.gen(&prompt(c, r), max_new).unwrap();
+                                assert_eq!(out.tokens.len(), 3 + max_new);
+                            }
+                        });
+                    }
+                });
+            });
             println!(
-                "  {clients} client(s) x {reqs_per_client} reqs x {max_new} new tokens: \
+                "  {clients} client(s) x {reqs_per_client} reqs x {max_new} new tokens (lockstep): \
                  {:8.1} tok/s over {:3} engine steps",
                 (total * max_new) as f64 / dt,
-                steps.load(std::sync::atomic::Ordering::Relaxed),
+                steps,
             );
         }
+        // (b) ONE connection, serial vs pipelined — the protocol-v1
+        // acceptance row: tagged responses let a single client keep
+        // every request in flight, so its requests batch against each
+        // other (the CI bench-smoke gate exercises this v1 path on
+        // every PR)
+        let total = reqs_per_client * 4;
+        let reqs: Vec<(Vec<u16>, usize)> =
+            (0..total).map(|r| (prompt(r % 5, r / 5), max_new)).collect();
+        let (dt_serial, steps_serial) = run(total, &|addr| {
+            let mut client = Client::connect(addr).unwrap();
+            for (p, n) in &reqs {
+                let out = client.gen(p, *n).unwrap();
+                assert_eq!(out.tokens.len(), p.len() + n);
+            }
+        });
+        let (dt_pipe, steps_pipe) = run(total, &|addr| {
+            let mut client = Client::connect(addr).unwrap();
+            let outs = client.gen_pipelined(&reqs).unwrap();
+            assert_eq!(outs.len(), reqs.len());
+        });
+        println!(
+            "  1 conn x {total} reqs x {max_new} new tokens serial   : {:8.1} tok/s over {:3} engine steps",
+            (total * max_new) as f64 / dt_serial,
+            steps_serial,
+        );
+        println!(
+            "  1 conn x {total} reqs x {max_new} new tokens pipelined: {:8.1} tok/s over {:3} engine steps",
+            (total * max_new) as f64 / dt_pipe,
+            steps_pipe,
+        );
+        assert!(
+            steps_pipe < steps_serial,
+            "pipelining one connection must share engine steps: {steps_pipe} !< {steps_serial}"
+        );
     }
 
     if smoke {

@@ -154,6 +154,12 @@ pub struct ServingConfig {
     /// fills) after the first queued request so near-simultaneous
     /// requests share their first step. 0 = step immediately.
     pub batch_window_us: u64,
+    /// Bound on requests queued but not yet admitted (`--max-queue`);
+    /// 0 = unbounded (the historical behaviour). When the queue is at
+    /// the cap, new `GEN` submissions are refused immediately with a
+    /// `BUSY` response instead of growing the queue without limit — the
+    /// overload guardrail for real traffic.
+    pub max_queue: usize,
 }
 
 impl Default for ServingConfig {
@@ -164,6 +170,7 @@ impl Default for ServingConfig {
             expert_cache_mb: None,
             workers: 0,
             batch_window_us: 0,
+            max_queue: 0,
         }
     }
 }

@@ -42,14 +42,32 @@ pub struct ActiveSeq {
     /// When it was admitted to the active set.
     pub admitted: Instant,
     pub prompt_len: usize,
+    /// Request asked for per-token streaming (`stream=1` on the wire).
+    pub stream: bool,
+    /// Generated tokens already handed to the streaming sink — the
+    /// cursor [`take_unstreamed`](Self::take_unstreamed) advances.
+    streamed: usize,
 }
 
 impl ActiveSeq {
     fn new(req: GenRequest, submitted: Instant, n_layers: usize) -> ActiveSeq {
         let prompt_len = req.prompt.len();
+        let stream = req.stream;
         let mut seq = SeqState::new(req.id, req.prompt, req.max_new_tokens, n_layers);
         seq.sample = req.sample;
-        ActiveSeq { seq, submitted, admitted: Instant::now(), prompt_len }
+        ActiveSeq { seq, submitted, admitted: Instant::now(), prompt_len, stream, streamed: 0 }
+    }
+
+    /// Tokens generated since the last call (empty during prefill),
+    /// advancing the streaming cursor. The engine loop calls this after
+    /// every step for `stream` sequences — including the step that
+    /// finishes the sequence, so the final token is streamed before the
+    /// terminal `Done`.
+    pub fn take_unstreamed(&mut self) -> &[u16] {
+        let start = self.prompt_len + self.streamed;
+        let end = self.prompt_len + self.seq.generated;
+        self.streamed = self.seq.generated;
+        &self.seq.tokens[start..end]
     }
 
     /// Token footprint this sequence holds against the budget: context
@@ -183,12 +201,14 @@ impl Batcher {
             if active[i].seq.done() {
                 let a = active.remove(i);
                 let lat = a.submitted.elapsed().as_micros() as u64;
+                let queue = a.admitted.duration_since(a.submitted).as_micros() as u64;
                 metrics.latencies_us.push(lat);
+                metrics.queue_waits_us.push(queue);
                 out.push(GenResult {
                     id: a.seq.id,
                     tokens: a.seq.tokens,
                     latency_us: lat,
-                    queue_us: a.admitted.duration_since(a.submitted).as_micros() as u64,
+                    queue_us: queue,
                     prompt_len: a.prompt_len,
                 });
             } else {

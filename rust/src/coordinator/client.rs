@@ -1,0 +1,282 @@
+//! Blocking client for the wire protocol — the one client
+//! implementation the round-trip tests, the protocol tests and the
+//! `perf_hotpath` serving bench all drive, so client-side grammar lives
+//! in exactly one place (`protocol::parse_response`).
+//!
+//! The client speaks v1 (tagged) exclusively: [`Client::submit_opts`]
+//! writes a `GEN id=..` line and returns its tag without waiting, which
+//! is what makes [`Client::gen_pipelined`] keep N requests in flight on
+//! one connection while the server's continuous batch decodes them
+//! together. [`Client::gen`] is the one-shot convenience (submit, then
+//! wait for that tag), [`Client::gen_stream`] surfaces `TOK` partials
+//! through a callback, and `BUSY` rejections are reported as
+//! [`ClientError::Busy`] so callers can implement backoff.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::protocol::{self, parse_response, Response};
+
+/// One completed generation as the wire reports it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenOutput {
+    /// Prompt + generated tokens, exactly what the engine produced.
+    pub tokens: Vec<u16>,
+    /// Submission-to-completion wall clock (µs), measured server-side.
+    pub latency_us: u64,
+    /// Time spent in the admission queue before the engine picked the
+    /// request up (µs).
+    pub queue_us: u64,
+}
+
+/// Options for [`Client::submit_opts`] beyond prompt and length.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GenOpts {
+    /// Scheduling class (`prio=`); higher admits first.
+    pub priority: u8,
+    /// Temperature sampling (`temp=`/`seed=`); greedy when `None`.
+    pub sample: Option<(f32, u64)>,
+    /// Ask for per-token `TOK` partials (`stream=1`).
+    pub stream: bool,
+}
+
+/// A server-side rejection the caller may want to branch on (`BUSY` is
+/// retryable overload; `Err` lines are terminal for that request).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientError {
+    /// The server's admission queue was full; resubmit later.
+    Busy { tag: u64 },
+    /// The server answered `ERR` for this tag.
+    Rejected { tag: Option<u64>, msg: String },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Busy { tag } => write!(f, "server busy (request {tag})"),
+            ClientError::Rejected { tag, msg } => match tag {
+                Some(t) => write!(f, "request {t} rejected: {msg}"),
+                None => write!(f, "rejected: {msg}"),
+            },
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Blocking protocol-v1 client over one TCP connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+    next_tag: u64,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let out = TcpStream::connect(addr)?;
+        let reader = BufReader::new(out.try_clone()?);
+        Ok(Client { reader, out, next_tag: 1 })
+    }
+
+    /// `PING` → `PONG` (connection liveness probe).
+    pub fn ping(&mut self) -> Result<()> {
+        self.out.write_all(b"PING\n")?;
+        match self.recv_response()? {
+            Response::Pong => Ok(()),
+            other => bail!("expected PONG, got {other:?}"),
+        }
+    }
+
+    /// Write one tagged `GEN` line and return its tag **without waiting
+    /// for the response** — the pipelining primitive. Responses for
+    /// outstanding tags arrive via [`recv_response`](Self::recv_response)
+    /// in retirement order, not submission order.
+    pub fn submit(&mut self, prompt: &[u16], max_new: usize) -> Result<u64> {
+        self.submit_opts(prompt, max_new, GenOpts::default())
+    }
+
+    /// [`submit`](Self::submit) with priority/sampling/streaming
+    /// options. The line is formatted by
+    /// [`protocol::format_gen`](crate::coordinator::protocol::format_gen)
+    /// — the same module that parses it server-side.
+    pub fn submit_opts(&mut self, prompt: &[u16], max_new: usize, opts: GenOpts) -> Result<u64> {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let line =
+            protocol::format_gen(tag, prompt, max_new, opts.priority, opts.sample, opts.stream);
+        self.out.write_all(line.as_bytes())?;
+        Ok(tag)
+    }
+
+    /// Read and parse the next response line (blocking). Response lines
+    /// are deliberately *not* length-capped: `MAX_LINE_BYTES` is the
+    /// server's defense against untrusted clients, while a legal `OK`
+    /// for a long generation can be arbitrarily large — the client
+    /// trusts the server it connected to.
+    pub fn recv_response(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
+        parse_response(&line)
+    }
+
+    /// Submit one request and block for its result (lockstep
+    /// convenience; ignores nothing — any interleaved response for a
+    /// different tag is an error, so use it only when this client has no
+    /// other requests in flight).
+    pub fn gen(&mut self, prompt: &[u16], max_new: usize) -> Result<GenOutput> {
+        let tag = self.submit(prompt, max_new)?;
+        let mut got = self.collect_tags(&[tag])?;
+        Ok(got.remove(&tag).expect("collect_tags returned the tag"))
+    }
+
+    /// Pipeline every request on this one connection — all submitted
+    /// before any response is read — then gather the out-of-order tagged
+    /// responses. Returns outputs in **submission order**. A `BUSY` or
+    /// `ERR` for any tag fails the whole call, but only after every
+    /// outstanding tag's terminal response has been drained, so the
+    /// connection stays usable afterwards (callers wanting per-tag
+    /// handling drive [`submit_opts`](Self::submit_opts) /
+    /// [`recv_response`](Self::recv_response) directly).
+    pub fn gen_pipelined(&mut self, reqs: &[(Vec<u16>, usize)]) -> Result<Vec<GenOutput>> {
+        let mut tags = Vec::with_capacity(reqs.len());
+        for (prompt, max_new) in reqs {
+            tags.push(self.submit(prompt, *max_new)?);
+        }
+        let mut by_tag = self.collect_tags(&tags)?;
+        Ok(tags
+            .iter()
+            .map(|t| by_tag.remove(t).expect("collect_tags returned every tag"))
+            .collect())
+    }
+
+    /// Submit with `stream=1` and invoke `on_tok` for every `TOK`
+    /// partial as it arrives, returning the terminal result (whose tail
+    /// repeats the streamed tokens).
+    pub fn gen_stream(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        mut on_tok: impl FnMut(u16),
+    ) -> Result<GenOutput> {
+        let tag =
+            self.submit_opts(prompt, max_new, GenOpts { stream: true, ..Default::default() })?;
+        loop {
+            match self.recv_response()? {
+                Response::Tok { tag: t, token } if t == tag => on_tok(token),
+                Response::Ok { tag: Some(t), latency_us, queue_us, tokens } if t == tag => {
+                    return Ok(GenOutput { tokens, latency_us, queue_us });
+                }
+                Response::Busy { tag: t } if t == tag => {
+                    return Err(ClientError::Busy { tag }.into());
+                }
+                Response::Err { tag: t, msg } if t == Some(tag) || t.is_none() => {
+                    return Err(ClientError::Rejected { tag: t, msg }.into());
+                }
+                other => bail!("unexpected response while streaming {tag}: {other:?}"),
+            }
+        }
+    }
+
+    /// Gather a terminal response (`OK`/`BUSY`/tagged `ERR`) for every
+    /// tag in `tags` (in any arrival order), tolerating stray `TOK`
+    /// partials. Always drains *all* the tags before reporting the first
+    /// failure — leaving terminal responses unread would desynchronize
+    /// every later call on this connection.
+    fn collect_tags(&mut self, tags: &[u64]) -> Result<HashMap<u64, GenOutput>> {
+        let mut out = HashMap::with_capacity(tags.len());
+        let mut terminal: HashSet<u64> = HashSet::with_capacity(tags.len());
+        let mut failed: Option<ClientError> = None;
+        while terminal.len() < tags.len() {
+            match self.recv_response()? {
+                Response::Ok { tag: Some(t), latency_us, queue_us, tokens }
+                    if tags.contains(&t) =>
+                {
+                    terminal.insert(t);
+                    out.insert(t, GenOutput { tokens, latency_us, queue_us });
+                }
+                Response::Tok { tag: t, .. } if tags.contains(&t) => {}
+                Response::Busy { tag: t } if tags.contains(&t) => {
+                    terminal.insert(t);
+                    failed.get_or_insert(ClientError::Busy { tag: t });
+                }
+                Response::Err { tag: Some(t), msg } if tags.contains(&t) => {
+                    terminal.insert(t);
+                    failed.get_or_insert(ClientError::Rejected { tag: Some(t), msg });
+                }
+                // an untagged ERR cannot be attributed to a tag, so the
+                // connection state is unknowable — surface immediately
+                Response::Err { tag, msg } => {
+                    return Err(ClientError::Rejected { tag, msg }.into());
+                }
+                other => bail!("unexpected response: {other:?}"),
+            }
+        }
+        match failed {
+            None => Ok(out),
+            Some(e) => Err(e.into()),
+        }
+    }
+
+    /// `STATS` → the raw `k=v` payload.
+    pub fn stats(&mut self) -> Result<String> {
+        self.out.write_all(b"STATS\n")?;
+        match self.recv_response()? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("expected STATS, got {other:?}"),
+        }
+    }
+
+    /// One field of the `STATS` payload, parsed.
+    pub fn stats_field(&mut self, key: &str) -> Result<f64> {
+        let stats = self.stats()?;
+        stats
+            .split_whitespace()
+            .find_map(|f| f.strip_prefix(key).and_then(|f| f.strip_prefix('=')))
+            .ok_or_else(|| anyhow!("STATS has no field {key:?}: {stats}"))?
+            .parse()
+            .map_err(|e| anyhow!("STATS {key}: {e}"))
+    }
+
+    /// `METRICS` → the raw JSON payload.
+    pub fn metrics_json(&mut self) -> Result<String> {
+        self.out.write_all(b"METRICS\n")?;
+        match self.recv_response()? {
+            Response::Metrics(s) => Ok(s),
+            other => bail!("expected METRICS, got {other:?}"),
+        }
+    }
+
+    /// `METRICS`, parsed into the crate's JSON value.
+    pub fn metrics_value(&mut self) -> Result<crate::util::json::Value> {
+        crate::util::json::Value::parse(&self.metrics_json()?)
+    }
+
+    /// Ask the server to close this connection (`QUIT`), consuming the
+    /// client. In-flight requests still drain server-side; their
+    /// responses are discarded with the socket.
+    pub fn quit(mut self) -> Result<()> {
+        self.out.write_all(b"QUIT\n")?;
+        Ok(())
+    }
+
+    /// Send a raw protocol line — escape hatch for tests that exercise
+    /// malformed input or the legacy v0 dialect through the same
+    /// connection.
+    pub fn send_raw(&mut self, line: &str) -> Result<()> {
+        self.out.write_all(line.as_bytes())?;
+        if !line.ends_with('\n') {
+            self.out.write_all(b"\n")?;
+        }
+        Ok(())
+    }
+}
+
+// The request-line grammar round-trip (format_gen → parse_command) is
+// tested next to the formatter in protocol::tests; Client behaviour
+// over real sockets is covered by rust/tests/protocol_v1.rs and
+// rust/tests/server_roundtrip.rs.

@@ -11,6 +11,9 @@ use crate::quant::store::CacheCounters;
 pub struct Metrics {
     /// Per-request end-to-end latency (µs).
     pub latencies_us: Vec<u64>,
+    /// Per-request queue wait before admission (µs) — same order as
+    /// `latencies_us`, pushed together at retirement.
+    pub queue_waits_us: Vec<u64>,
     /// Decoded tokens total.
     pub tokens_out: u64,
     /// Prompt tokens processed.
@@ -82,12 +85,27 @@ impl Metrics {
     }
 
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        v[((v.len() - 1) as f64 * p).round() as usize]
+        percentiles(&self.latencies_us, &[p])[0]
+    }
+
+    /// Queue-wait percentile (µs) — how long requests sat in the
+    /// admission queue before the engine picked them up.
+    pub fn queue_percentile_us(&self, p: f64) -> u64 {
+        percentiles(&self.queue_waits_us, &[p])[0]
+    }
+
+    /// Several latency percentiles with **one** clone+sort of the sample
+    /// — the `STATS`/`METRICS` scrape path runs under the engine lock,
+    /// so per-percentile re-sorts of server-lifetime vectors would stall
+    /// the decode loop for nothing.
+    pub fn latency_percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
+        percentiles(&self.latencies_us, ps)
+    }
+
+    /// Several queue-wait percentiles with one clone+sort (see
+    /// [`latency_percentiles_us`](Self::latency_percentiles_us)).
+    pub fn queue_percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
+        percentiles(&self.queue_waits_us, ps)
     }
 
     /// Mean activated routed-expert bytes per decoded token.
@@ -105,15 +123,19 @@ impl Metrics {
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::{num, obj};
         let c = self.cache.unwrap_or_default();
+        let lat = self.latency_percentiles_us(&[0.5, 0.95, 0.99]);
+        let queue = self.queue_percentiles_us(&[0.5, 0.95]);
         obj(vec![
             ("tokens_out", num(self.tokens_out as f64)),
             ("tokens_in", num(self.tokens_in as f64)),
             ("steps", num(self.steps as f64)),
             ("requests", num(self.latencies_us.len() as f64)),
             ("tokens_per_sec", num(self.tokens_per_sec())),
-            ("latency_p50_us", num(self.latency_percentile_us(0.5) as f64)),
-            ("latency_p95_us", num(self.latency_percentile_us(0.95) as f64)),
-            ("latency_p99_us", num(self.latency_percentile_us(0.99) as f64)),
+            ("latency_p50_us", num(lat[0] as f64)),
+            ("latency_p95_us", num(lat[1] as f64)),
+            ("latency_p99_us", num(lat[2] as f64)),
+            ("queue_p50_us", num(queue[0] as f64)),
+            ("queue_p95_us", num(queue[1] as f64)),
             ("pruning_ratio", num(self.pruning_ratio())),
             ("routed_bytes_per_token", num(self.routed_bytes_per_token())),
             ("experts_kept", num(self.experts_kept as f64)),
@@ -127,6 +149,17 @@ impl Metrics {
             ("cache_hit_rate", num(c.hit_rate())),
         ])
     }
+}
+
+fn percentiles(v: &[u64], ps: &[f64]) -> Vec<u64> {
+    if v.is_empty() {
+        return vec![0; ps.len()];
+    }
+    let mut sorted = v.to_vec();
+    sorted.sort_unstable();
+    ps.iter()
+        .map(|p| sorted[((sorted.len() - 1) as f64 * p).round() as usize])
+        .collect()
 }
 
 #[cfg(test)]
@@ -178,6 +211,14 @@ mod tests {
         m.latencies_us = vec![10, 20, 30, 40, 100];
         assert_eq!(m.latency_percentile_us(0.5), 30);
         assert_eq!(m.latency_percentile_us(1.0), 100);
+        m.queue_waits_us = vec![1, 2, 3, 4, 50];
+        assert_eq!(m.queue_percentile_us(0.5), 3);
+        assert_eq!(m.queue_percentile_us(1.0), 50);
+        assert_eq!(Metrics::default().queue_percentile_us(0.95), 0);
+        // batched scrape path: one sort, same answers
+        assert_eq!(m.latency_percentiles_us(&[0.5, 1.0]), vec![30, 100]);
+        assert_eq!(m.queue_percentiles_us(&[0.5, 1.0]), vec![3, 50]);
+        assert_eq!(Metrics::default().latency_percentiles_us(&[0.5, 0.95]), vec![0, 0]);
         m.experts_kept = 80;
         m.experts_offered = 100;
         assert!((m.pruning_ratio() - 0.2).abs() < 1e-12);

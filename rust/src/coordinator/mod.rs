@@ -3,8 +3,12 @@
 //! vLLM-router-shaped: every client connection feeds one shared
 //! [`Scheduler`] admission queue; a single long-lived engine thread runs
 //! the continuous-batching loop (admit → step → retire, never torn down
-//! between requests), so sequences from different connections share
-//! engine steps. Each engine step decodes one token for every active
+//! between requests), so sequences from different connections — and
+//! pipelined requests from the *same* connection, via the tagged
+//! [`protocol`] v1 and each connection's reader/writer demux — share
+//! engine steps. The admission queue is bounded ([`SubmitError::Busy`]
+//! → wire `BUSY`), and [`client::Client`] is the blocking counterpart
+//! every test and bench drives. Each engine step decodes one token for every active
 //! sequence. Per layer the engine routes tokens (softmax top-k), applies
 //! the OTP pruner, groups the surviving (token, expert) pairs **by
 //! expert** across the whole batch, executes each expert once over its
@@ -14,14 +18,18 @@
 //! activated-parameter bytes — the quantities of Tables 5 and 8.
 
 pub mod batcher;
+pub mod client;
 pub mod engine;
 pub mod metrics;
+pub mod protocol;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{ActiveSeq, Batcher, Policy};
+pub use client::{Client, ClientError, GenOpts, GenOutput};
 pub use engine::{DecodeEngine, EngineModel};
 pub use metrics::Metrics;
-pub use request::{GenRequest, GenResult};
-pub use scheduler::Scheduler;
+pub use protocol::{parse_command, Command, Response};
+pub use request::{GenRequest, GenResult, SeqEvent};
+pub use scheduler::{Scheduler, SubmitError};

@@ -1,0 +1,634 @@
+//! Wire protocol for the generation service — the single place where
+//! protocol lines are parsed and formatted, shared by the server, the
+//! [`Client`](crate::coordinator::client::Client), the protocol tests
+//! and the serving benches, so the grammar cannot drift between them.
+//!
+//! Two request dialects share one parser ([`parse_command`]):
+//!
+//! **v1 (tagged, pipelined)** — requests carry a client-chosen `id` tag
+//! and responses echo it, so one connection can keep many requests in
+//! flight and receive responses out of order as they retire:
+//!
+//! ```text
+//! GEN id=<u64> max_new=<n> [prio=<p>] [temp=<t> seed=<s>] [stream=1] toks=<t0,t1,...>
+//!   → OK id=<id> latency_us=<µs> queue_us=<µs> toks=<t0,t1,...>      (terminal)
+//!   → TOK id=<id> t=<tok>            (streaming partial, one per engine step; stream=1 only)
+//!   → ERR id=<id> msg=<text>         (terminal)
+//!   → BUSY id=<id>                   (terminal: admission queue full, resubmit later)
+//! ```
+//!
+//! **v0 (legacy, lockstep)** — the original untagged lines, still
+//! accepted verbatim so old clients keep working:
+//!
+//! ```text
+//! GEN <max_new> <t0,t1,...>   → OK <t0,t1,...>   |   ERR <msg>
+//! ```
+//!
+//! Control lines are shared by both dialects: `PING` → `PONG`,
+//! `STATS` → one `STATS k=v ...` line, `METRICS` → `METRICS {json}`,
+//! `QUIT` → server closes the connection. Responses to a v1 request are
+//! always tagged; responses to v0 requests and control lines never are.
+//! `id` tags are namespaced per connection — two connections may both
+//! use `id=1` — and within a connection the client is responsible for
+//! not reusing a tag while it is still in flight.
+
+use std::io::BufRead;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::request::{GenRequest, GenResult};
+
+/// Highest request-dialect revision this parser understands.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one protocol line (bytes, newline included). A line that
+/// reaches the cap without a newline is answered with `ERR` and the
+/// remainder of the oversized line is discarded — bounded memory per
+/// connection no matter what a client sends.
+pub const MAX_LINE_BYTES: usize = 256 * 1024;
+
+/// One parsed generation request as it appeared on the wire. The server
+/// assigns the internal scheduler id; `tag` is the client's namespace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireGen {
+    /// Client-supplied `id=` tag (v1). `None` = legacy v0 line, whose
+    /// response is untagged.
+    pub tag: Option<u64>,
+    pub max_new: usize,
+    /// Scheduling class (`prio=`, v1 only; 0 = default batch traffic).
+    pub priority: u8,
+    /// `temp=`/`seed=` sampling (v1 only); greedy when absent.
+    pub sample: Option<(f32, u64)>,
+    /// `stream=1` (v1 only): emit `TOK` partials as tokens decode.
+    pub stream: bool,
+    pub toks: Vec<u16>,
+}
+
+impl WireGen {
+    /// Materialize the scheduler-side request under a server-assigned
+    /// internal id (client tags are per-connection, internal ids are
+    /// per-server — the mapping back to the tag lives in the response
+    /// route, not here).
+    pub fn into_request(self, internal_id: u64) -> GenRequest {
+        let mut req = GenRequest::greedy(internal_id, self.toks, self.max_new)
+            .with_priority(self.priority)
+            .with_stream(self.stream);
+        req.sample = self.sample;
+        req
+    }
+}
+
+/// One parsed protocol line.
+#[derive(Debug)]
+pub enum Command {
+    Gen(WireGen),
+    Ping,
+    Stats,
+    Metrics,
+    Quit,
+    /// Blank line — ignored, no response.
+    Empty,
+}
+
+/// Parse one protocol line — the single dispatch point for control
+/// commands and generation requests, v0 and v1 alike.
+pub fn parse_command(line: &str) -> Result<Command> {
+    let line = line.trim();
+    match line {
+        "" => return Ok(Command::Empty),
+        "PING" => return Ok(Command::Ping),
+        "STATS" => return Ok(Command::Stats),
+        "METRICS" => return Ok(Command::Metrics),
+        "QUIT" => return Ok(Command::Quit),
+        _ => {}
+    }
+    let mut parts = line.splitn(2, ' ');
+    match parts.next() {
+        Some("GEN") => {
+            let rest = parts.next().ok_or_else(|| anyhow!("GEN missing arguments"))?;
+            // v1 iff the first argument is a key=value pair; a bare
+            // number is the v0 positional max_new. First *non-empty*
+            // word: the v1 parser tolerates repeated spaces, so the
+            // dialect detection must too.
+            if rest.split(' ').find(|w| !w.is_empty()).is_some_and(|w| w.contains('=')) {
+                parse_gen_v1(rest).map(Command::Gen)
+            } else {
+                parse_gen_v0(rest).map(Command::Gen)
+            }
+        }
+        Some(cmd) => bail!("unknown command {cmd:?}"),
+        // splitn on a non-empty string always yields a first part, and
+        // blank lines returned Command::Empty above
+        None => unreachable!("blank line handled before the verb match"),
+    }
+}
+
+/// Legacy positional form: `<max_new> <t0,t1,...>`.
+fn parse_gen_v0(rest: &str) -> Result<WireGen> {
+    let mut parts = rest.splitn(2, ' ');
+    let max_new: usize = parts
+        .next()
+        .ok_or_else(|| anyhow!("GEN missing max_new"))?
+        .parse()?;
+    let toks = parse_toks(parts.next().ok_or_else(|| anyhow!("GEN missing tokens"))?)?;
+    Ok(WireGen { tag: None, max_new, priority: 0, sample: None, stream: false, toks })
+}
+
+/// Tagged form: `id=<u64> max_new=<n> [prio=<p>] [temp=<t> seed=<s>]
+/// [stream=0|1] toks=<t0,...>`, keys in any order, each at most once.
+fn parse_gen_v1(rest: &str) -> Result<WireGen> {
+    let (mut tag, mut max_new, mut prio) = (None, None, None);
+    let (mut temp, mut seed, mut stream, mut toks) = (None, None, None, None);
+    for word in rest.split(' ').filter(|w| !w.is_empty()) {
+        let (key, val) = word
+            .split_once('=')
+            .ok_or_else(|| anyhow!("GEN expected key=value, got {word:?}"))?;
+        let duplicate = match key {
+            "id" => tag
+                .replace(val.parse::<u64>().map_err(|e| anyhow!("id={val:?}: {e}"))?)
+                .is_some(),
+            "max_new" => max_new
+                .replace(val.parse::<usize>().map_err(|e| anyhow!("max_new={val:?}: {e}"))?)
+                .is_some(),
+            "prio" => prio
+                .replace(val.parse::<u8>().map_err(|e| anyhow!("prio={val:?}: {e}"))?)
+                .is_some(),
+            "temp" => temp
+                .replace(val.parse::<f32>().map_err(|e| anyhow!("temp={val:?}: {e}"))?)
+                .is_some(),
+            "seed" => seed
+                .replace(val.parse::<u64>().map_err(|e| anyhow!("seed={val:?}: {e}"))?)
+                .is_some(),
+            "stream" => stream
+                .replace(match val {
+                    "0" => false,
+                    "1" => true,
+                    _ => bail!("stream={val:?} (expected 0 or 1)"),
+                })
+                .is_some(),
+            "toks" => toks.replace(parse_toks(val)?).is_some(),
+            _ => bail!("unknown GEN key {key:?}"),
+        };
+        if duplicate {
+            bail!("duplicate GEN key {key:?}");
+        }
+    }
+    let tag = tag.ok_or_else(|| anyhow!("v1 GEN missing id="))?;
+    let max_new = max_new.ok_or_else(|| anyhow!("v1 GEN missing max_new="))?;
+    let toks = toks.ok_or_else(|| anyhow!("v1 GEN missing toks="))?;
+    let sample = match (temp, seed) {
+        (Some(t), s) => {
+            if !(t.is_finite() && t > 0.0) {
+                bail!("temp must be finite and > 0, got {t}");
+            }
+            Some((t, s.unwrap_or(0)))
+        }
+        (None, Some(_)) => bail!("seed= without temp="),
+        (None, None) => None,
+    };
+    Ok(WireGen {
+        tag: Some(tag),
+        max_new,
+        priority: prio.unwrap_or(0),
+        sample,
+        stream: stream.unwrap_or(false),
+        toks,
+    })
+}
+
+/// Best-effort tag recovery for a line that failed [`parse_command`]:
+/// if it is a `GEN` line carrying a parseable `id=<u64>`, return that
+/// tag so the `ERR` response can stay attributable — a pipelined client
+/// must be able to mark the tag terminal instead of waiting forever.
+/// Control lines and v0 `GEN`s never carry tags, so `None` is correct
+/// for them.
+pub fn salvage_tag(line: &str) -> Option<u64> {
+    let rest = line.trim().strip_prefix("GEN ")?;
+    rest.split(' ')
+        .find_map(|w| w.strip_prefix("id="))
+        .and_then(|v| v.parse().ok())
+}
+
+fn parse_toks(csv: &str) -> Result<Vec<u16>> {
+    if csv.trim().is_empty() {
+        bail!("empty prompt");
+    }
+    csv.split(',')
+        .map(|t| t.trim().parse::<u16>().map_err(|e| anyhow!("token {t:?}: {e}")))
+        .collect()
+}
+
+/// Outcome of [`read_command_line`].
+pub enum LineRead {
+    /// A complete line (newline stripped by the caller's parse).
+    Line,
+    /// Clean end of stream.
+    Eof,
+    /// The line hit `max` bytes without a newline; the rest of the
+    /// oversized line has been consumed and discarded. Answer `ERR`.
+    Oversized,
+}
+
+/// Read one protocol line into `buf` (cleared first), refusing to buffer
+/// more than `max` bytes of it. On overflow the remainder of the line is
+/// drained from the reader so the connection stays line-synchronized.
+pub fn read_command_line(
+    reader: &mut impl BufRead,
+    buf: &mut String,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut raw = Vec::with_capacity(128);
+    let n = (&mut *reader).take(max as u64).read_until(b'\n', &mut raw)?;
+    if n == 0 {
+        return Ok(LineRead::Eof);
+    }
+    if n == max && raw.last() != Some(&b'\n') {
+        // drain to the newline (or EOF) without buffering
+        loop {
+            let mut byte = [0u8; 1];
+            match std::io::Read::read(reader, &mut byte)? {
+                0 => break,
+                _ if byte[0] == b'\n' => break,
+                _ => {}
+            }
+        }
+        return Ok(LineRead::Oversized);
+    }
+    // invalid UTF-8 is a parse error, not a connection error: replace and
+    // let parse_command reject the garbled verb with a normal ERR
+    *buf = String::from_utf8_lossy(&raw).into_owned();
+    Ok(LineRead::Line)
+}
+
+// ---- response formatting (server side) ----
+
+fn fmt_toks(tokens: &[u16]) -> String {
+    let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    toks.join(",")
+}
+
+/// Format a v1 request line — the client side of [`parse_gen_v1`],
+/// kept here with the parser so the grammar cannot drift (the `Client`
+/// writes exactly this). Optional keys are omitted at their defaults.
+pub fn format_gen(
+    tag: u64,
+    prompt: &[u16],
+    max_new: usize,
+    priority: u8,
+    sample: Option<(f32, u64)>,
+    stream: bool,
+) -> String {
+    let mut line = format!("GEN id={tag} max_new={max_new}");
+    if priority > 0 {
+        line.push_str(&format!(" prio={priority}"));
+    }
+    if let Some((temp, seed)) = sample {
+        line.push_str(&format!(" temp={temp} seed={seed}"));
+    }
+    if stream {
+        line.push_str(" stream=1");
+    }
+    line.push_str(&format!(" toks={}\n", fmt_toks(prompt)));
+    line
+}
+
+/// Untagged v0 success line.
+pub fn format_ok_v0(tokens: &[u16]) -> String {
+    format!("OK {}\n", fmt_toks(tokens))
+}
+
+/// Tagged v1 success line — surfaces the per-request latency and queue
+/// wait the engine already measured.
+pub fn format_ok(tag: u64, r: &GenResult) -> String {
+    format!(
+        "OK id={tag} latency_us={} queue_us={} toks={}\n",
+        r.latency_us,
+        r.queue_us,
+        fmt_toks(&r.tokens)
+    )
+}
+
+/// One streamed token (v1 `stream=1` requests only).
+pub fn format_tok(tag: u64, token: u16) -> String {
+    format!("TOK id={tag} t={token}\n")
+}
+
+/// Error line: tagged for v1 requests, bare `ERR <msg>` for v0 and for
+/// lines that never parsed far enough to carry a tag. Newlines in `msg`
+/// are flattened so the response stays one line.
+pub fn format_err(tag: Option<u64>, msg: &str) -> String {
+    let msg = msg.replace(['\n', '\r'], " ");
+    match tag {
+        Some(tag) => format!("ERR id={tag} msg={msg}\n"),
+        None => format!("ERR {msg}\n"),
+    }
+}
+
+/// Admission-queue-full overload signal (v1 only; terminal for the tag).
+pub fn format_busy(tag: u64) -> String {
+    format!("BUSY id={tag}\n")
+}
+
+// ---- response parsing (client side) ----
+
+/// One parsed response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Terminal success. `tag`/`latency_us`/`queue_us` are `None`/0 for
+    /// untagged v0 responses.
+    Ok { tag: Option<u64>, latency_us: u64, queue_us: u64, tokens: Vec<u16> },
+    /// Streaming partial.
+    Tok { tag: u64, token: u16 },
+    /// Terminal overload rejection.
+    Busy { tag: u64 },
+    /// Terminal error (tagged when the request parsed far enough).
+    Err { tag: Option<u64>, msg: String },
+    Pong,
+    /// Raw `STATS` payload (`k=v` fields).
+    Stats(String),
+    /// Raw `METRICS` payload (JSON).
+    Metrics(String),
+}
+
+fn parse_kv<'a>(word: &'a str, key: &str) -> Result<&'a str> {
+    word.strip_prefix(key)
+        .and_then(|w| w.strip_prefix('='))
+        .ok_or_else(|| anyhow!("expected {key}=, got {word:?}"))
+}
+
+/// Parse one server response line (the inverse of the formatters above).
+pub fn parse_response(line: &str) -> Result<Response> {
+    let line = line.trim_end_matches(['\n', '\r']);
+    if line == "PONG" {
+        return Ok(Response::Pong);
+    }
+    if let Some(rest) = line.strip_prefix("STATS ") {
+        return Ok(Response::Stats(rest.to_string()));
+    }
+    if let Some(rest) = line.strip_prefix("METRICS ") {
+        return Ok(Response::Metrics(rest.to_string()));
+    }
+    if let Some(rest) = line.strip_prefix("BUSY ") {
+        return Ok(Response::Busy { tag: parse_kv(rest, "id")?.parse()? });
+    }
+    if let Some(rest) = line.strip_prefix("TOK ") {
+        let mut w = rest.splitn(2, ' ');
+        let tag = parse_kv(w.next().unwrap_or(""), "id")?.parse()?;
+        let token = parse_kv(w.next().ok_or_else(|| anyhow!("TOK missing t="))?, "t")?
+            .parse()?;
+        return Ok(Response::Tok { tag, token });
+    }
+    if let Some(rest) = line.strip_prefix("OK ") {
+        if !rest.starts_with("id=") {
+            return Ok(Response::Ok {
+                tag: None,
+                latency_us: 0,
+                queue_us: 0,
+                tokens: parse_toks(rest)?,
+            });
+        }
+        let mut w = rest.splitn(4, ' ');
+        let tag = parse_kv(w.next().unwrap_or(""), "id")?.parse()?;
+        let latency_us = parse_kv(w.next().ok_or_else(|| anyhow!("OK missing latency_us="))?, "latency_us")?
+            .parse()?;
+        let queue_us = parse_kv(w.next().ok_or_else(|| anyhow!("OK missing queue_us="))?, "queue_us")?
+            .parse()?;
+        let tokens = parse_toks(parse_kv(w.next().ok_or_else(|| anyhow!("OK missing toks="))?, "toks")?)?;
+        return Ok(Response::Ok { tag: Some(tag), latency_us, queue_us, tokens });
+    }
+    if let Some(rest) = line.strip_prefix("ERR ") {
+        // try the tagged form first, but fall back to untagged rather
+        // than failing: an untagged error *message* may itself begin
+        // with "id=" (e.g. the rejection of an unparseable id= key)
+        if let Some(tagged) = parse_tagged_err(rest) {
+            return Ok(tagged);
+        }
+        return Ok(Response::Err { tag: None, msg: rest.to_string() });
+    }
+    bail!("unparseable response line {line:?}")
+}
+
+/// `id=<u64> msg=<text>` if `rest` is exactly the tagged-ERR shape.
+fn parse_tagged_err(rest: &str) -> Option<Response> {
+    let after_id = rest.strip_prefix("id=")?;
+    let (tag, msg_part) = after_id.split_once(' ')?;
+    let tag = tag.parse().ok()?;
+    let msg = msg_part.strip_prefix("msg=")?;
+    Some(Response::Err { tag: Some(tag), msg: msg.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v0_gen_still_parses_unchanged() {
+        let Command::Gen(g) = parse_command("GEN 8 1,2,3").unwrap() else {
+            panic!("not a GEN")
+        };
+        assert_eq!(g.tag, None);
+        assert_eq!(g.max_new, 8);
+        assert_eq!(g.toks, vec![1, 2, 3]);
+        assert!(!g.stream && g.sample.is_none() && g.priority == 0);
+    }
+
+    #[test]
+    fn v1_gen_full_grammar() {
+        let line = "GEN id=42 max_new=6 prio=3 temp=0.8 seed=7 stream=1 toks=1,17,30";
+        let Command::Gen(g) = parse_command(line).unwrap() else { panic!("not a GEN") };
+        assert_eq!(g.tag, Some(42));
+        assert_eq!(g.max_new, 6);
+        assert_eq!(g.priority, 3);
+        assert_eq!(g.sample, Some((0.8, 7)));
+        assert!(g.stream);
+        assert_eq!(g.toks, vec![1, 17, 30]);
+        // minimal form + key order freedom
+        let Command::Gen(g) = parse_command("GEN toks=5 max_new=1 id=0").unwrap() else {
+            panic!("not a GEN")
+        };
+        assert_eq!((g.tag, g.max_new, &g.toks[..]), (Some(0), 1, &[5][..]));
+    }
+
+    #[test]
+    fn control_verbs_parse() {
+        assert!(matches!(parse_command("PING").unwrap(), Command::Ping));
+        assert!(matches!(parse_command("STATS").unwrap(), Command::Stats));
+        assert!(matches!(parse_command("METRICS").unwrap(), Command::Metrics));
+        assert!(matches!(parse_command("QUIT").unwrap(), Command::Quit));
+        assert!(matches!(parse_command("  \n").unwrap(), Command::Empty));
+    }
+
+    /// Satellite: table-driven malformed inputs — every row must be a
+    /// clean parse error (no panic), v0 and v1 alike.
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        let bad = [
+            "NOPE 1",
+            "GEN",
+            "GEN 8",
+            "GEN x 1,2",
+            "GEN 8 ",
+            "GEN 8 1,,2",
+            "GEN 8 1,99999",
+            "GEN 8 1,-2",
+            "GEN id=1",                              // v1 missing max_new/toks
+            "GEN id=1 max_new=4",                    // missing toks
+            "GEN max_new=4 toks=1,2",                // missing id
+            "GEN id=x max_new=4 toks=1,2",           // bad tag
+            "GEN id=1 max_new=4 toks=",              // empty token list
+            "GEN id=1 max_new=4 toks=1,2 toks=3",    // duplicate key
+            "GEN id=1 id=2 max_new=4 toks=1",        // duplicate id
+            "GEN id=1 max_new=4 bogus=1 toks=1",     // unknown key
+            "GEN id=1 max_new=4 stream=2 toks=1",    // bad stream flag
+            "GEN id=1 max_new=4 seed=3 toks=1",      // seed without temp
+            "GEN id=1 max_new=4 temp=0 toks=1",      // non-positive temp
+            "GEN id=1 max_new=4 temp=nan toks=1",    // non-finite temp
+            "GEN id=1 max_new=nope toks=1",
+        ];
+        for line in bad {
+            assert!(parse_command(line).is_err(), "{line:?} must not parse");
+        }
+    }
+
+    /// A malformed v1 GEN whose `id=` did parse must still yield its tag
+    /// for the ERR response (terminal-per-tag guarantee); lines without
+    /// a recoverable tag yield `None`.
+    #[test]
+    fn salvage_tag_recovers_parseable_ids_only() {
+        assert_eq!(salvage_tag("GEN id=4 max_new=2 toks=1,,2"), Some(4));
+        assert_eq!(salvage_tag("GEN max_new=2 id=9"), Some(9));
+        assert_eq!(salvage_tag("GEN id=x max_new=2 toks=1"), None);
+        assert_eq!(salvage_tag("GEN 8 1,2"), None); // v0: never tagged
+        assert_eq!(salvage_tag("BOGUS id=3"), None); // not a GEN line
+        assert_eq!(salvage_tag("STATS"), None);
+    }
+
+    /// The client's formatter and the server's parser live in this one
+    /// module — this round-trip is what "the grammar cannot drift"
+    /// means, exercising the exact function `Client::submit_opts` calls.
+    #[test]
+    fn format_gen_round_trips_through_parse_command() {
+        let line = format_gen(8, &[3, 4], 5, 2, Some((0.7, 11)), true);
+        let Command::Gen(g) = parse_command(&line).unwrap() else { panic!("not GEN") };
+        assert_eq!(
+            g,
+            WireGen {
+                tag: Some(8),
+                max_new: 5,
+                priority: 2,
+                sample: Some((0.7, 11)),
+                stream: true,
+                toks: vec![3, 4],
+            }
+        );
+        // defaults are omitted, not serialized
+        assert_eq!(format_gen(1, &[9], 2, 0, None, false), "GEN id=1 max_new=2 toks=9\n");
+    }
+
+    /// Dialect detection tolerates the same repeated spaces the v1
+    /// parser does.
+    #[test]
+    fn v1_detection_survives_repeated_spaces() {
+        let Command::Gen(g) = parse_command("GEN  id=1  max_new=2  toks=5").unwrap() else {
+            panic!("not GEN")
+        };
+        assert_eq!((g.tag, g.max_new, &g.toks[..]), (Some(1), 2, &[5][..]));
+    }
+
+    /// An *untagged* ERR whose message happens to begin with "id=" must
+    /// not be misparsed as a tagged ERR (the tagged shape requires a
+    /// parseable tag and a msg= key).
+    #[test]
+    fn untagged_err_starting_with_id_stays_untagged() {
+        let got = parse_response("ERR id=\"x\": invalid digit found in string\n").unwrap();
+        assert_eq!(
+            got,
+            Response::Err { tag: None, msg: "id=\"x\": invalid digit found in string".into() }
+        );
+    }
+
+    #[test]
+    fn response_lines_round_trip() {
+        let r = GenResult {
+            id: 9,
+            tokens: vec![1, 2, 3],
+            latency_us: 120,
+            queue_us: 30,
+            prompt_len: 1,
+        };
+        assert_eq!(
+            parse_response(&format_ok(42, &r)).unwrap(),
+            Response::Ok { tag: Some(42), latency_us: 120, queue_us: 30, tokens: vec![1, 2, 3] }
+        );
+        assert_eq!(
+            parse_response(&format_ok_v0(&[5, 6])).unwrap(),
+            Response::Ok { tag: None, latency_us: 0, queue_us: 0, tokens: vec![5, 6] }
+        );
+        assert_eq!(
+            parse_response(&format_tok(7, 31)).unwrap(),
+            Response::Tok { tag: 7, token: 31 }
+        );
+        assert_eq!(parse_response(&format_busy(3)).unwrap(), Response::Busy { tag: 3 });
+        assert_eq!(
+            parse_response(&format_err(Some(5), "bad\nthing")).unwrap(),
+            Response::Err { tag: Some(5), msg: "bad thing".into() }
+        );
+        assert_eq!(
+            parse_response(&format_err(None, "unknown command")).unwrap(),
+            Response::Err { tag: None, msg: "unknown command".into() }
+        );
+        assert_eq!(parse_response("PONG\n").unwrap(), Response::Pong);
+        assert!(matches!(parse_response("STATS tps=1.0").unwrap(), Response::Stats(_)));
+        assert!(parse_response("GARBAGE").is_err());
+    }
+
+    #[test]
+    fn wiregen_into_request_threads_every_field() {
+        let line = "GEN id=8 max_new=5 prio=2 temp=0.7 seed=11 stream=1 toks=3,4";
+        let Command::Gen(g) = parse_command(line).unwrap() else { panic!() };
+        let req = g.into_request(900);
+        assert_eq!(req.id, 900); // internal id, not the wire tag
+        assert_eq!(req.prompt, vec![3, 4]);
+        assert_eq!(req.max_new_tokens, 5);
+        assert_eq!(req.priority, 2);
+        assert_eq!(req.sample, Some((0.7, 11)));
+        assert!(req.stream);
+    }
+
+    #[test]
+    fn oversized_lines_are_bounded_and_resynchronized() {
+        use std::io::BufReader;
+        let mut input = Vec::new();
+        input.extend_from_slice(b"GEN 2 1,2\n");
+        input.extend_from_slice(&vec![b'9'; 4096]); // oversized, no newline yet
+        input.extend_from_slice(b"\nPING\n");
+        let mut r = BufReader::new(std::io::Cursor::new(input));
+        let mut line = String::new();
+        assert!(matches!(read_command_line(&mut r, &mut line, 64).unwrap(), LineRead::Line));
+        assert!(line.starts_with("GEN 2"));
+        assert!(matches!(
+            read_command_line(&mut r, &mut line, 64).unwrap(),
+            LineRead::Oversized
+        ));
+        // the stream is line-synchronized again: PING parses next
+        assert!(matches!(read_command_line(&mut r, &mut line, 64).unwrap(), LineRead::Line));
+        assert!(matches!(parse_command(&line).unwrap(), Command::Ping));
+        assert!(matches!(read_command_line(&mut r, &mut line, 64).unwrap(), LineRead::Eof));
+    }
+
+    /// A partial line at EOF (no trailing newline) parses normally — the
+    /// table's "partial-line/EOF" rows exercise the truncated forms.
+    #[test]
+    fn partial_line_at_eof_is_parsed_not_hung() {
+        use std::io::BufReader;
+        let mut r = BufReader::new(std::io::Cursor::new(b"GEN id=1 max_new=".to_vec()));
+        let mut line = String::new();
+        assert!(matches!(
+            read_command_line(&mut r, &mut line, 1024).unwrap(),
+            LineRead::Line
+        ));
+        assert!(parse_command(&line).is_err(), "truncated v1 GEN must be an ERR");
+        assert!(matches!(read_command_line(&mut r, &mut line, 1024).unwrap(), LineRead::Eof));
+    }
+}

@@ -15,6 +15,9 @@ pub struct GenRequest {
     /// Scheduling class for [`Policy::Priority`](crate::coordinator::batcher::Policy):
     /// higher admits first. 0 = default/batch traffic.
     pub priority: u8,
+    /// Emit a [`SeqEvent::Tok`] for every generated token (wire
+    /// `stream=1`) instead of only the terminal [`SeqEvent::Done`].
+    pub stream: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -42,13 +45,44 @@ pub fn response_channel() -> (ResponseTx, ResponseRx) {
     std::sync::mpsc::channel()
 }
 
+/// Lifecycle events the scheduler pushes through a request's
+/// [`EventSink`]. A request sees zero or more `Tok`s (streaming requests
+/// only), then exactly one terminal `Done` or `Failed`.
+#[derive(Debug)]
+pub enum SeqEvent {
+    /// One newly generated token (requests submitted with
+    /// [`GenRequest::stream`] set; emitted per engine step, in order).
+    Tok { id: u64, token: u16 },
+    /// The sequence retired — terminal.
+    Done(GenResult),
+    /// The engine died before the sequence finished — terminal.
+    Failed { id: u64, msg: String },
+}
+
+/// Per-request event route. Called from the engine thread with the
+/// scheduler lock held, so sinks must not block: send on an unbounded
+/// channel, flip a flag — nothing that waits on another request.
+pub type EventSink = Box<dyn FnMut(SeqEvent) + Send>;
+
 impl GenRequest {
     pub fn greedy(id: u64, prompt: Vec<u16>, max_new_tokens: usize) -> GenRequest {
-        GenRequest { id, prompt, max_new_tokens, sample: None, priority: 0 }
+        GenRequest { id, prompt, max_new_tokens, sample: None, priority: 0, stream: false }
     }
 
     pub fn with_priority(mut self, priority: u8) -> GenRequest {
         self.priority = priority;
+        self
+    }
+
+    /// Temperature sampling with a seed instead of greedy decoding.
+    pub fn with_sample(mut self, temp: f32, seed: u64) -> GenRequest {
+        self.sample = Some((temp, seed));
+        self
+    }
+
+    /// Stream per-token [`SeqEvent::Tok`] events as the sequence decodes.
+    pub fn with_stream(mut self, stream: bool) -> GenRequest {
+        self.stream = stream;
         self
     }
 

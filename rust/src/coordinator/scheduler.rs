@@ -3,25 +3,64 @@
 //!
 //! The server's reader threads [`submit`](Scheduler::submit) parsed
 //! requests into the shared [`Batcher`] queue (behind a `Mutex`/`Condvar`)
-//! and block on a per-request response channel. A single engine thread
-//! runs [`run_engine`](Scheduler::run_engine) — admit → step → retire,
-//! never tearing down between requests — so sequences from different
-//! connections share engine steps and expert groups the moment they
-//! overlap. This is what makes `max_batch`, `token_budget` and the
-//! SJF/Priority policies meaningful under real traffic: before this
-//! scheduler the serve path built a throwaway batcher per protocol line
-//! and could never batch across requests.
+//! and route responses through per-request [`EventSink`]s. A single
+//! engine thread runs [`run_engine`](Scheduler::run_engine) — admit →
+//! step → retire, never tearing down between requests — so sequences
+//! from different connections (and pipelined requests from the *same*
+//! connection) share engine steps and expert groups the moment they
+//! overlap. Streaming requests get a [`SeqEvent::Tok`] per generated
+//! token as a side effect of the same loop; everyone gets a terminal
+//! [`SeqEvent::Done`] (or [`SeqEvent::Failed`] if the engine dies).
+//!
+//! Admission is bounded: [`ServingConfig::max_queue`] caps requests
+//! queued-but-not-admitted, and a submit against a full queue returns
+//! [`SubmitError::Busy`] immediately — the overload signal the wire
+//! protocol surfaces as `BUSY id=..` — instead of growing the queue
+//! without limit.
 
 use std::collections::HashMap;
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::config::ServingConfig;
 use crate::coordinator::batcher::{ActiveSeq, Batcher};
 use crate::coordinator::engine::DecodeEngine;
-use crate::coordinator::request::{response_channel, GenRequest, ResponseRx, ResponseTx};
+use crate::coordinator::request::{
+    response_channel, EventSink, GenRequest, ResponseRx, SeqEvent,
+};
+
+/// Why a submission was refused. `Busy` is the backpressure signal — the
+/// request was never queued and the client should retry later; `Draining`
+/// is terminal for the scheduler.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at `max_queue`. Carries the depth observed.
+    Busy { queued: usize },
+    /// [`Scheduler::shutdown`] was called; no new work is accepted.
+    Draining,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy { queued } => {
+                write!(f, "admission queue full ({queued} queued)")
+            }
+            SubmitError::Draining => write!(f, "scheduler is draining"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One in-flight request's response route.
+struct Route {
+    sink: EventSink,
+    /// Forward per-token `Tok` events (the request had `stream` set).
+    stream: bool,
+}
 
 pub struct Scheduler {
     inner: Mutex<Inner>,
@@ -31,14 +70,19 @@ pub struct Scheduler {
     /// arrivals, so near-simultaneous requests share their first step.
     /// 0 steps immediately.
     batch_window_us: u64,
+    /// Bound on requests queued but not yet admitted; 0 = unbounded.
+    /// Submissions against a full queue fail fast with
+    /// [`SubmitError::Busy`].
+    max_queue: usize,
 }
 
 struct Inner {
     batcher: Batcher,
     /// Per-request response routes, keyed by request id. An entry is
-    /// removed (and its sender consumed) when the sequence retires;
-    /// dropping a sender without sending wakes the waiter with an error.
-    responders: HashMap<u64, ResponseTx>,
+    /// removed (after its terminal event) when the sequence retires;
+    /// a route dropped without a terminal event means the waiter's
+    /// channel errors — the legacy "engine died" signal.
+    responders: HashMap<u64, Route>,
     /// Set by [`Scheduler::shutdown`]: no new admissions; the engine
     /// loop drains everything already submitted, then exits.
     draining: bool,
@@ -54,11 +98,14 @@ impl Scheduler {
             }),
             work: Condvar::new(),
             batch_window_us: 0,
+            max_queue: 0,
         }
     }
 
     pub fn from_config(sc: &ServingConfig) -> Scheduler {
-        Scheduler::new(Batcher::from_config(sc)).with_window(sc.batch_window_us)
+        Scheduler::new(Batcher::from_config(sc))
+            .with_window(sc.batch_window_us)
+            .with_max_queue(sc.max_queue)
     }
 
     pub fn with_window(mut self, batch_window_us: u64) -> Scheduler {
@@ -66,22 +113,50 @@ impl Scheduler {
         self
     }
 
+    /// Cap the admission queue; 0 = unbounded (the pre-backpressure
+    /// behaviour).
+    pub fn with_max_queue(mut self, max_queue: usize) -> Scheduler {
+        self.max_queue = max_queue;
+        self
+    }
+
     /// Queue a request under the admission policy. The result arrives on
     /// the returned channel when the engine loop retires the sequence;
-    /// the channel errors if the engine dies, and submission itself
-    /// fails once the scheduler is draining.
-    pub fn submit(&self, req: GenRequest) -> Result<ResponseRx> {
+    /// the channel errors if the engine dies. Fails fast with
+    /// [`SubmitError::Busy`] when the queue is at `max_queue` and
+    /// [`SubmitError::Draining`] after [`shutdown`](Self::shutdown).
+    pub fn submit(&self, req: GenRequest) -> Result<ResponseRx, SubmitError> {
         let (tx, rx) = response_channel();
+        self.submit_sink(
+            req,
+            Box::new(move |ev| {
+                if let SeqEvent::Done(r) = ev {
+                    let _ = tx.send(r); // receiver gone ⇒ client vanished
+                }
+            }),
+        )?;
+        Ok(rx)
+    }
+
+    /// [`submit`](Self::submit) with an explicit event route: the sink
+    /// sees `Tok` events (when the request has `stream` set), then one
+    /// terminal `Done`/`Failed`. Sinks run on the engine thread with the
+    /// scheduler lock held — they must not block.
+    pub fn submit_sink(&self, req: GenRequest, sink: EventSink) -> Result<(), SubmitError> {
         {
             let mut inner = self.inner.lock().unwrap();
             if inner.draining {
-                bail!("scheduler is draining, request {} rejected", req.id);
+                return Err(SubmitError::Draining);
             }
-            inner.responders.insert(req.id, tx);
+            let queued = inner.batcher.pending();
+            if self.max_queue > 0 && queued >= self.max_queue {
+                return Err(SubmitError::Busy { queued });
+            }
+            inner.responders.insert(req.id, Route { sink, stream: req.stream });
             inner.batcher.submit(req);
         }
         self.work.notify_all();
-        Ok(rx)
+        Ok(())
     }
 
     /// Requests queued but not yet admitted.
@@ -98,12 +173,13 @@ impl Scheduler {
     }
 
     /// The persistent engine loop: admit from the shared queue, take one
-    /// engine step over the active set, retire finished sequences to
-    /// their response channels — forever, until [`shutdown`](Self::shutdown)
-    /// and the backlog drains. The engine lock is held only around the
-    /// step itself, so `STATS`/`METRICS` scrapes interleave freely, and
-    /// the scheduler lock is released during the step, so submissions
-    /// never wait on compute. Returns the number of sequences served.
+    /// engine step over the active set, stream newly generated tokens to
+    /// `stream` routes, retire finished sequences to their sinks —
+    /// forever, until [`shutdown`](Self::shutdown) and the backlog
+    /// drains. The engine lock is held only around the step itself, so
+    /// `STATS`/`METRICS` scrapes interleave freely, and the scheduler
+    /// lock is released during the step, so submissions never wait on
+    /// compute. Returns the number of sequences served.
     pub fn run_engine(&self, engine: &Mutex<DecodeEngine>) -> Result<usize> {
         let n_layers = {
             let mut eng = engine.lock().unwrap();
@@ -133,32 +209,55 @@ impl Scheduler {
                 }
             }
             // ---- step + retire (engine lock) ----
-            let finished = {
+            let (streamed, finished) = {
                 let mut eng = engine.lock().unwrap();
                 match Batcher::step_active(&mut eng, &mut active) {
-                    Ok(()) => Batcher::retire(&mut active, &mut eng.metrics),
+                    Ok(()) => {
+                        // collect per-step partials BEFORE retiring so a
+                        // sequence's final token streams ahead of Done
+                        let mut streamed: Vec<(u64, Vec<u16>)> = Vec::new();
+                        for a in active.iter_mut().filter(|a| a.stream) {
+                            let id = a.seq.id;
+                            let new = a.take_unstreamed();
+                            if !new.is_empty() {
+                                streamed.push((id, new.to_vec()));
+                            }
+                        }
+                        (streamed, Batcher::retire(&mut active, &mut eng.metrics))
+                    }
                     Err(e) => {
                         eng.metrics.finish(); // close the lifetime window
                         drop(eng);
-                        // fail every waiter: dropping a sender wakes its
-                        // connection thread with a recv error; queued
-                        // requests are dropped too — nothing will run them
+                        // fail every waiter with a terminal event, then
+                        // drop its route (dropping a oneshot route wakes
+                        // its connection with a recv error); queued
+                        // requests get the same — nothing will run them
                         let mut inner = self.inner.lock().unwrap();
                         inner.draining = true;
                         inner.batcher.clear_queue();
-                        inner.responders.clear();
+                        let msg = format!("engine unavailable: {e}");
+                        for (id, mut route) in inner.responders.drain() {
+                            (route.sink)(SeqEvent::Failed { id, msg: msg.clone() });
+                        }
                         drop(inner);
                         self.work.notify_all();
                         return Err(e);
                     }
                 }
             };
-            if !finished.is_empty() {
+            if !streamed.is_empty() || !finished.is_empty() {
                 let mut inner = self.inner.lock().unwrap();
+                for (id, toks) in streamed {
+                    if let Some(route) = inner.responders.get_mut(&id) {
+                        for token in toks {
+                            (route.sink)(SeqEvent::Tok { id, token });
+                        }
+                    }
+                }
                 for r in finished {
                     served += 1;
-                    if let Some(tx) = inner.responders.remove(&r.id) {
-                        let _ = tx.send(r); // receiver gone ⇒ client vanished
+                    if let Some(mut route) = inner.responders.remove(&r.id) {
+                        (route.sink)(SeqEvent::Done(r));
                     }
                 }
             }
@@ -196,7 +295,7 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::config::ModelConfig;
-    use crate::coordinator::engine::EngineModel;
+    use crate::coordinator::engine::{DecodeEngine, EngineModel};
     use crate::moe::MoeModel;
 
     fn cfg() -> ModelConfig {
@@ -262,6 +361,7 @@ mod tests {
         );
         assert_eq!(eng.metrics.tokens_out, 12);
         assert_eq!(eng.metrics.latencies_us.len(), 2);
+        assert_eq!(eng.metrics.queue_waits_us.len(), 2);
     }
 
     #[test]
@@ -278,8 +378,82 @@ mod tests {
             // in-flight work still drains after shutdown …
             assert_eq!(rx.recv().unwrap().tokens.len(), 7);
             // … but new submissions are rejected
-            assert!(sched.submit(GenRequest::greedy(1, vec![1], 1)).is_err());
+            assert_eq!(
+                sched.submit(GenRequest::greedy(1, vec![1], 1)).unwrap_err(),
+                SubmitError::Draining
+            );
             loop_thread.join().unwrap().unwrap();
+        });
+    }
+
+    /// Backpressure is a pure queue-depth predicate, so it is testable
+    /// without an engine: with `max_queue = 2` and nothing admitting,
+    /// the third submission is refused with `Busy` and is NOT queued —
+    /// the queue cannot grow past the cap.
+    #[test]
+    fn bounded_queue_refuses_with_busy() {
+        let sched = Scheduler::new(Batcher::new(1, 256)).with_max_queue(2);
+        sched.submit(GenRequest::greedy(0, vec![1], 1)).unwrap();
+        sched.submit(GenRequest::greedy(1, vec![1], 1)).unwrap();
+        assert_eq!(
+            sched.submit(GenRequest::greedy(2, vec![1], 1)).unwrap_err(),
+            SubmitError::Busy { queued: 2 }
+        );
+        assert_eq!(sched.pending(), 2, "refused request must not enter the queue");
+        // unbounded (0) keeps the legacy behaviour
+        let open = Scheduler::new(Batcher::new(1, 256));
+        for i in 0..16 {
+            open.submit(GenRequest::greedy(i, vec![1], 1)).unwrap();
+        }
+        assert_eq!(open.pending(), 16);
+    }
+
+    /// Streaming routes see one `Tok` per generated token, in decode
+    /// order, each before the terminal `Done` — and a non-streaming
+    /// request through the same loop sees only `Done`.
+    #[test]
+    fn streaming_sink_gets_per_token_events_then_done() {
+        let m = MoeModel::new(&cfg(), 82);
+        let be = NativeBackend::fp(&m);
+        let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+        let sched = Scheduler::new(Batcher::new(2, 256));
+        let (tx, rx) = std::sync::mpsc::channel::<SeqEvent>();
+        let (qtx, qrx) = std::sync::mpsc::channel::<SeqEvent>();
+        std::thread::scope(|s| {
+            let loop_thread = s.spawn(|| sched.run_engine(&engine));
+            sched
+                .submit_sink(
+                    GenRequest::greedy(7, vec![1, 17, 30], 5).with_stream(true),
+                    Box::new(move |ev| drop(tx.send(ev))),
+                )
+                .unwrap();
+            sched
+                .submit_sink(
+                    GenRequest::greedy(8, vec![1, 9], 3),
+                    Box::new(move |ev| drop(qtx.send(ev))),
+                )
+                .unwrap();
+            let events: Vec<SeqEvent> = rx.iter().collect(); // until tx drops
+            let quiet: Vec<SeqEvent> = qrx.iter().collect();
+            sched.shutdown();
+            loop_thread.join().unwrap().unwrap();
+
+            assert_eq!(events.len(), 6, "5 Toks + Done: {events:?}");
+            let mut streamed = Vec::new();
+            for ev in &events[..5] {
+                match ev {
+                    SeqEvent::Tok { id: 7, token } => streamed.push(*token),
+                    other => panic!("expected Tok, got {other:?}"),
+                }
+            }
+            let SeqEvent::Done(r) = &events[5] else {
+                panic!("expected terminal Done, got {:?}", events[5])
+            };
+            assert_eq!(r.id, 7);
+            assert_eq!(&r.tokens[3..], &streamed[..], "partials must equal the OK tail");
+            // non-streaming: exactly one terminal event, no partials
+            assert_eq!(quiet.len(), 1);
+            assert!(matches!(&quiet[0], SeqEvent::Done(r) if r.id == 8));
         });
     }
 }

@@ -1,45 +1,55 @@
 //! TCP serving front-end (std::net + threads — tokio is unavailable in
 //! this offline environment; see DESIGN.md §3).
 //!
-//! Line protocol, one request per line:
+//! Wire protocol v1 (tagged, pipelined — grammar and parser in
+//! [`protocol`](crate::coordinator::protocol), the single dispatch point
+//! for v0 and v1 lines alike, so doc and dispatch cannot drift):
 //!
 //! ```text
-//! GEN <max_new_tokens> <tok>,<tok>,...\n   →  OK <tok>,<tok>,...\n
+//! GEN id=<u64> max_new=<n> [prio=<p>] [temp=<t> seed=<s>] [stream=1] toks=<t0,t1,...>\n
+//!     → OK id=.. latency_us=.. queue_us=.. toks=..\n      (terminal)
+//!     → TOK id=.. t=..\n                                  (per-token partial, stream=1)
+//!     → ERR id=.. msg=..\n | BUSY id=..\n                 (terminal)
+//! GEN <max_new_tokens> <tok>,<tok>,...\n  →  OK <tok>,...\n     (legacy v0, lockstep)
 //! PING\n                                  →  PONG\n
-//! STATS\n                                 →  STATS tokens_out=.. tps=.. ..\n
+//! STATS\n                                 →  STATS tokens_out=.. tps=.. lat_p50_us=.. ..\n
 //! METRICS\n                               →  METRICS {json snapshot}\n
 //! QUIT\n                                  →  (server closes this connection)
 //! ```
 //!
-//! Every line — control commands included — goes through one parser,
-//! [`parse_command`], so the protocol doc and the dispatch cannot drift.
+//! Concurrency model: the accept loop spawns a **reader/writer pair**
+//! per connection. The reader parses lines and submits `GEN` requests to
+//! the single shared [`Scheduler`](crate::coordinator::scheduler::Scheduler)
+//! without waiting for their results; the writer is the connection's one
+//! socket-writing thread, draining a channel fed by control responses
+//! and by per-request scheduler sinks. That demux is what makes **one
+//! connection pipelined**: many requests in flight, responses returning
+//! out of order (tagged) as they retire, all of them sharing engine
+//! steps in the continuous batch. v0 `GEN` lines still work — their
+//! untagged responses arrive in retirement order, so v0 clients should
+//! keep at most one request in flight (the historical lockstep usage).
 //!
-//! Concurrency model: the accept loop spawns one reader thread per
-//! connection; all readers feed a single shared
-//! [`Scheduler`](crate::coordinator::scheduler::Scheduler), and one
-//! dedicated engine thread runs the continuous-batching loop for the
-//! server's whole lifetime. Sequences from different connections share
-//! engine steps (and expert groups) whenever they overlap, and an idle
-//! connection never stalls anyone — it just parks its reader thread.
-//! Results return to the submitting connection over per-request
-//! channels. Engine access is serialized behind a mutex — on this
+//! Backpressure: [`ServingConfig::max_queue`] bounds the admission
+//! queue; a submit against a full queue is answered `BUSY id=..`
+//! immediately (v1) while in-flight work is untouched. One dedicated
+//! engine thread runs the continuous-batching loop for the server's
+//! whole lifetime; engine access is serialized behind a mutex — on this
 //! single-core testbed parallel engine steps would not help; the
 //! batching provides the throughput.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 use crate::config::ServingConfig;
 use crate::coordinator::engine::DecodeEngine;
-use crate::coordinator::request::GenRequest;
-use crate::coordinator::scheduler::Scheduler;
-
-static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+use crate::coordinator::protocol::{self, Command, LineRead, WireGen};
+use crate::coordinator::request::{EventSink, SeqEvent};
+use crate::coordinator::scheduler::{Scheduler, SubmitError};
 
 /// Accept-loop poll period (the listener is non-blocking so the quota
 /// and worker-cap checks run without a wake-up connection). Backs off
@@ -49,71 +59,14 @@ static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 const POLL: Duration = Duration::from_millis(1);
 const POLL_MAX: Duration = Duration::from_millis(50);
 
-/// One parsed protocol line.
-#[derive(Debug)]
-pub enum Command {
-    Gen(GenRequest),
-    Ping,
-    Stats,
-    Metrics,
-    Quit,
-    /// Blank line — ignored, no response.
-    Empty,
-}
-
-/// Parse one protocol line — the single dispatch point for control
-/// commands and generation requests alike.
-pub fn parse_command(line: &str) -> Result<Command> {
-    let line = line.trim();
-    match line {
-        "" => return Ok(Command::Empty),
-        "PING" => return Ok(Command::Ping),
-        "STATS" => return Ok(Command::Stats),
-        "METRICS" => return Ok(Command::Metrics),
-        "QUIT" => return Ok(Command::Quit),
-        _ => {}
-    }
-    let mut parts = line.splitn(3, ' ');
-    match parts.next() {
-        Some("GEN") => {
-            let max_new: usize = parts
-                .next()
-                .ok_or_else(|| anyhow!("GEN missing max_new"))?
-                .parse()?;
-            let toks: Vec<u16> = parts
-                .next()
-                .ok_or_else(|| anyhow!("GEN missing tokens"))?
-                .split(',')
-                .map(|t| t.trim().parse::<u16>())
-                .collect::<Result<_, _>>()?;
-            if toks.is_empty() {
-                bail!("empty prompt");
-            }
-            Ok(Command::Gen(GenRequest::greedy(
-                NEXT_ID.fetch_add(1, Ordering::Relaxed),
-                toks,
-                max_new,
-            )))
-        }
-        Some(cmd) => bail!("unknown command {cmd:?}"),
-        // splitn on a non-empty string always yields a first part, and
-        // blank lines returned Command::Empty above
-        None => unreachable!("blank line handled before the verb match"),
-    }
-}
-
-/// Back-compat shim over [`parse_command`]: `GEN` lines parse to a
-/// request, control lines (PING/STATS/METRICS/QUIT, blanks) to `None`.
-pub fn parse_line(line: &str) -> Result<Option<GenRequest>> {
-    Ok(match parse_command(line)? {
-        Command::Gen(req) => Some(req),
-        _ => None,
-    })
-}
-
-pub fn format_result(tokens: &[u16]) -> String {
-    let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
-    format!("OK {}\n", toks.join(","))
+/// One message to a connection's writer thread — the demux point where
+/// control responses, streamed `TOK` partials and out-of-order `OK`
+/// lines serialize onto the socket.
+enum ConnOut {
+    /// A response line to write verbatim.
+    Line(String),
+    /// A terminal generation success — counts against the request quota.
+    Done(String),
 }
 
 /// Serve until `max_requests` have been answered (None = forever).
@@ -145,6 +98,11 @@ pub fn serve_with(
     let sched = Scheduler::from_config(sc);
     let answered = AtomicUsize::new(0);
     let live_conns = AtomicUsize::new(0);
+    // per-server internal request ids: client-supplied `id=` tags are a
+    // per-connection namespace and never index the scheduler directly,
+    // so ids cannot interleave across server instances in one process
+    // (the old global counter could)
+    let next_id = AtomicU64::new(1);
     listener.set_nonblocking(true)?;
     let engine_result: Mutex<Option<Result<usize>>> = Mutex::new(None);
     let serve_result: Result<()> = std::thread::scope(|s| {
@@ -174,10 +132,11 @@ pub fn serve_with(
                     poll = POLL;
                     live_conns.fetch_add(1, Ordering::AcqRel);
                     let (sched, answered, live) = (&sched, &answered, &live_conns);
+                    let next_id = &next_id;
                     s.spawn(move || {
                         // connection-level IO errors end that connection
                         // only; the server keeps running
-                        let _ = handle_conn(stream, engine, sched, answered);
+                        let _ = handle_conn(stream, engine, sched, answered, next_id);
                         live.fetch_sub(1, Ordering::AcqRel);
                     });
                 }
@@ -204,104 +163,216 @@ pub fn serve_with(
     Ok(answered.into_inner())
 }
 
-/// One connection's reader loop: parse lines, answer control commands
-/// in place, hand `GEN` requests to the shared scheduler and block on
-/// the per-request response channel.
+/// One connection: a reader thread (this function) that parses lines and
+/// submits generations without blocking on their results, plus a writer
+/// thread that owns the socket's write half and drains [`ConnOut`]
+/// messages — control responses in submission order, generation
+/// responses in retirement order. Returning (client EOF, `QUIT`, IO
+/// error) stops reading; the writer then drains whatever the connection
+/// still has in flight before the socket closes.
 fn handle_conn(
     stream: TcpStream,
     engine: &Mutex<DecodeEngine>,
     sched: &Scheduler,
     answered: &AtomicUsize,
+    next_id: &AtomicU64,
 ) -> Result<()> {
     // accepted sockets may inherit the listener's non-blocking mode on
     // some platforms; reader threads want blocking reads
     stream.set_nonblocking(false)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
+    let (otx, orx) = mpsc::channel::<ConnOut>();
+    std::thread::scope(|s| {
+        let writer = s.spawn(move || -> Result<()> {
+            for msg in orx {
+                let line = match msg {
+                    ConnOut::Line(line) => line,
+                    ConnOut::Done(line) => {
+                        answered.fetch_add(1, Ordering::AcqRel);
+                        line
+                    }
+                };
+                out.write_all(line.as_bytes())?;
+            }
+            Ok(())
+        });
+        let read_result = read_loop(&mut reader, engine, sched, next_id, &otx);
+        // the reader's sender drops here; the writer exits once every
+        // in-flight request's sink has delivered its terminal line
+        drop(otx);
+        let write_result = writer.join().expect("connection writer panicked");
+        read_result.and(write_result)
+    })
+}
+
+/// Send one message to the connection's writer; an error means the
+/// writer is gone (socket dead), which ends the reader loop too.
+fn send(otx: &mpsc::Sender<ConnOut>, msg: ConnOut) -> Result<()> {
+    otx.send(msg).map_err(|_| anyhow!("connection writer closed"))
+}
+
+fn read_loop(
+    reader: &mut BufReader<TcpStream>,
+    engine: &Mutex<DecodeEngine>,
+    sched: &Scheduler,
+    next_id: &AtomicU64,
+    otx: &mpsc::Sender<ConnOut>,
+) -> Result<()> {
     let mut line = String::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match protocol::read_command_line(reader, &mut line, protocol::MAX_LINE_BYTES)? {
+            LineRead::Eof => return Ok(()), // client closed
+            LineRead::Oversized => {
+                let msg = format!("line exceeds {} bytes", protocol::MAX_LINE_BYTES);
+                send(otx, ConnOut::Line(protocol::format_err(None, &msg)))?;
+                continue;
+            }
+            LineRead::Line => {}
         }
-        match parse_command(&line) {
+        match protocol::parse_command(&line) {
             Ok(Command::Empty) => {}
-            Ok(Command::Ping) => out.write_all(b"PONG\n")?,
+            Ok(Command::Ping) => send(otx, ConnOut::Line("PONG\n".into()))?,
             Ok(Command::Stats) => {
-                let eng = engine.lock().unwrap();
-                let cache = eng.metrics.cache.unwrap_or_default();
-                let msg = format!(
-                    "STATS tokens_out={} steps={} tps={:.3} pruning={:.3} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={}\n",
-                    eng.metrics.tokens_out,
-                    eng.metrics.steps,
-                    eng.metrics.tokens_per_sec(),
-                    eng.metrics.pruning_ratio(),
-                    cache.resident_bytes,
-                    cache.hits,
-                    cache.misses,
-                    cache.evictions,
-                    cache.prefetch_hits,
-                );
-                drop(eng);
-                out.write_all(msg.as_bytes())?;
+                let msg = stats_line(&engine.lock().unwrap());
+                send(otx, ConnOut::Line(msg))?;
             }
             Ok(Command::Metrics) => {
-                let eng = engine.lock().unwrap();
-                let msg = format!("METRICS {}\n", eng.metrics.to_json().to_json());
-                drop(eng);
-                out.write_all(msg.as_bytes())?;
+                let msg = {
+                    let eng = engine.lock().unwrap();
+                    format!("METRICS {}\n", eng.metrics.to_json().to_json())
+                };
+                send(otx, ConnOut::Line(msg))?;
             }
             Ok(Command::Quit) => return Ok(()),
-            Ok(Command::Gen(req)) => match sched.submit(req) {
-                Ok(rx) => match rx.recv() {
-                    Ok(r) => {
-                        out.write_all(format_result(&r.tokens).as_bytes())?;
-                        answered.fetch_add(1, Ordering::AcqRel);
-                    }
-                    // sender dropped without a result: engine loop died
-                    Err(_) => out.write_all(b"ERR engine unavailable\n")?,
-                },
-                Err(e) => out.write_all(format!("ERR {e}\n").as_bytes())?,
-            },
+            Ok(Command::Gen(wire)) => submit_gen(wire, sched, next_id, otx)?,
+            // keep the ERR attributable when the bad line carried a
+            // parseable id= (a pipelined client needs the tag to mark it
+            // terminal); otherwise the untagged ERR both dialects get
             Err(e) => {
-                out.write_all(format!("ERR {e}\n").as_bytes())?;
+                let tag = protocol::salvage_tag(&line);
+                send(otx, ConnOut::Line(protocol::format_err(tag, &e.to_string())))?;
             }
         }
     }
+}
+
+/// Submit one parsed `GEN` to the shared scheduler, wiring its response
+/// route straight into the connection's writer: `TOK` partials and the
+/// terminal `OK`/`ERR` are formatted in the sink (tagged for v1,
+/// untagged v0 otherwise), so the reader never blocks on a result and
+/// the connection pipelines.
+fn submit_gen(
+    wire: WireGen,
+    sched: &Scheduler,
+    next_id: &AtomicU64,
+    otx: &mpsc::Sender<ConnOut>,
+) -> Result<()> {
+    let tag = wire.tag;
+    let req = wire.into_request(next_id.fetch_add(1, Ordering::Relaxed));
+    let sink_tx = otx.clone();
+    let sink: EventSink = Box::new(move |ev| {
+        let msg = match ev {
+            SeqEvent::Tok { token, .. } => match tag {
+                Some(t) => ConnOut::Line(protocol::format_tok(t, token)),
+                None => return, // v0 requests cannot ask for streaming
+            },
+            SeqEvent::Done(r) => ConnOut::Done(match tag {
+                Some(t) => protocol::format_ok(t, &r),
+                None => protocol::format_ok_v0(&r.tokens),
+            }),
+            SeqEvent::Failed { msg, .. } => ConnOut::Line(protocol::format_err(tag, &msg)),
+        };
+        let _ = sink_tx.send(msg); // writer gone ⇒ client vanished
+    });
+    match sched.submit_sink(req, sink) {
+        Ok(()) => Ok(()),
+        // overload: answer immediately, nothing was queued
+        Err(SubmitError::Busy { .. }) => match tag {
+            Some(t) => send(otx, ConnOut::Line(protocol::format_busy(t))),
+            None => send(
+                otx,
+                ConnOut::Line(protocol::format_err(None, "busy: admission queue full")),
+            ),
+        },
+        Err(e @ SubmitError::Draining) => {
+            send(otx, ConnOut::Line(protocol::format_err(tag, &e.to_string())))
+        }
+    }
+}
+
+/// The one-line `STATS` scrape: lifetime counters plus the latency and
+/// queue-wait percentile summaries (µs) the tagged `OK` responses report
+/// per request.
+fn stats_line(eng: &DecodeEngine) -> String {
+    let m = &eng.metrics;
+    let cache = m.cache.unwrap_or_default();
+    let lat = m.latency_percentiles_us(&[0.5, 0.95]);
+    let queue = m.queue_percentiles_us(&[0.5, 0.95]);
+    format!(
+        "STATS tokens_out={} steps={} tps={:.3} pruning={:.3} lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={}\n",
+        m.tokens_out,
+        m.steps,
+        m.tokens_per_sec(),
+        m.pruning_ratio(),
+        lat[0],
+        lat[1],
+        queue[0],
+        queue[1],
+        cache.resident_bytes,
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+        cache.prefetch_hits,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Control-command dispatch lives in exactly one place
+    /// ([`protocol::parse_command`]): every protocol verb the reader
+    /// loop answers must round-trip through it — the no-drift guarantee.
+    /// (The old `parse_line` shim is gone; grammar-level tests live in
+    /// `protocol::tests`.)
     #[test]
-    fn parse_and_format() {
-        let r = parse_line("GEN 8 1,2,3").unwrap().unwrap();
-        assert_eq!(r.max_new_tokens, 8);
-        assert_eq!(r.prompt, vec![1, 2, 3]);
-        assert!(parse_line("PING").unwrap().is_none());
-        assert!(parse_line("NOPE 1").is_err());
-        assert!(parse_line("GEN 8").is_err());
-        assert!(parse_line("GEN x 1,2").is_err());
-        assert_eq!(format_result(&[5, 6]), "OK 5,6\n");
+    fn every_served_verb_parses() {
+        assert!(matches!(protocol::parse_command("PING").unwrap(), Command::Ping));
+        assert!(matches!(protocol::parse_command("STATS").unwrap(), Command::Stats));
+        assert!(matches!(protocol::parse_command("METRICS").unwrap(), Command::Metrics));
+        assert!(matches!(protocol::parse_command("QUIT").unwrap(), Command::Quit));
+        assert!(matches!(protocol::parse_command("  \n").unwrap(), Command::Empty));
+        assert!(matches!(protocol::parse_command("GEN 2 7,8").unwrap(), Command::Gen(_)));
+        assert!(matches!(
+            protocol::parse_command("GEN id=1 max_new=2 toks=7,8").unwrap(),
+            Command::Gen(_)
+        ));
     }
 
-    /// Control-command dispatch lives in exactly one place: every
-    /// protocol verb the handler answers must round-trip through
-    /// `parse_command` (this is the no-drift guarantee the old split
-    /// PING/STATS/METRICS special-casing lacked — QUIT was accepted by
-    /// the handler but unknown to the parser).
+    /// The stats line carries every field the docs promise, including
+    /// the new percentile summaries (satellite: latency/queue surfaced
+    /// in STATS).
     #[test]
-    fn every_control_verb_parses() {
-        assert!(matches!(parse_command("PING").unwrap(), Command::Ping));
-        assert!(matches!(parse_command("STATS").unwrap(), Command::Stats));
-        assert!(matches!(parse_command("METRICS").unwrap(), Command::Metrics));
-        assert!(matches!(parse_command("QUIT").unwrap(), Command::Quit));
-        assert!(matches!(parse_command("  \n").unwrap(), Command::Empty));
-        assert!(matches!(parse_command("GEN 2 7,8").unwrap(), Command::Gen(_)));
-        assert!(parse_line("QUIT").unwrap().is_none());
+    fn stats_line_reports_percentiles() {
+        use crate::coordinator::metrics::Metrics;
+        let m = Metrics {
+            latencies_us: vec![100, 200, 300],
+            queue_waits_us: vec![10, 20, 30],
+            tokens_out: 9,
+            ..Default::default()
+        };
+        let line = format!(
+            "lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={}",
+            m.latency_percentile_us(0.5),
+            m.latency_percentile_us(0.95),
+            m.queue_percentile_us(0.5),
+            m.queue_percentile_us(0.95),
+        );
+        assert_eq!(line, "lat_p50_us=200 lat_p95_us=300 queue_p50_us=20 queue_p95_us=30");
     }
 
-    // full TCP round-trips (including concurrent clients sharing engine
-    // steps) live in rust/tests/server_roundtrip.rs
+    // full TCP round-trips (pipelining, streaming, BUSY backpressure,
+    // v0↔v1 mixed traffic) live in rust/tests/server_roundtrip.rs and
+    // rust/tests/protocol_v1.rs, driven through coordinator::client
 }

@@ -12,6 +12,8 @@
 //!                   [--max-batch 8] [--token-budget 4096] continuous-batching admission
 //!                   [--workers N]                         cap concurrent connections (0 = ∞)
 //!                   [--batch-window-us U]                 gather window before the first step
+//!                   [--max-queue N]                       bound the admission queue (0 = ∞);
+//!                                                         overflow answered BUSY immediately
 //! mcsharp info      --model mix-tiny                      model zoo facts
 //! ```
 //!
@@ -38,7 +40,7 @@ use mcsharp::util::rng::Rng;
 const FLAGS: &[&str] = &[
     "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
     "calib-seqs", "lambda", "out", "qckpt", "expert-cache-mb", "max-batch",
-    "token-budget", "workers", "batch-window-us",
+    "token-budget", "workers", "batch-window-us", "max-queue",
 ];
 
 fn main() -> Result<()> {
@@ -176,6 +178,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", defaults.workers)?,
         batch_window_us: args.usize_or("batch-window-us", defaults.batch_window_us as usize)?
             as u64,
+        max_queue: args.usize_or("max-queue", defaults.max_queue)?,
     };
     // `--qckpt path` serves straight from a pre-compressed checkpoint —
     // the paper's pre-loading deployment story (no calibration at boot).

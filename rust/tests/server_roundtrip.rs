@@ -1,6 +1,8 @@
-//! TCP server round-trip: the line protocol must return exactly the
+//! TCP server round-trip: the wire protocol must return exactly the
 //! tokens the engine produces for the same prompt — including when N
-//! clients hit the shared continuous-batching scheduler at once.
+//! clients hit the shared continuous-batching scheduler at once. v0
+//! lines are exercised raw (byte-for-byte compatibility); v1 traffic
+//! drives the shared [`Client`](mcsharp::coordinator::client::Client).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -8,6 +10,7 @@ use std::sync::Mutex;
 
 use mcsharp::backend::NativeBackend;
 use mcsharp::config::{ModelConfig, ServingConfig};
+use mcsharp::coordinator::client::Client;
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
 use mcsharp::coordinator::server;
 use mcsharp::moe::MoeModel;
@@ -31,6 +34,8 @@ fn tiny_cfg() -> ModelConfig {
     }
 }
 
+/// Legacy v0 round-trip, raw bytes on purpose: the exact pre-v1 lines
+/// must keep producing the exact pre-v1 responses.
 #[test]
 fn tcp_roundtrip_matches_direct_generation() {
     let m = MoeModel::new(&tiny_cfg(), 200);
@@ -82,41 +87,18 @@ fn metrics_command_returns_json_snapshot() {
             let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
             server::serve(listener, &engine, 4, Some(1)).unwrap();
         });
-        let mut stream = TcpStream::connect(addr).unwrap();
-        let mut reader = BufReader::new(stream.try_clone().unwrap());
-        let mut line = String::new();
-        // generate, then scrape
-        stream.write_all(b"GEN 4 1,17,30\n").unwrap();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.starts_with("OK "), "{line}");
-        line.clear();
-        stream.write_all(b"METRICS\n").unwrap();
-        reader.read_line(&mut line).unwrap();
-        let json = line.trim().strip_prefix("METRICS ").expect("prefix");
-        let v = mcsharp::util::json::Value::parse(json).expect("valid json");
+        let mut client = Client::connect(addr).unwrap();
+        // generate (v1 tagged), then scrape
+        let out = client.gen(&[1, 17, 30], 4).unwrap();
+        assert_eq!(out.tokens.len(), 7);
+        assert!(out.latency_us >= out.queue_us, "latency includes queue wait");
+        let v = client.metrics_value().unwrap();
         assert_eq!(v.get("tokens_out").unwrap().as_usize().unwrap(), 4);
         assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 1);
         assert!(v.get("latency_p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("queue_p50_us").unwrap().as_f64().unwrap() >= 0.0);
         assert!(v.get("pruning_ratio").unwrap().as_f64().unwrap() == 0.0);
     });
-}
-
-fn send_gen(
-    stream: &mut TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    prompt: &[u16],
-    max_new: usize,
-) -> Vec<u16> {
-    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-    stream.write_all(format!("GEN {max_new} {}\n", toks.join(",")).as_bytes()).unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    line.trim()
-        .strip_prefix("OK ")
-        .unwrap_or_else(|| panic!("bad response: {line}"))
-        .split(',')
-        .map(|t| t.parse().unwrap())
-        .collect()
 }
 
 /// The serving-path acceptance test for cross-request continuous
@@ -159,21 +141,20 @@ fn concurrent_clients_share_engine_steps() {
         // (c) idle connection first — sends nothing while others work
         let idle = TcpStream::connect(addr).unwrap();
         let mut idle_reader = BufReader::new(idle.try_clone().unwrap());
-        // two concurrent clients
+        // two concurrent clients, each through the first-class Client
         let handles: Vec<_> = prompts
             .iter()
             .map(|p| {
                 s.spawn(move || {
-                    let mut stream = TcpStream::connect(addr).unwrap();
-                    let mut reader = BufReader::new(stream.try_clone().unwrap());
-                    send_gen(&mut stream, &mut reader, p, 6)
+                    let mut client = Client::connect(addr).unwrap();
+                    client.gen(p, 6).unwrap()
                 })
             })
             .collect();
-        let got: Vec<Vec<u16>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let got: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         // (a) token-for-token greedy reference
         for (g, w) in got.iter().zip(&want) {
-            assert_eq!(g, w, "served tokens diverged from single-client reference");
+            assert_eq!(&g.tokens, w, "served tokens diverged from single-client reference");
         }
         // (b) + lifetime metrics, scraped over the still-open idle conn
         let mut idle_out = idle.try_clone().unwrap();
@@ -190,15 +171,20 @@ fn concurrent_clients_share_engine_steps() {
         assert_eq!(v.get("tokens_out").unwrap().as_usize().unwrap(), 12);
         assert_eq!(v.get("requests").unwrap().as_usize().unwrap(), 2);
         assert!(v.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
-        // STATS carries the same lifetime tps
+        // STATS carries the same lifetime tps plus percentile summaries
         line.clear();
         idle_out.write_all(b"STATS\n").unwrap();
         idle_reader.read_line(&mut line).unwrap();
-        let tps_field = line
-            .split_whitespace()
-            .find_map(|f| f.strip_prefix("tps="))
-            .expect("STATS must report tps");
-        assert!(tps_field.parse::<f64>().unwrap() > 0.0, "lifetime tps insane: {line}");
+        let field = |key: &str| -> f64 {
+            line.split_whitespace()
+                .find_map(|f| f.strip_prefix(key).and_then(|f| f.strip_prefix('=')))
+                .unwrap_or_else(|| panic!("STATS must report {key}: {line}"))
+                .parse()
+                .unwrap()
+        };
+        assert!(field("tps") > 0.0, "lifetime tps insane: {line}");
+        assert!(field("lat_p50_us") > 0.0, "latency summary missing: {line}");
+        assert!(field("queue_p95_us") >= 0.0, "queue summary missing: {line}");
         // QUIT closes the idle connection server-side
         idle_out.write_all(b"QUIT\n").unwrap();
         line.clear();
