@@ -17,10 +17,11 @@ use mcsharp::pmq::Strategy;
 use mcsharp::profile::dequant_matmul_estimate;
 use mcsharp::quant::qlinear::QuantLinear;
 use mcsharp::quant::qmodel::{QuantExpert, QuantModel};
-use mcsharp::quant::{binary::BinaryMatrix, packed::PackedMatrix, rtn};
+use mcsharp::quant::{binary::BinaryMatrix, kernels, packed::PackedMatrix, rtn};
 use mcsharp::runtime::Runtime;
 use mcsharp::tensor::Tensor2;
-use mcsharp::util::bench::{report, time};
+use mcsharp::util::bench::{report, time, Stats};
+use mcsharp::util::json::{self, Value};
 use mcsharp::util::rng::Rng;
 
 /// Forces the degenerate per-token path through the same dispatcher: the
@@ -39,6 +40,10 @@ fn main() {
     // gate — compile everything, run each synthetic section for ~one
     // iteration, and skip the sections that pretrain zoo models.
     let smoke = std::env::args().any(|a| a == "--smoke");
+    // `--json`: additionally write the kernel-section rows to
+    // BENCH_perf_hotpath.json at the repo root (machine-readable bench
+    // trajectory; CI uploads it as an artifact).
+    let json_out = std::env::args().any(|a| a == "--json");
     let budget = if smoke { Duration::from_millis(2) } else { Duration::from_millis(300) };
     let mut rng = Rng::new(0x9E2F);
     let (h, f) = (128usize, 256usize);
@@ -78,6 +83,125 @@ fn main() {
         });
         report("matvec binary 1-bit (Eq. 9)", &s);
     }
+
+    // The acceptance rows for the kernel-layer refactor (EXPERIMENTS.md
+    // §Kernels): per bit-width, (a) unfused — dequantize the whole matrix
+    // then dense-accumulate, the pre-kernel baseline shape — vs (b) the
+    // fused kernel on the scalar path (`force_scalar`) vs (c) the fused
+    // kernel on the SIMD path (host permitting). Fused must beat unfused
+    // on every row — asserted here, so the CI bench-smoke run *is* the
+    // perf gate. 1-bit rows run the binary Eq. 9 kernel.
+    println!("\n== fused dequant x matmul kernels: unfused vs fused-scalar vs fused-SIMD ==");
+    let kernel_rows = {
+        let simd = kernels::simd_available();
+        println!("  host SIMD path: {}", if simd { "avx2+fma" } else { "(none — scalar only)" });
+        let t_mm = 16usize;
+        let xb = Tensor2::randn(t_mm, h, &mut rng, 1.0);
+        let mut rows: Vec<Value> = Vec::new();
+        for bits in [1u8, 2, 3, 4] {
+            let ql = if bits == 1 {
+                QuantLinear::Binary(BinaryMatrix::binarize(&w))
+            } else {
+                let (c, sc, z) = rtn::quantize_rtn(&w, bits, 32);
+                QuantLinear::Packed(PackedMatrix::from_codes(&c, sc, z, h, f, bits, 32))
+            };
+            let mut bench_op = |op: &str, t: usize, x_op: &[f32]| {
+                let mut y = vec![0.0f32; t * f];
+                let unfused = time(budget, 20_000, || {
+                    y.fill(0.0);
+                    let wd = ql.dequantize();
+                    for ti in 0..t {
+                        let yr = &mut y[ti * f..][..f];
+                        for (r, &xr) in x_op[ti * h..][..h].iter().enumerate() {
+                            if xr != 0.0 {
+                                mcsharp::tensor::axpy(xr, wd.row(r), yr);
+                            }
+                        }
+                    }
+                    std::hint::black_box(&y);
+                });
+                let run_fused = |y: &mut Vec<f32>| {
+                    y.fill(0.0);
+                    if t == 1 {
+                        ql.matvec_acc(x_op, y);
+                    } else {
+                        let xt = Tensor2::from_vec(t, h, x_op.to_vec());
+                        let mut yt = Tensor2::from_vec(t, f, std::mem::take(y));
+                        ql.matmul_acc(&xt, &mut yt);
+                        *y = yt.data;
+                    }
+                    std::hint::black_box(&y);
+                };
+                let scalar =
+                    kernels::force_scalar(|| time(budget, 20_000, || run_fused(&mut y)));
+                let simd_stats = simd.then(|| time(budget, 20_000, || run_fused(&mut y)));
+                report(&format!("{op} {bits}-bit unfused (dequant+dense)"), &unfused);
+                report(&format!("{op} {bits}-bit fused scalar"), &scalar);
+                if let Some(s) = &simd_stats {
+                    report(&format!("{op} {bits}-bit fused simd"), s);
+                }
+                let fused_best =
+                    simd_stats.as_ref().map_or(scalar.p50_ns, |s| s.p50_ns.min(scalar.p50_ns));
+                assert!(
+                    fused_best < unfused.p50_ns,
+                    "fused kernel must beat unfused dequant+matmul ({op}, {bits}-bit): \
+                     {fused_best} ns !< {} ns",
+                    unfused.p50_ns
+                );
+                let row_json = |st: &Stats| {
+                    json::obj(vec![
+                        ("mean_ns", json::num(st.mean_ns)),
+                        ("p50_ns", json::num(st.p50_ns)),
+                        ("p95_ns", json::num(st.p95_ns)),
+                        ("iters", json::num(st.iters as f64)),
+                    ])
+                };
+                let (simd_json, simd_speedup) = match &simd_stats {
+                    Some(st) => (row_json(st), json::num(scalar.p50_ns / st.p50_ns)),
+                    None => (Value::Null, Value::Null),
+                };
+                rows.push(json::obj(vec![
+                    ("op", json::s(op)),
+                    ("bits", json::num(bits as f64)),
+                    ("tokens", json::num(t as f64)),
+                    ("unfused", row_json(&unfused)),
+                    ("fused_scalar", row_json(&scalar)),
+                    ("fused_simd", simd_json),
+                    (
+                        "speedup_fused_vs_unfused",
+                        json::num(unfused.p50_ns / fused_best),
+                    ),
+                    ("speedup_simd_vs_scalar", simd_speedup),
+                ]));
+            };
+            bench_op("matvec", 1, &x);
+            bench_op("matmul", t_mm, &xb.data);
+        }
+        if json_out {
+            let doc = json::obj(vec![
+                ("bench", json::s("perf_hotpath")),
+                ("section", json::s("kernels")),
+                ("harness", json::s("cargo-bench")),
+                ("smoke", Value::Bool(smoke)),
+                ("host_isa", json::s(if simd { "avx2+fma" } else { "scalar" })),
+                (
+                    "shape",
+                    json::obj(vec![
+                        ("d_in", json::num(h as f64)),
+                        ("d_out", json::num(f as f64)),
+                        ("t_matmul", json::num(t_mm as f64)),
+                        ("group", json::num(32.0)),
+                    ]),
+                ),
+                ("rows", Value::Arr(rows.clone())),
+            ]);
+            let path = mcsharp::config::repo_path("BENCH_perf_hotpath.json");
+            std::fs::write(&path, doc.to_json()).expect("write BENCH json");
+            println!("  wrote {path}");
+        }
+        rows
+    };
+    std::hint::black_box(&kernel_rows);
 
     // The acceptance metric for the expert-grouped dispatch refactor
     // (EXPERIMENTS.md §Perf): one packed expert over a G-row token group,

@@ -8,8 +8,18 @@
 //!
 //! i.e. one accumulate per (row, col) plus a single multiply per output
 //! channel — the MAC reduction the paper claims (dm → m multiplies).
+//! Both fused entry points delegate to `quant::kernels` (AVX2+FMA with a
+//! portable scalar fallback, thread-local scratch); the kernel keeps
+//! Eq. 9's form by accumulating `Σ_{b=1} x` with the 0/1 bit test and
+//! applying `α·(2·acc − Σx)` once per channel in the epilogue —
+//! arithmetically identical to the ±1 select-sum (multiplying by ±1 *is*
+//! the select; see DESIGN.md §Hardware-Adaptation).
+
+use std::sync::OnceLock;
 
 use crate::tensor::Tensor2;
+
+use super::kernels::{self, Repacked};
 
 #[derive(Clone, Debug)]
 pub struct BinaryMatrix {
@@ -21,6 +31,9 @@ pub struct BinaryMatrix {
     /// matrix-global variant — per-channel is the XNOR-Net refinement the
     /// paper cites, ref. \[46\]).
     pub alpha: Vec<f32>,
+    /// Kernel-layer padded repack (α rides in its `scales`), built
+    /// eagerly at pack/load time.
+    repack: OnceLock<Repacked>,
 }
 
 impl BinaryMatrix {
@@ -40,7 +53,21 @@ impl BinaryMatrix {
             }
             alpha[o] = l1 / d_in as f32;
         }
-        BinaryMatrix { d_in, d_out, plane, alpha }
+        BinaryMatrix::from_parts(plane, alpha, d_in, d_out)
+    }
+
+    /// Assemble from an already-packed plane (checkpoint load / GPTQ
+    /// path) and build the kernel repack once, up front.
+    pub fn from_parts(plane: Vec<u8>, alpha: Vec<f32>, d_in: usize, d_out: usize) -> BinaryMatrix {
+        let bm = BinaryMatrix { d_in, d_out, plane, alpha, repack: OnceLock::new() };
+        let _ = bm.repacked();
+        bm
+    }
+
+    /// The kernel layer's padded repack of the sign plane.
+    pub fn repacked(&self) -> &Repacked {
+        self.repack
+            .get_or_init(|| Repacked::from_binary(&self.plane, self.d_in, self.d_out, &self.alpha))
     }
 
     /// Reconstruct `α * (2b − 1)` as f32 (tests / ε probes).
@@ -55,111 +82,30 @@ impl BinaryMatrix {
         out
     }
 
-    /// Eq. 9: `y += α ⊙ (Σ_{b=1} x − Σ_{b=0} x)` with one α multiply per
-    /// output channel.
-    ///
-    /// CPU adaptation of the select-accumulate (DESIGN.md
-    /// §Hardware-Adaptation): a data-dependent branch per (row, column)
-    /// defeats the pipeline, so each plane byte (8 rows of one column)
-    /// indexes a precomputed ±1 expansion and the compiler turns the
-    /// 8-term select-sum into vector FMAs — arithmetically identical to
-    /// Eq. 9's add/sub form (multiplying by ±1 *is* the select), ~5×
-    /// faster than the branchy loop on this core.
+    /// Eq. 9: `y += α ⊙ (2 Σ_{b=1} x − Σ x)` with one α multiply per
+    /// output channel (kernel layer, thread-local scratch).
     pub fn matvec_fused(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.d_in);
-        let d_out = self.d_out;
-        let mut acc = vec![0.0f32; d_out]; // Σ_r ±x_r per column
-        for (br, x8) in x.chunks_exact(8).enumerate() {
-            if x8.iter().all(|&v| v == 0.0) {
-                continue;
-            }
-            let row = &self.plane[br * d_out..][..d_out];
-            for o in 0..d_out {
-                let l = &SIGN_LUT[row[o] as usize];
-                acc[o] += l[0] * x8[0]
-                    + l[1] * x8[1]
-                    + l[2] * x8[2]
-                    + l[3] * x8[3]
-                    + l[4] * x8[4]
-                    + l[5] * x8[5]
-                    + l[6] * x8[6]
-                    + l[7] * x8[7];
-            }
-        }
-        for o in 0..d_out {
-            y[o] += self.alpha[o] * acc[o];
-        }
+        kernels::with_scratch(|s| kernels::binary_matvec(self, x, y, s));
     }
 
     pub fn nbytes(&self) -> u64 {
         (self.plane.len() + self.alpha.len() * 4) as u64
     }
 
-    /// Batched `y += x @ dequant(self)` for a token block: the ±1 tile of
-    /// 8 input rows is decoded once per byte-row and reused by every
-    /// token (the same HBM→VMEM amortization the Pallas kernel gets from
-    /// keeping the whole `[T, d_in]` activation block resident).
+    /// Batched `y += x @ dequant(self)` for a token block: the ±α tile of
+    /// an input-row block is decoded once into scratch and reused by
+    /// every token (the same HBM→VMEM amortization the Pallas kernel
+    /// gets from keeping the whole `[T, d_in]` activation block
+    /// resident).
     pub fn matmul_fused(&self, x: &Tensor2, y: &mut Tensor2) {
         assert_eq!(x.cols, self.d_in);
         assert_eq!((y.rows, y.cols), (x.rows, self.d_out));
-        let d_out = self.d_out;
-        let t = x.rows;
-        let mut acc = vec![0.0f32; t * d_out];
-        let mut tile = vec![0.0f32; 8 * d_out];
-        for br in 0..self.d_in / 8 {
-            let row = &self.plane[br * d_out..][..d_out];
-            for o in 0..d_out {
-                let l = &SIGN_LUT[row[o] as usize];
-                for j in 0..8 {
-                    tile[j * d_out + o] = l[j];
-                }
-            }
-            for ti in 0..t {
-                let xr = &x.row(ti)[br * 8..br * 8 + 8];
-                let arow = &mut acc[ti * d_out..(ti + 1) * d_out];
-                for (j, &xj) in xr.iter().enumerate() {
-                    if xj == 0.0 {
-                        continue;
-                    }
-                    let trow = &tile[j * d_out..(j + 1) * d_out];
-                    for (a, &w) in arow.iter_mut().zip(trow) {
-                        *a += xj * w;
-                    }
-                }
-            }
-        }
-        for ti in 0..t {
-            let arow = &acc[ti * d_out..(ti + 1) * d_out];
-            let yrow = y.row_mut(ti);
-            for o in 0..d_out {
-                yrow[o] += self.alpha[o] * arow[o];
-            }
-        }
+        kernels::with_scratch(|s| kernels::binary_matmul(self, &x.data, x.rows, &mut y.data, s));
     }
 
     pub fn bits_per_weight(&self) -> f64 {
         self.nbytes() as f64 * 8.0 / (self.d_in * self.d_out) as f64
     }
-}
-
-/// `[byte] -> [±1; 8]` expansion: bit j of the byte is the sign of input
-/// row `8·byte_row + j`.
-static SIGN_LUT: [[f32; 8]; 256] = make_sign_lut();
-
-const fn make_sign_lut() -> [[f32; 8]; 256] {
-    let mut l = [[-1.0f32; 8]; 256];
-    let mut b = 0;
-    while b < 256 {
-        let mut j = 0;
-        while j < 8 {
-            if (b >> j) & 1 == 1 {
-                l[b][j] = 1.0;
-            }
-            j += 1;
-        }
-        b += 1;
-    }
-    l
 }
 
 #[cfg(test)]

@@ -81,7 +81,7 @@ impl GptqQuantizer {
                 }
             }
         }
-        BinaryMatrix { d_in, d_out, plane, alpha }
+        BinaryMatrix::from_parts(plane, alpha, d_in, d_out)
     }
 
     /// Core GPTQ loop → (codes, scales, zeros).

@@ -1,0 +1,373 @@
+//! AVX2+FMA specializations of the fused kernels.
+//!
+//! Lane layout: one `__m256` covers 8 consecutive output columns (the
+//! repack pads `d_out` to `dp`, a multiple of 8, so every load/store on
+//! repacked data and scratch is full-width; only stores into the
+//! caller's unpadded `y` take a scalar tail). A plane byte holds bit
+//! `j` for input row `8·byte_row + j` of one column, so 8 column bytes
+//! are zero-extended to i32 lanes and tested against `set1(1 << j)`;
+//! `cmpeq` turns the test into an all-ones mask that either passes or
+//! zeroes the broadcast `x[row]·2^plane` addend — branch-free and with
+//! no variable-distance shifts (AVX2 immediate shifts take constants,
+//! so the mask-compare form is the vector analog of the scalar LUT).
+//!
+//! Everything here is reached through non-generic wrappers carrying
+//! `#[target_feature(enable = "avx2,fma")]`; the `#[inline(always)]`
+//! const-generic cores inline into them and inherit the features. The
+//! dispatcher (`kernels::active_isa`) performs the runtime CPUID check
+//! before any call lands here.
+
+use std::arch::x86_64::*;
+
+use super::repack::Repacked;
+use super::{Dims, PLANE_WEIGHTS};
+
+/// Per-lane test masks: `masks[j]` selects bit `j` in every lane.
+#[inline(always)]
+unsafe fn bit_masks() -> [__m256i; 8] {
+    [
+        _mm256_set1_epi32(1),
+        _mm256_set1_epi32(2),
+        _mm256_set1_epi32(4),
+        _mm256_set1_epi32(8),
+        _mm256_set1_epi32(16),
+        _mm256_set1_epi32(32),
+        _mm256_set1_epi32(64),
+        _mm256_set1_epi32(128),
+    ]
+}
+
+/// 8 plane bytes (8 output columns) → 8 zero-extended i32 lanes.
+#[inline(always)]
+unsafe fn load8(p: *const u8) -> __m256i {
+    _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+/// # Safety
+/// Requires AVX2+FMA at runtime (guaranteed by the dispatcher). Slice
+/// lengths are validated by the `kernels` entry points.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn packed_matvec(
+    bits: usize,
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    y: &mut [f32],
+    qacc: &mut [f32],
+) {
+    match bits {
+        1 => matvec_core::<1>(rp, d, x, y, qacc),
+        2 => matvec_core::<2>(rp, d, x, y, qacc),
+        3 => matvec_core::<3>(rp, d, x, y, qacc),
+        4 => matvec_core::<4>(rp, d, x, y, qacc),
+        b => panic!("fused kernels cover bits 1..=4, got {b}"),
+    }
+}
+
+/// # Safety
+/// Requires AVX2+FMA at runtime (guaranteed by the dispatcher). Slice
+/// lengths are validated by the `kernels` entry points.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn packed_matmul(
+    bits: usize,
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    t: usize,
+    y: &mut [f32],
+    tile: &mut [f32],
+) {
+    match bits {
+        1 => matmul_core::<1>(rp, d, x, t, y, tile),
+        2 => matmul_core::<2>(rp, d, x, t, y, tile),
+        3 => matmul_core::<3>(rp, d, x, t, y, tile),
+        4 => matmul_core::<4>(rp, d, x, t, y, tile),
+        b => panic!("fused kernels cover bits 1..=4, got {b}"),
+    }
+}
+
+#[inline(always)]
+unsafe fn matvec_core<const BITS: usize>(
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    y: &mut [f32],
+    qacc: &mut [f32],
+) {
+    let dp = rp.dp;
+    let bpg = d.group / 8;
+    let masks = bit_masks();
+    for gi in 0..d.d_in / d.group {
+        qacc[..dp].fill(0.0);
+        let mut xsum = 0.0f32;
+        for bq in 0..bpg {
+            let br = gi * bpg + bq;
+            let x8 = &x[br * 8..br * 8 + 8];
+            if x8.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            xsum += x8.iter().sum::<f32>();
+            for p in 0..BITS {
+                let pw = PLANE_WEIGHTS[p];
+                let mut xw = [_mm256_setzero_ps(); 8];
+                for j in 0..8 {
+                    xw[j] = _mm256_set1_ps(x8[j] * pw);
+                }
+                let row = rp.data.as_ptr().add((br * BITS + p) * dp);
+                let mut oc = 0;
+                while oc < dp {
+                    let v = load8(row.add(oc));
+                    let mut acc = _mm256_loadu_ps(qacc.as_ptr().add(oc));
+                    for j in 0..8 {
+                        let hit =
+                            _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+                        acc = _mm256_add_ps(
+                            acc,
+                            _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]),
+                        );
+                    }
+                    _mm256_storeu_ps(qacc.as_mut_ptr().add(oc), acc);
+                    oc += 8;
+                }
+            }
+        }
+        // epilogue: y += s ⊙ (qacc − z·xsum), vector main + scalar tail
+        // (y is unpadded; scales/zeros are padded so 8-wide loads are safe)
+        let srow = &rp.scales[gi * dp..][..dp];
+        let zrow = &rp.zeros[gi * dp..][..dp];
+        let xs = _mm256_set1_ps(xsum);
+        let mut o = 0;
+        while o + 8 <= d.d_out {
+            let q = _mm256_loadu_ps(qacc.as_ptr().add(o));
+            let z = _mm256_loadu_ps(zrow.as_ptr().add(o));
+            let sv = _mm256_loadu_ps(srow.as_ptr().add(o));
+            let acc = _mm256_fnmadd_ps(z, xs, q); // q − z·xsum
+            let yv = _mm256_loadu_ps(y.as_ptr().add(o));
+            _mm256_storeu_ps(y.as_mut_ptr().add(o), _mm256_fmadd_ps(sv, acc, yv));
+            o += 8;
+        }
+        while o < d.d_out {
+            y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
+            o += 1;
+        }
+    }
+}
+
+#[inline(always)]
+unsafe fn matmul_core<const BITS: usize>(
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    t: usize,
+    y: &mut [f32],
+    tile: &mut [f32],
+) {
+    let dp = rp.dp;
+    let bpg = d.group / 8;
+    let masks = bit_masks();
+    let mut pw_i = [_mm256_setzero_si256(); BITS];
+    for p in 0..BITS {
+        pw_i[p] = _mm256_set1_epi32(1 << p);
+    }
+    for gi in 0..d.d_in / d.group {
+        // decode this group's [group, dp] tile once (integer plane
+        // accumulate → cvt → (q − z)·s), padded columns decode to 0
+        let srow = &rp.scales[gi * dp..][..dp];
+        let zrow = &rp.zeros[gi * dp..][..dp];
+        for bq in 0..bpg {
+            let br = gi * bpg + bq;
+            let mut oc = 0;
+            while oc < dp {
+                let mut planes = [_mm256_setzero_si256(); BITS];
+                for p in 0..BITS {
+                    planes[p] = load8(rp.data.as_ptr().add((br * BITS + p) * dp + oc));
+                }
+                let sv = _mm256_loadu_ps(srow.as_ptr().add(oc));
+                let zv = _mm256_loadu_ps(zrow.as_ptr().add(oc));
+                for j in 0..8 {
+                    let mut qi = _mm256_setzero_si256();
+                    for p in 0..BITS {
+                        let hit = _mm256_cmpeq_epi32(
+                            _mm256_and_si256(planes[p], masks[j]),
+                            masks[j],
+                        );
+                        qi = _mm256_add_epi32(qi, _mm256_and_si256(hit, pw_i[p]));
+                    }
+                    let w = _mm256_mul_ps(_mm256_sub_ps(_mm256_cvtepi32_ps(qi), zv), sv);
+                    _mm256_storeu_ps(tile.as_mut_ptr().add((bq * 8 + j) * dp + oc), w);
+                }
+                oc += 8;
+            }
+        }
+        token_acc(rp, tile, d.group, x, t, &d, gi * d.group, y);
+    }
+}
+
+/// # Safety
+/// Requires AVX2+FMA at runtime (guaranteed by the dispatcher). Slice
+/// lengths are validated by the `kernels` entry points.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn binary_matvec(
+    rp: &Repacked,
+    d_out: usize,
+    x: &[f32],
+    y: &mut [f32],
+    qacc: &mut [f32],
+) {
+    let dp = rp.dp;
+    let masks = bit_masks();
+    qacc[..dp].fill(0.0);
+    let mut xsum = 0.0f32;
+    for (br, x8) in x.chunks_exact(8).enumerate() {
+        if x8.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        xsum += x8.iter().sum::<f32>();
+        let mut xw = [_mm256_setzero_ps(); 8];
+        for j in 0..8 {
+            xw[j] = _mm256_set1_ps(x8[j]);
+        }
+        let row = rp.data.as_ptr().add(br * dp);
+        let mut oc = 0;
+        while oc < dp {
+            let v = load8(row.add(oc));
+            let mut acc = _mm256_loadu_ps(qacc.as_ptr().add(oc));
+            for j in 0..8 {
+                let hit = _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+                acc = _mm256_add_ps(acc, _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]));
+            }
+            _mm256_storeu_ps(qacc.as_mut_ptr().add(oc), acc);
+            oc += 8;
+        }
+    }
+    // Eq. 9 epilogue: y += α ⊙ (2·qacc − xsum)
+    let xs = _mm256_set1_ps(xsum);
+    let two = _mm256_set1_ps(2.0);
+    let mut o = 0;
+    while o + 8 <= d_out {
+        let q = _mm256_loadu_ps(qacc.as_ptr().add(o));
+        let a = _mm256_loadu_ps(rp.scales.as_ptr().add(o));
+        let acc = _mm256_fmsub_ps(two, q, xs); // 2q − xsum
+        let yv = _mm256_loadu_ps(y.as_ptr().add(o));
+        _mm256_storeu_ps(y.as_mut_ptr().add(o), _mm256_fmadd_ps(a, acc, yv));
+        o += 8;
+    }
+    while o < d_out {
+        y[o] += rp.scales[o] * (2.0 * qacc[o] - xsum);
+        o += 1;
+    }
+}
+
+/// # Safety
+/// Requires AVX2+FMA at runtime (guaranteed by the dispatcher). Slice
+/// lengths are validated by the `kernels` entry points.
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn binary_matmul(
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    t: usize,
+    y: &mut [f32],
+    tile: &mut [f32],
+) {
+    let dp = rp.dp;
+    let masks = bit_masks();
+    let two = _mm256_set1_ps(2.0);
+    let onef = _mm256_set1_ps(1.0);
+    let onei = _mm256_set1_epi32(1);
+    let mut row0 = 0;
+    while row0 < d.d_in {
+        // decode an α·(2b−1) tile for a block of input rows (d.group =
+        // the row-block size here), reuse it for every token
+        let rows = d.group.min(d.d_in - row0);
+        for bq in 0..rows / 8 {
+            let br = row0 / 8 + bq;
+            let mut oc = 0;
+            while oc < dp {
+                let v = load8(rp.data.as_ptr().add(br * dp + oc));
+                let a = _mm256_loadu_ps(rp.scales.as_ptr().add(oc));
+                for j in 0..8 {
+                    let hit = _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+                    let b = _mm256_cvtepi32_ps(_mm256_and_si256(hit, onei));
+                    let w = _mm256_mul_ps(a, _mm256_fmsub_ps(two, b, onef));
+                    _mm256_storeu_ps(tile.as_mut_ptr().add((bq * 8 + j) * dp + oc), w);
+                }
+                oc += 8;
+            }
+        }
+        token_acc(rp, tile, rows, x, t, &d, row0, y);
+        row0 += rows;
+    }
+}
+
+/// `y[ti] += x[ti, row0..row0+rows] @ tile` for every token row: the
+/// output axis is chunked 16 floats wide (2 ymm accumulators per token)
+/// so each y chunk stays in registers across the whole row block.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn token_acc(
+    rp: &Repacked,
+    tile: &[f32],
+    rows: usize,
+    x: &[f32],
+    t: usize,
+    d: &Dims,
+    row0: usize,
+    y: &mut [f32],
+) {
+    let dp = rp.dp;
+    let mut oc = 0;
+    while oc + 16 <= d.d_out {
+        for ti in 0..t {
+            let xr = &x[ti * d.d_in + row0..][..rows];
+            let yp = y.as_mut_ptr().add(ti * d.d_out + oc);
+            let mut a0 = _mm256_loadu_ps(yp);
+            let mut a1 = _mm256_loadu_ps(yp.add(8));
+            for (rq, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let tp = tile.as_ptr().add(rq * dp + oc);
+                let xb = _mm256_set1_ps(xv);
+                a0 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp), a0);
+                a1 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp.add(8)), a1);
+            }
+            _mm256_storeu_ps(yp, a0);
+            _mm256_storeu_ps(yp.add(8), a1);
+        }
+        oc += 16;
+    }
+    if oc + 8 <= d.d_out {
+        for ti in 0..t {
+            let xr = &x[ti * d.d_in + row0..][..rows];
+            let yp = y.as_mut_ptr().add(ti * d.d_out + oc);
+            let mut a0 = _mm256_loadu_ps(yp);
+            for (rq, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                a0 = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xv),
+                    _mm256_loadu_ps(tile.as_ptr().add(rq * dp + oc)),
+                    a0,
+                );
+            }
+            _mm256_storeu_ps(yp, a0);
+        }
+        oc += 8;
+    }
+    if oc < d.d_out {
+        for ti in 0..t {
+            let xr = &x[ti * d.d_in + row0..][..rows];
+            for (rq, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let trow = &tile[rq * dp..][..dp];
+                for o in oc..d.d_out {
+                    y[ti * d.d_out + o] += xv * trow[o];
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! SIMD-specialized fused dequant×matmul kernel layer — the native-CPU
+//! analog of the Pallas kernel in
+//! `python/compile/kernels/dequant_matmul.py`.
+//!
+//! Everything quantized funnels through here: `QuantLinear` wraps these
+//! entry points, so token-group dispatch, `QuantExpert::ffn_batch_acc`
+//! and the serving decode engine all ride the same kernels with no
+//! call-site changes.
+//!
+//! * `repack` — a SIMD-friendly interleaved, padded copy of the
+//!   bit-planes, computed once at pack/load time and cached on the
+//!   matrix (see [`Repacked`]).
+//! * `scalar` — portable monomorphized kernels (const-generic
+//!   `BITS ∈ {1,2,3,4}`): the fallback path and the reference the SIMD
+//!   path is property-tested against.
+//! * `avx2` — AVX2+FMA kernels behind one runtime feature-detect.
+//!
+//! Dispatch is decided per call by [`active_isa`]: a cached CPUID check
+//! (`is_x86_feature_detected!`), overridable per-thread with
+//! [`force_scalar`] (tests) or globally with the `MCSHARP_FORCE_SCALAR`
+//! environment variable (benches, CI on non-AVX2 hosts).
+//!
+//! Callers provide scratch through the thread-local arena
+//! ([`with_scratch`]) so the steady-state decode loop — which runs
+//! inline on the engine thread below the dispatcher's
+//! `PAR_MIN_VOLUME` — performs zero allocations.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+pub mod repack;
+mod scalar;
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use super::binary::BinaryMatrix;
+use super::packed::PackedMatrix;
+pub use repack::Repacked;
+
+/// 2^p weights for plane accumulation (bit-plane p contributes 2^p·bit).
+pub(crate) const PLANE_WEIGHTS: [f32; 4] = [1.0, 2.0, 4.0, 8.0];
+
+/// `[byte] -> [0/1; 8]` expansion: bit j of a plane byte is the code bit
+/// of input row `8·byte_row + j`.
+pub(crate) static BIT_LUT: [[f32; 8]; 256] = make_bit_lut();
+
+const fn make_bit_lut() -> [[f32; 8]; 256] {
+    let mut l = [[0.0f32; 8]; 256];
+    let mut b = 0;
+    while b < 256 {
+        let mut j = 0;
+        while j < 8 {
+            if (b >> j) & 1 == 1 {
+                l[b][j] = 1.0;
+            }
+            j += 1;
+        }
+        b += 1;
+    }
+    l
+}
+
+/// Logical dims of a packed operand (the padded width lives in
+/// [`Repacked::dp`]). For binary matmuls `group` carries the row-block
+/// size instead of a quantization group.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Dims {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub group: usize,
+}
+
+// ------------------------------------------------------------- dispatch
+
+/// Which kernel family a call lands on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// AVX2 + FMA `std::arch` path.
+    Avx2Fma,
+    /// Portable scalar path (also the forced-fallback reference).
+    Scalar,
+}
+
+/// The ISA the next kernel call on this thread will dispatch to.
+pub fn active_isa() -> Isa {
+    if FORCE_SCALAR.with(|c| c.get()) {
+        return Isa::Scalar;
+    }
+    if simd_available() {
+        Isa::Avx2Fma
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Whether this CPU supports the SIMD path at all (cached CPUID check;
+/// ignores the per-thread [`force_scalar`] override but honors the
+/// `MCSHARP_FORCE_SCALAR` environment variable).
+pub fn simd_available() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if std::env::var_os("MCSHARP_FORCE_SCALAR").is_some() {
+            return false;
+        }
+        detect_arch()
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_arch() -> bool {
+    false
+}
+
+thread_local! {
+    static FORCE_SCALAR: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with SIMD dispatch disabled on this thread — tests pin the
+/// scalar path, benches measure it. Thread-local (not global) so
+/// parallel tests never race each other's dispatch.
+pub fn force_scalar<R>(f: impl FnOnce() -> R) -> R {
+    struct Reset(bool);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            FORCE_SCALAR.with(|c| c.set(self.0));
+        }
+    }
+    let _reset = Reset(FORCE_SCALAR.with(|c| c.replace(true)));
+    f()
+}
+
+// -------------------------------------------------------------- scratch
+
+/// Reusable f32 buffers for the kernel layer and the quantized expert
+/// FFN: one arena per thread (see [`with_scratch`]), grown on demand and
+/// never shrunk, so the steady-state hot path allocates nothing.
+#[derive(Default)]
+pub struct Scratch {
+    /// Per-group `Σ x_r·q[r,o]` accumulator (matvec kernels), `dp` floats.
+    qacc: Vec<f32>,
+    /// Dequantized group tile (matmul kernels), `group × dp` floats.
+    tile: Vec<f32>,
+    /// Scaled-activation prologue buffer (AWQ `Scaled` operands).
+    xbuf: Vec<f32>,
+    /// Expert-level arenas (`g`/`u`/weighted-tmp in the SwiGLU FFN).
+    pool: [Vec<f32>; 3],
+}
+
+impl Scratch {
+    /// Borrow a pool buffer, zero-filled to `n`. Taken by value (slot
+    /// left empty) so several slots can be live simultaneously; return
+    /// it with [`Scratch::put_pool`] to keep the capacity for the next
+    /// call.
+    pub fn take_pool(&mut self, slot: usize, n: usize) -> Vec<f32> {
+        let mut v = std::mem::take(&mut self.pool[slot]);
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    pub fn put_pool(&mut self, slot: usize, v: Vec<f32>) {
+        self.pool[slot] = v;
+    }
+}
+
+fn grow(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+thread_local! {
+    static SCRATCH: Cell<Option<Box<Scratch>>> = const { Cell::new(None) };
+}
+
+/// Run `f` with this thread's scratch arena (created on first use).
+/// Take/put instead of `RefCell` so a nested call degrades to a fresh
+/// allocation for the inner scope rather than a borrow panic.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    let mut s = SCRATCH.with(|c| c.take()).unwrap_or_default();
+    let r = f(&mut s);
+    SCRATCH.with(|c| c.set(Some(s)));
+    r
+}
+
+// --------------------------------------------------------- entry points
+
+/// Fused `y += x @ dequant(pm)` for one token, ISA-dispatched.
+pub fn packed_matvec(pm: &PackedMatrix, x: &[f32], y: &mut [f32], s: &mut Scratch) {
+    assert_eq!(x.len(), pm.d_in);
+    assert_eq!(y.len(), pm.d_out);
+    assert_eq!(pm.group % 8, 0, "group must be a multiple of 8");
+    let rp = pm.repacked();
+    let dims = Dims { d_in: pm.d_in, d_out: pm.d_out, group: pm.group };
+    let qacc = grow(&mut s.qacc, rp.dp);
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe {
+            avx2::packed_matvec(pm.bits as usize, rp, dims, x, y, qacc)
+        },
+        _ => match pm.bits {
+            1 => scalar::matvec::<1>(rp, dims, x, y, qacc),
+            2 => scalar::matvec::<2>(rp, dims, x, y, qacc),
+            3 => scalar::matvec::<3>(rp, dims, x, y, qacc),
+            4 => scalar::matvec::<4>(rp, dims, x, y, qacc),
+            b => panic!("fused kernels cover bits 1..=4, got {b}"),
+        },
+    }
+}
+
+/// Batched fused `y += x @ dequant(pm)` over `t` tokens (`x` row-major
+/// `[t, d_in]`, `y` `[t, d_out]`): each group tile is decoded into
+/// scratch once and reused by every token.
+pub fn packed_matmul(pm: &PackedMatrix, x: &[f32], t: usize, y: &mut [f32], s: &mut Scratch) {
+    assert_eq!(x.len(), t * pm.d_in);
+    assert_eq!(y.len(), t * pm.d_out);
+    assert_eq!(pm.group % 8, 0, "group must be a multiple of 8");
+    let rp = pm.repacked();
+    let dims = Dims { d_in: pm.d_in, d_out: pm.d_out, group: pm.group };
+    let tile = grow(&mut s.tile, pm.group * rp.dp);
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe {
+            avx2::packed_matmul(pm.bits as usize, rp, dims, x, t, y, tile)
+        },
+        _ => match pm.bits {
+            1 => scalar::matmul::<1>(rp, dims, x, t, y, tile),
+            2 => scalar::matmul::<2>(rp, dims, x, t, y, tile),
+            3 => scalar::matmul::<3>(rp, dims, x, t, y, tile),
+            4 => scalar::matmul::<4>(rp, dims, x, t, y, tile),
+            b => panic!("fused kernels cover bits 1..=4, got {b}"),
+        },
+    }
+}
+
+/// AWQ `Scaled` prologue + fused matvec: fold the per-input-channel
+/// `inv_s` into the activations inside scratch (no allocation, no
+/// clone), then run the packed kernel on the `diag(s)·W` codes.
+pub fn packed_matvec_scaled(
+    pm: &PackedMatrix,
+    inv_s: &[f32],
+    x: &[f32],
+    y: &mut [f32],
+    s: &mut Scratch,
+) {
+    assert_eq!(inv_s.len(), pm.d_in);
+    assert_eq!(x.len(), pm.d_in);
+    let mut xbuf = std::mem::take(&mut s.xbuf);
+    xbuf.clear();
+    xbuf.extend(x.iter().zip(inv_s).map(|(&v, &si)| v * si));
+    packed_matvec(pm, &xbuf, y, s);
+    s.xbuf = xbuf;
+}
+
+/// AWQ `Scaled` prologue + batched fused matmul (see
+/// [`packed_matvec_scaled`]).
+pub fn packed_matmul_scaled(
+    pm: &PackedMatrix,
+    inv_s: &[f32],
+    x: &[f32],
+    t: usize,
+    y: &mut [f32],
+    s: &mut Scratch,
+) {
+    assert_eq!(inv_s.len(), pm.d_in);
+    assert_eq!(x.len(), t * pm.d_in);
+    let mut xbuf = std::mem::take(&mut s.xbuf);
+    xbuf.clear();
+    xbuf.reserve(t * pm.d_in);
+    for ti in 0..t {
+        let xr = &x[ti * pm.d_in..][..pm.d_in];
+        xbuf.extend(xr.iter().zip(inv_s).map(|(&v, &si)| v * si));
+    }
+    packed_matmul(pm, &xbuf, t, y, s);
+    s.xbuf = xbuf;
+}
+
+/// Fused binary matvec (Eq. 9), ISA-dispatched.
+pub fn binary_matvec(bm: &BinaryMatrix, x: &[f32], y: &mut [f32], s: &mut Scratch) {
+    assert_eq!(x.len(), bm.d_in);
+    assert_eq!(y.len(), bm.d_out);
+    let rp = bm.repacked();
+    let qacc = grow(&mut s.qacc, rp.dp);
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::binary_matvec(rp, bm.d_out, x, y, qacc) },
+        _ => scalar::binary_matvec(rp, bm.d_out, x, y, qacc),
+    }
+}
+
+/// Input-row block size for the batched binary tile — plays the role a
+/// quantization group does for packed operands: keeps the decoded
+/// `α·(2b−1)` tile L1-resident while every token reuses it.
+const BINARY_TILE_ROWS: usize = 64;
+
+/// Batched fused binary matmul over `t` tokens.
+pub fn binary_matmul(bm: &BinaryMatrix, x: &[f32], t: usize, y: &mut [f32], s: &mut Scratch) {
+    assert_eq!(x.len(), t * bm.d_in);
+    assert_eq!(y.len(), t * bm.d_out);
+    let rp = bm.repacked();
+    let rows = BINARY_TILE_ROWS.min(bm.d_in);
+    let dims = Dims { d_in: bm.d_in, d_out: bm.d_out, group: rows };
+    let tile = grow(&mut s.tile, rows * rp.dp);
+    match active_isa() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { avx2::binary_matmul(rp, dims, x, t, y, tile) },
+        _ => scalar::binary_matmul(rp, dims, x, t, y, tile),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_is_scoped_and_nested() {
+        let outer = active_isa();
+        force_scalar(|| {
+            assert_eq!(active_isa(), Isa::Scalar);
+            force_scalar(|| assert_eq!(active_isa(), Isa::Scalar));
+            assert_eq!(active_isa(), Isa::Scalar);
+        });
+        assert_eq!(active_isa(), outer);
+    }
+
+    #[test]
+    fn with_scratch_reenters_without_panic() {
+        let n = with_scratch(|outer| {
+            let v = outer.take_pool(0, 4);
+            // nested use takes a fresh arena instead of panicking
+            let inner_len = with_scratch(|inner| inner.take_pool(0, 2).len());
+            outer.put_pool(0, v);
+            inner_len
+        });
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn pool_slots_are_independent_and_zeroed() {
+        with_scratch(|s| {
+            let mut a = s.take_pool(0, 3);
+            a[0] = 7.0;
+            let b = s.take_pool(1, 3);
+            assert_eq!(b, vec![0.0; 3]);
+            s.put_pool(0, a);
+            s.put_pool(1, b);
+            let a2 = s.take_pool(0, 3);
+            assert_eq!(a2, vec![0.0; 3], "reused buffers must be re-zeroed");
+            s.put_pool(0, a2);
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! SIMD-friendly interleaved repack of the bit-plane storage.
+//!
+//! `PackedMatrix` keeps its planes plane-major (`[bits][d_in/8][d_out]`)
+//! — natural for serialization and byte-for-byte python parity, but a
+//! fused kernel walking one byte-row of inputs then needs `bits` widely
+//! strided streams. The repack interleaves the planes by byte-row and
+//! pads the column axis to the vector width:
+//!
+//! ```text
+//! data[(byte_row * bits + plane) * dp + o],   dp = round_up(d_out, 8)
+//! ```
+//!
+//! so the kernel streams one contiguous run per (byte-row, plane) and can
+//! always issue full 8-wide loads/stores on repacked data. Group scales
+//! and zero-points (the binary α, respectively) are re-padded the same
+//! way; padded columns carry **zero scale**, so they dequantize to 0 and
+//! are safe to multiply-accumulate into padded scratch.
+//!
+//! Computed once at pack/load time and cached on the owning matrix in a
+//! `OnceLock` — the canonical plane bytes stay the wire/python format,
+//! this copy exists purely for the kernels.
+
+/// The interleaved, padded copy of a packed (or binary) operand.
+#[derive(Clone, Debug)]
+pub struct Repacked {
+    /// `d_out` rounded up to a multiple of 8 (the f32 SIMD lane count).
+    pub dp: usize,
+    /// `[d_in/8, bits, dp]` interleaved plane bytes (binary: `bits = 1`).
+    pub data: Vec<u8>,
+    /// `[d_in/group, dp]` group scales (binary: `[dp]` α), zero-padded.
+    pub scales: Vec<f32>,
+    /// `[d_in/group, dp]` group zero-points (binary: empty), zero-padded.
+    pub zeros: Vec<f32>,
+}
+
+impl Repacked {
+    /// Interleave a `PackedMatrix`'s plane-major storage.
+    pub fn from_planes(
+        planes: &[u8],
+        bits: usize,
+        d_in: usize,
+        d_out: usize,
+        scales: &[f32],
+        zeros: &[f32],
+        group: usize,
+    ) -> Repacked {
+        assert_eq!(d_in % 8, 0, "d_in must be a multiple of 8");
+        assert_eq!(d_in % group, 0, "d_in must be a multiple of group");
+        let rows = d_in / 8;
+        assert_eq!(planes.len(), bits * rows * d_out);
+        let n_groups = d_in / group;
+        let dp = pad8(d_out);
+        let mut data = vec![0u8; rows * bits * dp];
+        for p in 0..bits {
+            let plane = &planes[p * rows * d_out..][..rows * d_out];
+            for br in 0..rows {
+                let dst = (br * bits + p) * dp;
+                data[dst..dst + d_out].copy_from_slice(&plane[br * d_out..][..d_out]);
+            }
+        }
+        Repacked {
+            dp,
+            data,
+            scales: pad_rows(scales, n_groups, d_out, dp),
+            zeros: pad_rows(zeros, n_groups, d_out, dp),
+        }
+    }
+
+    /// Pad a `BinaryMatrix`'s single plane; α rides in `scales`.
+    pub fn from_binary(plane: &[u8], d_in: usize, d_out: usize, alpha: &[f32]) -> Repacked {
+        assert_eq!(d_in % 8, 0, "d_in must be a multiple of 8");
+        let rows = d_in / 8;
+        assert_eq!(plane.len(), rows * d_out);
+        assert_eq!(alpha.len(), d_out);
+        let dp = pad8(d_out);
+        let mut data = vec![0u8; rows * dp];
+        for br in 0..rows {
+            data[br * dp..br * dp + d_out].copy_from_slice(&plane[br * d_out..][..d_out]);
+        }
+        Repacked { dp, data, scales: pad_rows(alpha, 1, d_out, dp), zeros: Vec::new() }
+    }
+
+    /// Repacked footprint in bytes — diagnostics only; the paper's memory
+    /// accounting (`nbytes`) stays on the canonical packed form.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() + (self.scales.len() + self.zeros.len()) * 4
+    }
+}
+
+fn pad8(n: usize) -> usize {
+    n.div_ceil(8) * 8
+}
+
+fn pad_rows(src: &[f32], rows: usize, d_out: usize, dp: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * d_out);
+    let mut out = vec![0.0f32; rows * dp];
+    for r in 0..rows {
+        out[r * dp..r * dp + d_out].copy_from_slice(&src[r * d_out..][..d_out]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleave_and_pad() {
+        // 2-bit, d_in = 8 (1 byte-row), d_out = 3 → dp = 8
+        let planes = vec![0x11, 0x22, 0x33, 0x44, 0x55, 0x66]; // [2][1][3]
+        let rp = Repacked::from_planes(
+            &planes,
+            2,
+            8,
+            3,
+            &[1.0, 2.0, 3.0],
+            &[4.0, 5.0, 6.0],
+            8,
+        );
+        assert_eq!(rp.dp, 8);
+        // byte-row 0: plane 0 bytes then plane 1 bytes, each padded to 8
+        assert_eq!(&rp.data[0..3], &[0x11, 0x22, 0x33]);
+        assert_eq!(&rp.data[3..8], &[0; 5]);
+        assert_eq!(&rp.data[8..11], &[0x44, 0x55, 0x66]);
+        assert_eq!(&rp.scales[..4], &[1.0, 2.0, 3.0, 0.0]);
+        assert_eq!(&rp.zeros[..4], &[4.0, 5.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn binary_alpha_padded() {
+        let rp = Repacked::from_binary(&[0xAB, 0xCD], 16, 1, &[0.5]);
+        assert_eq!(rp.dp, 8);
+        assert_eq!(rp.data.len(), 16);
+        assert_eq!(rp.data[0], 0xAB);
+        assert_eq!(rp.data[8], 0xCD);
+        assert_eq!(rp.scales.len(), 8);
+        assert_eq!(rp.scales[0], 0.5);
+        assert_eq!(rp.scales[1], 0.0);
+        assert!(rp.zeros.is_empty());
+    }
+}

@@ -1,0 +1,187 @@
+//! Portable fused kernels — the dispatch fallback and the reference the
+//! SIMD path is property-tested against (`tests/kernel_equivalence.rs`).
+//!
+//! Same group-affine factorization as the AVX2 path: within one
+//! quantization group accumulate `qacc[o] = Σ_r x_r·q[r,o]` and
+//! `xsum = Σ_r x_r`, then apply `y[o] += s[o]·(qacc[o] − z[o]·xsum)`
+//! once per group — the f32 weight matrix is never materialized. The
+//! per-byte 0/1 LUT turns bit tests into pure FMAs (no per-element
+//! shifts in the inner loop), which the compiler auto-vectorizes on any
+//! target; `BITS` is a const generic so each bit-width gets its own
+//! monomorphized loop nest.
+
+use super::repack::Repacked;
+use super::{Dims, BIT_LUT, PLANE_WEIGHTS};
+
+/// `y += x @ dequant` for one token.
+pub(super) fn matvec<const BITS: usize>(
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    y: &mut [f32],
+    qacc: &mut [f32],
+) {
+    let dp = rp.dp;
+    let bpg = d.group / 8;
+    for gi in 0..d.d_in / d.group {
+        qacc[..dp].fill(0.0);
+        let mut xsum = 0.0f32;
+        for bq in 0..bpg {
+            let br = gi * bpg + bq;
+            let x8 = &x[br * 8..br * 8 + 8];
+            if x8.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            xsum += x8.iter().sum::<f32>();
+            for p in 0..BITS {
+                let pw = PLANE_WEIGHTS[p];
+                let xw = [
+                    x8[0] * pw,
+                    x8[1] * pw,
+                    x8[2] * pw,
+                    x8[3] * pw,
+                    x8[4] * pw,
+                    x8[5] * pw,
+                    x8[6] * pw,
+                    x8[7] * pw,
+                ];
+                let row = &rp.data[(br * BITS + p) * dp..][..dp];
+                for o in 0..d.d_out {
+                    let l = &BIT_LUT[row[o] as usize];
+                    qacc[o] += l[0] * xw[0]
+                        + l[1] * xw[1]
+                        + l[2] * xw[2]
+                        + l[3] * xw[3]
+                        + l[4] * xw[4]
+                        + l[5] * xw[5]
+                        + l[6] * xw[6]
+                        + l[7] * xw[7];
+                }
+            }
+        }
+        let srow = &rp.scales[gi * dp..][..dp];
+        let zrow = &rp.zeros[gi * dp..][..dp];
+        for o in 0..d.d_out {
+            y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
+        }
+    }
+}
+
+/// Batched `y += x @ dequant` over `t` tokens: decode each group tile
+/// into scratch once, reuse it for every token row.
+pub(super) fn matmul<const BITS: usize>(
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    t: usize,
+    y: &mut [f32],
+    tile: &mut [f32],
+) {
+    let dp = rp.dp;
+    let bpg = d.group / 8;
+    for gi in 0..d.d_in / d.group {
+        let srow = &rp.scales[gi * dp..][..dp];
+        let zrow = &rp.zeros[gi * dp..][..dp];
+        for bq in 0..bpg {
+            let br = gi * bpg + bq;
+            for o in 0..d.d_out {
+                let mut q = [0.0f32; 8];
+                for p in 0..BITS {
+                    let pw = PLANE_WEIGHTS[p];
+                    let l = &BIT_LUT[rp.data[(br * BITS + p) * dp + o] as usize];
+                    for j in 0..8 {
+                        q[j] += pw * l[j];
+                    }
+                }
+                let (sv, zv) = (srow[o], zrow[o]);
+                for j in 0..8 {
+                    tile[(bq * 8 + j) * dp + o] = (q[j] - zv) * sv;
+                }
+            }
+        }
+        token_acc(rp, tile, d.group, x, t, &d, gi * d.group, y);
+    }
+}
+
+/// Binary Eq. 9: accumulate `qacc[o] = Σ_{bit=1} x_r`, one α multiply
+/// per output channel in the epilogue.
+pub(super) fn binary_matvec(rp: &Repacked, d_out: usize, x: &[f32], y: &mut [f32], qacc: &mut [f32]) {
+    let dp = rp.dp;
+    qacc[..dp].fill(0.0);
+    let mut xsum = 0.0f32;
+    for (br, x8) in x.chunks_exact(8).enumerate() {
+        if x8.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        xsum += x8.iter().sum::<f32>();
+        let row = &rp.data[br * dp..][..dp];
+        for o in 0..d_out {
+            let l = &BIT_LUT[row[o] as usize];
+            qacc[o] += l[0] * x8[0]
+                + l[1] * x8[1]
+                + l[2] * x8[2]
+                + l[3] * x8[3]
+                + l[4] * x8[4]
+                + l[5] * x8[5]
+                + l[6] * x8[6]
+                + l[7] * x8[7];
+        }
+    }
+    for o in 0..d_out {
+        y[o] += rp.scales[o] * (2.0 * qacc[o] - xsum);
+    }
+}
+
+/// Batched binary: decode the `α·(2b−1)` tile for a block of input rows
+/// (`d.group` = the row-block size here) and reuse it for every token.
+pub(super) fn binary_matmul(
+    rp: &Repacked,
+    d: Dims,
+    x: &[f32],
+    t: usize,
+    y: &mut [f32],
+    tile: &mut [f32],
+) {
+    let dp = rp.dp;
+    let mut row0 = 0;
+    while row0 < d.d_in {
+        let rows = d.group.min(d.d_in - row0);
+        for bq in 0..rows / 8 {
+            let br = row0 / 8 + bq;
+            for o in 0..d.d_out {
+                let l = &BIT_LUT[rp.data[br * dp + o] as usize];
+                let a = rp.scales[o];
+                for j in 0..8 {
+                    tile[(bq * 8 + j) * dp + o] = a * (2.0 * l[j] - 1.0);
+                }
+            }
+        }
+        token_acc(rp, tile, rows, x, t, &d, row0, y);
+        row0 += rows;
+    }
+}
+
+/// `y[ti] += x[ti, row0..row0+rows] @ tile` for every token row.
+#[allow(clippy::too_many_arguments)]
+fn token_acc(
+    rp: &Repacked,
+    tile: &[f32],
+    rows: usize,
+    x: &[f32],
+    t: usize,
+    d: &Dims,
+    row0: usize,
+    y: &mut [f32],
+) {
+    let dp = rp.dp;
+    for ti in 0..t {
+        let xr = &x[ti * d.d_in + row0..][..rows];
+        let yrow = &mut y[ti * d.d_out..][..d.d_out];
+        for (rq, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            crate::tensor::axpy(xv, &tile[rq * dp..][..d.d_out], yrow);
+        }
+    }
+}

@@ -1,12 +1,15 @@
 //! Quantization substrate: round-to-nearest + GPTQ quantizers, 1-bit
 //! binarization (paper Eq. 4/8/9), bit-plane packed storage (the HQQ-role
-//! store shared byte-for-byte with the Pallas kernels), quantized linear
-//! execution and the per-expert reconstruction-error table (Eq. 6).
+//! store shared byte-for-byte with the Pallas kernels), the
+//! SIMD-specialized fused dequant×matmul kernel layer (`kernels`),
+//! quantized linear execution and the per-expert reconstruction-error
+//! table (Eq. 6).
 
 pub mod awq;
 pub mod binary;
 pub mod error;
 pub mod gptq;
+pub mod kernels;
 pub mod packed;
 pub mod qcheckpoint;
 pub mod qlinear;
@@ -16,6 +19,7 @@ pub mod store;
 
 pub use binary::BinaryMatrix;
 pub use gptq::GptqQuantizer;
+pub use kernels::{Isa, Scratch};
 pub use packed::PackedMatrix;
 pub use qlinear::QuantLinear;
 pub use qmodel::{QuantExpert, QuantModel};

@@ -4,12 +4,20 @@
 //! at serve time: `bits × d_in/8 × d_out` bytes of planes plus group
 //! scale/zero vectors; this is the paper's pre-loading compression.
 //!
-//! `matvec_fused` dequantizes on the fly inside the mat-vec — the
-//! native-backend analog of the Pallas dequant-matmul kernel (and of the
-//! paper's HQQ ATEN path). A cross-language test pins the plane bytes
+//! `matvec_fused`/`matmul_fused` dequantize on the fly inside the
+//! mat-vec/mat-mul — the native-backend analog of the Pallas
+//! dequant-matmul kernel (and of the paper's HQQ ATEN path). Since the
+//! kernel-layer refactor both delegate to `quant::kernels`, which
+//! ISA-dispatches between the AVX2+FMA and portable scalar kernels over
+//! an interleaved repack of these planes (computed once at pack/load
+//! time, cached here). A cross-language test pins the plane bytes
 //! against the python fixed vectors.
 
+use std::sync::OnceLock;
+
 use crate::tensor::Tensor2;
+
+use super::kernels::{self, Repacked};
 
 #[derive(Clone, Debug)]
 pub struct PackedMatrix {
@@ -23,6 +31,10 @@ pub struct PackedMatrix {
     pub scales: Vec<f32>,
     /// `[d_in/group, d_out]` group zero-points.
     pub zeros: Vec<f32>,
+    /// Kernel-layer interleaved repack (see `quant::kernels::repack`),
+    /// built eagerly at pack/load time; `OnceLock` keeps late
+    /// construction paths (and `Clone`) sound under shared access.
+    repack: OnceLock<Repacked>,
 }
 
 impl PackedMatrix {
@@ -51,7 +63,47 @@ impl PackedMatrix {
                 }
             }
         }
-        PackedMatrix { d_in, d_out, bits, group, planes, scales, zeros }
+        PackedMatrix::from_parts(planes, scales, zeros, d_in, d_out, bits, group)
+    }
+
+    /// Assemble from already-packed planes (checkpoint load path) and
+    /// build the kernel repack once, up front.
+    pub fn from_parts(
+        planes: Vec<u8>,
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+        d_in: usize,
+        d_out: usize,
+        bits: u8,
+        group: usize,
+    ) -> PackedMatrix {
+        let pm = PackedMatrix {
+            d_in,
+            d_out,
+            bits,
+            group,
+            planes,
+            scales,
+            zeros,
+            repack: OnceLock::new(),
+        };
+        let _ = pm.repacked();
+        pm
+    }
+
+    /// The kernel layer's interleaved repack of the planes.
+    pub fn repacked(&self) -> &Repacked {
+        self.repack.get_or_init(|| {
+            Repacked::from_planes(
+                &self.planes,
+                self.bits as usize,
+                self.d_in,
+                self.d_out,
+                &self.scales,
+                &self.zeros,
+                self.group,
+            )
+        })
     }
 
     /// Unpack back to integer codes (tests / PJRT literal staging).
@@ -61,10 +113,10 @@ impl PackedMatrix {
         for p in 0..self.bits as usize {
             let plane = &self.planes[p * rows * self.d_out..(p + 1) * rows * self.d_out];
             for r in 0..self.d_in {
-                let byte = plane[(r / 8) * self.d_out..][..self.d_out].to_vec();
+                let row = &plane[(r / 8) * self.d_out..][..self.d_out];
                 let bit = (r % 8) as u8;
                 for o in 0..self.d_out {
-                    codes[r * self.d_out + o] |= ((byte[o] >> bit) & 1) << p;
+                    codes[r * self.d_out + o] |= ((row[o] >> bit) & 1) << p;
                 }
             }
         }
@@ -78,116 +130,21 @@ impl PackedMatrix {
     }
 
     /// Fused dequant mat-vec: `y += x @ dequant(self)` without ever
-    /// materializing the f32 weight matrix. Walks plane bytes row-group
-    /// by row-group so the packed bytes stream linearly; each byte (8
-    /// rows of one column, one plane) indexes a precomputed 0/1 expansion
-    /// so the inner loop is pure FMAs (no per-element shifts — the CPU
-    /// analog of the Pallas kernel's vectorized unpack).
+    /// materializing the f32 weight matrix (kernel layer, thread-local
+    /// scratch).
     pub fn matvec_fused(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.d_in);
-        assert_eq!(y.len(), self.d_out);
-        let rows = self.d_in / 8;
-        let d_out = self.d_out;
-        let bits = self.bits as usize;
-        // accumulate q-weighted x per output column in group chunks so the
-        // affine (q - z) * s applies once per group
-        let g = self.group;
-        let n_groups = self.d_in / g;
-        let bytes_per_group = g / 8;
-        let mut qacc = vec![0.0f32; d_out]; // Σ_r x_r * q[r, o] within group
-        for gi in 0..n_groups {
-            qacc.fill(0.0);
-            let mut xsum = 0.0f32; // Σ_r x_r within group (for the -z*s term)
-            for bq in 0..bytes_per_group {
-                let byte_row = gi * bytes_per_group + bq;
-                let x8 = &x[byte_row * 8..byte_row * 8 + 8];
-                if x8.iter().all(|&v| v == 0.0) {
-                    continue;
-                }
-                xsum += x8.iter().sum::<f32>();
-                for (p, pw) in PLANE_WEIGHTS[..bits].iter().enumerate() {
-                    let plane = &self.planes[p * rows * d_out + byte_row * d_out..][..d_out];
-                    // pre-scale the token slice by the plane weight once
-                    let xw = [
-                        x8[0] * pw,
-                        x8[1] * pw,
-                        x8[2] * pw,
-                        x8[3] * pw,
-                        x8[4] * pw,
-                        x8[5] * pw,
-                        x8[6] * pw,
-                        x8[7] * pw,
-                    ];
-                    for o in 0..d_out {
-                        let l = &BIT_LUT[plane[o] as usize];
-                        qacc[o] += l[0] * xw[0]
-                            + l[1] * xw[1]
-                            + l[2] * xw[2]
-                            + l[3] * xw[3]
-                            + l[4] * xw[4]
-                            + l[5] * xw[5]
-                            + l[6] * xw[6]
-                            + l[7] * xw[7];
-                    }
-                }
-            }
-            let srow = &self.scales[gi * d_out..][..d_out];
-            let zrow = &self.zeros[gi * d_out..][..d_out];
-            for o in 0..d_out {
-                y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
-            }
-        }
+        kernels::with_scratch(|s| kernels::packed_matvec(self, x, y, s));
     }
 
     /// Batched `y += x @ dequant(self)` over a token block: each group's
-    /// weight tile is dequantized to f32 scratch **once** and reused by
-    /// all `T` tokens — the amortization the Pallas kernel gets by keeping
+    /// weight tile is dequantized to scratch **once** and reused by all
+    /// `T` tokens — the amortization the Pallas kernel gets by keeping
     /// the `[T, d_in]` activation block VMEM-resident while weight tiles
     /// stream through.
     pub fn matmul_fused(&self, x: &Tensor2, y: &mut Tensor2) {
         assert_eq!(x.cols, self.d_in);
         assert_eq!((y.rows, y.cols), (x.rows, self.d_out));
-        let rows = self.d_in / 8;
-        let d_out = self.d_out;
-        let bits = self.bits as usize;
-        let g = self.group;
-        let t = x.rows;
-        let mut tile = vec![0.0f32; g * d_out]; // dequantized [g, d_out]
-        for gi in 0..self.d_in / g {
-            // decode this group's rows once
-            let srow = &self.scales[gi * d_out..][..d_out];
-            let zrow = &self.zeros[gi * d_out..][..d_out];
-            for rq in 0..g {
-                let r = gi * g + rq;
-                let byte_row = r / 8;
-                let bit = r % 8;
-                let trow = &mut tile[rq * d_out..(rq + 1) * d_out];
-                trow.fill(0.0);
-                for (p, pw) in PLANE_WEIGHTS[..bits].iter().enumerate() {
-                    let plane = &self.planes[p * rows * d_out + byte_row * d_out..][..d_out];
-                    for o in 0..d_out {
-                        trow[o] += pw * ((plane[o] >> bit) & 1) as f32;
-                    }
-                }
-                for o in 0..d_out {
-                    trow[o] = srow[o] * (trow[o] - zrow[o]);
-                }
-            }
-            // every token reuses the decoded tile
-            for ti in 0..t {
-                let xr = &x.row(ti)[gi * g..(gi + 1) * g];
-                let yrow = y.row_mut(ti);
-                for (rq, &xv) in xr.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let trow = &tile[rq * d_out..(rq + 1) * d_out];
-                    for (a, &w) in yrow.iter_mut().zip(trow) {
-                        *a += xv * w;
-                    }
-                }
-            }
-        }
+        kernels::with_scratch(|s| kernels::packed_matmul(self, &x.data, x.rows, &mut y.data, s));
     }
 
     /// Packed storage footprint in bytes (planes + quantizer params) —
@@ -200,29 +157,6 @@ impl PackedMatrix {
     pub fn bits_per_weight(&self) -> f64 {
         self.nbytes() as f64 * 8.0 / (self.d_in * self.d_out) as f64
     }
-}
-
-/// 2^p weights for plane accumulation.
-const PLANE_WEIGHTS: [f32; 4] = [1.0, 2.0, 4.0, 8.0];
-
-/// `[byte] -> [0/1; 8]` expansion: bit j of a plane byte is the code bit
-/// of input row `8·byte_row + j`.
-static BIT_LUT: [[f32; 8]; 256] = make_bit_lut();
-
-const fn make_bit_lut() -> [[f32; 8]; 256] {
-    let mut l = [[0.0f32; 8]; 256];
-    let mut b = 0;
-    while b < 256 {
-        let mut j = 0;
-        while j < 8 {
-            if (b >> j) & 1 == 1 {
-                l[b][j] = 1.0;
-            }
-            j += 1;
-        }
-        b += 1;
-    }
-    l
 }
 
 #[cfg(test)]

@@ -103,14 +103,24 @@ fn read_packed(r: &mut impl Read) -> Result<PackedMatrix> {
     let d_in = read_u64(r)? as usize;
     let d_out = read_u64(r)? as usize;
     let group = read_u64(r)? as usize;
-    if bits == 0 || bits > 8 || d_in == 0 || d_out == 0 || group == 0 || d_in % 8 != 0 {
+    if bits == 0
+        || bits > 8
+        || d_in == 0
+        || d_out == 0
+        || group == 0
+        || d_in % 8 != 0
+        || d_in % group != 0
+        || group % 8 != 0
+    {
         bail!("corrupt packed-matrix header (bits {bits}, {d_in}x{d_out}, group {group})");
     }
     let planes = read_bytes(r, bits as usize * d_in / 8 * d_out)?;
     let n_groups = d_in / group;
     let scales = read_f32s(r, n_groups * d_out)?;
     let zeros = read_f32s(r, n_groups * d_out)?;
-    Ok(PackedMatrix { d_in, d_out, bits, group, planes, scales, zeros })
+    // from_parts builds the kernel repack eagerly, so a freshly loaded
+    // checkpoint pays the interleave cost here, not on the first decode.
+    Ok(PackedMatrix::from_parts(planes, scales, zeros, d_in, d_out, bits, group))
 }
 
 fn write_qlinear(w: &mut impl Write, q: &QuantLinear) -> Result<()> {
@@ -163,7 +173,7 @@ fn read_qlinear(r: &mut impl Read) -> Result<QuantLinear> {
             }
             let plane = read_bytes(r, d_in / 8 * d_out)?;
             let alpha = read_f32s(r, d_out)?;
-            QuantLinear::Binary(BinaryMatrix { d_in, d_out, plane, alpha })
+            QuantLinear::Binary(BinaryMatrix::from_parts(plane, alpha, d_in, d_out))
         }
         TAG_SCALED => {
             let n = read_u64(r)? as usize;

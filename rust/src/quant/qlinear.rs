@@ -5,6 +5,7 @@
 use crate::tensor::Tensor2;
 
 use super::binary::BinaryMatrix;
+use super::kernels::{self, Scratch};
 use super::packed::PackedMatrix;
 
 #[derive(Clone, Debug)]
@@ -21,6 +22,15 @@ pub enum QuantLinear {
 impl QuantLinear {
     /// `y += x @ W` in whatever format the layer is stored.
     pub fn matvec_acc(&self, x: &[f32], y: &mut [f32]) {
+        kernels::with_scratch(|s| self.matvec_acc_sc(x, y, s));
+    }
+
+    /// Scratch-threaded variant of [`matvec_acc`](Self::matvec_acc) for
+    /// callers that already hold the thread's kernel scratch — the
+    /// steady-state decode path allocates nothing, including the AWQ
+    /// `Scaled` activation rescale (folded into the kernel prologue via a
+    /// scratch buffer instead of a per-call `Vec`).
+    pub fn matvec_acc_sc(&self, x: &[f32], y: &mut [f32], s: &mut Scratch) {
         match self {
             QuantLinear::Fp(w) => {
                 for (r, &xr) in x.iter().enumerate() {
@@ -29,12 +39,10 @@ impl QuantLinear {
                     }
                 }
             }
-            QuantLinear::Packed(p) => p.matvec_fused(x, y),
-            QuantLinear::Binary(b) => b.matvec_fused(x, y),
+            QuantLinear::Packed(p) => kernels::packed_matvec(p, x, y, s),
+            QuantLinear::Binary(b) => kernels::binary_matvec(b, x, y, s),
             QuantLinear::Scaled { inv_s, inner } => {
-                let xs: Vec<f32> =
-                    x.iter().zip(inv_s).map(|(&v, &s)| v * s).collect();
-                inner.matvec_fused(&xs, y);
+                kernels::packed_matvec_scaled(inner, inv_s, x, y, s)
             }
         }
     }
@@ -43,27 +51,31 @@ impl QuantLinear {
     /// decode each weight tile once and reuse it for every row (the
     /// serving hot path; see `PackedMatrix::matmul_fused`).
     pub fn matmul_acc(&self, x: &Tensor2, y: &mut Tensor2) {
+        assert_eq!(x.cols, self.d_in());
+        assert_eq!((y.rows, y.cols), (x.rows, self.d_out()));
+        kernels::with_scratch(|s| self.matmul_acc_sc(&x.data, x.rows, &mut y.data, s));
+    }
+
+    /// Scratch-threaded batched accumulate over `t` row-major tokens
+    /// (`x: [t, d_in]`, `y: [t, d_out]`). Same zero-allocation contract
+    /// as [`matvec_acc_sc`](Self::matvec_acc_sc).
+    pub fn matmul_acc_sc(&self, x: &[f32], t: usize, y: &mut [f32], s: &mut Scratch) {
         match self {
             QuantLinear::Fp(w) => {
-                for ti in 0..x.rows {
-                    let yrow = y.row_mut(ti);
-                    for (r, &xr) in x.row(ti).iter().enumerate() {
+                for ti in 0..t {
+                    let yrow = &mut y[ti * w.cols..][..w.cols];
+                    let xrow = &x[ti * w.rows..][..w.rows];
+                    for (r, &xr) in xrow.iter().enumerate() {
                         if xr != 0.0 {
                             crate::tensor::axpy(xr, w.row(r), yrow);
                         }
                     }
                 }
             }
-            QuantLinear::Packed(p) => p.matmul_fused(x, y),
-            QuantLinear::Binary(b) => b.matmul_fused(x, y),
+            QuantLinear::Packed(p) => kernels::packed_matmul(p, x, t, y, s),
+            QuantLinear::Binary(b) => kernels::binary_matmul(b, x, t, y, s),
             QuantLinear::Scaled { inv_s, inner } => {
-                let mut xs = x.clone();
-                for ti in 0..xs.rows {
-                    for (v, &s) in xs.row_mut(ti).iter_mut().zip(inv_s) {
-                        *v *= s;
-                    }
-                }
-                inner.matmul_fused(&xs, y);
+                kernels::packed_matmul_scaled(inner, inv_s, x, t, y, s)
             }
         }
     }

@@ -19,6 +19,7 @@ use crate::moe::model::{ExpertId, ExpertProvider, MoeModel};
 use crate::tensor::{silu, Tensor2};
 
 use super::gptq::GptqQuantizer;
+use super::kernels::{self, Scratch};
 use super::qlinear::QuantLinear;
 use super::rtn;
 use super::store::{ExpertStore, ResidentStore};
@@ -36,23 +37,35 @@ pub struct QuantExpert {
 impl QuantExpert {
     /// `out += w * F(x)` with fused dequant matvecs.
     pub fn ffn_row_acc(&self, x: &[f32], w: f32, out: &mut [f32]) {
+        kernels::with_scratch(|s| self.ffn_row_sc(x, w, out, s));
+    }
+
+    /// Scratch-threaded variant of [`ffn_row_acc`](Self::ffn_row_acc):
+    /// the SwiGLU intermediates `g`/`u` and the weighted-accumulate `tmp`
+    /// come out of the thread's kernel scratch arena instead of three
+    /// fresh `Vec`s per expert call — zero steady-state allocation on the
+    /// decode hot path.
+    pub fn ffn_row_sc(&self, x: &[f32], w: f32, out: &mut [f32], s: &mut Scratch) {
         let f = self.wg.d_out();
-        let mut g = vec![0.0f32; f];
-        let mut u = vec![0.0f32; f];
-        self.wg.matvec_acc(x, &mut g);
-        self.wu.matvec_acc(x, &mut u);
+        let mut g = s.take_pool(0, f);
+        let mut u = s.take_pool(1, f);
+        self.wg.matvec_acc_sc(x, &mut g, s);
+        self.wu.matvec_acc_sc(x, &mut u, s);
         for j in 0..f {
             g[j] = silu(g[j]) * u[j];
         }
         if w == 1.0 {
-            self.wd.matvec_acc(&g, out);
+            self.wd.matvec_acc_sc(&g, out, s);
         } else {
-            let mut tmp = vec![0.0f32; out.len()];
-            self.wd.matvec_acc(&g, &mut tmp);
+            let mut tmp = s.take_pool(2, out.len());
+            self.wd.matvec_acc_sc(&g, &mut tmp, s);
             for (o, t) in out.iter_mut().zip(&tmp) {
                 *o += w * t;
             }
+            s.put_pool(2, tmp);
         }
+        s.put_pool(0, g);
+        s.put_pool(1, u);
     }
 
     pub fn nbytes(&self) -> u64 {
@@ -63,16 +76,27 @@ impl QuantExpert {
     /// serves every token (the native analog of running the Pallas
     /// expert-FFN kernel on a padded token bucket).
     pub fn ffn_batch_acc(&self, x: &Tensor2, out: &mut Tensor2) {
+        assert_eq!(x.cols, self.wg.d_in());
+        assert_eq!((out.rows, out.cols), (x.rows, self.wd.d_out()));
+        kernels::with_scratch(|s| self.ffn_batch_sc(&x.data, x.rows, &mut out.data, s));
+    }
+
+    /// Scratch-threaded batched FFN over `t` row-major tokens
+    /// (`x: [t, d_model]`, `out: [t, d_model]`), intermediates pooled in
+    /// the scratch arena. Same zero-allocation contract as
+    /// [`ffn_row_sc`](Self::ffn_row_sc).
+    pub fn ffn_batch_sc(&self, x: &[f32], t: usize, out: &mut [f32], s: &mut Scratch) {
         let f = self.wg.d_out();
-        let t = x.rows;
-        let mut g = Tensor2::zeros(t, f);
-        let mut u = Tensor2::zeros(t, f);
-        self.wg.matmul_acc(x, &mut g);
-        self.wu.matmul_acc(x, &mut u);
-        for (gv, &uv) in g.data.iter_mut().zip(&u.data) {
+        let mut g = s.take_pool(0, t * f);
+        let mut u = s.take_pool(1, t * f);
+        self.wg.matmul_acc_sc(x, t, &mut g, s);
+        self.wu.matmul_acc_sc(x, t, &mut u, s);
+        for (gv, &uv) in g.iter_mut().zip(&u) {
             *gv = silu(*gv) * uv;
         }
-        self.wd.matmul_acc(&g, out);
+        self.wd.matmul_acc_sc(&g, t, out, s);
+        s.put_pool(0, g);
+        s.put_pool(1, u);
     }
 }
 
@@ -261,9 +285,21 @@ impl ExpertProvider for QuantModel {
                 if weights.iter().all(|&w| w == 1.0) {
                     qe.ffn_batch_acc(x, out);
                 } else {
-                    let mut tmp = Tensor2::zeros(x.rows, x.cols);
-                    qe.ffn_batch_acc(x, &mut tmp);
-                    acc_weighted(&tmp, out);
+                    // weighted path: tmp comes from the scratch arena's
+                    // third pool slot (slots 0/1 feed the SwiGLU
+                    // intermediates inside `ffn_batch_sc`)
+                    kernels::with_scratch(|s| {
+                        let mut tmp = s.take_pool(2, x.rows * out.cols);
+                        qe.ffn_batch_sc(&x.data, x.rows, &mut tmp, s);
+                        for i in 0..x.rows {
+                            let w = weights[i];
+                            let trow = &tmp[i * out.cols..][..out.cols];
+                            for (o, v) in out.row_mut(i).iter_mut().zip(trow) {
+                                *o += w * v;
+                            }
+                        }
+                        s.put_pool(2, tmp);
+                    });
                 }
             }
             // shared experts are round-tripped f32: batched matmul path

@@ -1,0 +1,231 @@
+//! Kernel-equivalence suite — the acceptance gate for the fused
+//! dequant×matmul kernel layer (`quant::kernels`).
+//!
+//! For every bit-width in {1, 2, 3, 4}, group size in {16, 32, 64},
+//! odd/awkward shapes (`d_out` not a multiple of the 8-lane vector
+//! width, tiny and non-square matrices), and both matvec and batched
+//! matmul entry points, three evaluations must agree to f32 accumulation
+//! tolerance:
+//!
+//! 1. the SIMD path (whatever `active_isa()` picks on this host),
+//! 2. the portable scalar path (pinned via `kernels::force_scalar`),
+//! 3. the unfused reference: `dequantize()` then a dense accumulate.
+//!
+//! The AWQ `Scaled` variant (activation rescale folded into the kernel
+//! prologue) and the accumulate contract (`y +=`, not `y =`) are
+//! exercised through `QuantLinear`, i.e. the exact call path the serving
+//! decode engine takes.
+
+use mcsharp::quant::{kernels, BinaryMatrix, PackedMatrix, QuantLinear};
+use mcsharp::quant::rtn::quantize_rtn;
+use mcsharp::tensor::Tensor2;
+use mcsharp::util::{prop, rng::Rng};
+
+/// |a − b| within `tol`, scaled by magnitude (f32 accumulation order
+/// differs between the FMA, scalar and reference paths).
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}: element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Random activation row with whole zero 8-chunks sprinkled in, so the
+/// kernels' zero-skip branch is exercised alongside the dense path.
+fn sparse_x(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    for c in 0..n / 8 {
+        if rng.below(4) == 0 {
+            x[c * 8..(c + 1) * 8].fill(0.0);
+        }
+    }
+    x
+}
+
+/// Unfused reference: `y += x @ dequant(ql)` one token at a time.
+fn reference_acc(ql: &QuantLinear, x: &[f32], t: usize, y: &mut [f32]) {
+    let w = ql.dequantize();
+    for ti in 0..t {
+        let xr = &x[ti * w.rows..][..w.rows];
+        let yr = &mut y[ti * w.cols..][..w.cols];
+        for (r, &xv) in xr.iter().enumerate() {
+            for o in 0..w.cols {
+                yr[o] += xv * w.at(r, o);
+            }
+        }
+    }
+}
+
+/// Run `ql` through matvec (t == 1) or matmul on both dispatch paths and
+/// pin each against the unfused reference. `y` starts non-zero so the
+/// accumulate contract is part of what is checked.
+fn check_all_paths(ql: &QuantLinear, x: &[f32], t: usize, rng: &mut Rng, what: &str) {
+    let d_out = ql.d_out();
+    let y0: Vec<f32> = (0..t * d_out).map(|_| rng.normal()).collect();
+    let mut want = y0.clone();
+    reference_acc(ql, x, t, &mut want);
+
+    let run = |ql: &QuantLinear| -> Vec<f32> {
+        let mut y = y0.clone();
+        if t == 1 {
+            ql.matvec_acc(x, &mut y);
+        } else {
+            let xt = Tensor2::from_vec(t, ql.d_in(), x.to_vec());
+            let mut yt = Tensor2::from_vec(t, d_out, y);
+            ql.matmul_acc(&xt, &mut yt);
+            y = yt.data;
+        }
+        y
+    };
+
+    let native = run(ql);
+    assert_close(&native, &want, 1e-4, &format!("{what}: native vs reference"));
+    let scalar = kernels::force_scalar(|| run(ql));
+    assert_close(&scalar, &want, 1e-4, &format!("{what}: forced-scalar vs reference"));
+    assert_close(&native, &scalar, 1e-4, &format!("{what}: native vs forced-scalar"));
+}
+
+fn packed_case(rng: &mut Rng, bits: u8, group: usize, t: usize) {
+    let d_in = group * (1 + rng.below(3));
+    let d_out = 1 + rng.below(40); // odd widths: scalar-tail coverage
+    let w = Tensor2::randn(d_in, d_out, rng, 1.0);
+    let (codes, scales, zeros) = quantize_rtn(&w, bits, group);
+    let pm = PackedMatrix::from_codes(&codes, scales, zeros, d_in, d_out, bits, group);
+    let x: Vec<f32> = (0..t).flat_map(|_| sparse_x(rng, d_in)).collect();
+    check_all_paths(
+        &QuantLinear::Packed(pm),
+        &x,
+        t,
+        rng,
+        &format!("packed b{bits} g{group} {d_in}x{d_out} t{t}"),
+    );
+}
+
+#[test]
+fn packed_matvec_all_bits_groups_shapes() {
+    prop::for_all(901, 12, |rng, _| {
+        for bits in 1..=4u8 {
+            for &group in &[16usize, 32, 64] {
+                packed_case(rng, bits, group, 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn packed_matmul_all_bits_groups_shapes() {
+    prop::for_all(902, 8, |rng, _| {
+        for bits in 1..=4u8 {
+            for &group in &[16usize, 32, 64] {
+                let t = 2 + rng.below(7);
+                packed_case(rng, bits, group, t);
+            }
+        }
+    });
+}
+
+#[test]
+fn binary_matvec_and_matmul() {
+    prop::for_all(903, 15, |rng, _| {
+        let d_in = 8 * (1 + rng.below(20));
+        let d_out = 1 + rng.below(40);
+        let w = Tensor2::randn(d_in, d_out, rng, 1.0);
+        let bm = BinaryMatrix::binarize(&w);
+        for t in [1usize, 1 + rng.below(8)] {
+            let x: Vec<f32> = (0..t).flat_map(|_| sparse_x(rng, d_in)).collect();
+            check_all_paths(
+                &QuantLinear::Binary(bm.clone()),
+                &x,
+                t,
+                rng,
+                &format!("binary {d_in}x{d_out} t{t}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn awq_scaled_prologue_folds_inv_s() {
+    // Scaled stores codes of diag(s)·W and rescales activations by
+    // inv_s in the kernel prologue; reference path dequantizes through
+    // QuantLinear::dequantize (which folds inv_s back into the weights).
+    prop::for_all(904, 10, |rng, _| {
+        for &(bits, group) in &[(2u8, 16usize), (3, 32), (4, 64)] {
+            let d_in = group * (1 + rng.below(2));
+            let d_out = 1 + rng.below(32);
+            let w = Tensor2::randn(d_in, d_out, rng, 1.0);
+            // per-input-channel scales bounded away from 0
+            let s: Vec<f32> = (0..d_in).map(|_| 0.5 + rng.f32() * 1.5).collect();
+            let mut ws = w.clone();
+            for r in 0..d_in {
+                for v in ws.row_mut(r) {
+                    *v *= s[r];
+                }
+            }
+            let (codes, scales, zeros) = quantize_rtn(&ws, bits, group);
+            let inner = PackedMatrix::from_codes(&codes, scales, zeros, d_in, d_out, bits, group);
+            let inv_s: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+            let ql = QuantLinear::Scaled { inv_s, inner };
+            for t in [1usize, 3] {
+                let x: Vec<f32> = (0..t).flat_map(|_| sparse_x(rng, d_in)).collect();
+                check_all_paths(&ql, &x, t, rng, &format!("scaled b{bits} g{group} t{t}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn forced_scalar_dispatch_is_observable() {
+    assert_eq!(
+        kernels::force_scalar(kernels::active_isa),
+        kernels::Isa::Scalar,
+        "force_scalar must pin the scalar path"
+    );
+    if kernels::simd_available() {
+        assert_eq!(kernels::active_isa(), kernels::Isa::Avx2Fma);
+    } else {
+        assert_eq!(kernels::active_isa(), kernels::Isa::Scalar);
+    }
+}
+
+#[test]
+fn expert_ffn_batch_matches_row_path() {
+    // The scratch-arena FFN (pool slots + _sc call chain) must agree
+    // with t independent row FFNs.
+    use mcsharp::quant::QuantExpert;
+    prop::for_all(905, 8, |rng, _| {
+        let (h, f) = (32usize, 64usize);
+        let mk = |rng: &mut Rng, d_in: usize, d_out: usize, bits: u8| -> QuantLinear {
+            let w = Tensor2::randn(d_in, d_out, rng, 1.0);
+            let (c, s, z) = quantize_rtn(&w, bits, 16);
+            QuantLinear::Packed(PackedMatrix::from_codes(&c, s, z, d_in, d_out, bits, 16))
+        };
+        let bits = 2 + rng.below(3) as u8;
+        let qe = QuantExpert {
+            wg: mk(rng, h, f, bits),
+            wu: mk(rng, h, f, bits),
+            wd: mk(rng, f, h, bits),
+            bits,
+        };
+        let t = 1 + rng.below(6);
+        let x = Tensor2::randn(t, h, rng, 1.0);
+        let mut batch = Tensor2::zeros(t, h);
+        qe.ffn_batch_acc(&x, &mut batch);
+        for ti in 0..t {
+            let mut row = vec![0.0f32; h];
+            qe.ffn_row_acc(x.row(ti), 1.0, &mut row);
+            assert_close(&batch.data[ti * h..][..h], &row, 1e-3, "ffn batch vs row");
+        }
+        // weighted row path (exercises pool slot 2)
+        let mut w1 = vec![0.0f32; h];
+        let mut w2 = vec![0.0f32; h];
+        qe.ffn_row_acc(x.row(0), 1.0, &mut w1);
+        qe.ffn_row_acc(x.row(0), 0.25, &mut w2);
+        let scaled: Vec<f32> = w1.iter().map(|v| v * 0.25).collect();
+        assert_close(&w2, &scaled, 1e-4, "weighted ffn row");
+    });
+}

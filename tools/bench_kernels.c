@@ -1,0 +1,728 @@
+/* Standalone C validation harness + measurement rig for the fused
+ * dequant x matmul kernel layer (rust/src/quant/kernels/).
+ *
+ * This is a line-for-line port of the Rust kernels — same interleaved
+ * repack layout, same scalar LUT-chain inner loop, same AVX2 mask-compare
+ * decode (including the FMA epilogues and the 16-wide token accumulator)
+ * — compiled with gcc so the kernel *algorithms* can be equivalence-
+ * checked and timed on hosts where the Rust toolchain is unavailable
+ * (this repo's container). The Rust property suite
+ * (rust/tests/kernel_equivalence.rs) is the authoritative gate in CI;
+ * this harness exists to (a) cross-validate the intrinsic sequences and
+ * (b) produce the measured rows checked in as BENCH_perf_hotpath.json
+ * ("harness": "c-port-gcc") until a `cargo bench --bench perf_hotpath
+ * -- --json` run can refresh them in place.
+ *
+ * Build & run:
+ *   gcc -O2 -mavx2 -mfma -o /tmp/bench_kernels tools/bench_kernels.c -lm
+ *   /tmp/bench_kernels --json BENCH_perf_hotpath.json
+ */
+
+#include <immintrin.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ------------------------------------------------------------ helpers */
+
+static uint64_t rng_state = 0x9E2FULL;
+static uint64_t rng_next(void) {
+  /* splitmix64 — deterministic across runs */
+  uint64_t z = (rng_state += 0x9E3779B97F4A7C15ULL);
+  z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+  z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+  return z ^ (z >> 31);
+}
+static float rng_normal(void) {
+  /* Box-Muller on uniform doubles */
+  double u1 = ((rng_next() >> 11) + 1.0) * (1.0 / 9007199254740993.0);
+  double u2 = (rng_next() >> 11) * (1.0 / 9007199254740992.0);
+  return (float)(sqrt(-2.0 * log(u1)) * cos(2.0 * M_PI * u2));
+}
+
+static size_t pad8(size_t n) { return (n + 7) / 8 * 8; }
+
+static double now_ns(void) {
+  struct timespec ts;
+  clock_gettime(CLOCK_MONOTONIC, &ts);
+  return ts.tv_sec * 1e9 + ts.tv_nsec;
+}
+
+static int cmp_d(const void *a, const void *b) {
+  double x = *(const double *)a, y = *(const double *)b;
+  return (x > y) - (x < y);
+}
+
+typedef struct {
+  double mean_ns, p50_ns, p95_ns;
+  int iters;
+} stats_t;
+
+#define MAX_SAMPLES 20000
+static double samples[MAX_SAMPLES];
+
+/* Adaptive timer mirroring util::bench::time: warm up, sample until the
+ * budget elapses (>= 5 samples), report mean/p50/p95. */
+#define TIME(budget_ms, out, body)                                         \
+  do {                                                                     \
+    { body }                                                               \
+    { body }                                                               \
+    int n = 0;                                                             \
+    double start = now_ns();                                               \
+    while (n < 5 || (now_ns() - start < (budget_ms) * 1e6 && n < MAX_SAMPLES)) { \
+      double t0 = now_ns();                                                \
+      { body }                                                             \
+      samples[n++] = now_ns() - t0;                                        \
+    }                                                                      \
+    qsort(samples, n, sizeof(double), cmp_d);                              \
+    double sum = 0;                                                        \
+    for (int i = 0; i < n; i++) sum += samples[i];                         \
+    (out).mean_ns = sum / n;                                               \
+    (out).p50_ns = samples[(int)((n - 1) * 0.5 + 0.5)];                    \
+    (out).p95_ns = samples[(int)((n - 1) * 0.95 + 0.5)];                   \
+    (out).iters = n;                                                       \
+  } while (0)
+
+/* --------------------------------------------- pack / repack / dequant */
+
+typedef struct {
+  size_t d_in, d_out, bits, group, dp;
+  uint8_t *planes;  /* [bits][d_in/8][d_out] — canonical layout */
+  float *scales, *zeros;        /* [d_in/group][d_out] */
+  uint8_t *rp_data;             /* [(d_in/8) * bits * dp] interleaved */
+  float *rp_scales, *rp_zeros;  /* [d_in/group][dp] zero-padded */
+} packed_t;
+
+/* RTN group quantization (mirrors quant::rtn::quantize_rtn). */
+static void quantize_rtn(const float *w, size_t d_in, size_t d_out,
+                         size_t bits, size_t group, uint8_t *codes,
+                         float *scales, float *zeros) {
+  size_t levels = (1u << bits) - 1;
+  for (size_t gi = 0; gi < d_in / group; gi++) {
+    for (size_t o = 0; o < d_out; o++) {
+      float wmin = 1e30f, wmax = -1e30f;
+      for (size_t r = 0; r < group; r++) {
+        float v = w[(gi * group + r) * d_out + o];
+        if (v < wmin) wmin = v;
+        if (v > wmax) wmax = v;
+      }
+      float span = wmax - wmin;
+      if (span < 1e-8f) span = 1e-8f;
+      float scale = span / (float)levels;
+      float zero = roundf(-wmin / scale);
+      scales[gi * d_out + o] = scale;
+      zeros[gi * d_out + o] = zero;
+      for (size_t r = 0; r < group; r++) {
+        float v = w[(gi * group + r) * d_out + o];
+        float q = roundf(v / scale + zero);
+        if (q < 0) q = 0;
+        if (q > (float)levels) q = (float)levels;
+        codes[(gi * group + r) * d_out + o] = (uint8_t)q;
+      }
+    }
+  }
+}
+
+static packed_t pack(const float *w, size_t d_in, size_t d_out, size_t bits,
+                     size_t group) {
+  packed_t p = {d_in, d_out, bits, group, pad8(d_out), 0, 0, 0, 0, 0, 0};
+  size_t rows = d_in / 8, n_groups = d_in / group;
+  uint8_t *codes = calloc(d_in * d_out, 1);
+  p.scales = calloc(n_groups * d_out, 4);
+  p.zeros = calloc(n_groups * d_out, 4);
+  quantize_rtn(w, d_in, d_out, bits, group, codes, p.scales, p.zeros);
+  p.planes = calloc(bits * rows * d_out, 1);
+  for (size_t pl = 0; pl < bits; pl++)
+    for (size_t r = 0; r < d_in; r++)
+      for (size_t o = 0; o < d_out; o++)
+        p.planes[pl * rows * d_out + (r / 8) * d_out + o] |=
+            (uint8_t)(((codes[r * d_out + o] >> pl) & 1) << (r % 8));
+  free(codes);
+  /* interleaved repack: data[(br*bits + pl)*dp + o], zero-padded params */
+  p.rp_data = calloc(rows * bits * p.dp, 1);
+  for (size_t pl = 0; pl < bits; pl++)
+    for (size_t br = 0; br < rows; br++)
+      memcpy(p.rp_data + (br * bits + pl) * p.dp,
+             p.planes + pl * rows * d_out + br * d_out, d_out);
+  p.rp_scales = calloc(n_groups * p.dp, 4);
+  p.rp_zeros = calloc(n_groups * p.dp, 4);
+  for (size_t g = 0; g < n_groups; g++) {
+    memcpy(p.rp_scales + g * p.dp, p.scales + g * d_out, d_out * 4);
+    memcpy(p.rp_zeros + g * p.dp, p.zeros + g * d_out, d_out * 4);
+  }
+  return p;
+}
+
+/* Binary variant: planes = sign bits, rp_scales = padded alpha. */
+static packed_t pack_binary(const float *w, size_t d_in, size_t d_out) {
+  packed_t p = {d_in, d_out, 1, d_in, pad8(d_out), 0, 0, 0, 0, 0, 0};
+  size_t rows = d_in / 8;
+  p.planes = calloc(rows * d_out, 1);
+  p.scales = calloc(d_out, 4);
+  for (size_t o = 0; o < d_out; o++) {
+    float l1 = 0;
+    for (size_t r = 0; r < d_in; r++) {
+      float v = w[r * d_out + o];
+      l1 += fabsf(v);
+      if (v >= 0) p.planes[(r / 8) * d_out + o] |= (uint8_t)(1 << (r % 8));
+    }
+    p.scales[o] = l1 / (float)d_in;
+  }
+  p.rp_data = calloc(rows * p.dp, 1);
+  for (size_t br = 0; br < rows; br++)
+    memcpy(p.rp_data + br * p.dp, p.planes + br * d_out, d_out);
+  p.rp_scales = calloc(p.dp, 4);
+  memcpy(p.rp_scales, p.scales, d_out * 4);
+  return p;
+}
+
+static void pfree(packed_t *p) {
+  free(p->planes); free(p->scales); free(p->zeros);
+  free(p->rp_data); free(p->rp_scales); free(p->rp_zeros);
+}
+
+/* Dense reconstruction (the unfused baseline's first half). */
+static void dequantize(const packed_t *p, float *out /* [d_in][d_out] */) {
+  size_t rows = p->d_in / 8;
+  for (size_t r = 0; r < p->d_in; r++)
+    for (size_t o = 0; o < p->d_out; o++) {
+      unsigned q = 0;
+      for (size_t pl = 0; pl < p->bits; pl++)
+        q |= (unsigned)((p->planes[pl * rows * p->d_out + (r / 8) * p->d_out + o] >>
+                         (r % 8)) & 1) << pl;
+      if (p->zeros) { /* packed */
+        size_t gi = r / p->group;
+        out[r * p->d_out + o] = ((float)q - p->zeros[gi * p->d_out + o]) *
+                                p->scales[gi * p->d_out + o];
+      } else { /* binary */
+        out[r * p->d_out + o] = p->scales[o] * (2.0f * (float)q - 1.0f);
+      }
+    }
+}
+
+/* ------------------------------------------------------ scalar kernels */
+
+static float BIT_LUT[256][8];
+static void init_lut(void) {
+  for (int b = 0; b < 256; b++)
+    for (int j = 0; j < 8; j++) BIT_LUT[b][j] = (float)((b >> j) & 1);
+}
+
+static void scalar_matvec(const packed_t *p, const float *x, float *y,
+                          float *qacc) {
+  size_t dp = p->dp, bits = p->bits, bpg = p->group / 8;
+  for (size_t gi = 0; gi < p->d_in / p->group; gi++) {
+    memset(qacc, 0, dp * 4);
+    float xsum = 0;
+    for (size_t bq = 0; bq < bpg; bq++) {
+      size_t br = gi * bpg + bq;
+      const float *x8 = x + br * 8;
+      int allz = 1;
+      for (int j = 0; j < 8; j++) allz &= (x8[j] == 0.0f);
+      if (allz) continue;
+      for (int j = 0; j < 8; j++) xsum += x8[j];
+      for (size_t pl = 0; pl < bits; pl++) {
+        float pw = (float)(1u << pl);
+        float xw[8];
+        for (int j = 0; j < 8; j++) xw[j] = x8[j] * pw;
+        const uint8_t *row = p->rp_data + (br * bits + pl) * dp;
+        for (size_t o = 0; o < p->d_out; o++) {
+          const float *l = BIT_LUT[row[o]];
+          qacc[o] += l[0] * xw[0] + l[1] * xw[1] + l[2] * xw[2] +
+                     l[3] * xw[3] + l[4] * xw[4] + l[5] * xw[5] +
+                     l[6] * xw[6] + l[7] * xw[7];
+        }
+      }
+    }
+    const float *srow = p->rp_scales + gi * dp, *zrow = p->rp_zeros + gi * dp;
+    for (size_t o = 0; o < p->d_out; o++)
+      y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
+  }
+}
+
+static void scalar_binary_matvec(const packed_t *p, const float *x, float *y,
+                                 float *qacc) {
+  size_t dp = p->dp;
+  memset(qacc, 0, dp * 4);
+  float xsum = 0;
+  for (size_t br = 0; br < p->d_in / 8; br++) {
+    const float *x8 = x + br * 8;
+    int allz = 1;
+    for (int j = 0; j < 8; j++) allz &= (x8[j] == 0.0f);
+    if (allz) continue;
+    for (int j = 0; j < 8; j++) xsum += x8[j];
+    const uint8_t *row = p->rp_data + br * dp;
+    for (size_t o = 0; o < p->d_out; o++) {
+      const float *l = BIT_LUT[row[o]];
+      qacc[o] += l[0] * x8[0] + l[1] * x8[1] + l[2] * x8[2] + l[3] * x8[3] +
+                 l[4] * x8[4] + l[5] * x8[5] + l[6] * x8[6] + l[7] * x8[7];
+    }
+  }
+  for (size_t o = 0; o < p->d_out; o++)
+    y[o] += p->rp_scales[o] * (2.0f * qacc[o] - xsum);
+}
+
+static void token_acc_scalar(const packed_t *p, const float *tile, size_t rows,
+                             const float *x, size_t t, size_t row0, float *y) {
+  size_t dp = p->dp;
+  for (size_t ti = 0; ti < t; ti++) {
+    const float *xr = x + ti * p->d_in + row0;
+    float *yrow = y + ti * p->d_out;
+    for (size_t rq = 0; rq < rows; rq++) {
+      float xv = xr[rq];
+      if (xv == 0.0f) continue;
+      const float *trow = tile + rq * dp;
+      for (size_t o = 0; o < p->d_out; o++) yrow[o] += xv * trow[o];
+    }
+  }
+}
+
+static void scalar_matmul(const packed_t *p, const float *x, size_t t,
+                          float *y, float *tile) {
+  size_t dp = p->dp, bits = p->bits, bpg = p->group / 8;
+  for (size_t gi = 0; gi < p->d_in / p->group; gi++) {
+    const float *srow = p->rp_scales + gi * dp, *zrow = p->rp_zeros + gi * dp;
+    for (size_t bq = 0; bq < bpg; bq++) {
+      size_t br = gi * bpg + bq;
+      for (size_t o = 0; o < p->d_out; o++) {
+        float q[8] = {0};
+        for (size_t pl = 0; pl < bits; pl++) {
+          float pw = (float)(1u << pl);
+          const float *l = BIT_LUT[p->rp_data[(br * bits + pl) * dp + o]];
+          for (int j = 0; j < 8; j++) q[j] += pw * l[j];
+        }
+        for (int j = 0; j < 8; j++)
+          tile[(bq * 8 + j) * dp + o] = (q[j] - zrow[o]) * srow[o];
+      }
+    }
+    token_acc_scalar(p, tile, p->group, x, t, gi * p->group, y);
+  }
+}
+
+static void scalar_binary_matmul(const packed_t *p, const float *x, size_t t,
+                                 float *y, float *tile, size_t block) {
+  size_t dp = p->dp;
+  for (size_t row0 = 0; row0 < p->d_in; ) {
+    size_t rows = block < p->d_in - row0 ? block : p->d_in - row0;
+    for (size_t bq = 0; bq < rows / 8; bq++) {
+      size_t br = row0 / 8 + bq;
+      for (size_t o = 0; o < p->d_out; o++) {
+        const float *l = BIT_LUT[p->rp_data[br * dp + o]];
+        float a = p->rp_scales[o];
+        for (int j = 0; j < 8; j++)
+          tile[(bq * 8 + j) * dp + o] = a * (2.0f * l[j] - 1.0f);
+      }
+    }
+    token_acc_scalar(p, tile, rows, x, t, row0, y);
+    row0 += rows;
+  }
+}
+
+/* -------------------------------------------------------- AVX2 kernels */
+
+static inline __m256i load8(const uint8_t *p8) {
+  return _mm256_cvtepu8_epi32(_mm_loadl_epi64((const __m128i *)p8));
+}
+
+static void avx2_matvec(const packed_t *p, const float *x, float *y,
+                        float *qacc) {
+  size_t dp = p->dp, bits = p->bits, bpg = p->group / 8;
+  __m256i masks[8];
+  for (int j = 0; j < 8; j++) masks[j] = _mm256_set1_epi32(1 << j);
+  for (size_t gi = 0; gi < p->d_in / p->group; gi++) {
+    memset(qacc, 0, dp * 4);
+    float xsum = 0;
+    for (size_t bq = 0; bq < bpg; bq++) {
+      size_t br = gi * bpg + bq;
+      const float *x8 = x + br * 8;
+      int allz = 1;
+      for (int j = 0; j < 8; j++) allz &= (x8[j] == 0.0f);
+      if (allz) continue;
+      for (int j = 0; j < 8; j++) xsum += x8[j];
+      for (size_t pl = 0; pl < bits; pl++) {
+        float pw = (float)(1u << pl);
+        __m256 xw[8];
+        for (int j = 0; j < 8; j++) xw[j] = _mm256_set1_ps(x8[j] * pw);
+        const uint8_t *row = p->rp_data + (br * bits + pl) * dp;
+        for (size_t oc = 0; oc < dp; oc += 8) {
+          __m256i v = load8(row + oc);
+          __m256 acc = _mm256_loadu_ps(qacc + oc);
+          for (int j = 0; j < 8; j++) {
+            __m256i hit =
+                _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+            acc = _mm256_add_ps(acc,
+                                _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]));
+          }
+          _mm256_storeu_ps(qacc + oc, acc);
+        }
+      }
+    }
+    const float *srow = p->rp_scales + gi * dp, *zrow = p->rp_zeros + gi * dp;
+    __m256 xs = _mm256_set1_ps(xsum);
+    size_t o = 0;
+    for (; o + 8 <= p->d_out; o += 8) {
+      __m256 q = _mm256_loadu_ps(qacc + o);
+      __m256 z = _mm256_loadu_ps(zrow + o);
+      __m256 sv = _mm256_loadu_ps(srow + o);
+      __m256 acc = _mm256_fnmadd_ps(z, xs, q);
+      __m256 yv = _mm256_loadu_ps(y + o);
+      _mm256_storeu_ps(y + o, _mm256_fmadd_ps(sv, acc, yv));
+    }
+    for (; o < p->d_out; o++) y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
+  }
+}
+
+static void avx2_binary_matvec(const packed_t *p, const float *x, float *y,
+                               float *qacc) {
+  size_t dp = p->dp;
+  __m256i masks[8];
+  for (int j = 0; j < 8; j++) masks[j] = _mm256_set1_epi32(1 << j);
+  memset(qacc, 0, dp * 4);
+  float xsum = 0;
+  for (size_t br = 0; br < p->d_in / 8; br++) {
+    const float *x8 = x + br * 8;
+    int allz = 1;
+    for (int j = 0; j < 8; j++) allz &= (x8[j] == 0.0f);
+    if (allz) continue;
+    for (int j = 0; j < 8; j++) xsum += x8[j];
+    __m256 xw[8];
+    for (int j = 0; j < 8; j++) xw[j] = _mm256_set1_ps(x8[j]);
+    const uint8_t *row = p->rp_data + br * dp;
+    for (size_t oc = 0; oc < dp; oc += 8) {
+      __m256i v = load8(row + oc);
+      __m256 acc = _mm256_loadu_ps(qacc + oc);
+      for (int j = 0; j < 8; j++) {
+        __m256i hit =
+            _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+        acc = _mm256_add_ps(acc,
+                            _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]));
+      }
+      _mm256_storeu_ps(qacc + oc, acc);
+    }
+  }
+  __m256 xs = _mm256_set1_ps(xsum), two = _mm256_set1_ps(2.0f);
+  size_t o = 0;
+  for (; o + 8 <= p->d_out; o += 8) {
+    __m256 q = _mm256_loadu_ps(qacc + o);
+    __m256 a = _mm256_loadu_ps(p->rp_scales + o);
+    __m256 acc = _mm256_fmsub_ps(two, q, xs);
+    __m256 yv = _mm256_loadu_ps(y + o);
+    _mm256_storeu_ps(y + o, _mm256_fmadd_ps(a, acc, yv));
+  }
+  for (; o < p->d_out; o++) y[o] += p->rp_scales[o] * (2.0f * qacc[o] - xsum);
+}
+
+static void token_acc_avx2(const packed_t *p, const float *tile, size_t rows,
+                           const float *x, size_t t, size_t row0, float *y) {
+  size_t dp = p->dp, oc = 0;
+  for (; oc + 16 <= p->d_out; oc += 16) {
+    for (size_t ti = 0; ti < t; ti++) {
+      const float *xr = x + ti * p->d_in + row0;
+      float *yp = y + ti * p->d_out + oc;
+      __m256 a0 = _mm256_loadu_ps(yp), a1 = _mm256_loadu_ps(yp + 8);
+      for (size_t rq = 0; rq < rows; rq++) {
+        float xv = xr[rq];
+        if (xv == 0.0f) continue;
+        const float *tp = tile + rq * dp + oc;
+        __m256 xb = _mm256_set1_ps(xv);
+        a0 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp), a0);
+        a1 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp + 8), a1);
+      }
+      _mm256_storeu_ps(yp, a0);
+      _mm256_storeu_ps(yp + 8, a1);
+    }
+  }
+  if (oc + 8 <= p->d_out) {
+    for (size_t ti = 0; ti < t; ti++) {
+      const float *xr = x + ti * p->d_in + row0;
+      float *yp = y + ti * p->d_out + oc;
+      __m256 a0 = _mm256_loadu_ps(yp);
+      for (size_t rq = 0; rq < rows; rq++) {
+        float xv = xr[rq];
+        if (xv == 0.0f) continue;
+        a0 = _mm256_fmadd_ps(_mm256_set1_ps(xv),
+                             _mm256_loadu_ps(tile + rq * dp + oc), a0);
+      }
+      _mm256_storeu_ps(yp, a0);
+    }
+    oc += 8;
+  }
+  if (oc < p->d_out)
+    for (size_t ti = 0; ti < t; ti++) {
+      const float *xr = x + ti * p->d_in + row0;
+      for (size_t rq = 0; rq < rows; rq++) {
+        float xv = xr[rq];
+        if (xv == 0.0f) continue;
+        const float *trow = tile + rq * dp;
+        for (size_t o = oc; o < p->d_out; o++)
+          y[ti * p->d_out + o] += xv * trow[o];
+      }
+    }
+}
+
+static void avx2_matmul(const packed_t *p, const float *x, size_t t, float *y,
+                        float *tile) {
+  size_t dp = p->dp, bits = p->bits, bpg = p->group / 8;
+  __m256i masks[8], pw_i[4];
+  for (int j = 0; j < 8; j++) masks[j] = _mm256_set1_epi32(1 << j);
+  for (size_t pl = 0; pl < bits; pl++) pw_i[pl] = _mm256_set1_epi32(1 << pl);
+  for (size_t gi = 0; gi < p->d_in / p->group; gi++) {
+    const float *srow = p->rp_scales + gi * dp, *zrow = p->rp_zeros + gi * dp;
+    for (size_t bq = 0; bq < bpg; bq++) {
+      size_t br = gi * bpg + bq;
+      for (size_t oc = 0; oc < dp; oc += 8) {
+        __m256i planes[4];
+        for (size_t pl = 0; pl < bits; pl++)
+          planes[pl] = load8(p->rp_data + (br * bits + pl) * dp + oc);
+        __m256 sv = _mm256_loadu_ps(srow + oc), zv = _mm256_loadu_ps(zrow + oc);
+        for (int j = 0; j < 8; j++) {
+          __m256i qi = _mm256_setzero_si256();
+          for (size_t pl = 0; pl < bits; pl++) {
+            __m256i hit = _mm256_cmpeq_epi32(
+                _mm256_and_si256(planes[pl], masks[j]), masks[j]);
+            qi = _mm256_add_epi32(qi, _mm256_and_si256(hit, pw_i[pl]));
+          }
+          __m256 w = _mm256_mul_ps(
+              _mm256_sub_ps(_mm256_cvtepi32_ps(qi), zv), sv);
+          _mm256_storeu_ps(tile + (bq * 8 + j) * dp + oc, w);
+        }
+      }
+    }
+    token_acc_avx2(p, tile, p->group, x, t, gi * p->group, y);
+  }
+}
+
+static void avx2_binary_matmul(const packed_t *p, const float *x, size_t t,
+                               float *y, float *tile, size_t block) {
+  size_t dp = p->dp;
+  __m256i masks[8], onei = _mm256_set1_epi32(1);
+  __m256 two = _mm256_set1_ps(2.0f), onef = _mm256_set1_ps(1.0f);
+  for (int j = 0; j < 8; j++) masks[j] = _mm256_set1_epi32(1 << j);
+  for (size_t row0 = 0; row0 < p->d_in; ) {
+    size_t rows = block < p->d_in - row0 ? block : p->d_in - row0;
+    for (size_t bq = 0; bq < rows / 8; bq++) {
+      size_t br = row0 / 8 + bq;
+      for (size_t oc = 0; oc < dp; oc += 8) {
+        __m256i v = load8(p->rp_data + br * dp + oc);
+        __m256 a = _mm256_loadu_ps(p->rp_scales + oc);
+        for (int j = 0; j < 8; j++) {
+          __m256i hit =
+              _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+          __m256 b = _mm256_cvtepi32_ps(_mm256_and_si256(hit, onei));
+          __m256 w = _mm256_mul_ps(a, _mm256_fmsub_ps(two, b, onef));
+          _mm256_storeu_ps(tile + (bq * 8 + j) * dp + oc, w);
+        }
+      }
+    }
+    token_acc_avx2(p, tile, rows, x, t, row0, y);
+    row0 += rows;
+  }
+}
+
+/* ------------------------------------------------ equivalence checking */
+
+static int n_checks = 0, n_fail = 0;
+
+static void expect_close(const float *a, const float *b, size_t n, float tol,
+                         const char *what) {
+  n_checks++;
+  for (size_t i = 0; i < n; i++) {
+    float scale = fabsf(a[i]) > 1.0f ? fabsf(a[i]) : 1.0f;
+    if (fabsf(a[i] - b[i]) > tol * scale) {
+      fprintf(stderr, "FAIL %s: elem %zu: %g vs %g\n", what, i, a[i], b[i]);
+      n_fail++;
+      return;
+    }
+  }
+}
+
+/* Reference: y += x @ dequant(p), one token at a time. */
+static void reference_acc(const packed_t *p, const float *x, size_t t,
+                          float *y, float *wd) {
+  dequantize(p, wd);
+  for (size_t ti = 0; ti < t; ti++)
+    for (size_t r = 0; r < p->d_in; r++) {
+      float xv = x[ti * p->d_in + r];
+      if (xv == 0.0f) continue;
+      for (size_t o = 0; o < p->d_out; o++)
+        y[ti * p->d_out + o] += xv * wd[r * p->d_out + o];
+    }
+}
+
+static void verify_case(size_t bits, size_t group, size_t d_in, size_t d_out,
+                        size_t t) {
+  float *w = malloc(d_in * d_out * 4);
+  for (size_t i = 0; i < d_in * d_out; i++) w[i] = rng_normal();
+  packed_t p = bits == 0 ? pack_binary(w, d_in, d_out)
+                         : pack(w, d_in, d_out, bits, group);
+  float *x = malloc(t * d_in * 4);
+  for (size_t i = 0; i < t * d_in; i++) x[i] = rng_normal();
+  for (size_t c = 0; c < t * d_in / 8; c++)            /* zero-skip coverage */
+    if (rng_next() % 4 == 0) memset(x + c * 8, 0, 32);
+  size_t ny = t * d_out;
+  float *want = calloc(ny, 4), *got_s = calloc(ny, 4), *got_v = calloc(ny, 4);
+  float *wd = malloc(d_in * d_out * 4);
+  float *qacc = malloc(p.dp * 4);
+  size_t tile_rows = bits == 0 ? (d_in < 64 ? d_in : 64) : group;
+  float *tile = malloc(tile_rows * p.dp * 4);
+  reference_acc(&p, x, t, want, wd);
+  char what[128];
+  snprintf(what, sizeof what, "bits=%zu group=%zu %zux%zu t=%zu", bits, group,
+           d_in, d_out, t);
+  if (t == 1) {
+    if (bits == 0) { scalar_binary_matvec(&p, x, got_s, qacc);
+                     avx2_binary_matvec(&p, x, got_v, qacc); }
+    else           { scalar_matvec(&p, x, got_s, qacc);
+                     avx2_matvec(&p, x, got_v, qacc); }
+  } else {
+    if (bits == 0) { scalar_binary_matmul(&p, x, t, got_s, tile, tile_rows);
+                     avx2_binary_matmul(&p, x, t, got_v, tile, tile_rows); }
+    else           { scalar_matmul(&p, x, t, got_s, tile);
+                     avx2_matmul(&p, x, t, got_v, tile); }
+  }
+  expect_close(got_s, want, ny, 1e-4f, what);
+  expect_close(got_v, want, ny, 1e-4f, what);
+  expect_close(got_s, got_v, ny, 1e-4f, what);
+  free(w); free(x); free(want); free(got_s); free(got_v);
+  free(wd); free(qacc); free(tile); pfree(&p);
+}
+
+/* ----------------------------------------------------------- benchmark */
+
+typedef struct {
+  const char *op;
+  int bits, tokens;
+  stats_t unfused, fscalar, fsimd;
+} row_t;
+
+static void bench_case(const char *op, size_t bits, size_t d_in, size_t d_out,
+                       size_t t, double budget_ms, row_t *row) {
+  float *w = malloc(d_in * d_out * 4);
+  for (size_t i = 0; i < d_in * d_out; i++) w[i] = rng_normal();
+  packed_t p = bits == 1 ? pack_binary(w, d_in, d_out)
+                         : pack(w, d_in, d_out, bits, 32);
+  int is_bin = (bits == 1);
+  float *x = malloc(t * d_in * 4);
+  for (size_t i = 0; i < t * d_in; i++) x[i] = rng_normal();
+  float *y = calloc(t * d_out, 4);
+  float *wd = malloc(d_in * d_out * 4);
+  float *qacc = malloc(p.dp * 4);
+  size_t tile_rows = is_bin ? 64 : p.group;
+  float *tile = malloc(tile_rows * p.dp * 4);
+
+  row->op = op; row->bits = (int)bits; row->tokens = (int)t;
+  TIME(budget_ms, row->unfused, {
+    memset(y, 0, t * d_out * 4);
+    reference_acc(&p, x, t, y, wd);
+  });
+  if (t == 1) {
+    TIME(budget_ms, row->fscalar, {
+      memset(y, 0, d_out * 4);
+      if (is_bin) scalar_binary_matvec(&p, x, y, qacc);
+      else        scalar_matvec(&p, x, y, qacc);
+    });
+    TIME(budget_ms, row->fsimd, {
+      memset(y, 0, d_out * 4);
+      if (is_bin) avx2_binary_matvec(&p, x, y, qacc);
+      else        avx2_matvec(&p, x, y, qacc);
+    });
+  } else {
+    TIME(budget_ms, row->fscalar, {
+      memset(y, 0, t * d_out * 4);
+      if (is_bin) scalar_binary_matmul(&p, x, t, y, tile, tile_rows);
+      else        scalar_matmul(&p, x, t, y, tile);
+    });
+    TIME(budget_ms, row->fsimd, {
+      memset(y, 0, t * d_out * 4);
+      if (is_bin) avx2_binary_matmul(&p, x, t, y, tile, tile_rows);
+      else        avx2_matmul(&p, x, t, y, tile);
+    });
+  }
+  free(w); free(x); free(y); free(wd); free(qacc); free(tile); pfree(&p);
+}
+
+static void stats_json(FILE *f, const char *key, const stats_t *s) {
+  fprintf(f,
+          "\"%s\": {\"iters\": %d, \"mean_ns\": %.1f, \"p50_ns\": %.1f, "
+          "\"p95_ns\": %.1f}",
+          key, s->iters, s->mean_ns, s->p50_ns, s->p95_ns);
+}
+
+int main(int argc, char **argv) {
+  const char *json_path = NULL;
+  for (int i = 1; i < argc - 1; i++)
+    if (!strcmp(argv[i], "--json")) json_path = argv[i + 1];
+  init_lut();
+
+  /* equivalence sweep: packed bits 1..4 x groups {16,32,64} x odd shapes,
+   * binary (bits=0 sentinel), matvec and matmul */
+  size_t shapes[][2] = {{128, 256}, {64, 96}, {32, 17}, {96, 40}, {64, 7}};
+  for (size_t bits = 1; bits <= 4; bits++)
+    for (size_t g = 16; g <= 64; g *= 2)
+      for (size_t si = 0; si < 5; si++) {
+        size_t d_in = shapes[si][0], d_out = shapes[si][1];
+        if (d_in % g) continue;
+        verify_case(bits, g, d_in, d_out, 1);
+        verify_case(bits, g, d_in, d_out, 16);
+      }
+  for (size_t si = 0; si < 5; si++) {
+    verify_case(0, 0, shapes[si][0], shapes[si][1], 1);
+    verify_case(0, 0, shapes[si][0], shapes[si][1], 16);
+  }
+  printf("equivalence: %d checks, %d failures\n", n_checks, n_fail);
+  if (n_fail) return 1;
+
+  /* measurement: same shape as the Rust bench section
+   * (h=128 -> f=256, group 32, matmul T=16) */
+  row_t rows[8];
+  int nr = 0;
+  for (size_t bits = 1; bits <= 4; bits++) {
+    bench_case("matvec", bits, 128, 256, 1, 300.0, &rows[nr++]);
+    bench_case("matmul", bits, 128, 256, 16, 300.0, &rows[nr++]);
+  }
+  printf("%-8s %-5s %-7s %12s %14s %12s %8s %8s\n", "op", "bits", "tokens",
+         "unfused_ns", "fused_scal_ns", "fused_simd_ns", "fxu", "sxs");
+  for (int i = 0; i < nr; i++) {
+    row_t *r = &rows[i];
+    printf("%-8s %-5d %-7d %12.0f %14.0f %12.0f %7.2fx %7.2fx\n", r->op,
+           r->bits, r->tokens, r->unfused.p50_ns, r->fscalar.p50_ns,
+           r->fsimd.p50_ns, r->unfused.p50_ns / r->fsimd.p50_ns,
+           r->fscalar.p50_ns / r->fsimd.p50_ns);
+  }
+  if (json_path) {
+    FILE *f = fopen(json_path, "w");
+    if (!f) { perror("open json"); return 1; }
+    fprintf(f,
+            "{\"bench\": \"perf_hotpath\", \"section\": \"kernels\", "
+            "\"harness\": \"c-port-gcc\", \"smoke\": false, "
+            "\"host_isa\": \"avx2+fma\", "
+            "\"note\": \"measured by tools/bench_kernels.c, a line-for-line "
+            "C port of rust/src/quant/kernels (same repack layout, scalar "
+            "LUT chain and AVX2 mask-compare intrinsics); refresh with "
+            "cargo bench --bench perf_hotpath -- --json when a Rust "
+            "toolchain is available\", "
+            "\"shape\": {\"d_in\": 128, \"d_out\": 256, \"group\": 32, "
+            "\"t_matmul\": 16}, \"rows\": [");
+    for (int i = 0; i < nr; i++) {
+      row_t *r = &rows[i];
+      double best = r->fsimd.p50_ns < r->fscalar.p50_ns ? r->fsimd.p50_ns
+                                                        : r->fscalar.p50_ns;
+      fprintf(f, "%s{\"op\": \"%s\", \"bits\": %d, \"tokens\": %d, ",
+              i ? ", " : "", r->op, r->bits, r->tokens);
+      stats_json(f, "unfused", &r->unfused); fprintf(f, ", ");
+      stats_json(f, "fused_scalar", &r->fscalar); fprintf(f, ", ");
+      stats_json(f, "fused_simd", &r->fsimd);
+      fprintf(f,
+              ", \"speedup_fused_vs_unfused\": %.3f, "
+              "\"speedup_simd_vs_scalar\": %.3f}",
+              r->unfused.p50_ns / best, r->fscalar.p50_ns / r->fsimd.p50_ns);
+    }
+    fprintf(f, "]}\n");
+    fclose(f);
+    printf("wrote %s\n", json_path);
+  }
+  return 0;
+}
