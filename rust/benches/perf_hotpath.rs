@@ -92,7 +92,7 @@ fn main() {
     // on every row — asserted here, so the CI bench-smoke run *is* the
     // perf gate. 1-bit rows run the binary Eq. 9 kernel.
     println!("\n== fused dequant x matmul kernels: unfused vs fused-scalar vs fused-SIMD ==");
-    let kernel_rows = {
+    let (kernel_rows, host_simd) = {
         let simd = kernels::simd_available();
         println!("  host SIMD path: {}", if simd { "avx2+fma" } else { "(none — scalar only)" });
         let t_mm = 16usize;
@@ -177,29 +177,7 @@ fn main() {
             bench_op("matvec", 1, &x);
             bench_op("matmul", t_mm, &xb.data);
         }
-        if json_out {
-            let doc = json::obj(vec![
-                ("bench", json::s("perf_hotpath")),
-                ("section", json::s("kernels")),
-                ("harness", json::s("cargo-bench")),
-                ("smoke", Value::Bool(smoke)),
-                ("host_isa", json::s(if simd { "avx2+fma" } else { "scalar" })),
-                (
-                    "shape",
-                    json::obj(vec![
-                        ("d_in", json::num(h as f64)),
-                        ("d_out", json::num(f as f64)),
-                        ("t_matmul", json::num(t_mm as f64)),
-                        ("group", json::num(32.0)),
-                    ]),
-                ),
-                ("rows", Value::Arr(rows.clone())),
-            ]);
-            let path = mcsharp::config::repo_path("BENCH_perf_hotpath.json");
-            std::fs::write(&path, doc.to_json()).expect("write BENCH json");
-            println!("  wrote {path}");
-        }
-        rows
+        (rows, simd)
     };
     std::hint::black_box(&kernel_rows);
 
@@ -428,6 +406,130 @@ fn main() {
             "pipelining one connection must share engine steps: {steps_pipe} !< {steps_serial}"
         );
     }
+
+    // Acceptance rows for the paged-KV engine (EXPERIMENTS.md §KV):
+    // (a) prompt ingestion token-at-a-time (`--prefill-chunk 1`, the
+    // pre-paging engine's shape) vs chunked through the blocked-matmul
+    // attention path — chunked must win; (b) a warm shared prefix must
+    // reach the first decode in fewer engine steps than a cold prompt.
+    // Both asserted, so the CI bench-smoke run gates the prefill path.
+    println!("\n== chunked prefill + prefix sharing (paged KV engine) ==");
+    let prefill_rows = {
+        let cfg = mcsharp::config::ModelConfig {
+            name: "perf-prefill".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            n_experts: 8,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let base = mcsharp::moe::MoeModel::new(&cfg, 0xC0FFE);
+        let be = NativeBackend::fp(&base);
+        let prompt_len = 32usize;
+        // fresh engine (fresh pool) per iteration, distinct leading
+        // tokens per iteration: every sample is a genuinely cold prefill
+        let mut bench_chunk = |chunk: usize| {
+            let mut it = 0u16;
+            time(budget, 500, || {
+                it = it.wrapping_add(1);
+                let mut p: Vec<u16> = (1..=prompt_len as u16).collect();
+                p[0] = 1 + it % 61;
+                p[1] = 1 + (it / 61) % 61;
+                let mut eng = DecodeEngine::new(EngineModel::Fp(&base), &be, None)
+                    .with_prefill_chunk(chunk);
+                std::hint::black_box(eng.generate(&p, 2).unwrap());
+            })
+        };
+        let tat = bench_chunk(1);
+        let chunked = bench_chunk(16);
+        report("cold prefill 32-tok prompt, chunk=1  (token-at-a-time)", &tat);
+        report("cold prefill 32-tok prompt, chunk=16 (blocked matmul)", &chunked);
+        assert!(
+            chunked.p50_ns < tat.p50_ns,
+            "chunked prefill must beat token-at-a-time: {} ns !< {} ns",
+            chunked.p50_ns,
+            tat.p50_ns
+        );
+        // (b) warm vs cold shared prefix: same 32-token system prefix,
+        // different tails — the second request adopts both full blocks
+        // and skips their prefill steps entirely
+        let sys: Vec<u16> = (1..=32).collect();
+        let pa: Vec<u16> = sys.iter().copied().chain([40, 41]).collect();
+        let pb: Vec<u16> = sys.iter().copied().chain([50, 51]).collect();
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&base), &be, None);
+        std::hint::black_box(eng.generate(&pa, 4).unwrap());
+        let cold_steps = eng.metrics.steps;
+        std::hint::black_box(eng.generate(&pb, 4).unwrap());
+        let warm_steps = eng.metrics.steps - cold_steps;
+        let g = eng.kv_pool().lock().unwrap().gauges();
+        println!(
+            "  shared 32-tok prefix: cold {cold_steps} steps -> warm {warm_steps} steps \
+             (prefix-hit tokens {}, cow copies {})",
+            g.prefix_hit_toks, g.cow_copies
+        );
+        assert!(
+            warm_steps < cold_steps,
+            "warm shared prefix must save engine steps: {warm_steps} !< {cold_steps}"
+        );
+        assert!(g.prefix_hit_toks >= 32, "both full blocks must be adopted");
+        let row_json = |st: &Stats| {
+            json::obj(vec![
+                ("mean_ns", json::num(st.mean_ns)),
+                ("p50_ns", json::num(st.p50_ns)),
+                ("p95_ns", json::num(st.p95_ns)),
+                ("iters", json::num(st.iters as f64)),
+            ])
+        };
+        vec![
+            json::obj(vec![
+                ("op", json::s("cold_prefill")),
+                ("prompt_toks", json::num(prompt_len as f64)),
+                ("chunk1", row_json(&tat)),
+                ("chunk16", row_json(&chunked)),
+                ("speedup_chunked", json::num(tat.p50_ns / chunked.p50_ns)),
+            ]),
+            json::obj(vec![
+                ("op", json::s("warm_prefix")),
+                ("shared_toks", json::num(32.0)),
+                ("cold_steps", json::num(cold_steps as f64)),
+                ("warm_steps", json::num(warm_steps as f64)),
+                ("prefix_hit_toks", json::num(g.prefix_hit_toks as f64)),
+            ]),
+        ]
+    };
+
+    if json_out {
+        let doc = json::obj(vec![
+            ("bench", json::s("perf_hotpath")),
+            ("section", json::s("kernels")),
+            ("harness", json::s("cargo-bench")),
+            ("smoke", Value::Bool(smoke)),
+            ("host_isa", json::s(if host_simd { "avx2+fma" } else { "scalar" })),
+            (
+                "shape",
+                json::obj(vec![
+                    ("d_in", json::num(h as f64)),
+                    ("d_out", json::num(f as f64)),
+                    ("t_matmul", json::num(16.0)),
+                    ("group", json::num(32.0)),
+                ]),
+            ),
+            ("rows", Value::Arr(kernel_rows.clone())),
+            ("prefill", Value::Arr(prefill_rows.clone())),
+        ]);
+        let path = mcsharp::config::repo_path("BENCH_perf_hotpath.json");
+        std::fs::write(&path, doc.to_json()).expect("write BENCH json");
+        println!("  wrote {path}");
+    }
+    std::hint::black_box(&prefill_rows);
 
     if smoke {
         println!("\n(--smoke: skipping pretrained-model and PJRT sections)");

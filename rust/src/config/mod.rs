@@ -160,6 +160,12 @@ pub struct ServingConfig {
     /// `BUSY` response instead of growing the queue without limit — the
     /// overload guardrail for real traffic.
     pub max_queue: usize,
+    /// Positions per paged-KV page (`--kv-page`): the prefix-sharing
+    /// granularity and the free-list allocation unit.
+    pub kv_page: usize,
+    /// Pending prompt positions each sequence feeds through one engine
+    /// step (`--prefill-chunk`); 1 = token-at-a-time prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServingConfig {
@@ -171,6 +177,8 @@ impl Default for ServingConfig {
             workers: 0,
             batch_window_us: 0,
             max_queue: 0,
+            kv_page: 16,
+            prefill_chunk: 16,
         }
     }
 }

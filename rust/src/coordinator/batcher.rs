@@ -4,6 +4,10 @@
 //! and new sequences are admitted the moment one finishes (continuous
 //! batching, not static). A token budget caps the summed context length
 //! of the active set — the KV-memory guardrail a real server needs.
+//! The budget charges *unique* KV: prompt tokens covered by shared
+//! prefix-tree blocks (see `moe::kv`) are already resident and cost
+//! nothing, so N requests sharing a system prompt pay its pages once
+//! and the same `token_budget` admits a wider batch.
 //!
 //! The drain loop is split into three reusable pieces — [`Batcher::admit`],
 //! [`Batcher::step_active`], [`Batcher::retire`] — so the same admission
@@ -13,6 +17,7 @@
 //! tears down between requests.
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -20,6 +25,7 @@ use anyhow::Result;
 use crate::coordinator::engine::{DecodeEngine, SeqState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResult};
+use crate::moe::kv::KvPool;
 
 /// Admission-ordering policy. FIFO is the default; SJF (shortest job
 /// first, by token footprint) minimizes mean latency on mixed workloads;
@@ -50,11 +56,14 @@ pub struct ActiveSeq {
 }
 
 impl ActiveSeq {
-    fn new(req: GenRequest, submitted: Instant, n_layers: usize) -> ActiveSeq {
+    fn new(req: GenRequest, submitted: Instant, n_layers: usize, pool: &mut KvPool) -> ActiveSeq {
         let prompt_len = req.prompt.len();
         let stream = req.stream;
         let mut seq = SeqState::new(req.id, req.prompt, req.max_new_tokens, n_layers);
         seq.sample = req.sample;
+        // adopt any cached prompt prefix: those positions skip prefill
+        // and their (shared) pages stay off this sequence's budget
+        seq.attach_prefix(pool);
         ActiveSeq { seq, submitted, admitted: Instant::now(), prompt_len, stream, streamed: 0 }
     }
 
@@ -71,11 +80,15 @@ impl ActiveSeq {
     }
 
     /// Token footprint this sequence holds against the budget: context
-    /// held now plus tokens still to be generated. `tokens.len()` already
-    /// counts generated tokens, so the remainder is `max_new - generated`
-    /// — the sum stays `prompt + max_new` for the sequence's lifetime.
+    /// held now plus tokens still to be generated, *minus* the prompt
+    /// tokens whose pages are shared full prefix-tree blocks (unique-page
+    /// accounting: shared KV is charged once, to the tree, not per
+    /// sequence). `tokens.len()` already counts generated tokens, so the
+    /// remainder is `max_new - generated` — the sum stays
+    /// `prompt + max_new - shared` for the sequence's lifetime.
     fn footprint(&self) -> usize {
-        self.seq.tokens.len() + self.seq.max_new.saturating_sub(self.seq.generated)
+        (self.seq.tokens.len() + self.seq.max_new.saturating_sub(self.seq.generated))
+            .saturating_sub(self.seq.shared_toks())
     }
 }
 
@@ -157,26 +170,34 @@ impl Batcher {
     }
 
     /// Admit queued requests into `active` while there is room in both
-    /// the batch and the token budget. When `active` is empty and nothing
-    /// fits, the policy head is force-admitted so oversized requests
-    /// still progress.
-    pub fn admit(&mut self, active: &mut Vec<ActiveSeq>, n_layers: usize) {
+    /// the batch and the token budget. A candidate's charge is probed
+    /// against the prefix tree first: prompt tokens covered by resident
+    /// shared blocks are free, so warm-prefix requests fit where cold
+    /// ones would not. When `active` is empty and nothing fits, the
+    /// policy head is force-admitted so oversized requests still
+    /// progress. Lock order: callers may hold the scheduler inner or
+    /// engine lock; the pool lock here is innermost.
+    pub fn admit(&mut self, active: &mut Vec<ActiveSeq>, n_layers: usize, pool: &Mutex<KvPool>) {
+        let mut pool = pool.lock().unwrap();
         let used: usize = active.iter().map(|a| a.footprint()).sum();
         let mut budget = self.token_budget.saturating_sub(used);
         while active.len() < self.max_batch {
             let fits = self
                 .next_index()
-                .map(|i| (i, self.queue[i].0.footprint()))
+                .map(|i| {
+                    let req = &self.queue[i].0;
+                    (i, req.footprint().saturating_sub(pool.probe_prefix(&req.prompt)))
+                })
                 .filter(|&(_, fp)| fp <= budget);
             let Some((idx, fp)) = fits else { break };
             let (req, submitted) = self.queue.remove(idx).unwrap();
             budget -= fp;
-            active.push(ActiveSeq::new(req, submitted, n_layers));
+            active.push(ActiveSeq::new(req, submitted, n_layers, &mut pool));
         }
         if active.is_empty() {
             if let Some(idx) = self.next_index() {
                 let (req, submitted) = self.queue.remove(idx).unwrap();
-                active.push(ActiveSeq::new(req, submitted, n_layers));
+                active.push(ActiveSeq::new(req, submitted, n_layers, &mut pool));
             }
         }
     }
@@ -193,13 +214,20 @@ impl Batcher {
     }
 
     /// Remove finished sequences from `active`, recording their latency
-    /// in `metrics`. Returns results in completion order.
-    pub fn retire(active: &mut Vec<ActiveSeq>, metrics: &mut Metrics) -> Vec<GenResult> {
+    /// in `metrics` and releasing their KV pages back to the pool
+    /// (pages shared via the prefix tree stay resident for the next
+    /// warm request). Returns results in completion order.
+    pub fn retire(
+        active: &mut Vec<ActiveSeq>,
+        metrics: &mut Metrics,
+        pool: &Mutex<KvPool>,
+    ) -> Vec<GenResult> {
         let mut out = Vec::new();
         let mut i = 0;
         while i < active.len() {
             if active[i].seq.done() {
-                let a = active.remove(i);
+                let mut a = active.remove(i);
+                pool.lock().unwrap().free_seq(&mut a.seq.kv);
                 let lat = a.submitted.elapsed().as_micros() as u64;
                 let queue = a.admitted.duration_since(a.submitted).as_micros() as u64;
                 metrics.latencies_us.push(lat);
@@ -222,16 +250,17 @@ impl Batcher {
     /// completion order.
     pub fn run(&mut self, engine: &mut DecodeEngine) -> Result<Vec<GenResult>> {
         let n_layers = engine.em.model().cfg.n_layers;
+        let pool = engine.kv_pool();
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut results = Vec::new();
         engine.metrics.start();
         loop {
-            self.admit(&mut active, n_layers);
+            self.admit(&mut active, n_layers, &pool);
             if active.is_empty() {
                 break; // queue drained (admit force-admits when non-empty)
             }
             Self::step_active(engine, &mut active)?;
-            results.append(&mut Self::retire(&mut active, &mut engine.metrics));
+            results.append(&mut Self::retire(&mut active, &mut engine.metrics, &pool));
         }
         engine.metrics.finish();
         Ok(results)
@@ -320,10 +349,11 @@ mod tests {
     #[test]
     fn admission_does_not_double_count_generated_tokens() {
         let mut b = Batcher::new(4, 16);
+        let pool = Mutex::new(KvPool::new(16, 32, 2));
         // long request: prompt 4 + max_new 8 = footprint 12 of budget 16
         b.submit(GenRequest::greedy(0, vec![1, 2, 3, 4], 8));
         let mut active: Vec<ActiveSeq> = Vec::new();
-        b.admit(&mut active, 2);
+        b.admit(&mut active, 2, &pool);
         assert_eq!(active.len(), 1);
         // simulate mid-flight progress: 4 of 8 tokens generated
         active[0].seq.tokens.extend([9u16; 4]);
@@ -333,16 +363,44 @@ mod tests {
         // accounting charged 8+8=16 and starved it until the long one
         // finished
         b.submit(GenRequest::greedy(1, vec![5, 6], 2));
-        b.admit(&mut active, 2);
+        b.admit(&mut active, 2, &pool);
         assert_eq!(active.len(), 2, "budget double-count starved admission");
         // once the long sequence retires, its whole footprint comes back
         active[0].seq.generated = 8;
         let mut metrics = Metrics::default();
-        let done = Batcher::retire(&mut active, &mut metrics);
+        let done = Batcher::retire(&mut active, &mut metrics, &pool);
         assert_eq!(done.len(), 1);
         b.submit(GenRequest::greedy(2, vec![1, 2, 3, 4], 8));
-        b.admit(&mut active, 2);
+        b.admit(&mut active, 2, &pool);
         assert_eq!(active.len(), 2, "retired footprint must be reclaimed");
+    }
+
+    /// Unique-page accounting: a request whose prompt prefix is already
+    /// resident in the tree is charged only its unshared tail, so it
+    /// fits a budget its cold footprint would blow.
+    #[test]
+    fn shared_prefix_discounts_admission_charge() {
+        let m = MoeModel::new(&cfg(), 76);
+        let be = NativeBackend::fp(&m);
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None).with_kv_page(4);
+        let pool = eng.kv_pool();
+        // warm the tree: a 9-token prompt registers two full 4-blocks
+        // (the last prompt position is always recomputed, so only
+        // blocks under prompt_len - 1 are adoptable)
+        let sys: Vec<u16> = (1..=9).collect();
+        eng.generate(&sys, 2).unwrap();
+        assert_eq!(pool.lock().unwrap().probe_prefix(&sys), 8);
+        // cold charge would be 9 + 2 = 11, blowing budget 8 and starving
+        // the second request; the warm charge is 11 - 8 = 3
+        let mut b = Batcher::new(2, 8);
+        b.submit(GenRequest::greedy(0, sys.clone(), 2));
+        b.submit(GenRequest::greedy(1, vec![60, 61], 2));
+        let mut active: Vec<ActiveSeq> = Vec::new();
+        b.admit(&mut active, 2, &pool);
+        assert_eq!(active.len(), 2, "warm prefix must discount the charge");
+        assert_eq!(active[0].seq.shared_toks(), 8);
+        assert_eq!(active[0].footprint(), 3);
+        assert_eq!(active[0].seq.prefilled, 8, "admitted mid-prompt");
     }
 
     #[test]

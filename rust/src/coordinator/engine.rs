@@ -1,22 +1,36 @@
-//! The decode engine: batched, KV-cached, expert-grouped generation.
+//! The decode engine: batched, paged-KV, expert-grouped generation.
 //!
 //! One engine instance now serves for the whole server lifetime (the
 //! [`Scheduler`](crate::coordinator::scheduler::Scheduler) steps it from
 //! a persistent loop), so [`Metrics`] accumulate across requests: the
 //! wall-clock window opens at the first `start()` and `tokens_per_sec`
 //! reads the lifetime rate, not the latest drain's.
+//!
+//! KV lives in one shared [`KvPool`] (paged, refcounted, prefix-shared
+//! — see `moe::kv`), and prefill is *chunked*: each engine step feeds
+//! up to `prefill_chunk` pending prompt positions per sequence through
+//! [`Attention::forward_chunk`](crate::moe::attention::Attention::forward_chunk)
+//! and one expert-grouped dispatch over all rows, so prompt ingestion
+//! rides the same blocked/fused matmul path as expert execution
+//! instead of one row per full engine step.
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::backend::ExpertBackend;
-use crate::moe::attention::KvCache;
 use crate::moe::dispatch::{dispatch_moe_layer, DispatchExecutor, DispatchHooks};
+use crate::moe::kv::{KvPool, SeqKv, DEFAULT_KV_PAGE};
 use crate::moe::model::{ExpertId, MoeModel, Pruner};
 use crate::quant::qmodel::QuantModel;
 use crate::tensor::{rmsnorm, softmax, Tensor2};
 use crate::util::rng::Rng;
 
 use super::metrics::Metrics;
+
+/// Default pending prompt positions consumed per sequence per engine
+/// step (`--prefill-chunk`). Decoding sequences always contribute one.
+pub const DEFAULT_PREFILL_CHUNK: usize = 16;
 
 /// The dense-side weights the engine reads (embedding, norms, attention,
 /// gate, lm head): either the fp model or the quantized model's base.
@@ -104,12 +118,13 @@ impl DispatchExecutor for BackendExec<'_, '_> {
     }
 }
 
-/// One live sequence: token history + per-layer KV caches.
+/// One live sequence: token history + paged per-layer KV page tables.
 pub struct SeqState {
     pub id: u64,
     pub tokens: Vec<u16>,
-    pub caches: Vec<KvCache>,
-    /// Number of prompt tokens already prefilled.
+    pub kv: SeqKv,
+    /// Number of prompt tokens already prefilled (or adopted from the
+    /// prefix tree).
     pub prefilled: usize,
     pub generated: usize,
     pub max_new: usize,
@@ -121,7 +136,7 @@ impl SeqState {
         SeqState {
             id,
             tokens: prompt,
-            caches: (0..n_layers).map(|_| KvCache::default()).collect(),
+            kv: SeqKv::new(n_layers),
             prefilled: 0,
             generated: 0,
             max_new,
@@ -129,9 +144,43 @@ impl SeqState {
         }
     }
 
+    /// Adopt any cached prefix of the prompt from the pool's prefix
+    /// tree: the adopted positions are skipped by prefill entirely.
+    /// Call once, before the first step.
+    pub fn attach_prefix(&mut self, pool: &mut KvPool) {
+        debug_assert!(self.kv.is_empty() && self.prefilled == 0);
+        self.kv = pool.lookup_prefix(&self.tokens);
+        self.prefilled = self.kv.len();
+    }
+
+    /// Prompt tokens covered by shared full blocks — already resident,
+    /// so the admission token-budget does not charge them.
+    pub fn shared_toks(&self) -> usize {
+        self.kv.shared_toks()
+    }
+
     pub fn done(&self) -> bool {
         self.generated >= self.max_new
     }
+}
+
+/// NaN-safe greedy argmax over logits. Ties keep the last maximum
+/// (matching `Iterator::max_by`); NaN logits sort below every finite
+/// value instead of panicking the old `partial_cmp().unwrap()` way.
+pub fn greedy_argmax(logits: &[f32]) -> u16 {
+    fn key(v: f32) -> f32 {
+        if v.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            v
+        }
+    }
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| key(*a.1).total_cmp(&key(*b.1)))
+        .map(|(t, _)| t as u16)
+        .unwrap_or(0)
 }
 
 pub struct DecodeEngine<'a> {
@@ -140,6 +189,12 @@ pub struct DecodeEngine<'a> {
     pub pruner: Option<Box<dyn Pruner + 'a>>,
     pub metrics: Metrics,
     rng: Rng,
+    /// Shared paged KV pool. `Arc` so admission (batcher/scheduler) can
+    /// probe/adopt/free without holding the engine lock. Lock order:
+    /// (scheduler-inner | engine) → pool; the pool lock is innermost
+    /// and never held across another lock acquisition.
+    pool: Arc<Mutex<KvPool>>,
+    prefill_chunk: usize,
 }
 
 impl<'a> DecodeEngine<'a> {
@@ -148,43 +203,99 @@ impl<'a> DecodeEngine<'a> {
         backend: &'a dyn ExpertBackend,
         pruner: Option<Box<dyn Pruner + 'a>>,
     ) -> DecodeEngine<'a> {
-        DecodeEngine { em, backend, pruner, metrics: Metrics::default(), rng: Rng::new(0x5EED) }
+        let cfg = &em.model().cfg;
+        let pool = KvPool::new(DEFAULT_KV_PAGE, cfg.d_model, cfg.n_layers);
+        DecodeEngine {
+            em,
+            backend,
+            pruner,
+            metrics: Metrics::default(),
+            rng: Rng::new(0x5EED),
+            pool: Arc::new(Mutex::new(pool)),
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+        }
     }
 
-    /// Process one position for every sequence in `batch`: the token at
-    /// `seq.prefilled` if still prefilling, else decode the next token
-    /// (appending it to `seq.tokens`). This is continuous batching at
-    /// token-step granularity — prefill and decode share engine steps.
+    /// Rebuild the pool with `page` positions per KV page
+    /// (`--kv-page`). Call before any sequence is admitted.
+    pub fn with_kv_page(mut self, page: usize) -> Self {
+        let cfg = &self.em.model().cfg;
+        self.pool = Arc::new(Mutex::new(KvPool::new(page, cfg.d_model, cfg.n_layers)));
+        self
+    }
+
+    /// Pending prompt positions consumed per sequence per step
+    /// (`--prefill-chunk`); 1 reproduces token-at-a-time prefill.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk.max(1);
+        self
+    }
+
+    /// The shared KV pool (admission and retirement paths use this).
+    pub fn kv_pool(&self) -> Arc<Mutex<KvPool>> {
+        self.pool.clone()
+    }
+
+    /// Process up to `prefill_chunk` pending prompt positions for every
+    /// sequence in `batch` (decoding sequences contribute exactly one
+    /// row), all rows sharing each layer's expert-grouped dispatch.
+    /// A sequence whose last prompt position was computed this step
+    /// decodes its next token. This is continuous batching at
+    /// chunk-step granularity — prefill and decode share engine steps.
     pub fn step(&mut self, batch: &mut [&mut SeqState]) -> Result<()> {
         if batch.is_empty() {
             return Ok(());
         }
+        let pool_arc = self.pool.clone();
+        let mut pool = pool_arc.lock().unwrap();
         let model = self.em.model();
         let cfg = model.cfg.clone();
         let h = cfg.d_model;
-        let n = batch.len();
-        // gather input rows (embedding of the current position's token)
-        let mut x = Tensor2::zeros(n, h);
-        for (i, seq) in batch.iter().enumerate() {
-            let pos = seq.prefilled.min(seq.tokens.len() - 1);
-            let tok = seq.tokens[pos] as usize;
-            x.row_mut(i).copy_from_slice(model.embed.row(tok));
+        let chunk = self.prefill_chunk;
+        // row layout: seq i owns rows off[i] .. off[i] + counts[i]
+        let counts: Vec<usize> = batch
+            .iter()
+            .map(|s| {
+                debug_assert!(s.prefilled < s.tokens.len());
+                (s.tokens.len() - s.prefilled).min(chunk)
+            })
+            .collect();
+        let mut off = Vec::with_capacity(counts.len());
+        let mut total = 0;
+        for &c in &counts {
+            off.push(total);
+            total += c;
         }
-        let mut normed = Tensor2::zeros(n, h);
+        // gather input rows (embeddings of the pending positions)
+        let mut x = Tensor2::zeros(total, h);
+        for (i, seq) in batch.iter().enumerate() {
+            for j in 0..counts[i] {
+                let tok = seq.tokens[seq.prefilled + j] as usize;
+                x.row_mut(off[i] + j).copy_from_slice(model.embed.row(tok));
+            }
+        }
+        let mut normed = Tensor2::zeros(total, h);
         for (l, block) in model.blocks.iter().enumerate() {
-            // attention (per sequence, KV cached)
+            // attention (per sequence, chunked against the paged pool)
             for (i, seq) in batch.iter_mut().enumerate() {
-                rmsnorm(x.row(i), &block.attn_norm, normed.row_mut(i));
-                let out = block.attn.forward_step(normed.row(i), &mut seq.caches[l]);
-                let xr = x.row_mut(i);
-                for (a, o) in xr.iter_mut().zip(&out) {
-                    *a += o;
+                let (o, c) = (off[i], counts[i]);
+                for j in 0..c {
+                    rmsnorm(x.row(o + j), &block.attn_norm, normed.row_mut(o + j));
+                }
+                let xc = Tensor2::from_vec(c, h, normed.data[o * h..(o + c) * h].to_vec());
+                let out = block.attn.forward_chunk(&xc, &mut pool, &mut seq.kv.layers[l]);
+                for j in 0..c {
+                    let xr = x.row_mut(o + j);
+                    for (a, ov) in xr.iter_mut().zip(out.row(j)) {
+                        *a += ov;
+                    }
                 }
             }
             // MoE: the shared expert-grouped dispatcher (route + prune +
-            // group + execute-once-per-expert + scatter)
-            for i in 0..n {
-                rmsnorm(x.row(i), &block.moe_norm, normed.row_mut(i));
+            // group + execute-once-per-expert + scatter) over all rows —
+            // prefill rows ride the same fused token-group kernels
+            for r in 0..total {
+                rmsnorm(x.row(r), &block.moe_norm, normed.row_mut(r));
             }
             let exec = BackendExec { em: &self.em, be: self.backend };
             let mut hooks = DispatchHooks {
@@ -207,40 +318,41 @@ impl<'a> DecodeEngine<'a> {
         }
         // head + token transition per sequence
         for (i, seq) in batch.iter_mut().enumerate() {
-            if seq.prefilled + 1 < seq.tokens.len() {
-                // still prefilling: just advance (logits unused)
-                seq.prefilled += 1;
-                self.metrics.tokens_in += 1;
-                continue;
-            }
-            rmsnorm(x.row(i), &model.final_norm, normed.row_mut(i));
-            let mut logits = crate::moe::attention::mat_vec(&model.lm_head, normed.row(i));
-            let next = match seq.sample {
-                None => {
-                    logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(t, _)| t as u16)
-                        .unwrap_or(0)
-                }
-                Some((temp, _)) => {
-                    for v in logits.iter_mut() {
-                        *v /= temp.max(1e-3);
+            let c = counts[i];
+            seq.prefilled += c;
+            if seq.prefilled < seq.tokens.len() {
+                // still prefilling: logits unused
+                self.metrics.tokens_in += c as u64;
+            } else {
+                // the chunk's last row sits at the final prompt (or
+                // latest generated) position: decode from it
+                self.metrics.tokens_in += (c - 1) as u64;
+                let last = off[i] + c - 1;
+                rmsnorm(x.row(last), &model.final_norm, normed.row_mut(last));
+                let mut logits =
+                    crate::moe::attention::mat_vec(&model.lm_head, normed.row(last));
+                let next = match seq.sample {
+                    None => greedy_argmax(&logits),
+                    Some((temp, _)) => {
+                        for v in logits.iter_mut() {
+                            *v /= temp.max(1e-3);
+                        }
+                        softmax(&mut logits);
+                        self.rng.categorical(&logits) as u16
                     }
-                    softmax(&mut logits);
-                    self.rng.categorical(&logits) as u16
-                }
-            };
-            seq.tokens.push(next);
-            seq.prefilled += 1;
-            seq.generated += 1;
-            self.metrics.tokens_out += 1;
+                };
+                seq.tokens.push(next);
+                seq.generated += 1;
+                self.metrics.tokens_out += 1;
+            }
+            // publish completed blocks into the prefix tree (dedups
+            // identical chains onto one set of pages)
+            pool.register_progress(&mut seq.kv, &seq.tokens);
         }
         self.metrics.steps += 1;
-        // refresh the expert-cache gauges (monotonic counters read off
-        // the store; cheap — one small struct copy under the store lock)
+        // refresh the expert-cache + KV gauges (both O(1) reads)
         self.metrics.cache = self.em.cache_counters();
+        self.metrics.kv = pool.gauges();
         Ok(())
     }
 
@@ -249,14 +361,18 @@ impl<'a> DecodeEngine<'a> {
     }
 
     /// Run one sequence to completion (used by tests & simple paths).
+    /// Adopts any cached prompt prefix and frees the sequence's pages
+    /// on the way out.
     pub fn generate(&mut self, prompt: &[u16], max_new: usize) -> Result<Vec<u16>> {
-        let model = self.em.model();
-        let n_layers = model.cfg.n_layers;
+        let n_layers = self.em.model().cfg.n_layers;
         let mut seq = SeqState::new(0, prompt.to_vec(), max_new, n_layers);
+        let pool = self.pool.clone();
+        seq.attach_prefix(&mut pool.lock().unwrap());
         while !seq.done() {
             let mut batch = [&mut seq];
             self.step(&mut batch)?;
         }
+        pool.lock().unwrap().free_seq(&mut seq.kv);
         Ok(seq.tokens)
     }
 }
@@ -287,8 +403,9 @@ mod tests {
         }
     }
 
-    /// The decode engine (KV-cached, expert-grouped, batched) must agree
-    /// with the reference full-sequence forward on greedy generation.
+    /// The decode engine (paged-KV, expert-grouped, chunk-prefilled)
+    /// must agree with the reference full-sequence forward on greedy
+    /// generation.
     #[test]
     fn engine_matches_full_forward_greedy() {
         let m = MoeModel::new(&cfg(), 60);
@@ -300,13 +417,7 @@ mod tests {
         let mut want = prompt.clone();
         for _ in 0..6 {
             let logits = m.forward_opts(&want, &mut ForwardOpts::default());
-            let last = logits.row(logits.rows - 1);
-            let next = last
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0 as u16;
+            let next = greedy_argmax(logits.row(logits.rows - 1));
             want.push(next);
         }
         assert_eq!(got, want);
@@ -347,11 +458,14 @@ mod tests {
         let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None);
         eng.generate(&[1, 2, 3], 5).unwrap();
         assert_eq!(eng.metrics.tokens_out, 5);
-        assert_eq!(eng.metrics.tokens_in, 2); // prompt len 3 => 2 prefill steps
+        assert_eq!(eng.metrics.tokens_in, 2); // prompt len 3 => 2 prefill tokens
+        assert_eq!(eng.metrics.steps, 5, "chunked prefill folds the prompt into step 1");
         assert!(eng.metrics.experts_offered > 0);
         assert_eq!(eng.metrics.experts_kept, eng.metrics.experts_offered);
         assert!(eng.metrics.routed_bytes > 0);
         assert!(eng.metrics.cache.is_none(), "fp model has no expert cache");
+        assert!(eng.metrics.kv.kv_pages > 0, "kv gauges published");
+        assert!(eng.metrics.kv.kv_bytes > 0);
     }
 
     #[test]
@@ -369,5 +483,37 @@ mod tests {
         assert_eq!(c.resident_bytes, q.store.total_nbytes());
         assert_eq!(c.misses, 0);
         assert_eq!(c.evictions, 0);
+    }
+
+    /// Regression: the greedy sampler must not panic on (or select)
+    /// NaN logits — the old `partial_cmp().unwrap()` aborted the
+    /// engine thread on the first NaN.
+    #[test]
+    fn greedy_argmax_is_nan_safe() {
+        assert_eq!(greedy_argmax(&[0.5, f32::NAN, 2.0, 1.0]), 2);
+        assert_eq!(greedy_argmax(&[1.0, 2.0, 2.0]), 2, "ties keep the last, like max_by");
+        assert_eq!(greedy_argmax(&[f32::NAN, f32::NAN]), 1, "all-NaN: no panic");
+        assert_eq!(greedy_argmax(&[]), 0);
+        assert_eq!(greedy_argmax(&[f32::NEG_INFINITY, 3.0, f32::NAN]), 1);
+    }
+
+    /// Token-budget view: generate frees its pages, and repeated
+    /// identical prompts converge on the tree's shared pages instead
+    /// of growing the pool.
+    #[test]
+    fn generate_releases_kv_pages() {
+        let m = MoeModel::new(&cfg(), 64);
+        let be = NativeBackend::fp(&m);
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None).with_kv_page(4);
+        let pool = eng.kv_pool();
+        let first = eng.generate(&[1, 2, 3, 4, 5, 6], 4).unwrap();
+        let after_first = pool.lock().unwrap().pages_in_use();
+        for _ in 0..3 {
+            let again = eng.generate(&[1, 2, 3, 4, 5, 6], 4).unwrap();
+            assert_eq!(again, first);
+            // only tree-held pages survive; repeats re-adopt them
+            assert_eq!(pool.lock().unwrap().pages_in_use(), after_first);
+        }
+        assert!(pool.lock().unwrap().gauges().prefix_hit_toks > 0);
     }
 }

@@ -5,6 +5,7 @@
 
 use std::time::Instant;
 
+use crate::moe::kv::KvGauges;
 use crate::quant::store::CacheCounters;
 
 #[derive(Clone, Debug, Default)]
@@ -31,6 +32,9 @@ pub struct Metrics {
     /// Expert-cache gauges, refreshed from the store each engine step
     /// (`None` when the model does not serve from a store, i.e. fp).
     pub cache: Option<CacheCounters>,
+    /// Paged-KV gauges (pages/bytes in use, prefix hits, CoW copies),
+    /// refreshed from the pool each engine step — O(1) reads.
+    pub kv: KvGauges,
 }
 
 impl Metrics {
@@ -147,6 +151,11 @@ impl Metrics {
             ("cache_evictions", num(c.evictions as f64)),
             ("cache_prefetch_hits", num(c.prefetch_hits as f64)),
             ("cache_hit_rate", num(c.hit_rate())),
+            ("kv_pages", num(self.kv.kv_pages as f64)),
+            ("kv_bytes", num(self.kv.kv_bytes as f64)),
+            ("prefix_hit_toks", num(self.kv.prefix_hit_toks as f64)),
+            ("kv_cow_copies", num(self.kv.cow_copies as f64)),
+            ("kv_tree_blocks", num(self.kv.tree_blocks as f64)),
         ])
     }
 }

@@ -181,10 +181,10 @@ impl Scheduler {
     /// lock is released during the step, so submissions never wait on
     /// compute. Returns the number of sequences served.
     pub fn run_engine(&self, engine: &Mutex<DecodeEngine>) -> Result<usize> {
-        let n_layers = {
+        let (n_layers, pool) = {
             let mut eng = engine.lock().unwrap();
             eng.metrics.start(); // first-call-wins: the server-lifetime window
-            eng.em.model().cfg.n_layers
+            (eng.em.model().cfg.n_layers, eng.kv_pool())
         };
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut served = 0usize;
@@ -194,10 +194,10 @@ impl Scheduler {
                 let mut inner = self.inner.lock().unwrap();
                 loop {
                     let was_idle = active.is_empty();
-                    inner.batcher.admit(&mut active, n_layers);
+                    inner.batcher.admit(&mut active, n_layers, &pool);
                     if !active.is_empty() {
                         if was_idle {
-                            inner = self.linger(inner, &mut active, n_layers);
+                            inner = self.linger(inner, &mut active, n_layers, &pool);
                         }
                         break;
                     }
@@ -223,7 +223,7 @@ impl Scheduler {
                                 streamed.push((id, new.to_vec()));
                             }
                         }
-                        (streamed, Batcher::retire(&mut active, &mut eng.metrics))
+                        (streamed, Batcher::retire(&mut active, &mut eng.metrics, &pool))
                     }
                     Err(e) => {
                         eng.metrics.finish(); // close the lifetime window
@@ -272,6 +272,7 @@ impl Scheduler {
         mut inner: MutexGuard<'g, Inner>,
         active: &mut Vec<ActiveSeq>,
         n_layers: usize,
+        pool: &Mutex<crate::moe::kv::KvPool>,
     ) -> MutexGuard<'g, Inner> {
         if self.batch_window_us == 0 {
             return inner;
@@ -284,7 +285,7 @@ impl Scheduler {
             }
             let (guard, _) = self.work.wait_timeout(inner, left).unwrap();
             inner = guard;
-            inner.batcher.admit(active, n_layers);
+            inner.batcher.admit(active, n_layers, pool);
         }
         inner
     }

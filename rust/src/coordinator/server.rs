@@ -310,8 +310,9 @@ fn stats_line(eng: &DecodeEngine) -> String {
     let lat = m.latency_percentiles_us(&[0.5, 0.95]);
     let queue = m.queue_percentiles_us(&[0.5, 0.95]);
     format!(
-        "STATS tokens_out={} steps={} tps={:.3} pruning={:.3} lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={}\n",
+        "STATS tokens_out={} tokens_in={} steps={} tps={:.3} pruning={:.3} lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={} kv_pages={} kv_bytes={} prefix_hit_toks={} kv_cow_copies={}\n",
         m.tokens_out,
+        m.tokens_in,
         m.steps,
         m.tokens_per_sec(),
         m.pruning_ratio(),
@@ -324,6 +325,10 @@ fn stats_line(eng: &DecodeEngine) -> String {
         cache.misses,
         cache.evictions,
         cache.prefetch_hits,
+        m.kv.kv_pages,
+        m.kv.kv_bytes,
+        m.kv.prefix_hit_toks,
+        m.kv.cow_copies,
     )
 }
 

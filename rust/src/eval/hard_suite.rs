@@ -130,6 +130,8 @@ fn humaneval_p10(engine: &mut DecodeEngine, n: usize, seed: u64) -> f64 {
                         break;
                     }
                 }
+                // release this attempt's pages back to the shared pool
+                engine.kv_pool().lock().unwrap().free_seq(&mut seq.kv);
                 seq.tokens
             };
             if out.len() >= prompt.len() + m && out[prompt.len()..prompt.len() + m] == answer[..m]

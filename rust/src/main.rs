@@ -14,6 +14,8 @@
 //!                   [--batch-window-us U]                 gather window before the first step
 //!                   [--max-queue N]                       bound the admission queue (0 = ∞);
 //!                                                         overflow answered BUSY immediately
+//!                   [--kv-page P] [--prefill-chunk C]     paged-KV / prefix-sharing block size
+//!                                                         and prompt positions per engine step
 //! mcsharp info      --model mix-tiny                      model zoo facts
 //! ```
 //!
@@ -40,7 +42,7 @@ use mcsharp::util::rng::Rng;
 const FLAGS: &[&str] = &[
     "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
     "calib-seqs", "lambda", "out", "qckpt", "expert-cache-mb", "max-batch",
-    "token-budget", "workers", "batch-window-us", "max-queue",
+    "token-budget", "workers", "batch-window-us", "max-queue", "kv-page", "prefill-chunk",
 ];
 
 fn main() -> Result<()> {
@@ -179,6 +181,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_window_us: args.usize_or("batch-window-us", defaults.batch_window_us as usize)?
             as u64,
         max_queue: args.usize_or("max-queue", defaults.max_queue)?,
+        kv_page: args.usize_or("kv-page", defaults.kv_page)?.max(1),
+        prefill_chunk: args.usize_or("prefill-chunk", defaults.prefill_chunk)?.max(1),
     };
     // `--qckpt path` serves straight from a pre-compressed checkpoint —
     // the paper's pre-loading deployment story (no calibration at boot).
@@ -227,14 +231,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let rt = mcsharp::runtime::Runtime::open_default()?;
         let be = PjrtBackend::new(&rt, &q, true)?;
-        let engine =
-            std::sync::Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
+        let engine = std::sync::Mutex::new(
+            DecodeEngine::new(EngineModel::Quant(&q), &be, None)
+                .with_kv_page(sc.kv_page)
+                .with_prefill_chunk(sc.prefill_chunk),
+        );
         let n = server::serve_with(listener, &engine, &sc, max)?;
         report_served(&engine.lock().unwrap(), n, "pjrt");
     } else {
         let be = NativeBackend::quant(&q);
-        let engine =
-            std::sync::Mutex::new(DecodeEngine::new(EngineModel::Quant(&q), &be, None));
+        let engine = std::sync::Mutex::new(
+            DecodeEngine::new(EngineModel::Quant(&q), &be, None)
+                .with_kv_page(sc.kv_page)
+                .with_prefill_chunk(sc.prefill_chunk),
+        );
         let n = server::serve_with(listener, &engine, &sc, max)?;
         report_served(&engine.lock().unwrap(), n, "native");
     }
@@ -244,6 +254,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Shutdown line: request count + the expert-cache gauges when the
 /// engine served from a store.
 fn report_served(eng: &DecodeEngine, n: usize, backend: &str) {
+    let kv = eng.metrics.kv;
+    println!(
+        "kv pool: {} pages ({}) | prefix-hit tokens {} | cow copies {} | tree blocks {}",
+        kv.kv_pages,
+        human_bytes(kv.kv_bytes),
+        kv.prefix_hit_toks,
+        kv.cow_copies,
+        kv.tree_blocks
+    );
     if let Some(c) = eng.metrics.cache {
         println!(
             "served {n} requests ({backend} backend) | expert cache: resident {} peak {} hits {} misses {} evictions {} prefetch-hits {} hit-rate {:.3}",

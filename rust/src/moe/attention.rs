@@ -1,12 +1,22 @@
 //! Multi-head causal self-attention with RoPE.
 //!
-//! Two paths share the same weights:
+//! Three paths share the same weights:
 //! * [`Attention::forward`] — full-sequence (training / PPL / calibration);
-//! * [`Attention::forward_step`] — single-position decode against a
-//!   [`KvCache`] (the serving hot path).
+//! * [`Attention::forward_step`] — single-position decode against the
+//!   paged [`KvPool`] (the serving decode hot path);
+//! * [`Attention::forward_chunk`] — C positions at once against the
+//!   pool (chunked prefill: projections ride the blocked `matmul`, and
+//!   per row it is bit-identical to `forward_step` — both accumulate
+//!   over k ascending with the same zero-skip `axpy`).
 //!
-//! A property test asserts the two are numerically identical.
+//! The per-pair RoPE inverse frequencies are precomputed once per
+//! [`Attention`] ([`Attention::from_parts`]) instead of calling `powf`
+//! per position × head × pair; the free [`rope`] keeps the direct
+//! computation as the reference (and for the training backward path).
+//!
+//! Property tests assert step == full-sequence and chunk == step.
 
+use crate::moe::kv::{KvPool, LayerKv};
 use crate::tensor::{softmax, Tensor2};
 use crate::util::rng::Rng;
 
@@ -18,34 +28,42 @@ pub struct Attention {
     pub wo: Tensor2,
     pub n_heads: usize,
     pub rope_theta: f32,
+    /// Per-pair RoPE inverse frequencies (d_head/2 entries), computed
+    /// once at construction.
+    inv_freq: Vec<f32>,
 }
 
-/// Per-sequence KV cache: K and V rows appended per decoded position.
-#[derive(Clone, Debug, Default)]
-pub struct KvCache {
-    pub k: Vec<Vec<f32>>,
-    pub v: Vec<Vec<f32>>,
+/// The table [`Attention`] precomputes: `1/theta^(2p/d_head)` for pair
+/// `p` — exactly the value [`rope`] derives per call.
+pub fn inv_freq_table(d_head: usize, theta: f32) -> Vec<f32> {
+    let mut f = Vec::with_capacity(d_head / 2);
+    let mut i = 0;
+    while i + 1 < d_head {
+        f.push(1.0 / theta.powf(i as f32 / d_head as f32));
+        i += 2;
+    }
+    f
 }
 
-impl KvCache {
-    pub fn len(&self) -> usize {
-        self.k.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.k.is_empty()
-    }
-
-    pub fn nbytes(&self) -> u64 {
-        self.k
-            .iter()
-            .chain(self.v.iter())
-            .map(|r| (r.len() * 4) as u64)
-            .sum()
+/// Apply RoPE in place to one `[H]` row at position `pos` using a
+/// precomputed inverse-frequency table.
+pub fn rope_with(x: &mut [f32], pos: usize, n_heads: usize, inv_freq: &[f32]) {
+    let d_head = x.len() / n_heads;
+    for h in 0..n_heads {
+        let base = h * d_head;
+        for (p, &freq) in inv_freq.iter().enumerate() {
+            let i = 2 * p;
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let (a, b) = (x[base + i], x[base + i + 1]);
+            x[base + i] = a * cos - b * sin;
+            x[base + i + 1] = a * sin + b * cos;
+        }
     }
 }
 
-/// Apply RoPE in place to one `[H]` row at position `pos` (per head).
+/// Apply RoPE in place to one `[H]` row at position `pos` (per head),
+/// recomputing frequencies — the reference path (training backward).
 pub fn rope(x: &mut [f32], pos: usize, n_heads: usize, theta: f32) {
     let d_head = x.len() / n_heads;
     for h in 0..n_heads {
@@ -66,14 +84,34 @@ pub fn rope(x: &mut [f32], pos: usize, n_heads: usize, theta: f32) {
 impl Attention {
     pub fn new(d_model: usize, n_heads: usize, rope_theta: f32, rng: &mut Rng) -> Attention {
         let s = 1.0 / (d_model as f32).sqrt();
-        Attention {
-            wq: Tensor2::randn(d_model, d_model, rng, s),
-            wk: Tensor2::randn(d_model, d_model, rng, s),
-            wv: Tensor2::randn(d_model, d_model, rng, s),
-            wo: Tensor2::randn(d_model, d_model, rng, s),
+        Attention::from_parts(
+            Tensor2::randn(d_model, d_model, rng, s),
+            Tensor2::randn(d_model, d_model, rng, s),
+            Tensor2::randn(d_model, d_model, rng, s),
+            Tensor2::randn(d_model, d_model, rng, s),
             n_heads,
             rope_theta,
-        }
+        )
+    }
+
+    /// Build from loaded weights (checkpoint paths), deriving the RoPE
+    /// table from the head geometry.
+    pub fn from_parts(
+        wq: Tensor2,
+        wk: Tensor2,
+        wv: Tensor2,
+        wo: Tensor2,
+        n_heads: usize,
+        rope_theta: f32,
+    ) -> Attention {
+        let d_head = wq.cols / n_heads;
+        let inv_freq = inv_freq_table(d_head, rope_theta);
+        Attention { wq, wk, wv, wo, n_heads, rope_theta, inv_freq }
+    }
+
+    #[inline]
+    fn rope_row(&self, x: &mut [f32], pos: usize) {
+        rope_with(x, pos, self.n_heads, &self.inv_freq);
     }
 
     /// Full-sequence causal attention over `x [T, H]` starting at absolute
@@ -86,8 +124,8 @@ impl Attention {
         let mut k = x.matmul(&self.wk);
         let v = x.matmul(&self.wv);
         for i in 0..t {
-            rope(q.row_mut(i), pos0 + i, self.n_heads, self.rope_theta);
-            rope(k.row_mut(i), pos0 + i, self.n_heads, self.rope_theta);
+            self.rope_row(q.row_mut(i), pos0 + i);
+            self.rope_row(k.row_mut(i), pos0 + i);
         }
         let mut ctx = Tensor2::zeros(t, h);
         let mut scores = vec![0.0f32; t];
@@ -113,41 +151,78 @@ impl Attention {
         ctx.matmul(&self.wo)
     }
 
-    /// Single-token decode: append this position's K/V to `cache`, attend
-    /// over the whole cache. `x` is the `[H]` input row at absolute
-    /// position `cache.len()`.
-    pub fn forward_step(&self, x: &[f32], cache: &mut KvCache) -> Vec<f32> {
-        let h = x.len();
+    /// Attend `q` (already RoPE'd) at absolute position `pos` over the
+    /// first `pos + 1` cached positions, accumulating into `ctx`. Walks
+    /// KV pages once for scores and once for the weighted sum; the
+    /// per-element accumulation order matches `forward` exactly.
+    fn attend(&self, q: &[f32], pos: usize, pool: &KvPool, lk: &LayerKv, ctx: &mut [f32]) {
+        let h = q.len();
         let d_head = h / self.n_heads;
         let scale = 1.0 / (d_head as f32).sqrt();
-        let pos = cache.len();
-        let mut q = mat_vec(&self.wq, x);
-        let mut k = mat_vec(&self.wk, x);
-        let v = mat_vec(&self.wv, x);
-        rope(&mut q, pos, self.n_heads, self.rope_theta);
-        rope(&mut k, pos, self.n_heads, self.rope_theta);
-        cache.k.push(k);
-        cache.v.push(v);
-        let t = cache.len();
-        let mut ctx = vec![0.0f32; h];
-        let mut scores = vec![0.0f32; t];
-        for head in 0..self.n_heads {
-            let base = head * d_head;
-            let qh = &q[base..base + d_head];
-            for j in 0..t {
-                let kj = &cache.k[j][base..base + d_head];
-                scores[j] = qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
+        let t = pos + 1;
+        let mut scores = vec![0.0f32; self.n_heads * t];
+        pool.walk(lk, t, |j, krow, _| {
+            for head in 0..self.n_heads {
+                let base = head * d_head;
+                let qh = &q[base..base + d_head];
+                let kj = &krow[base..base + d_head];
+                scores[head * t + j] = qh.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale;
             }
-            softmax(&mut scores[..t]);
-            for j in 0..t {
-                let w = scores[j];
-                let vj = &cache.v[j][base..base + d_head];
-                for (d, &vv) in vj.iter().enumerate() {
+        });
+        for head in 0..self.n_heads {
+            softmax(&mut scores[head * t..(head + 1) * t]);
+        }
+        pool.walk(lk, t, |j, _, vrow| {
+            for head in 0..self.n_heads {
+                let base = head * d_head;
+                let w = scores[head * t + j];
+                for (d, &vv) in vrow[base..base + d_head].iter().enumerate() {
                     ctx[base + d] += w * vv;
                 }
             }
-        }
+        });
+    }
+
+    /// Single-token decode: append this position's K/V to the
+    /// sequence's page table, attend over the whole cache. `x` is the
+    /// `[H]` input row at absolute position `lk.len()`.
+    pub fn forward_step(&self, x: &[f32], pool: &mut KvPool, lk: &mut LayerKv) -> Vec<f32> {
+        let pos = lk.len();
+        let mut q = mat_vec(&self.wq, x);
+        let mut k = mat_vec(&self.wk, x);
+        let v = mat_vec(&self.wv, x);
+        self.rope_row(&mut q, pos);
+        self.rope_row(&mut k, pos);
+        pool.append(lk, &k, &v);
+        let mut ctx = vec![0.0f32; x.len()];
+        self.attend(&q, pos, pool, lk, &mut ctx);
         mat_vec(&self.wo, &ctx)
+    }
+
+    /// Chunked prefill: process `x [C, H]` — the next C positions of
+    /// one sequence — in a single call. Q/K/V ride the blocked matmul
+    /// (bit-identical per row to `mat_vec`: same ascending-k,
+    /// zero-skipping `axpy` chain), all C K/V rows are appended, then
+    /// each row attends causally over its own prefix. With C == 1 this
+    /// is exactly `forward_step`.
+    pub fn forward_chunk(&self, x: &Tensor2, pool: &mut KvPool, lk: &mut LayerKv) -> Tensor2 {
+        let (c, h) = (x.rows, x.cols);
+        let pos0 = lk.len();
+        let mut q = x.matmul(&self.wq);
+        let mut k = x.matmul(&self.wk);
+        let v = x.matmul(&self.wv);
+        for i in 0..c {
+            self.rope_row(q.row_mut(i), pos0 + i);
+            self.rope_row(k.row_mut(i), pos0 + i);
+        }
+        for i in 0..c {
+            pool.append(lk, k.row(i), v.row(i));
+        }
+        let mut ctx = Tensor2::zeros(c, h);
+        for i in 0..c {
+            self.attend(q.row(i), pos0 + i, pool, lk, ctx.row_mut(i));
+        }
+        ctx.matmul(&self.wo)
     }
 
     pub fn n_params(&self) -> usize {
@@ -170,6 +245,7 @@ pub fn mat_vec(w: &Tensor2, x: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::kv::SeqKv;
     use crate::util::prop;
 
     #[test]
@@ -179,15 +255,77 @@ mod tests {
             let attn = Attention::new(h, heads, 10_000.0, rng);
             let x = Tensor2::randn(t, h, rng, 1.0);
             let full = attn.forward(&x, 0);
-            let mut cache = KvCache::default();
+            // page size 4: positions cross page boundaries
+            let mut pool = KvPool::new(4, h, 1);
+            let mut kv = SeqKv::new(1);
             for i in 0..t {
-                let step = attn.forward_step(x.row(i), &mut cache);
+                let step = attn.forward_step(x.row(i), &mut pool, &mut kv.layers[0]);
                 for (a, b) in step.iter().zip(full.row(i)) {
                     assert!((a - b).abs() < 1e-4, "pos {i}: {a} vs {b}");
                 }
             }
-            assert_eq!(cache.len(), t);
+            assert_eq!(kv.layers[0].len(), t);
         });
+    }
+
+    #[test]
+    fn chunk_is_bit_identical_to_steps() {
+        prop::for_all(52, 10, |rng, _| {
+            let (h, heads, t) = (32, 4, 1 + rng.below(12));
+            let attn = Attention::new(h, heads, 10_000.0, rng);
+            let x = Tensor2::randn(t, h, rng, 1.0);
+            let mut pool_a = KvPool::new(4, h, 1);
+            let mut a = SeqKv::new(1);
+            let chunk = attn.forward_chunk(&x, &mut pool_a, &mut a.layers[0]);
+            let mut pool_b = KvPool::new(4, h, 1);
+            let mut b = SeqKv::new(1);
+            for i in 0..t {
+                let step = attn.forward_step(x.row(i), &mut pool_b, &mut b.layers[0]);
+                assert_eq!(chunk.row(i), &step[..], "pos {i} not bit-identical");
+            }
+        });
+    }
+
+    #[test]
+    fn chunk_resumes_mid_sequence() {
+        // prefill the first rows chunked, the rest stepped: the cache
+        // contents must line up position for position
+        let mut rng = Rng::new(53);
+        let (h, heads, t, split) = (32, 4, 9, 5);
+        let attn = Attention::new(h, heads, 10_000.0, &mut rng);
+        let x = Tensor2::randn(t, h, &mut rng, 1.0);
+        let full = attn.forward(&x, 0);
+        let mut pool = KvPool::new(4, h, 1);
+        let mut kv = SeqKv::new(1);
+        let head = Tensor2::from_vec(split, h, x.data[..split * h].to_vec());
+        let out = attn.forward_chunk(&head, &mut pool, &mut kv.layers[0]);
+        for i in 0..split {
+            for (a, b) in out.row(i).iter().zip(full.row(i)) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+        for i in split..t {
+            let step = attn.forward_step(x.row(i), &mut pool, &mut kv.layers[0]);
+            for (a, b) in step.iter().zip(full.row(i)) {
+                assert!((a - b).abs() < 1e-4, "pos {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(kv.layers[0].len(), t);
+    }
+
+    #[test]
+    fn rope_with_table_matches_reference() {
+        let mut rng = Rng::new(54);
+        let (h, heads) = (32, 4);
+        let table = inv_freq_table(h / heads, 10_000.0);
+        for pos in [0usize, 1, 17, 255] {
+            let x0: Vec<f32> = (0..h).map(|_| rng.normal()).collect();
+            let mut a = x0.clone();
+            let mut b = x0;
+            rope(&mut a, pos, heads, 10_000.0);
+            rope_with(&mut b, pos, heads, &table);
+            assert_eq!(a, b, "table diverges from direct computation at pos {pos}");
+        }
     }
 
     #[test]

@@ -136,14 +136,7 @@ pub fn load(path: &str) -> Result<MoeModel> {
             .collect::<Result<_>>()?;
         blocks.push(Block {
             attn_norm,
-            attn: Attention {
-                wq,
-                wk,
-                wv,
-                wo,
-                n_heads: cfg.n_heads,
-                rope_theta: cfg.rope_theta,
-            },
+            attn: Attention::from_parts(wq, wk, wv, wo, cfg.n_heads, cfg.rope_theta),
             moe_norm,
             gate,
             experts,

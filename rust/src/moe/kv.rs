@@ -1,0 +1,708 @@
+//! Paged KV cache with prefix sharing — the PagedStore idea (PR 2)
+//! applied to activation memory.
+//!
+//! The serving engine used to own KV per sequence as `Vec<Vec<f32>>`
+//! rows: no reuse across requests, O(positions) byte accounting, and a
+//! full re-prefill for every prompt. This module replaces that with a
+//! single [`KvPool`] per engine:
+//!
+//! * **Pages** — K and V for a fixed number of positions
+//!   ([`KvPool::page_positions`], default [`DEFAULT_KV_PAGE`]) live in
+//!   one refcounted slab. Freed pages go on a free-list and are
+//!   recycled buffer-and-all, so steady-state serving stops allocating.
+//! * **Page tables** — a sequence holds [`LayerKv`] (page ids + length)
+//!   per layer instead of owning rows. The attention read path walks
+//!   pages ([`KvPool::walk`]).
+//! * **Prefix tree** — every *full* block a sequence completes is
+//!   registered under the chain of token-blocks that precedes it
+//!   (KV at position p depends on the entire prefix, so the tree path
+//!   — not a flat block hash — is the correct key). A new request walks
+//!   the tree with its prompt and adopts the pages of every matching
+//!   leading block: refcount bump, zero copy, and the engine skips
+//!   prefilling those positions entirely. A trailing partial match is
+//!   adopted too; the first divergent append then copies the shared
+//!   rows (copy-on-write).
+//! * **O(1) accounting** — bytes = pages-in-use × page bytes; the
+//!   engine republishes [`KvGauges`] every step without touching pages.
+//!
+//! Sharing is sound because a page is immutable once full (RoPE'd K
+//! rows are absolute-position, so the same token prefix produces the
+//! same KV) and copy-on-write isolates writers of partial pages.
+
+const NO_NODE: usize = usize::MAX;
+
+/// Default positions per KV page (`--kv-page`). Matches the fused
+/// matmul sweet spot measured in `perf_hotpath` §kernels.
+pub const DEFAULT_KV_PAGE: usize = 16;
+
+/// One KV page: K and V for up to `page` positions × `width` floats.
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    rc: u32,
+}
+
+/// Per-layer page table of one sequence: page ids + filled positions.
+#[derive(Debug, Default)]
+pub struct LayerKv {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+impl LayerKv {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// All KV state of one sequence: one [`LayerKv`] per layer plus the
+/// prefix-tree cursor used to register completed blocks.
+#[derive(Debug)]
+pub struct SeqKv {
+    pub layers: Vec<LayerKv>,
+    /// Prompt tokens covered by *full* shared blocks at admission —
+    /// these pages are charged to the prefix tree, not to this
+    /// sequence's token-budget footprint.
+    shared_toks: usize,
+    /// Full blocks already present in (or registered into) the tree.
+    registered: usize,
+    /// Deepest tree node whose block chain this sequence sits under.
+    node: usize,
+}
+
+impl SeqKv {
+    pub fn new(n_layers: usize) -> SeqKv {
+        SeqKv {
+            layers: (0..n_layers).map(|_| LayerKv::default()).collect(),
+            shared_toks: 0,
+            registered: 0,
+            node: NO_NODE,
+        }
+    }
+
+    /// Cached positions (layer 0 is canonical; all layers agree
+    /// between engine steps).
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Prompt tokens adopted as full shared blocks (budget discount).
+    pub fn shared_toks(&self) -> usize {
+        self.shared_toks
+    }
+}
+
+/// One registered block: `tokens` (exactly one page worth) reached by
+/// the chain of blocks above it, holding one page per layer.
+struct Node {
+    hash: u64,
+    tokens: Vec<u16>,
+    pages: Vec<usize>,
+    children: Vec<usize>,
+    parent: usize,
+    last_used: u64,
+    alive: bool,
+}
+
+/// O(1) snapshot published into METRICS/STATS every engine step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvGauges {
+    /// Pages currently in use (refcount > 0).
+    pub kv_pages: u64,
+    /// Bytes held by in-use pages (pages × page bytes).
+    pub kv_bytes: u64,
+    /// Lifetime prompt tokens whose KV was adopted from the prefix
+    /// tree instead of being prefilled.
+    pub prefix_hit_toks: u64,
+    /// Lifetime copy-on-write page copies (first divergent append).
+    pub cow_copies: u64,
+    /// Live blocks in the prefix tree.
+    pub tree_blocks: u64,
+}
+
+pub struct KvPool {
+    page: usize,
+    width: usize,
+    n_layers: usize,
+    pages: Vec<Page>,
+    free: Vec<usize>,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    root_children: Vec<usize>,
+    /// Soft cap on pages in use; tree-only pages are evicted (LRU
+    /// leaves first) to get back under it. 0 = unbounded.
+    page_cap: usize,
+    clock: u64,
+    prefix_hit_toks: u64,
+    cow_copies: u64,
+    live_nodes: u64,
+}
+
+fn block_hash(tokens: &[u16]) -> u64 {
+    // FNV-1a over the token words
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl KvPool {
+    pub fn new(page: usize, width: usize, n_layers: usize) -> KvPool {
+        KvPool {
+            page: page.max(1),
+            width,
+            n_layers,
+            pages: Vec::new(),
+            free: Vec::new(),
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            root_children: Vec::new(),
+            page_cap: 0,
+            clock: 0,
+            prefix_hit_toks: 0,
+            cow_copies: 0,
+            live_nodes: 0,
+        }
+    }
+
+    pub fn page_positions(&self) -> usize {
+        self.page
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Cap pages-in-use; the tree sheds LRU leaf blocks to fit.
+    pub fn set_page_cap(&mut self, cap: usize) {
+        self.page_cap = cap;
+        self.trim();
+    }
+
+    fn page_nbytes(&self) -> u64 {
+        (2 * self.page * self.width * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Pages currently referenced by sequences or the tree. O(1).
+    pub fn pages_in_use(&self) -> usize {
+        self.pages.len() - self.free.len()
+    }
+
+    /// Bytes held by in-use pages. O(1) — no page is ever touched.
+    pub fn nbytes(&self) -> u64 {
+        self.pages_in_use() as u64 * self.page_nbytes()
+    }
+
+    pub fn gauges(&self) -> KvGauges {
+        KvGauges {
+            kv_pages: self.pages_in_use() as u64,
+            kv_bytes: self.nbytes(),
+            prefix_hit_toks: self.prefix_hit_toks,
+            cow_copies: self.cow_copies,
+            tree_blocks: self.live_nodes,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn alloc_page(&mut self) -> usize {
+        if let Some(id) = self.free.pop() {
+            self.pages[id].rc = 1;
+            return id;
+        }
+        let n = self.page * self.width;
+        self.pages.push(Page { k: vec![0.0; n], v: vec![0.0; n], rc: 1 });
+        self.pages.len() - 1
+    }
+
+    fn retain(&mut self, id: usize) {
+        self.pages[id].rc += 1;
+    }
+
+    fn release(&mut self, id: usize) {
+        let p = &mut self.pages[id];
+        debug_assert!(p.rc > 0, "double free of kv page {id}");
+        p.rc -= 1;
+        if p.rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    /// Append one position's K and V rows to `lk`, allocating a page at
+    /// block boundaries and copy-on-writing a shared partial page.
+    pub fn append(&mut self, lk: &mut LayerKv, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.width);
+        debug_assert_eq!(v.len(), self.width);
+        let off = lk.len % self.page;
+        if off == 0 {
+            let id = self.alloc_page();
+            lk.pages.push(id);
+        }
+        let b = lk.len / self.page;
+        let mut id = lk.pages[b];
+        if self.pages[id].rc > 1 {
+            // first divergent write into an adopted page: copy the
+            // shared rows into a private page, drop our shared ref
+            let nid = self.alloc_page();
+            let n = off * self.width;
+            let (src, dst) = twin(&mut self.pages, id, nid);
+            dst.k[..n].copy_from_slice(&src.k[..n]);
+            dst.v[..n].copy_from_slice(&src.v[..n]);
+            self.release(id);
+            lk.pages[b] = nid;
+            id = nid;
+            self.cow_copies += 1;
+        }
+        let at = off * self.width;
+        self.pages[id].k[at..at + self.width].copy_from_slice(k);
+        self.pages[id].v[at..at + self.width].copy_from_slice(v);
+        lk.len += 1;
+    }
+
+    /// K and V rows of position `pos`.
+    pub fn row(&self, lk: &LayerKv, pos: usize) -> (&[f32], &[f32]) {
+        debug_assert!(pos < lk.len);
+        let p = &self.pages[lk.pages[pos / self.page]];
+        let at = (pos % self.page) * self.width;
+        (&p.k[at..at + self.width], &p.v[at..at + self.width])
+    }
+
+    /// Walk positions `0..t` in order, calling `f(pos, k_row, v_row)`.
+    /// One page lookup per block, not per position — the attention
+    /// decode read path.
+    pub fn walk(&self, lk: &LayerKv, t: usize, mut f: impl FnMut(usize, &[f32], &[f32])) {
+        debug_assert!(t <= lk.len);
+        let mut pos = 0;
+        for &pid in &lk.pages {
+            if pos >= t {
+                break;
+            }
+            let page = &self.pages[pid];
+            let n = self.page.min(t - pos);
+            for r in 0..n {
+                let at = r * self.width;
+                f(pos + r, &page.k[at..at + self.width], &page.v[at..at + self.width]);
+            }
+            pos += n;
+        }
+    }
+
+    /// Release every page the sequence holds and reset its tables.
+    /// Pages also referenced by the tree (or other sequences) survive.
+    pub fn free_seq(&mut self, kv: &mut SeqKv) {
+        for l in 0..kv.layers.len() {
+            for b in 0..kv.layers[l].pages.len() {
+                self.release(kv.layers[l].pages[b]);
+            }
+            kv.layers[l].pages.clear();
+            kv.layers[l].len = 0;
+        }
+        kv.shared_toks = 0;
+        kv.registered = 0;
+        kv.node = NO_NODE;
+        self.trim();
+    }
+
+    fn children_of(&self, node: usize) -> &[usize] {
+        if node == NO_NODE {
+            &self.root_children
+        } else {
+            &self.nodes[node].children
+        }
+    }
+
+    fn find_child(&self, node: usize, blk: &[u16]) -> Option<usize> {
+        let h = block_hash(blk);
+        self.children_of(node)
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].hash == h && self.nodes[c].tokens == blk)
+    }
+
+    fn find_child_prefix(&self, node: usize, rem: &[u16]) -> Option<usize> {
+        self.children_of(node)
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].tokens.starts_with(rem))
+    }
+
+    /// Read-only admission probe: prompt tokens a [`lookup_prefix`]
+    /// would cover with *full* shared blocks (the token-budget
+    /// discount). `lookup_prefix` under the same pool lock adopts
+    /// exactly these.
+    ///
+    /// [`lookup_prefix`]: KvPool::lookup_prefix
+    pub fn probe_prefix(&self, prompt: &[u16]) -> usize {
+        let usable = prompt.len().saturating_sub(1);
+        let mut node = NO_NODE;
+        let mut m = 0;
+        while m + self.page <= usable {
+            match self.find_child(node, &prompt[m..m + self.page]) {
+                Some(c) => {
+                    node = c;
+                    m += self.page;
+                }
+                None => break,
+            }
+        }
+        m
+    }
+
+    /// Map the prompt's leading blocks onto resident tree pages:
+    /// refcount bump per adopted page, no copies. At most
+    /// `prompt.len() - 1` positions are adopted — the engine always
+    /// computes logits at the last prompt position. A trailing partial
+    /// block (fewer than `page` positions) is adopted copy-on-write.
+    pub fn lookup_prefix(&mut self, prompt: &[u16]) -> SeqKv {
+        let mut kv = SeqKv::new(self.n_layers);
+        let usable = prompt.len().saturating_sub(1);
+        let mut m = 0;
+        while m + self.page <= usable {
+            let Some(c) = self.find_child(kv.node, &prompt[m..m + self.page]) else {
+                break;
+            };
+            let t = self.tick();
+            self.nodes[c].last_used = t;
+            for l in 0..self.n_layers {
+                let pid = self.nodes[c].pages[l];
+                self.retain(pid);
+                kv.layers[l].pages.push(pid);
+            }
+            kv.node = c;
+            m += self.page;
+        }
+        for lk in &mut kv.layers {
+            lk.len = m;
+        }
+        kv.shared_toks = m;
+        kv.registered = m / self.page;
+        let mut hit = m;
+        let r = usable - m;
+        if r > 0 && r < self.page {
+            if let Some(c) = self.find_child_prefix(kv.node, &prompt[m..m + r]) {
+                let t = self.tick();
+                self.nodes[c].last_used = t;
+                for l in 0..self.n_layers {
+                    let pid = self.nodes[c].pages[l];
+                    self.retain(pid);
+                    kv.layers[l].pages.push(pid);
+                    kv.layers[l].len += r;
+                }
+                // kv.node stays at the last *full* match: the partial
+                // block is not a tree step, and the first append into
+                // it copy-on-writes a private page.
+                hit += r;
+            }
+        }
+        self.prefix_hit_toks += hit as u64;
+        kv
+    }
+
+    /// Register every newly completed block of this sequence into the
+    /// prefix tree. If an identical block chain already exists the
+    /// sequence adopts the tree's pages and frees its own (dedup);
+    /// otherwise the tree takes a reference on the sequence's page.
+    pub fn register_progress(&mut self, kv: &mut SeqKv, tokens: &[u16]) {
+        let full = kv.len() / self.page;
+        while kv.registered < full {
+            let b = kv.registered;
+            let blk = &tokens[b * self.page..(b + 1) * self.page];
+            if let Some(c) = self.find_child(kv.node, blk) {
+                if self.nodes[c].pages[0] != kv.layers[0].pages[b] {
+                    // identical block computed independently: converge
+                    // on the tree's copy, free ours
+                    for l in 0..self.n_layers {
+                        let theirs = self.nodes[c].pages[l];
+                        let ours = kv.layers[l].pages[b];
+                        self.retain(theirs);
+                        self.release(ours);
+                        kv.layers[l].pages[b] = theirs;
+                    }
+                }
+                let t = self.tick();
+                self.nodes[c].last_used = t;
+                kv.node = c;
+            } else {
+                let pages: Vec<usize> = (0..self.n_layers).map(|l| kv.layers[l].pages[b]).collect();
+                for &p in &pages {
+                    self.retain(p);
+                }
+                let node = Node {
+                    hash: block_hash(blk),
+                    tokens: blk.to_vec(),
+                    pages,
+                    children: Vec::new(),
+                    parent: kv.node,
+                    last_used: self.clock + 1,
+                    alive: true,
+                };
+                self.clock += 1;
+                let id = if let Some(slot) = self.free_nodes.pop() {
+                    self.nodes[slot] = node;
+                    slot
+                } else {
+                    self.nodes.push(node);
+                    self.nodes.len() - 1
+                };
+                if kv.node == NO_NODE {
+                    self.root_children.push(id);
+                } else {
+                    self.nodes[kv.node].children.push(id);
+                }
+                self.live_nodes += 1;
+                kv.node = id;
+            }
+            kv.registered += 1;
+        }
+    }
+
+    /// Evict LRU leaf blocks whose pages only the tree still holds
+    /// until pages-in-use fits under `page_cap`. Blocks referenced by
+    /// a live sequence always have refcount ≥ 2 and are never evicted,
+    /// so sequence cursors stay valid.
+    fn trim(&mut self) {
+        if self.page_cap == 0 {
+            return;
+        }
+        while self.pages_in_use() > self.page_cap {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| {
+                    n.alive
+                        && n.children.is_empty()
+                        && n.pages.iter().all(|&p| self.pages[p].rc == 1)
+                })
+                .min_by_key(|(_, n)| n.last_used)
+                .map(|(i, _)| i);
+            let Some(id) = victim else {
+                break;
+            };
+            let parent = self.nodes[id].parent;
+            let pages = std::mem::take(&mut self.nodes[id].pages);
+            for p in pages {
+                self.release(p);
+            }
+            self.nodes[id].alive = false;
+            self.nodes[id].children = Vec::new();
+            self.nodes[id].tokens = Vec::new();
+            let siblings = if parent == NO_NODE {
+                &mut self.root_children
+            } else {
+                &mut self.nodes[parent].children
+            };
+            if let Some(at) = siblings.iter().position(|&c| c == id) {
+                siblings.swap_remove(at);
+            }
+            self.free_nodes.push(id);
+            self.live_nodes -= 1;
+        }
+    }
+}
+
+/// Disjoint `&mut` to two pages (copy-on-write source and destination).
+fn twin(pages: &mut [Page], a: usize, b: usize) -> (&Page, &mut Page) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = pages.split_at_mut(b);
+        (&lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = pages.split_at_mut(a);
+        (&hi[0], &mut lo[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(pool: &mut KvPool, kv: &mut SeqKv, tokens: &[u16], from: usize) {
+        // stand-in for prefill: deterministic rows derived from the token
+        for pos in from..tokens.len() {
+            for l in 0..kv.layers.len() {
+                let base = tokens[pos] as f32 + l as f32 * 1000.0;
+                let k: Vec<f32> = (0..pool.width).map(|i| base + i as f32).collect();
+                let v: Vec<f32> = (0..pool.width).map(|i| -(base + i as f32)).collect();
+                let lk = &mut kv.layers[l];
+                pool.append(lk, &k, &v);
+            }
+        }
+        pool.register_progress(kv, tokens);
+    }
+
+    #[test]
+    fn append_row_roundtrip_across_pages() {
+        let mut pool = KvPool::new(4, 8, 1);
+        let mut kv = SeqKv::new(1);
+        let tokens: Vec<u16> = (0..11).collect();
+        fill(&mut pool, &mut kv, &tokens, 0);
+        assert_eq!(kv.len(), 11);
+        assert_eq!(kv.layers[0].pages.len(), 3); // ceil(11/4)
+        for pos in 0..11 {
+            let (k, v) = pool.row(&kv.layers[0], pos);
+            assert_eq!(k[3], tokens[pos] as f32 + 3.0);
+            assert_eq!(v[0], -(tokens[pos] as f32));
+        }
+        let mut seen = Vec::new();
+        pool.walk(&kv.layers[0], 7, |pos, k, _| {
+            assert_eq!(k[0], tokens[pos] as f32);
+            seen.push(pos);
+        });
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nbytes_is_page_granular_and_o1() {
+        let mut pool = KvPool::new(4, 8, 2);
+        assert_eq!(pool.nbytes(), 0);
+        let mut kv = SeqKv::new(2);
+        fill(&mut pool, &mut kv, &(0..5).collect::<Vec<u16>>(), 0);
+        // 5 positions -> 2 pages per layer x 2 layers
+        assert_eq!(pool.pages_in_use(), 4);
+        assert_eq!(pool.nbytes(), 4 * 2 * 4 * 8 * 4);
+        assert_eq!(pool.gauges().kv_pages, 4);
+    }
+
+    #[test]
+    fn free_list_recycles_pages() {
+        let mut pool = KvPool::new(4, 8, 1);
+        let mut peak = 0;
+        for round in 0..5 {
+            let mut kv = SeqKv::new(1);
+            // distinct tokens per round: nothing shared, tree grows only
+            // if blocks complete — use 3 positions (< page) so no
+            // registration keeps pages alive
+            let toks: Vec<u16> = (0..3).map(|t| t + round * 100).collect();
+            fill(&mut pool, &mut kv, &toks, 0);
+            peak = peak.max(pool.pages_in_use());
+            pool.free_seq(&mut kv);
+            assert_eq!(pool.pages_in_use(), 0);
+        }
+        // capacity plateaus: every round reuses round 0's single page
+        assert_eq!(peak, 1);
+        assert_eq!(pool.pages.len(), 1);
+    }
+
+    #[test]
+    fn lookup_adopts_full_blocks_and_counts_hits() {
+        let mut pool = KvPool::new(4, 8, 2);
+        let prompt: Vec<u16> = (0..9).collect(); // blocks [0..4), [4..8), tail 8
+        let mut a = SeqKv::new(2);
+        fill(&mut pool, &mut a, &prompt, 0);
+        let before = pool.pages_in_use();
+
+        let mut b = pool.lookup_prefix(&prompt);
+        // usable = 8 -> both full blocks adopted, nothing new allocated
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.shared_toks(), 8);
+        assert_eq!(pool.pages_in_use(), before);
+        assert_eq!(pool.gauges().prefix_hit_toks, 8);
+        // adopted rows read back identically
+        let (k_a, _) = pool.row(&a.layers[1], 5);
+        let k_a = k_a.to_vec();
+        let (k_b, _) = pool.row(&b.layers[1], 5);
+        assert_eq!(k_a, k_b.to_vec());
+
+        pool.free_seq(&mut b);
+        pool.free_seq(&mut a);
+        // tree still holds both registered blocks (1 page per layer each)
+        assert_eq!(pool.pages_in_use(), 2 * 2);
+    }
+
+    #[test]
+    fn partial_adoption_cows_on_divergence() {
+        let mut pool = KvPool::new(4, 8, 1);
+        let donor: Vec<u16> = vec![1, 2, 3, 4, 9];
+        let mut a = SeqKv::new(1);
+        fill(&mut pool, &mut a, &donor, 0);
+
+        // same first 3 tokens, diverges at position 3
+        let prompt: Vec<u16> = vec![1, 2, 3, 7];
+        let mut b = pool.lookup_prefix(&prompt);
+        assert_eq!(b.len(), 3, "partial block adopted");
+        assert_eq!(b.shared_toks(), 0, "partial rows are charged, not discounted");
+        let shared_page = b.layers[0].pages[0];
+        assert_eq!(shared_page, a.layers[0].pages[0]);
+
+        // first append diverges -> copy-on-write to a private page
+        let k: Vec<f32> = vec![7.0; 8];
+        let lk = &mut b.layers[0];
+        pool.append(lk, &k, &k);
+        assert_ne!(b.layers[0].pages[0], shared_page);
+        assert_eq!(pool.gauges().cow_copies, 1);
+        // donor rows untouched
+        let (dk, _) = pool.row(&a.layers[0], 3);
+        assert_eq!(dk[0], 4.0);
+        // our copied prefix + divergent row both read back
+        let (bk0, _) = pool.row(&b.layers[0], 0);
+        assert_eq!(bk0[0], 1.0);
+        let (bk3, _) = pool.row(&b.layers[0], 3);
+        assert_eq!(bk3[0], 7.0);
+    }
+
+    #[test]
+    fn register_dedups_identical_blocks() {
+        let mut pool = KvPool::new(4, 8, 1);
+        let tokens: Vec<u16> = (0..5).collect();
+        let mut a = SeqKv::new(1);
+        fill(&mut pool, &mut a, &tokens, 0);
+        // a fresh sequence computes the same block independently (as
+        // happens when two identical prompts prefill in one batch)
+        let mut b = SeqKv::new(1);
+        fill(&mut pool, &mut b, &tokens, 0);
+        // register converged b's full block onto a's page
+        assert_eq!(b.layers[0].pages[0], a.layers[0].pages[0]);
+        assert_eq!(pool.gauges().tree_blocks, 1);
+    }
+
+    #[test]
+    fn page_cap_evicts_lru_tree_leaves() {
+        let mut pool = KvPool::new(4, 8, 1);
+        for i in 0..4u16 {
+            let toks: Vec<u16> = (0..4).map(|t| t + i * 50).collect();
+            let mut kv = SeqKv::new(1);
+            fill(&mut pool, &mut kv, &toks, 0);
+            pool.free_seq(&mut kv);
+        }
+        assert_eq!(pool.gauges().tree_blocks, 4);
+        assert_eq!(pool.pages_in_use(), 4);
+        pool.set_page_cap(2);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.gauges().tree_blocks, 2);
+        // oldest blocks went first: the newest prefix still hits
+        let newest: Vec<u16> = (0..5).map(|t| t + 3 * 50).collect();
+        assert_eq!(pool.probe_prefix(&newest), 4);
+        let oldest: Vec<u16> = (0..5).collect();
+        assert_eq!(pool.probe_prefix(&oldest), 0);
+    }
+
+    #[test]
+    fn probe_matches_lookup_discount() {
+        let mut pool = KvPool::new(4, 8, 1);
+        let prompt: Vec<u16> = (0..13).collect();
+        let mut a = SeqKv::new(1);
+        fill(&mut pool, &mut a, &prompt, 0);
+        for len in [1usize, 4, 5, 8, 9, 12, 13] {
+            let p = &prompt[..len];
+            let probed = pool.probe_prefix(p);
+            let mut kv = pool.lookup_prefix(p);
+            assert_eq!(probed, kv.shared_toks(), "prompt len {len}");
+            assert!(probed <= len.saturating_sub(1));
+            pool.free_seq(&mut kv);
+        }
+    }
+}

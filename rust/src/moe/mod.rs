@@ -12,6 +12,7 @@ pub mod checkpoint;
 pub mod dispatch;
 pub mod expert;
 pub mod gating;
+pub mod kv;
 pub mod model;
 pub mod stats;
 

@@ -325,14 +325,14 @@ fn read_dense_base(r: &mut impl Read, cfg: &ModelConfig) -> Result<MoeModel> {
             .collect();
         blocks.push(crate::moe::model::Block {
             attn_norm,
-            attn: crate::moe::attention::Attention {
+            attn: crate::moe::attention::Attention::from_parts(
                 wq,
                 wk,
                 wv,
                 wo,
-                n_heads: cfg.n_heads,
-                rope_theta: cfg.rope_theta,
-            },
+                cfg.n_heads,
+                cfg.rope_theta,
+            ),
             moe_norm,
             gate,
             experts,

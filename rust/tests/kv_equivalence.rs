@@ -1,0 +1,201 @@
+//! Paged-KV acceptance tests — the equivalence contract of the
+//! chunked-prefill + prefix-sharing engine:
+//!
+//! * chunked prefill (any `--prefill-chunk`) is **token-identical** to
+//!   token-at-a-time prefill, and reaches the first decode in fewer
+//!   engine steps;
+//! * two requests sharing a prompt prefix produce outputs identical to
+//!   fully unshared runs, with `prefix_hit_toks > 0` and fewer total
+//!   engine steps (observed over the wire via `METRICS`);
+//! * a request diverging *inside* a shared block copy-on-writes: its
+//!   own output matches a cold run and the donor's pages are untouched;
+//! * the pool recycles freed pages through its free-list — capacity
+//!   plateaus across distinct sequential requests.
+
+use std::net::TcpListener;
+use std::sync::Mutex;
+
+use mcsharp::backend::NativeBackend;
+use mcsharp::config::{ModelConfig, ServingConfig};
+use mcsharp::coordinator::client::Client;
+use mcsharp::coordinator::engine::{DecodeEngine, EngineModel, SeqState};
+use mcsharp::coordinator::server;
+use mcsharp::moe::MoeModel;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kv-test".into(),
+        family: "mixtral".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        n_experts: 4,
+        top_k: 2,
+        n_shared_experts: 1,
+        max_seq_len: 128,
+        rope_theta: 10_000.0,
+        modalities: 1,
+        buckets: vec![4],
+    }
+}
+
+/// Chunked prefill must not change a single token: for every chunk
+/// size, generations match the token-at-a-time (`chunk = 1`) engine
+/// exactly — while the chunked engine reaches EOS in fewer steps.
+#[test]
+fn chunked_prefill_is_token_identical_to_token_at_a_time() {
+    let m = MoeModel::new(&tiny_cfg(), 700);
+    let be = NativeBackend::fp(&m);
+    let prompts: [Vec<u16>; 3] = [
+        (1..=20).collect(),            // long: many chunks
+        vec![1, 17, 30, 45, 2],        // short: one chunk
+        (1..=17).rev().collect(),      // page-misaligned length
+    ];
+    // reference: token-at-a-time prefill on a fresh engine per run
+    let mut want = Vec::new();
+    let mut serial_steps = 0u64;
+    for p in &prompts {
+        let mut eng =
+            DecodeEngine::new(EngineModel::Fp(&m), &be, None).with_prefill_chunk(1);
+        want.push(eng.generate(p, 6).unwrap());
+        serial_steps += eng.metrics.steps;
+    }
+    for chunk in [2usize, 3, 16] {
+        let mut chunked_steps = 0u64;
+        for (p, w) in prompts.iter().zip(&want) {
+            let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None)
+                .with_prefill_chunk(chunk);
+            let got = eng.generate(p, 6).unwrap();
+            assert_eq!(&got, w, "chunk={chunk} diverged on prompt {p:?}");
+            chunked_steps += eng.metrics.steps;
+        }
+        assert!(
+            chunked_steps < serial_steps,
+            "chunk={chunk} did not reduce steps: {chunked_steps} !< {serial_steps}"
+        );
+    }
+}
+
+/// Serving-path acceptance: request 2 shares request 1's prompt prefix.
+/// Over the wire, both must return exactly what cold (unshared) engines
+/// return, while `METRICS` shows `prefix_hit_toks > 0` and fewer total
+/// engine steps than two cold runs.
+#[test]
+fn shared_prefix_matches_unshared_with_fewer_steps_via_metrics() {
+    let m = MoeModel::new(&tiny_cfg(), 701);
+    let be = NativeBackend::fp(&m);
+    let system: Vec<u16> = (1..=9).collect(); // two full 4-blocks (usable 8)
+    let p1: Vec<u16> = system.iter().copied().chain([20, 21]).collect();
+    let p2: Vec<u16> = system.iter().copied().chain([40, 41]).collect();
+    // cold references: fresh pool per prompt, same page/chunk shape
+    let mut want = Vec::new();
+    let mut cold_steps = 0u64;
+    for p in [&p1, &p2] {
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None)
+            .with_kv_page(4)
+            .with_prefill_chunk(4);
+        want.push(eng.generate(p, 5).unwrap());
+        cold_steps += eng.metrics.steps;
+    }
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sc = ServingConfig { kv_page: 4, prefill_chunk: 4, ..Default::default() };
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let be = NativeBackend::fp(&m);
+            let engine = Mutex::new(
+                DecodeEngine::new(EngineModel::Fp(&m), &be, None)
+                    .with_kv_page(sc.kv_page)
+                    .with_prefill_chunk(sc.prefill_chunk),
+            );
+            server::serve_with(listener, &engine, &sc, Some(2)).unwrap();
+        });
+        let mut client = Client::connect(addr).unwrap();
+        // sequential: p1's blocks are in the tree before p2 is admitted
+        let g1 = client.gen(&p1, 5).unwrap();
+        let g2 = client.gen(&p2, 5).unwrap();
+        assert_eq!(g1.tokens, want[0], "warm-pool output diverged (request 1)");
+        assert_eq!(g2.tokens, want[1], "shared-prefix output diverged (request 2)");
+        let v = client.metrics_value().unwrap();
+        let hits = v.get("prefix_hit_toks").unwrap().as_f64().unwrap();
+        assert!(hits >= 8.0, "expected the 8-token system prefix adopted, got {hits}");
+        let steps = v.get("steps").unwrap().as_f64().unwrap() as u64;
+        assert!(
+            steps < cold_steps,
+            "prefix sharing did not save steps: {steps} !< {cold_steps}"
+        );
+        let pages = v.get("kv_pages").unwrap().as_f64().unwrap();
+        assert!(pages > 0.0, "kv gauges must ride METRICS");
+    });
+}
+
+/// Copy-on-write correctness: a prompt that diverges *inside* a shared
+/// block adopts the partial page, then CoWs on its first append — its
+/// generation matches a cold engine and the donor's cached prefix
+/// still replays token-identically afterwards.
+#[test]
+fn divergence_inside_shared_block_cows_and_preserves_donor() {
+    let m = MoeModel::new(&tiny_cfg(), 702);
+    let be = NativeBackend::fp(&m);
+    let p1: Vec<u16> = (1..=9).collect(); // blocks [1..4], [5..8], tail 9
+    // shares block 1 fully and rows (5, 6) of block 2, diverges at
+    // position 6 — the partial-adoption + CoW path
+    let p2: Vec<u16> = vec![1, 2, 3, 4, 5, 6, 50];
+    let cold = |p: &[u16]| {
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None)
+            .with_kv_page(4)
+            .with_prefill_chunk(4);
+        eng.generate(p, 5).unwrap()
+    };
+    let (want1, want2) = (cold(&p1), cold(&p2));
+    let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None)
+        .with_kv_page(4)
+        .with_prefill_chunk(4);
+    let pool = eng.kv_pool();
+    assert_eq!(eng.generate(&p1, 5).unwrap(), want1);
+    let got2 = eng.generate(&p2, 5).unwrap();
+    assert_eq!(got2, want2, "CoW run diverged from cold reference");
+    let g = pool.lock().unwrap().gauges();
+    // 4 full-block tokens + 2 partial rows adopted inside block 2
+    assert!(g.prefix_hit_toks >= 6, "partial rows must count as prefix hits");
+    assert!(g.cow_copies > 0, "divergent append inside a shared block must CoW");
+    // donor pages untouched: replaying p1 still adopts and still matches
+    assert_eq!(eng.generate(&p1, 5).unwrap(), want1, "donor prefix corrupted by CoW");
+}
+
+/// Free-list recycling at engine level: distinct sub-page prompts leave
+/// nothing in the tree, so pages in use returns to zero after each
+/// request and in-flight capacity plateaus — steady-state serving stops
+/// allocating. Also pins the O(1) byte accounting to page granularity.
+#[test]
+fn pool_capacity_plateaus_across_distinct_requests() {
+    let m = MoeModel::new(&tiny_cfg(), 703);
+    let be = NativeBackend::fp(&m);
+    // default 16-position pages: prompt(4) + generated(4) = 8 positions
+    // fit one page per layer and never complete a block
+    let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None);
+    let pool = eng.kv_pool();
+    let page_bytes = 2 * 16 * 32 * std::mem::size_of::<f32>() as u64;
+    let mut inflight = Vec::new();
+    for round in 0..3u16 {
+        let prompt: Vec<u16> = (0..4).map(|t| 1 + t + round * 13).collect();
+        let mut seq = SeqState::new(round as u64, prompt, 4, 2);
+        seq.attach_prefix(&mut pool.lock().unwrap());
+        while !seq.done() {
+            let mut batch = [&mut seq];
+            eng.step(&mut batch).unwrap();
+        }
+        let (in_use, bytes) = {
+            let p = pool.lock().unwrap();
+            (p.pages_in_use(), p.nbytes())
+        };
+        assert_eq!(in_use, 2, "one page per layer while live");
+        assert_eq!(bytes, in_use as u64 * page_bytes, "bytes = pages x page-bytes");
+        inflight.push(in_use);
+        pool.lock().unwrap().free_seq(&mut seq.kv);
+        assert_eq!(pool.lock().unwrap().pages_in_use(), 0, "round {round} leaked pages");
+    }
+    assert!(inflight.windows(2).all(|w| w[0] == w[1]), "capacity must plateau");
+}
