@@ -284,6 +284,100 @@ fn main() {
         std::fs::remove_file(&path).ok();
     }
 
+    // Sharded residency (EXPERIMENTS.md §Sharding): the same decode
+    // workload with the experts paged over the wire from two loopback
+    // shard servers. The remote row pays one batched FETCH per layer
+    // miss-set; the gauges quantify the wire traffic. Random-init model,
+    // so this section runs in the CI smoke gate, and its block rides the
+    // --json artifact.
+    println!("\n== expert store: remote decode (coordinator + 2 loopback shards, 50% budget) ==");
+    let sharding_row = {
+        let cfg = mcsharp::config::ModelConfig {
+            name: "perf-shard".into(),
+            family: "mixtral".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            n_experts: 8,
+            top_k: 2,
+            n_shared_experts: 0,
+            max_seq_len: 64,
+            rope_theta: 10_000.0,
+            modalities: 1,
+            buckets: vec![4],
+        };
+        let base = mcsharp::moe::MoeModel::new(&cfg, 0x5A4D);
+        let alloc = vec![vec![2u8; cfg.n_experts]; cfg.n_layers];
+        let qs = QuantModel::quantize(
+            &base,
+            &alloc,
+            &mcsharp::config::PmqConfig::default(),
+            &mcsharp::quant::qmodel::QuantMethod::Rtn,
+        );
+        let path = std::env::temp_dir()
+            .join(format!("mcsharp-perf-shard-{}.q2", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        mcsharp::quant::qcheckpoint::save(&qs, &path).unwrap();
+        let resident = mcsharp::quant::qcheckpoint::load(&path).unwrap();
+        let spawn_shard = |layers: std::ops::Range<usize>| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let source =
+                mcsharp::quant::qcheckpoint::ShardSource::open(&path, layers).unwrap();
+            std::thread::spawn(move || {
+                let _ = mcsharp::coordinator::server::serve_shard(listener, &source, None);
+            });
+            addr
+        };
+        let shards = vec![spawn_shard(0..1), spawn_shard(1..2)];
+        let budget_bytes = resident.store.total_nbytes() / 2;
+        let remote =
+            mcsharp::quant::qcheckpoint::load_remote(&path, &shards, budget_bytes, 2_000)
+                .unwrap();
+        let run = |q: &QuantModel, label: &str| {
+            let be = NativeBackend::quant(q);
+            let mut eng = DecodeEngine::new(EngineModel::Quant(q), &be, None);
+            let mut seqs: Vec<SeqState> =
+                (0..4).map(|i| SeqState::new(i, vec![1, 9, 17], 1_000_000, cfg.n_layers)).collect();
+            let st = time(budget, 2_000, || {
+                let mut batch: Vec<&mut SeqState> = seqs.iter_mut().collect();
+                eng.step(&mut batch).unwrap();
+            });
+            report(label, &st);
+            st
+        };
+        let st_res = run(&resident, "engine.step resident store (4 seqs)");
+        let st_rem = run(&remote, "engine.step remote @50%    (4 seqs)");
+        let r = remote.store.remote_stats().expect("remote store reports fetch stats");
+        println!(
+            "remote gauges: fetch_rpcs {} prefetch_rpcs {} fetched {} B fetch_p95 {} us shards {}/{}",
+            r.fetch_rpcs, r.prefetch_rpcs, r.fetched_bytes, r.fetch_p95_us, r.shards_up, r.shards_total
+        );
+        std::fs::remove_file(&path).ok();
+        let row_json = |st: &Stats| {
+            json::obj(vec![
+                ("mean_ns", json::num(st.mean_ns)),
+                ("p50_ns", json::num(st.p50_ns)),
+                ("p95_ns", json::num(st.p95_ns)),
+                ("iters", json::num(st.iters as f64)),
+            ])
+        };
+        json::obj(vec![
+            ("op", json::s("engine_step_4seq")),
+            ("shards", json::num(2.0)),
+            ("budget_frac", json::num(0.5)),
+            ("resident", row_json(&st_res)),
+            ("remote", row_json(&st_rem)),
+            ("remote_fetch_rpcs", json::num(r.fetch_rpcs as f64)),
+            ("remote_prefetch_rpcs", json::num(r.prefetch_rpcs as f64)),
+            ("remote_fetched_bytes", json::num(r.fetched_bytes as f64)),
+            ("remote_fetch_p95_us", json::num(r.fetch_p95_us as f64)),
+        ])
+    };
+
     // Serving-side acceptance rows for the serve path (EXPERIMENTS.md
     // §Serving), all driven through the first-class protocol-v1 Client:
     // (a) the same TCP server under 1 vs 8 concurrent clients (cross-
@@ -524,12 +618,13 @@ fn main() {
             ),
             ("rows", Value::Arr(kernel_rows.clone())),
             ("prefill", Value::Arr(prefill_rows.clone())),
+            ("sharding", sharding_row.clone()),
         ]);
         let path = mcsharp::config::repo_path("BENCH_perf_hotpath.json");
         std::fs::write(&path, doc.to_json()).expect("write BENCH json");
         println!("  wrote {path}");
     }
-    std::hint::black_box(&prefill_rows);
+    std::hint::black_box((&prefill_rows, &sharding_row));
 
     if smoke {
         println!("\n(--smoke: skipping pretrained-model and PJRT sections)");

@@ -166,6 +166,14 @@ pub struct ServingConfig {
     /// Pending prompt positions each sequence feeds through one engine
     /// step (`--prefill-chunk`); 1 = token-at-a-time prefill.
     pub prefill_chunk: usize,
+    /// Shard endpoints (`--shards host:port,..`): when non-empty the
+    /// coordinator serves experts from a `RemoteStore` paging records
+    /// over the wire instead of a local file-backed store.
+    pub shards: Vec<String>,
+    /// Per-RPC remote fetch deadline in ms (`--fetch-timeout-ms`). A
+    /// shard that misses it is marked down for the affected requests;
+    /// later fetches lazily reconnect.
+    pub fetch_timeout_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -179,6 +187,8 @@ impl Default for ServingConfig {
             max_queue: 0,
             kv_page: 16,
             prefill_chunk: 16,
+            shards: Vec::new(),
+            fetch_timeout_ms: 2_000,
         }
     }
 }

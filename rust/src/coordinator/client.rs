@@ -10,11 +10,14 @@
 //! together. [`Client::gen`] is the one-shot convenience (submit, then
 //! wait for that tag), [`Client::gen_stream`] surfaces `TOK` partials
 //! through a callback, and `BUSY` rejections are reported as
-//! [`ClientError::Busy`] so callers can implement backoff.
+//! [`ClientError::Busy`] so callers can implement backoff —
+//! [`Client::gen_with_retry`] is the built-in policy (jittered
+//! exponential backoff under a deadline budget).
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -132,6 +135,49 @@ impl Client {
         let tag = self.submit(prompt, max_new)?;
         let mut got = self.collect_tags(&[tag])?;
         Ok(got.remove(&tag).expect("collect_tags returned the tag"))
+    }
+
+    /// [`gen`](Self::gen) with jittered exponential backoff on `BUSY`
+    /// overload rejections, bounded by a total `deadline` budget.
+    ///
+    /// `BUSY` means the admission queue was full and nothing was queued,
+    /// so resubmitting is always safe. The wait before attempt *n* is a
+    /// uniform draw from `(backoff/2, backoff]` with `backoff` doubling
+    /// from 2 ms up to a 256 ms cap — the jitter decorrelates a thundering
+    /// herd of clients all seeing the same full queue. When the next wait
+    /// would overrun the deadline the last `Busy` error is returned;
+    /// every non-`Busy` outcome (success, `ERR`, transport failure)
+    /// passes straight through.
+    pub fn gen_with_retry(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        deadline: Duration,
+    ) -> Result<GenOutput> {
+        let started = Instant::now();
+        let mut backoff = Duration::from_millis(2);
+        // deterministic per-call jitter stream; distinct clients diverge
+        // via their tag counters
+        let mut rng = crate::util::rng::Rng::new(0xB0FF_u64 ^ (self.next_tag << 17));
+        loop {
+            match self.gen(prompt, max_new) {
+                Err(e)
+                    if matches!(
+                        e.downcast_ref::<ClientError>(),
+                        Some(ClientError::Busy { .. })
+                    ) =>
+                {
+                    let frac = 0.5 + 0.5 * rng.f64(); // (0.5, 1.0]
+                    let wait = backoff.mul_f64(frac);
+                    if started.elapsed() + wait > deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(wait);
+                    backoff = (backoff * 2).min(Duration::from_millis(256));
+                }
+                other => return other,
+            }
+        }
     }
 
     /// Pipeline every request on this one connection — all submitted

@@ -65,6 +65,15 @@ impl EngineModel<'_> {
             EngineModel::Quant(q) => Some(q.store.counters()),
         }
     }
+
+    /// Remote-fetch gauges when the experts page in over the wire
+    /// (`RemoteStore`); `None` for resident/paged local stores.
+    pub fn remote_stats(&self) -> Option<crate::quant::RemoteFetchStats> {
+        match self {
+            EngineModel::Fp(_) => None,
+            EngineModel::Quant(q) => q.store.remote_stats(),
+        }
+    }
 }
 
 /// [`DispatchExecutor`] over the engine's [`ExpertBackend`] — the
@@ -352,6 +361,7 @@ impl<'a> DecodeEngine<'a> {
         self.metrics.steps += 1;
         // refresh the expert-cache + KV gauges (both O(1) reads)
         self.metrics.cache = self.em.cache_counters();
+        self.metrics.remote = self.em.remote_stats();
         self.metrics.kv = pool.gauges();
         Ok(())
     }

@@ -6,7 +6,7 @@
 use std::time::Instant;
 
 use crate::moe::kv::KvGauges;
-use crate::quant::store::CacheCounters;
+use crate::quant::store::{CacheCounters, RemoteFetchStats};
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -32,6 +32,9 @@ pub struct Metrics {
     /// Expert-cache gauges, refreshed from the store each engine step
     /// (`None` when the model does not serve from a store, i.e. fp).
     pub cache: Option<CacheCounters>,
+    /// Remote-fetch gauges, refreshed each engine step when experts
+    /// page in over the wire (`None` for local stores and fp models).
+    pub remote: Option<RemoteFetchStats>,
     /// Paged-KV gauges (pages/bytes in use, prefix hits, CoW copies),
     /// refreshed from the pool each engine step — O(1) reads.
     pub kv: KvGauges,
@@ -127,6 +130,7 @@ impl Metrics {
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::{num, obj};
         let c = self.cache.unwrap_or_default();
+        let r = self.remote.unwrap_or_default();
         let lat = self.latency_percentiles_us(&[0.5, 0.95, 0.99]);
         let queue = self.queue_percentiles_us(&[0.5, 0.95]);
         obj(vec![
@@ -151,6 +155,12 @@ impl Metrics {
             ("cache_evictions", num(c.evictions as f64)),
             ("cache_prefetch_hits", num(c.prefetch_hits as f64)),
             ("cache_hit_rate", num(c.hit_rate())),
+            ("remote_fetch_rpcs", num(r.fetch_rpcs as f64)),
+            ("remote_prefetch_rpcs", num(r.prefetch_rpcs as f64)),
+            ("remote_fetched_bytes", num(r.fetched_bytes as f64)),
+            ("remote_fetch_p95_us", num(r.fetch_p95_us as f64)),
+            ("shards_up", num(r.shards_up as f64)),
+            ("shards_total", num(r.shards_total as f64)),
             ("kv_pages", num(self.kv.kv_pages as f64)),
             ("kv_bytes", num(self.kv.kv_bytes as f64)),
             ("prefix_hit_toks", num(self.kv.prefix_hit_toks as f64)),

@@ -24,7 +24,23 @@
 //! GEN <max_new> <t0,t1,...>   → OK <t0,t1,...>   |   ERR <msg>
 //! ```
 //!
-//! Control lines are shared by both dialects: `PING` → `PONG`,
+//! **Shard traffic** rides the same tagged grammar (and the same
+//! parser): a coordinator's `RemoteStore` pages expert records from
+//! `mcsharp shard` servers with batched fetches —
+//!
+//! ```text
+//! FETCH id=<u64> layer=<l> experts=<e0,e1,...>
+//!   → REC id=<id> layer=<l> expert=<e> len=<n>   then <n> raw payload bytes,
+//!     one frame per requested expert, in request order   (terminal after the last)
+//!   → ERR id=<id> msg=<text>                     (terminal, sent before any REC)
+//! ```
+//!
+//! A shard validates the whole request before streaming, so a `FETCH`
+//! yields either exactly `experts.len()` `REC` frames or one `ERR`; the
+//! payload bytes ride *outside* the line discipline (the client reads
+//! `len` raw bytes after each `REC` line before returning to lines).
+//!
+//! Control lines are shared by all dialects: `PING` → `PONG`,
 //! `STATS` → one `STATS k=v ...` line, `METRICS` → `METRICS {json}`,
 //! `QUIT` → server closes the connection. Responses to a v1 request are
 //! always tagged; responses to v0 requests and control lines never are.
@@ -78,10 +94,21 @@ impl WireGen {
     }
 }
 
+/// One parsed batched expert-record fetch (shard traffic). Always
+/// tagged — there is no v0 shard dialect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireFetch {
+    pub tag: u64,
+    pub layer: usize,
+    /// Requested expert indices; `REC` frames come back in this order.
+    pub experts: Vec<usize>,
+}
+
 /// One parsed protocol line.
 #[derive(Debug)]
 pub enum Command {
     Gen(WireGen),
+    Fetch(WireFetch),
     Ping,
     Stats,
     Metrics,
@@ -115,6 +142,10 @@ pub fn parse_command(line: &str) -> Result<Command> {
             } else {
                 parse_gen_v0(rest).map(Command::Gen)
             }
+        }
+        Some("FETCH") => {
+            let rest = parts.next().ok_or_else(|| anyhow!("FETCH missing arguments"))?;
+            parse_fetch(rest).map(Command::Fetch)
         }
         Some(cmd) => bail!("unknown command {cmd:?}"),
         // splitn on a non-empty string always yields a first part, and
@@ -196,14 +227,44 @@ fn parse_gen_v1(rest: &str) -> Result<WireGen> {
     })
 }
 
+/// Tagged form: `id=<u64> layer=<l> experts=<e0,e1,...>`, keys in any
+/// order, each at most once.
+fn parse_fetch(rest: &str) -> Result<WireFetch> {
+    let (mut tag, mut layer, mut experts) = (None, None, None);
+    for word in rest.split(' ').filter(|w| !w.is_empty()) {
+        let (key, val) = word
+            .split_once('=')
+            .ok_or_else(|| anyhow!("FETCH expected key=value, got {word:?}"))?;
+        let duplicate = match key {
+            "id" => tag
+                .replace(val.parse::<u64>().map_err(|e| anyhow!("id={val:?}: {e}"))?)
+                .is_some(),
+            "layer" => layer
+                .replace(val.parse::<usize>().map_err(|e| anyhow!("layer={val:?}: {e}"))?)
+                .is_some(),
+            "experts" => experts.replace(parse_index_csv(val)?).is_some(),
+            _ => bail!("unknown FETCH key {key:?}"),
+        };
+        if duplicate {
+            bail!("duplicate FETCH key {key:?}");
+        }
+    }
+    Ok(WireFetch {
+        tag: tag.ok_or_else(|| anyhow!("FETCH missing id="))?,
+        layer: layer.ok_or_else(|| anyhow!("FETCH missing layer="))?,
+        experts: experts.ok_or_else(|| anyhow!("FETCH missing experts="))?,
+    })
+}
+
 /// Best-effort tag recovery for a line that failed [`parse_command`]:
-/// if it is a `GEN` line carrying a parseable `id=<u64>`, return that
-/// tag so the `ERR` response can stay attributable — a pipelined client
-/// must be able to mark the tag terminal instead of waiting forever.
-/// Control lines and v0 `GEN`s never carry tags, so `None` is correct
-/// for them.
+/// if it is a `GEN` or `FETCH` line carrying a parseable `id=<u64>`,
+/// return that tag so the `ERR` response can stay attributable — a
+/// pipelined client must be able to mark the tag terminal instead of
+/// waiting forever. Control lines and v0 `GEN`s never carry tags, so
+/// `None` is correct for them.
 pub fn salvage_tag(line: &str) -> Option<u64> {
-    let rest = line.trim().strip_prefix("GEN ")?;
+    let line = line.trim();
+    let rest = line.strip_prefix("GEN ").or_else(|| line.strip_prefix("FETCH "))?;
     rest.split(' ')
         .find_map(|w| w.strip_prefix("id="))
         .and_then(|v| v.parse().ok())
@@ -215,6 +276,16 @@ fn parse_toks(csv: &str) -> Result<Vec<u16>> {
     }
     csv.split(',')
         .map(|t| t.trim().parse::<u16>().map_err(|e| anyhow!("token {t:?}: {e}")))
+        .collect()
+}
+
+/// Comma-separated expert indices (`experts=` values).
+fn parse_index_csv(csv: &str) -> Result<Vec<usize>> {
+    if csv.trim().is_empty() {
+        bail!("empty expert list");
+    }
+    csv.split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|e| anyhow!("expert {t:?}: {e}")))
         .collect()
 }
 
@@ -330,6 +401,20 @@ pub fn format_busy(tag: u64) -> String {
     format!("BUSY id={tag}\n")
 }
 
+/// Format a batched fetch request line — the coordinator side of
+/// [`parse_fetch`], kept with the parser so the shard grammar cannot
+/// drift (the `RemoteStore` writes exactly this).
+pub fn format_fetch(tag: u64, layer: usize, experts: &[usize]) -> String {
+    let list: Vec<String> = experts.iter().map(|e| e.to_string()).collect();
+    format!("FETCH id={tag} layer={layer} experts={}\n", list.join(","))
+}
+
+/// One expert-record frame header; `len` raw payload bytes follow the
+/// newline.
+pub fn format_rec(tag: u64, layer: usize, expert: usize, len: usize) -> String {
+    format!("REC id={tag} layer={layer} expert={expert} len={len}\n")
+}
+
 // ---- response parsing (client side) ----
 
 /// One parsed response line.
@@ -344,6 +429,9 @@ pub enum Response {
     Busy { tag: u64 },
     /// Terminal error (tagged when the request parsed far enough).
     Err { tag: Option<u64>, msg: String },
+    /// One expert-record frame header (shard traffic); the reader must
+    /// consume `len` raw payload bytes before the next line.
+    Rec { tag: u64, layer: usize, expert: usize, len: usize },
     Pong,
     /// Raw `STATS` payload (`k=v` fields).
     Stats(String),
@@ -371,6 +459,17 @@ pub fn parse_response(line: &str) -> Result<Response> {
     }
     if let Some(rest) = line.strip_prefix("BUSY ") {
         return Ok(Response::Busy { tag: parse_kv(rest, "id")?.parse()? });
+    }
+    if let Some(rest) = line.strip_prefix("REC ") {
+        let mut w = rest.split(' ').filter(|w| !w.is_empty());
+        let tag = parse_kv(w.next().unwrap_or(""), "id")?.parse()?;
+        let layer =
+            parse_kv(w.next().ok_or_else(|| anyhow!("REC missing layer="))?, "layer")?.parse()?;
+        let expert = parse_kv(w.next().ok_or_else(|| anyhow!("REC missing expert="))?, "expert")?
+            .parse()?;
+        let len =
+            parse_kv(w.next().ok_or_else(|| anyhow!("REC missing len="))?, "len")?.parse()?;
+        return Ok(Response::Rec { tag, layer, expert, len });
     }
     if let Some(rest) = line.strip_prefix("TOK ") {
         let mut w = rest.splitn(2, ' ');
@@ -502,6 +601,50 @@ mod tests {
         assert_eq!(salvage_tag("GEN 8 1,2"), None); // v0: never tagged
         assert_eq!(salvage_tag("BOGUS id=3"), None); // not a GEN line
         assert_eq!(salvage_tag("STATS"), None);
+        assert_eq!(salvage_tag("FETCH id=6 layer=99 experts=1,,2"), Some(6));
+        assert_eq!(salvage_tag("FETCH layer=0 experts=1"), None);
+    }
+
+    /// Shard grammar: FETCH round-trips through the same parse_command
+    /// entry point GEN uses, and REC headers round-trip through
+    /// parse_response.
+    #[test]
+    fn fetch_and_rec_round_trip() {
+        let line = format_fetch(7, 3, &[0, 4, 11]);
+        let Command::Fetch(f) = parse_command(&line).unwrap() else { panic!("not a FETCH") };
+        assert_eq!(f, WireFetch { tag: 7, layer: 3, experts: vec![0, 4, 11] });
+        // key order freedom, repeated spaces
+        let Command::Fetch(f) = parse_command("FETCH  experts=2  id=1  layer=0").unwrap()
+        else {
+            panic!("not a FETCH")
+        };
+        assert_eq!(f, WireFetch { tag: 1, layer: 0, experts: vec![2] });
+        assert_eq!(
+            parse_response(&format_rec(7, 3, 11, 4096)).unwrap(),
+            Response::Rec { tag: 7, layer: 3, expert: 11, len: 4096 }
+        );
+    }
+
+    /// Malformed FETCH rows — clean parse errors, never panics.
+    #[test]
+    fn malformed_fetch_lines_are_errors() {
+        let bad = [
+            "FETCH",
+            "FETCH 1 2",                       // no v0 shard dialect
+            "FETCH id=1",                      // missing layer/experts
+            "FETCH id=1 layer=0",              // missing experts
+            "FETCH layer=0 experts=1",         // missing id
+            "FETCH id=x layer=0 experts=1",    // bad tag
+            "FETCH id=1 layer=0 experts=",     // empty expert list
+            "FETCH id=1 layer=0 experts=1,,2", // gap in the list
+            "FETCH id=1 layer=0 experts=-1",   // negative index
+            "FETCH id=1 layer=0 experts=1 experts=2", // duplicate key
+            "FETCH id=1 layer=0 experts=1 bogus=1",   // unknown key
+        ];
+        for line in bad {
+            assert!(parse_command(line).is_err(), "{line:?} must not parse");
+        }
+        assert!(parse_response("REC id=1 layer=0 expert=2").is_err(), "REC missing len=");
     }
 
     /// The client's formatter and the server's parser live in this one

@@ -225,6 +225,30 @@ impl Scheduler {
                         }
                         (streamed, Batcher::retire(&mut active, &mut eng.metrics, &pool))
                     }
+                    // a shard became unreachable mid-step: degrade, don't
+                    // die. The sequences in this step get a terminal ERR
+                    // (their routed experts are unfetchable right now) and
+                    // their KV is released; the loop keeps serving — later
+                    // requests route normally once the shard heals, since
+                    // remote fetches lazily reconnect.
+                    Err(e) if crate::quant::remote::is_fetch_unavailable(&e) => {
+                        // refresh the remote gauges now (the failed step
+                        // never reached its end-of-step refresh), so
+                        // STATS/METRICS report the outage immediately
+                        eng.metrics.remote = eng.em.remote_stats();
+                        drop(eng);
+                        let failed: Vec<ActiveSeq> = active.drain(..).collect();
+                        let msg = format!("expert fetch failed: {e:#}");
+                        let mut inner = self.inner.lock().unwrap();
+                        for mut a in failed {
+                            pool.lock().unwrap().free_seq(&mut a.seq.kv);
+                            let id = a.seq.id;
+                            if let Some(mut route) = inner.responders.remove(&id) {
+                                (route.sink)(SeqEvent::Failed { id, msg: msg.clone() });
+                            }
+                        }
+                        (Vec::new(), Vec::new())
+                    }
                     Err(e) => {
                         eng.metrics.finish(); // close the lifetime window
                         drop(eng);

@@ -17,6 +17,13 @@
 //! QUIT\n                                  →  (server closes this connection)
 //! ```
 //!
+//! A second front-end, [`serve_shard`], speaks the shard dialect of the
+//! same grammar: it answers `FETCH id=.. layer=.. experts=..` with the
+//! requested expert records (`REC` line + raw payload each, request
+//! order) straight off a quantized checkpoint's mmap'd seek index — the
+//! storage half of multi-node expert sharding. The coordinator's
+//! `RemoteStore` is the client side.
+//!
 //! Concurrency model: the accept loop spawns a **reader/writer pair**
 //! per connection. The reader parses lines and submits `GEN` requests to
 //! the single shared [`Scheduler`](crate::coordinator::scheduler::Scheduler)
@@ -246,6 +253,13 @@ fn read_loop(
             }
             Ok(Command::Quit) => return Ok(()),
             Ok(Command::Gen(wire)) => submit_gen(wire, sched, next_id, otx)?,
+            // FETCH is the shard dialect; a coordinator answers it with a
+            // tagged ERR (and no REC frames) so a misdirected RemoteStore
+            // fails fast instead of deadlocking on a missing record
+            Ok(Command::Fetch(wf)) => {
+                let msg = protocol::format_err(Some(wf.tag), "coordinator does not serve FETCH");
+                send(otx, ConnOut::Line(msg))?;
+            }
             // keep the ERR attributable when the bad line carried a
             // parseable id= (a pipelined client needs the tag to mark it
             // terminal); otherwise the untagged ERR both dialects get
@@ -307,10 +321,11 @@ fn submit_gen(
 fn stats_line(eng: &DecodeEngine) -> String {
     let m = &eng.metrics;
     let cache = m.cache.unwrap_or_default();
+    let remote = m.remote.unwrap_or_default();
     let lat = m.latency_percentiles_us(&[0.5, 0.95]);
     let queue = m.queue_percentiles_us(&[0.5, 0.95]);
     format!(
-        "STATS tokens_out={} tokens_in={} steps={} tps={:.3} pruning={:.3} lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={} kv_pages={} kv_bytes={} prefix_hit_toks={} kv_cow_copies={}\n",
+        "STATS tokens_out={} tokens_in={} steps={} tps={:.3} pruning={:.3} lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={} cache_resident={} cache_hits={} cache_misses={} cache_evictions={} cache_prefetch_hits={} kv_pages={} kv_bytes={} prefix_hit_toks={} kv_cow_copies={} remote_fetch_rpcs={} remote_prefetch_rpcs={} remote_fetched_bytes={} remote_fetch_p95_us={} shards_up={} shards_total={}\n",
         m.tokens_out,
         m.tokens_in,
         m.steps,
@@ -329,7 +344,172 @@ fn stats_line(eng: &DecodeEngine) -> String {
         m.kv.kv_bytes,
         m.kv.prefix_hit_toks,
         m.kv.cow_copies,
+        remote.fetch_rpcs,
+        remote.prefetch_rpcs,
+        remote.fetched_bytes,
+        remote.fetch_p95_us,
+        remote.shards_up,
+        remote.shards_total,
     )
+}
+
+/// Serve expert records off a sharded quantized checkpoint until
+/// `max_requests` `FETCH`es have been answered (None = forever).
+///
+/// This is the storage node of multi-node expert sharding (`mcsharp
+/// shard`). Each connection is one blocking read→respond loop — the
+/// shard dialect is strictly request/response per FETCH, and the
+/// coordinator's pipelining (a second FETCH written before the first's
+/// records are read) rides the kernel socket buffer, so no writer
+/// demux thread is needed. `STATS` answers with `kind=shard
+/// layers=a..b ..`; the `layers=` token is how a coordinator discovers
+/// the shard's residency at connect time.
+pub fn serve_shard(
+    listener: TcpListener,
+    source: &crate::quant::qcheckpoint::ShardSource,
+    max_requests: Option<usize>,
+) -> Result<usize> {
+    let answered = AtomicUsize::new(0);
+    let live_conns = AtomicUsize::new(0);
+    listener.set_nonblocking(true)?;
+    let result: Result<()> = std::thread::scope(|s| {
+        let mut poll = POLL;
+        let accept_result = loop {
+            if let Some(m) = max_requests {
+                if answered.load(Ordering::Acquire) >= m {
+                    break Ok(());
+                }
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    poll = POLL;
+                    live_conns.fetch_add(1, Ordering::AcqRel);
+                    let (answered, live) = (&answered, &live_conns);
+                    s.spawn(move || {
+                        // connection-level IO errors end that connection
+                        // only; the shard keeps serving
+                        let _ = handle_shard_conn(stream, source, answered);
+                        live.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(poll);
+                    poll = (poll * 2).min(POLL_MAX);
+                }
+                Err(e) => break Err(anyhow::Error::from(e)),
+            }
+        };
+        while live_conns.load(Ordering::Acquire) > 0 {
+            std::thread::sleep(POLL);
+        }
+        accept_result
+    });
+    result?;
+    Ok(answered.into_inner())
+}
+
+fn handle_shard_conn(
+    stream: TcpStream,
+    source: &crate::quant::qcheckpoint::ShardSource,
+    answered: &AtomicUsize,
+) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = std::io::BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        match protocol::read_command_line(&mut reader, &mut line, protocol::MAX_LINE_BYTES)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::Oversized => {
+                let msg = format!("line exceeds {} bytes", protocol::MAX_LINE_BYTES);
+                out.write_all(protocol::format_err(None, &msg).as_bytes())?;
+                out.flush()?;
+                continue;
+            }
+            LineRead::Line => {}
+        }
+        match protocol::parse_command(&line) {
+            Ok(Command::Empty) => {}
+            Ok(Command::Ping) => {
+                out.write_all(b"PONG\n")?;
+                out.flush()?;
+            }
+            Ok(Command::Stats) => {
+                let l = source.layers();
+                let msg = format!(
+                    "STATS kind=shard layers={}..{} n_experts={} fetches={}\n",
+                    l.start,
+                    l.end,
+                    source.n_experts(),
+                    answered.load(Ordering::Acquire),
+                );
+                out.write_all(msg.as_bytes())?;
+                out.flush()?;
+            }
+            Ok(Command::Metrics) => {
+                let l = source.layers();
+                let msg = format!(
+                    "METRICS {{\"kind\":\"shard\",\"layer_start\":{},\"layer_end\":{},\"n_experts\":{},\"fetches\":{}}}\n",
+                    l.start,
+                    l.end,
+                    source.n_experts(),
+                    answered.load(Ordering::Acquire),
+                );
+                out.write_all(msg.as_bytes())?;
+                out.flush()?;
+            }
+            Ok(Command::Quit) => return Ok(()),
+            Ok(Command::Gen(wire)) => {
+                let msg = protocol::format_err(wire.tag, "shard serves FETCH only");
+                out.write_all(msg.as_bytes())?;
+                out.flush()?;
+            }
+            Ok(Command::Fetch(wf)) => {
+                serve_fetch(&wf, source, &mut out)?;
+                answered.fetch_add(1, Ordering::AcqRel);
+            }
+            Err(e) => {
+                let tag = protocol::salvage_tag(&line);
+                out.write_all(protocol::format_err(tag, &e.to_string()).as_bytes())?;
+                out.flush()?;
+            }
+        }
+    }
+}
+
+/// Answer one `FETCH`: the response is either exactly
+/// `experts.len()` `REC` frames in request order, or one `ERR` before
+/// any `REC` — never a prefix. The whole request validates against the
+/// seek index up front so a bad expert id cannot leave the client
+/// mid-stream.
+fn serve_fetch(
+    wf: &protocol::WireFetch,
+    source: &crate::quant::qcheckpoint::ShardSource,
+    out: &mut impl Write,
+) -> Result<()> {
+    let mut spans = Vec::with_capacity(wf.experts.len());
+    let mut bad = None;
+    for &e in &wf.experts {
+        match source.record_span(wf.layer, e) {
+            Ok(s) => spans.push(s),
+            Err(er) => {
+                bad = Some(er);
+                break;
+            }
+        }
+    }
+    if let Some(e) = bad {
+        out.write_all(protocol::format_err(Some(wf.tag), &format!("{e:#}")).as_bytes())?;
+        out.flush()?;
+        return Ok(());
+    }
+    for (&e, span) in wf.experts.iter().zip(&spans) {
+        out.write_all(protocol::format_rec(wf.tag, wf.layer, e, span.len()).as_bytes())?;
+        out.write_all(span)?;
+    }
+    out.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]

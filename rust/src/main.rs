@@ -16,13 +16,20 @@
 //!                                                         overflow answered BUSY immediately
 //!                   [--kv-page P] [--prefill-chunk C]     paged-KV / prefix-sharing block size
 //!                                                         and prompt positions per engine step
+//!                   [--shards host:port,..]               page experts from shard servers over
+//!                                                         the wire (needs --qckpt for the dense
+//!                                                         base + seek index)
+//!                   [--fetch-timeout-ms T]                per-RPC remote fetch deadline
+//! mcsharp shard     --qckpt q.bin --layers a..b           serve expert records for layers
+//!                   [--port 7177] [--max-requests N]      [a, b) off the checkpoint's mmap'd
+//!                                                         seek index (FETCH/REC dialect)
 //! mcsharp info      --model mix-tiny                      model zoo facts
 //! ```
 //!
 //! Subcommands compose the library exactly the way the examples do; see
 //! `examples/` for richer end-to-end drivers.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use mcsharp::backend::{NativeBackend, PjrtBackend};
 use mcsharp::config::{ModelConfig, OtpConfig, PmqConfig, ServingConfig, MODEL_ZOO};
@@ -43,6 +50,7 @@ const FLAGS: &[&str] = &[
     "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
     "calib-seqs", "lambda", "out", "qckpt", "expert-cache-mb", "max-batch",
     "token-budget", "workers", "batch-window-us", "max-queue", "kv-page", "prefill-chunk",
+    "shards", "layers", "fetch-timeout-ms",
 ];
 
 fn main() -> Result<()> {
@@ -52,9 +60,10 @@ fn main() -> Result<()> {
         Some("compress") => cmd_compress(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: mcsharp <train|compress|eval|serve|info> [--model NAME] ...");
+            eprintln!("usage: mcsharp <train|compress|eval|serve|shard|info> [--model NAME] ...");
             eprintln!("models: {}", MODEL_ZOO.join(", "));
             Ok(())
         }
@@ -183,37 +192,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue: args.usize_or("max-queue", defaults.max_queue)?,
         kv_page: args.usize_or("kv-page", defaults.kv_page)?.max(1),
         prefill_chunk: args.usize_or("prefill-chunk", defaults.prefill_chunk)?.max(1),
+        shards: args
+            .get("shards")
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default(),
+        fetch_timeout_ms: args
+            .usize_or("fetch-timeout-ms", defaults.fetch_timeout_ms as usize)?
+            as u64,
     };
     // `--qckpt path` serves straight from a pre-compressed checkpoint —
     // the paper's pre-loading deployment story (no calibration at boot).
     // With `--expert-cache-mb N` the experts page in lazily under an
-    // N-MiB residency budget instead of preloading into RAM.
-    let q = match (args.get("qckpt"), sc.expert_cache_bytes()) {
-        (Some(path), Some(budget)) => {
-            println!("opening quantized checkpoint {path} (paged, {budget} B expert budget)");
-            mcsharp::quant::qcheckpoint::load_paged(path, budget)?
+    // N-MiB residency budget instead of preloading into RAM. With
+    // `--shards host:port,..` the experts live on shard servers and page
+    // in over the wire (the coordinator keeps only the dense base plus
+    // the cache budget resident).
+    let q = if !sc.shards.is_empty() {
+        let path = args
+            .get("qckpt")
+            .ok_or_else(|| anyhow!("--shards requires --qckpt (dense base + seek index)"))?;
+        let budget = sc.expert_cache_bytes().unwrap_or(u64::MAX);
+        println!(
+            "opening {path} with remote experts from {} shard(s): {}",
+            sc.shards.len(),
+            sc.shards.join(", ")
+        );
+        mcsharp::quant::qcheckpoint::load_remote(path, &sc.shards, budget, sc.fetch_timeout_ms)?
+    } else {
+        match (args.get("qckpt"), sc.expert_cache_bytes()) {
+            (Some(path), Some(budget)) => {
+                println!("opening quantized checkpoint {path} (paged, {budget} B expert budget)");
+                mcsharp::quant::qcheckpoint::load_paged(path, budget)?
+            }
+            (Some(path), None) => {
+                println!("loading quantized checkpoint {path}");
+                mcsharp::quant::qcheckpoint::load(path)?
+            }
+            (None, Some(budget)) => {
+                // no checkpoint to page from: compress, spill the v2 file,
+                // reopen it paged so the budget is enforced for real
+                let q = compress(model, bits, steps)?.1;
+                let spill = std::env::temp_dir()
+                    .join(format!("mcsharp-serve-{model}-{}.q2", std::process::id()))
+                    .to_string_lossy()
+                    .into_owned();
+                mcsharp::quant::qcheckpoint::save(&q, &spill)?;
+                println!("spilled packed experts to {spill} ({budget} B expert budget)");
+                let paged = mcsharp::quant::qcheckpoint::load_paged(&spill, budget)?;
+                // unlink now: the paged store's mmap keeps the records
+                // readable, and nothing leaks when the server exits
+                std::fs::remove_file(&spill).ok();
+                paged
+            }
+            (None, None) => compress(model, bits, steps)?.1,
         }
-        (Some(path), None) => {
-            println!("loading quantized checkpoint {path}");
-            mcsharp::quant::qcheckpoint::load(path)?
-        }
-        (None, Some(budget)) => {
-            // no checkpoint to page from: compress, spill the v2 file,
-            // reopen it paged so the budget is enforced for real
-            let q = compress(model, bits, steps)?.1;
-            let spill = std::env::temp_dir()
-                .join(format!("mcsharp-serve-{model}-{}.q2", std::process::id()))
-                .to_string_lossy()
-                .into_owned();
-            mcsharp::quant::qcheckpoint::save(&q, &spill)?;
-            println!("spilled packed experts to {spill} ({budget} B expert budget)");
-            let paged = mcsharp::quant::qcheckpoint::load_paged(&spill, budget)?;
-            // unlink now: the paged store's open descriptor keeps the
-            // records readable, and nothing leaks when the server exits
-            std::fs::remove_file(&spill).ok();
-            paged
-        }
-        (None, None) => compress(model, bits, steps)?.1,
     };
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     println!(
@@ -277,6 +314,36 @@ fn report_served(eng: &DecodeEngine, n: usize, backend: &str) {
     } else {
         println!("served {n} requests ({backend} backend)");
     }
+}
+
+/// `mcsharp shard` — the storage node of multi-node expert sharding:
+/// serve the expert records of layers `[a, b)` straight off a v2
+/// quantized checkpoint's mmap'd seek index. The dense base never loads
+/// here; the shard's footprint is the header + index, O(1) in experts.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let path =
+        args.get("qckpt").ok_or_else(|| anyhow!("shard requires --qckpt <file> (v2)"))?;
+    let spec = args
+        .get("layers")
+        .ok_or_else(|| anyhow!("shard requires --layers a..b (half-open)"))?;
+    let (a, b) = spec
+        .split_once("..")
+        .ok_or_else(|| anyhow!("--layers wants a..b, got {spec:?}"))?;
+    let layers = a.trim().parse::<usize>()?..b.trim().parse::<usize>()?;
+    let port = args.usize_or("port", 7177)?;
+    let max_requests = args.usize_or("max-requests", 0)?;
+    let source = mcsharp::quant::qcheckpoint::ShardSource::open(path, layers.clone())?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    println!(
+        "shard serving {path} layers {}..{} ({} experts/layer) on 127.0.0.1:{port}",
+        layers.start,
+        layers.end,
+        source.n_experts()
+    );
+    let max = if max_requests == 0 { None } else { Some(max_requests) };
+    let n = server::serve_shard(listener, &source, max)?;
+    println!("shard answered {n} fetches");
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -14,6 +14,7 @@ pub mod packed;
 pub mod qcheckpoint;
 pub mod qlinear;
 pub mod qmodel;
+pub mod remote;
 pub mod rtn;
 pub mod store;
 
@@ -23,4 +24,7 @@ pub use kernels::{Isa, Scratch};
 pub use packed::PackedMatrix;
 pub use qlinear::QuantLinear;
 pub use qmodel::{QuantExpert, QuantModel};
-pub use store::{CacheCounters, ExpertStore, PagedStore, ResidentStore};
+pub use remote::RemoteStore;
+pub use store::{
+    CacheCounters, ExpertStore, PagedStore, RemoteFetchStats, ResidencyCache, ResidentStore,
+};

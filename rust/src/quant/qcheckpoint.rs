@@ -33,6 +33,7 @@ use crate::config::{ModelConfig, PmqConfig};
 use crate::moe::model::MoeModel;
 use crate::tensor::Tensor2;
 use crate::util::json::{self, Value};
+use crate::util::mmap::Mmap;
 
 use super::binary::BinaryMatrix;
 use super::packed::PackedMatrix;
@@ -268,6 +269,18 @@ fn read_expert_record(r: &mut impl Read) -> Result<QuantExpert> {
     })
 }
 
+/// Decode one expert record from a raw indexed span — a v2 `(offset,
+/// len)` slice or a shard `REC` payload. The buffer must be exactly one
+/// record; trailing bytes mean a corrupt index or a framing bug.
+pub fn decode_expert_record(buf: &[u8]) -> Result<QuantExpert> {
+    let mut r = buf;
+    let rec = read_expert_record(&mut r)?;
+    if !r.is_empty() {
+        bail!("{} trailing bytes after expert record", r.len());
+    }
+    Ok(rec)
+}
+
 /// Dense base payload (routed experts excluded — they only exist packed).
 fn write_dense_base(w: &mut impl Write, m: &MoeModel) -> Result<()> {
     write_f32s(w, &m.embed.data)?;
@@ -293,9 +306,15 @@ fn read_t(r: &mut impl Read, rows: usize, cols: usize) -> Result<Tensor2> {
     Ok(Tensor2::from_vec(rows, cols, read_f32s(r, rows * cols)?))
 }
 
-/// Dense base — routed experts come back as zero placeholders (the
-/// provider intercepts them at inference).
-fn read_dense_base(r: &mut impl Read, cfg: &ModelConfig) -> Result<MoeModel> {
+/// Dense base. Routed experts are not in the payload (they only exist
+/// packed); `with_placeholders` controls what stands in for them:
+/// full-size zero tensors (legacy [`load`] shape, and the only shape a
+/// provider-less forward can survive) or nothing at all — store-backed
+/// loads ([`load_paged`]/[`load_remote`]) always route expert math
+/// through the store, so the placeholders were pure footprint: 3 zero
+/// `d_model x d_ff` tensors per expert per layer of RAM the paging
+/// budget never saw.
+fn read_dense_base(r: &mut impl Read, cfg: &ModelConfig, with_placeholders: bool) -> Result<MoeModel> {
     let h = cfg.d_model;
     let embed = read_t(r, cfg.vocab_size, h)?;
     let mut blocks = Vec::new();
@@ -316,7 +335,8 @@ fn read_dense_base(r: &mut impl Read, cfg: &ModelConfig) -> Result<MoeModel> {
                 })
             })
             .collect::<Result<_>>()?;
-        let experts: Vec<crate::moe::Expert> = (0..cfg.n_experts)
+        let n_placeholders = if with_placeholders { cfg.n_experts } else { 0 };
+        let experts: Vec<crate::moe::Expert> = (0..n_placeholders)
             .map(|_| crate::moe::Expert {
                 wg: Tensor2::zeros(h, cfg.d_ff),
                 wu: Tensor2::zeros(h, cfg.d_ff),
@@ -559,7 +579,7 @@ pub fn load(path: &str) -> Result<QuantModel> {
         // records are streamed in index order right after the dense base
         read_index(&mut r, p.cfg.n_layers, p.cfg.n_experts, path)?;
     }
-    let model = read_dense_base(&mut r, &p.cfg)?;
+    let model = read_dense_base(&mut r, &p.cfg, true)?;
     let mut experts = Vec::with_capacity(p.cfg.n_layers);
     for l in 0..p.cfg.n_layers {
         let mut row = Vec::with_capacity(p.cfg.n_experts);
@@ -583,10 +603,35 @@ pub fn load(path: &str) -> Result<QuantModel> {
     Ok(q)
 }
 
-/// [`RecordSource`] over a v2 checkpoint file: one seek + read per
-/// expert record, decoded from its indexed `(offset, len)` span.
+/// Validate an indexed `(offset, len)` span against the mapped file and
+/// return the record bytes. Shared by the paged record source and the
+/// shard server — the one place corrupt-index handling lives.
+fn index_span<'a>(
+    map: &'a Mmap,
+    index: &[Vec<(u64, u64)>],
+    layer: usize,
+    expert: usize,
+    path: &str,
+) -> Result<&'a [u8]> {
+    let (off, len) = index[layer][expert];
+    // plausibility guard (mirrors the header-length guard): a corrupt
+    // index must produce an error, not an allocation abort
+    if len == 0 || len > (1 << 31) {
+        bail!("{path}: implausible index entry ({off},{len}) for expert ({layer},{expert})");
+    }
+    let (off, len) = (off as usize, len as usize);
+    let data = map.as_slice();
+    match off.checked_add(len) {
+        Some(end) if end <= data.len() => Ok(&data[off..end]),
+        _ => bail!("{path}: index entry ({off},{len}) past file end for expert ({layer},{expert})"),
+    }
+}
+
+/// [`RecordSource`] over a memory-mapped v2 checkpoint: an expert record
+/// read is a decode straight out of the page cache — no seek/read
+/// syscall pair, and unrouted records never become resident.
 struct FileRecordSource {
-    file: std::fs::File,
+    map: Mmap,
     index: Vec<Vec<(u64, u64)>>,
     allocation: Vec<Vec<u8>>,
     path: String,
@@ -594,18 +639,83 @@ struct FileRecordSource {
 
 impl RecordSource for FileRecordSource {
     fn read_record(&mut self, layer: usize, expert: usize) -> Result<QuantExpert> {
-        let (off, len) = self.index[layer][expert];
-        // plausibility guard (mirrors the header-length guard): a corrupt
-        // index must produce an error, not an allocation abort
-        if len == 0 || len > (1 << 31) {
-            bail!("{}: implausible index entry ({off},{len}) for expert ({layer},{expert})", self.path);
-        }
-        self.file.seek(SeekFrom::Start(off))?;
-        let mut buf = vec![0u8; len as usize];
-        self.file.read_exact(&mut buf)?;
-        let rec = read_expert_record(&mut &buf[..])?;
+        let span = index_span(&self.map, &self.index, layer, expert, &self.path)?;
+        let rec = decode_expert_record(span)?;
         check_bits(rec.bits, &self.allocation, layer, expert, &self.path)?;
         Ok(rec)
+    }
+}
+
+/// Read-only view over a v2 checkpoint for `mcsharp shard` mode: only
+/// the header and index are parsed; the dense base is skipped entirely
+/// and expert payloads stay untouched in the page cache until a FETCH
+/// asks for their span. Shard-process footprint is therefore the index
+/// plus whatever records the OS keeps warm — O(1) in model size.
+pub struct ShardSource {
+    map: Mmap,
+    index: Vec<Vec<(u64, u64)>>,
+    cfg: ModelConfig,
+    layers: std::ops::Range<usize>,
+    path: String,
+}
+
+impl ShardSource {
+    /// Open `path` (v2 only) to serve expert records for `layers`.
+    pub fn open(path: &str, layers: std::ops::Range<usize>) -> Result<ShardSource> {
+        let map = Mmap::open(path)?;
+        let (cfg, index) = {
+            let mut r: &[u8] = map.as_slice();
+            let mut magic = [0u8; 9];
+            r.read_exact(&mut magic).with_context(|| format!("{path}: truncated magic"))?;
+            if &magic == MAGIC_V1 {
+                bail!("{path}: v1 checkpoint has no expert index — re-save as v2 to shard");
+            }
+            if &magic != MAGIC_V2 {
+                bail!("{path}: not an MC# quantized checkpoint");
+            }
+            let p = read_preamble(&mut r, path)?;
+            let index = read_index(&mut r, p.cfg.n_layers, p.cfg.n_experts, path)?;
+            (p.cfg, index)
+        };
+        if layers.start >= layers.end || layers.end > cfg.n_layers {
+            bail!(
+                "{path}: shard layer range {}..{} invalid for a {}-layer model",
+                layers.start,
+                layers.end,
+                cfg.n_layers
+            );
+        }
+        Ok(ShardSource { map, index, cfg, layers, path: path.to_string() })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// The contiguous layer range this shard owns.
+    pub fn layers(&self) -> std::ops::Range<usize> {
+        self.layers.clone()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.cfg.n_experts
+    }
+
+    /// Raw record bytes for `(layer, expert)` — exactly what goes on the
+    /// wire after a `REC` line. Layers outside this shard's range are a
+    /// request error, not a file read.
+    pub fn record_span(&self, layer: usize, expert: usize) -> Result<&[u8]> {
+        if !self.layers.contains(&layer) {
+            bail!(
+                "layer {layer} not on this shard (serves {}..{})",
+                self.layers.start,
+                self.layers.end
+            );
+        }
+        if expert >= self.cfg.n_experts {
+            bail!("expert {expert} out of range ({} experts)", self.cfg.n_experts);
+        }
+        index_span(&self.map, &self.index, layer, expert, &self.path)
     }
 }
 
@@ -626,7 +736,9 @@ pub fn load_paged(path: &str, budget_bytes: u64) -> Result<QuantModel> {
     }
     let p = read_preamble(&mut r, path)?;
     let index = read_index(&mut r, p.cfg.n_layers, p.cfg.n_experts, path)?;
-    let model = read_dense_base(&mut r, &p.cfg)?;
+    // placeholders elided: every routed-expert access goes through the
+    // store, so coordinator footprint is dense base + expert budget
+    let model = read_dense_base(&mut r, &p.cfg, false)?;
     drop(r);
     let Some(nbytes) = p.expert_nbytes else {
         bail!("{path}: v2 header missing expert_nbytes");
@@ -636,12 +748,61 @@ pub fn load_paged(path: &str, budget_bytes: u64) -> Result<QuantModel> {
         .clone()
         .unwrap_or_else(|| super::store::bits_as_importance(&p.allocation));
     let source = FileRecordSource {
-        file: std::fs::File::open(path).with_context(|| format!("reopening {path}"))?,
+        map: Mmap::open(path)?,
         index,
         allocation: p.allocation.clone(),
         path: path.to_string(),
     };
     let store = PagedStore::new(Box::new(source), nbytes, importance_tbl, budget_bytes);
+    Ok(QuantModel {
+        model,
+        store: std::sync::Arc::new(store),
+        allocation: p.allocation,
+        pmq: p.pmq,
+        importance: p.importance,
+    })
+}
+
+/// Assemble a coordinator-side model whose routed experts live on shard
+/// servers: the local v2 file supplies the dense base and header tables
+/// (allocation / per-expert sizes / importance); expert records page in
+/// over FETCH/REC from `shards` under `budget_bytes` of residency. The
+/// expert payload section of the local file is never read.
+pub fn load_remote(
+    path: &str,
+    shards: &[String],
+    budget_bytes: u64,
+    fetch_timeout_ms: u64,
+) -> Result<QuantModel> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 9];
+    r.read_exact(&mut magic)?;
+    if &magic == MAGIC_V1 {
+        bail!("{path}: v1 checkpoint has no expert index — re-save as v2 to shard");
+    }
+    if &magic != MAGIC_V2 {
+        bail!("{path}: not an MC# quantized checkpoint");
+    }
+    let p = read_preamble(&mut r, path)?;
+    read_index(&mut r, p.cfg.n_layers, p.cfg.n_experts, path)?;
+    let model = read_dense_base(&mut r, &p.cfg, false)?;
+    drop(r);
+    let Some(nbytes) = p.expert_nbytes else {
+        bail!("{path}: v2 header missing expert_nbytes");
+    };
+    let importance_tbl = p
+        .importance
+        .clone()
+        .unwrap_or_else(|| super::store::bits_as_importance(&p.allocation));
+    let store = super::remote::RemoteStore::connect(
+        shards,
+        nbytes,
+        importance_tbl,
+        p.allocation.clone(),
+        budget_bytes,
+        fetch_timeout_ms,
+    )?;
     Ok(QuantModel {
         model,
         store: std::sync::Arc::new(store),
@@ -788,7 +949,53 @@ mod tests {
         let c = paged.store.counters();
         assert!(c.misses > 0, "tiny budget must page");
         assert!(c.peak_resident_bytes <= budget, "budget violated: {c:?}");
+        // store-backed loads elide the zero placeholder experts — routed
+        // FFN math must never touch the dense model, and the coordinator
+        // footprint is dense base + expert budget, not + zeros
+        assert!(
+            paged.model.blocks.iter().all(|b| b.experts.is_empty()),
+            "paged load must not materialize placeholder experts"
+        );
+        assert!(
+            resident.model.blocks.iter().all(|b| b.experts.len() == 4),
+            "resident load keeps the legacy full-shape model"
+        );
+        // bit-width metrics stay well-defined on the elided model
+        assert!((paged.avg_model_bits() - resident.avg_model_bits()).abs() < 1e-12);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_source_serves_decodable_spans() {
+        let base = MoeModel::new(&cfg(), 56);
+        let alloc = vec![vec![2u8, 1, 3, 2], vec![3, 2, 1, 2]];
+        let q = QuantModel::quantize(&base, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+        let path = tmppath("shard");
+        save(&q, &path).unwrap();
+        // a shard owning only layer 1
+        let s = ShardSource::open(&path, 1..2).unwrap();
+        assert_eq!(s.layers(), 1..2);
+        assert_eq!(s.n_experts(), 4);
+        for e in 0..4 {
+            let span = s.record_span(1, e).unwrap();
+            let rec = decode_expert_record(span).unwrap();
+            assert_eq!(rec.bits, alloc[1][e]);
+            // the span is byte-exact: decoding must consume all of it,
+            // and a truncated span must fail
+            assert!(decode_expert_record(&span[..span.len() - 1]).is_err());
+        }
+        // layers outside the owned range are request errors
+        assert!(s.record_span(0, 0).is_err());
+        assert!(s.record_span(2, 0).is_err());
+        assert!(s.record_span(1, 4).is_err());
+        // invalid ranges and v1 files refuse to open
+        assert!(ShardSource::open(&path, 1..1).is_err());
+        assert!(ShardSource::open(&path, 0..3).is_err());
+        let v1path = tmppath("shard-v1");
+        save_v1(&q, &v1path).unwrap();
+        assert!(ShardSource::open(&v1path, 0..2).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&v1path).ok();
     }
 
     #[test]

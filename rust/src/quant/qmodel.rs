@@ -204,7 +204,10 @@ impl QuantModel {
     pub fn avg_model_bits(&self) -> f64 {
         let cfg = &self.model.cfg;
         let expert_params = (cfg.n_layers * cfg.n_experts * cfg.expert_params()) as f64;
-        let other_params = (self.model.n_params()
+        // derived from config, not `model.n_params()`: store-backed loads
+        // elide the routed-expert placeholders, so the in-RAM model is
+        // smaller than the nominal backbone this metric describes
+        let other_params = (cfg.total_params()
             - cfg.n_layers * cfg.n_experts * cfg.expert_params()) as f64;
         (self.avg_expert_bits() * expert_params + self.pmq.other_bits as f64 * other_params)
             / (expert_params + other_params)

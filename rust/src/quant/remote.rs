@@ -1,0 +1,550 @@
+//! Expert residency over the wire: [`RemoteStore`] pages packed expert
+//! records from `mcsharp shard` servers instead of a local file, making
+//! residency location-transparent — the deployment step after MC#'s
+//! compression (paper §1): a 2.57-bit model that *still* does not fit
+//! one node keeps serving, with experts living where the bytes are.
+//!
+//! Same policy, different fault path: the budget/LRU/importance/prefetch
+//! machinery is the exact [`ResidencyCache`] the local
+//! [`PagedStore`](super::store::PagedStore) uses — what changes is only
+//! that a miss becomes one batched `FETCH id=.. layer=.. experts=..`
+//! RPC per layer miss-set (never per-expert round trips; the
+//! dispatcher's `prepare` hands us the whole routed set), answered by
+//! `REC` frames carrying the same record bytes the v2 checkpoint index
+//! spans hold. Next-layer prefetch is *pipelined*: the `FETCH` is
+//! written and the responses are left in flight, drained into spare
+//! budget the next time that shard's connection is touched — wire
+//! latency hides behind the current layer's compute.
+//!
+//! Failure model: a dead shard or a fetch timeout marks the shard down
+//! and surfaces [`FetchUnavailable`], a typed marker the engine
+//! scheduler catches to fail the affected requests with `ERR` and keep
+//! the engine alive; every later fetch lazily retries the connection,
+//! so a restarted shard heals the coordinator without a restart.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::protocol::{format_fetch, parse_response, Response};
+
+use super::qcheckpoint::decode_expert_record;
+use super::qmodel::QuantExpert;
+use super::store::{CacheCounters, ExpertStore, RemoteFetchStats, ResidencyCache};
+
+/// Typed marker for "the bytes are not reachable right now" — shard
+/// down, connect refused, read timeout. The engine scheduler downcasts
+/// for this to degrade the affected requests to `ERR` instead of
+/// treating the step as a fatal engine error.
+#[derive(Debug)]
+pub struct FetchUnavailable {
+    pub shard: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for FetchUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} unavailable: {}", self.shard, self.detail)
+    }
+}
+
+impl std::error::Error for FetchUnavailable {}
+
+/// Whether `e` (anywhere in its context chain) is a [`FetchUnavailable`].
+pub fn is_fetch_unavailable(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<FetchUnavailable>().is_some())
+}
+
+fn unavailable(shard: &str, detail: impl std::fmt::Display) -> anyhow::Error {
+    anyhow::Error::new(FetchUnavailable { shard: shard.to_string(), detail: detail.to_string() })
+}
+
+/// Cap on one record payload (mirrors the checkpoint index plausibility
+/// guard): a corrupt `len=` must error, not abort on allocation.
+const MAX_REC_BYTES: usize = 1 << 31;
+
+/// Demand-fetch latency window for the p95 gauge.
+const LATENCY_WINDOW: usize = 256;
+
+struct ShardConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A pipelined prefetch `FETCH` whose `REC` frames are still in flight.
+struct PendingFetch {
+    tag: u64,
+    entries: Vec<(usize, usize)>,
+}
+
+struct Shard {
+    addr: String,
+    layers: Range<usize>,
+    conn: Option<ShardConn>,
+    pending: Option<PendingFetch>,
+}
+
+struct RemoteInner {
+    rc: ResidencyCache,
+    shards: Vec<Shard>,
+    /// `layer -> index into shards` (validated total coverage).
+    layer_map: Vec<usize>,
+    allocation: Vec<Vec<u8>>,
+    timeout: Duration,
+    next_tag: u64,
+    fetch_rpcs: u64,
+    prefetch_rpcs: u64,
+    fetched_bytes: u64,
+    latencies_us: VecDeque<u64>,
+}
+
+/// [`ExpertStore`] whose record source is a set of shard servers.
+pub struct RemoteStore {
+    inner: Mutex<RemoteInner>,
+}
+
+/// Extract `layers=a..b` from a shard `STATS` payload.
+fn parse_layer_range(stats: &str) -> Result<Range<usize>> {
+    let field = stats
+        .split_whitespace()
+        .find_map(|w| w.strip_prefix("layers="))
+        .ok_or_else(|| anyhow!("shard STATS missing layers= field: {stats:?}"))?;
+    let (a, b) = field
+        .split_once("..")
+        .ok_or_else(|| anyhow!("malformed layers range {field:?}"))?;
+    let (a, b) = (a.parse::<usize>()?, b.parse::<usize>()?);
+    if a >= b {
+        bail!("empty layers range {field:?}");
+    }
+    Ok(a..b)
+}
+
+fn open_conn(addr: &str, timeout: Duration) -> Result<ShardConn> {
+    let sockaddr = std::net::ToSocketAddrs::to_socket_addrs(addr)
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr}: no socket address"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+        .with_context(|| format!("connecting to shard {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok(ShardConn { reader, writer: stream })
+}
+
+/// Ask a freshly connected shard which layers it owns.
+fn query_layers(conn: &mut ShardConn, addr: &str) -> Result<Range<usize>> {
+    conn.writer.write_all(b"STATS\n")?;
+    let mut line = String::new();
+    conn.reader.read_line(&mut line)?;
+    match parse_response(&line).with_context(|| format!("shard {addr} STATS reply"))? {
+        Response::Stats(payload) => parse_layer_range(&payload),
+        other => bail!("shard {addr}: expected STATS reply, got {other:?}"),
+    }
+}
+
+/// Read the `REC` frames answering one `FETCH` for `want` (in request
+/// order) off `conn`. Returns the raw record payloads. Any deviation —
+/// wrong tag, wrong expert, implausible len, an `ERR`, a short read —
+/// is an error; the caller decides whether it is unavailability (I/O)
+/// or a protocol violation (both drop the connection either way, since
+/// the stream position is no longer trustworthy).
+fn read_rec_frames(
+    conn: &mut ShardConn,
+    tag: u64,
+    layer: usize,
+    want: &[usize],
+) -> Result<Vec<Vec<u8>>> {
+    let mut payloads = Vec::with_capacity(want.len());
+    for &e in want {
+        let mut line = String::new();
+        let n = conn.reader.read_line(&mut line)?;
+        if n == 0 || !line.ends_with('\n') {
+            // a cleanly killed shard closes the socket: EOF (possibly
+            // mid-line) is unavailability, not a protocol violation, so
+            // surface it as an io::Error the caller maps to
+            // FetchUnavailable
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("connection closed mid-fetch (expected REC for expert {e})"),
+            )
+            .into());
+        }
+        match parse_response(&line)? {
+            Response::Rec { tag: t, layer: l, expert, len } => {
+                if t != tag || l != layer || expert != e {
+                    bail!(
+                        "REC frame mismatch: got (id={t} layer={l} expert={expert}), \
+                         expected (id={tag} layer={layer} expert={e})"
+                    );
+                }
+                if len == 0 || len > MAX_REC_BYTES {
+                    bail!("implausible REC len {len} for expert ({layer},{e})");
+                }
+                let mut buf = vec![0u8; len];
+                conn.reader.read_exact(&mut buf)?;
+                payloads.push(buf);
+            }
+            Response::Err { msg, .. } => bail!("shard rejected FETCH: {msg}"),
+            other => bail!("expected REC frame, got {other:?}"),
+        }
+    }
+    Ok(payloads)
+}
+
+impl RemoteInner {
+    fn take_tag(&mut self) -> u64 {
+        self.next_tag += 1;
+        self.next_tag
+    }
+
+    /// Connection to shard `si`, lazily (re)established. An unreachable
+    /// shard is [`FetchUnavailable`].
+    fn conn(&mut self, si: usize) -> Result<()> {
+        if self.shards[si].conn.is_some() {
+            return Ok(());
+        }
+        let addr = self.shards[si].addr.clone();
+        match open_conn(&addr, self.timeout) {
+            Ok(c) => {
+                self.shards[si].conn = Some(c);
+                Ok(())
+            }
+            Err(e) => Err(unavailable(&addr, format!("{e:#}"))),
+        }
+    }
+
+    /// Drop a shard's connection (and any pipelined prefetch riding it).
+    fn mark_down(&mut self, si: usize) {
+        self.shards[si].conn = None;
+        self.shards[si].pending = None;
+    }
+
+    /// Drain a pipelined prefetch on shard `si` if one is in flight:
+    /// decode the frames and insert whatever still fits the spare budget.
+    /// Errors are speculative-path internal — the shard is marked down
+    /// and the demand path will surface its own error if it also fails.
+    fn drain_pending(&mut self, si: usize) {
+        let Some(pending) = self.shards[si].pending.take() else { return };
+        let Some(conn) = self.shards[si].conn.as_mut() else { return };
+        // all entries of one prefetch FETCH share one layer
+        let layer = pending.entries[0].0;
+        let want: Vec<usize> = pending.entries.iter().map(|&(_, e)| e).collect();
+        match read_rec_frames(conn, pending.tag, layer, &want) {
+            Ok(payloads) => {
+                let tick = self.rc.next_tick();
+                for (&(l, e), payload) in pending.entries.iter().zip(&payloads) {
+                    self.fetched_bytes += payload.len() as u64;
+                    let Ok(rec) = decode_expert_record(payload) else {
+                        self.mark_down(si);
+                        return;
+                    };
+                    if check_alloc_bits(rec.bits, &self.allocation, l, e).is_err() {
+                        self.mark_down(si);
+                        return;
+                    }
+                    self.rc.insert_prefetched_if_fits(l, e, Arc::new(rec), tick);
+                }
+            }
+            Err(_) => self.mark_down(si),
+        }
+    }
+
+    /// One batched demand fetch: `experts` of `layer` from its owning
+    /// shard, decoded and verified. The single RPC per layer miss-set.
+    fn fetch_demand(&mut self, layer: usize, experts: &[usize]) -> Result<Vec<QuantExpert>> {
+        let si = self.layer_map[layer];
+        self.conn(si)?;
+        // responses arrive in order: a pipelined prefetch still in
+        // flight on this connection must be consumed first
+        self.drain_pending(si);
+        self.conn(si)?; // drain may have dropped a broken connection
+        let tag = self.take_tag();
+        let addr = self.shards[si].addr.clone();
+        let started = Instant::now();
+        let result = (|| -> Result<Vec<Vec<u8>>> {
+            let conn = self.shards[si].conn.as_mut().expect("conn established above");
+            conn.writer.write_all(format_fetch(tag, layer, experts).as_bytes())?;
+            read_rec_frames(conn, tag, layer, experts)
+        })();
+        let payloads = match result {
+            Ok(p) => p,
+            Err(e) => {
+                // stream position is untrustworthy after any mid-fetch
+                // failure — reconnect next time
+                self.mark_down(si);
+                return Err(if e.downcast_ref::<std::io::Error>().is_some() {
+                    unavailable(&addr, format!("{e:#}"))
+                } else {
+                    e.context(format!("shard {addr}"))
+                });
+            }
+        };
+        self.fetch_rpcs += 1;
+        if self.latencies_us.len() == LATENCY_WINDOW {
+            self.latencies_us.pop_front();
+        }
+        self.latencies_us.push_back(started.elapsed().as_micros() as u64);
+        let mut records = Vec::with_capacity(experts.len());
+        for (&e, payload) in experts.iter().zip(&payloads) {
+            self.fetched_bytes += payload.len() as u64;
+            let rec = decode_expert_record(payload)
+                .with_context(|| format!("shard {addr}: expert ({layer},{e})"))?;
+            check_alloc_bits(rec.bits, &self.allocation, layer, e)?;
+            records.push(rec);
+        }
+        Ok(records)
+    }
+
+    /// Issue the next-layer prefetch plan as one pipelined `FETCH` per
+    /// owning shard, leaving the responses in flight. Speculative: any
+    /// failure just skips the prefetch.
+    fn issue_prefetch(&mut self, layer: usize) {
+        let plan = self.rc.prefetch_plan(layer);
+        if plan.is_empty() {
+            return;
+        }
+        // one layer -> one shard; the plan is single-layer by design
+        let next = plan[0].0;
+        let si = self.layer_map[next];
+        if self.shards[si].conn.is_none() || self.shards[si].pending.is_some() {
+            // never stack pipelined fetches, and never *open* a
+            // connection speculatively — prefetch rides warm paths only
+            return;
+        }
+        let tag = self.take_tag();
+        let experts: Vec<usize> = plan.iter().map(|&(_, e)| e).collect();
+        let line = format_fetch(tag, next, &experts);
+        let conn = self.shards[si].conn.as_mut().expect("checked above");
+        if conn.writer.write_all(line.as_bytes()).is_err() {
+            self.mark_down(si);
+            return;
+        }
+        self.prefetch_rpcs += 1;
+        self.shards[si].pending = Some(PendingFetch { tag, entries: plan });
+    }
+
+    fn p95_us(&self) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut xs: Vec<u64> = self.latencies_us.iter().copied().collect();
+        xs.sort_unstable();
+        xs[(xs.len() * 95 / 100).min(xs.len() - 1)]
+    }
+}
+
+/// Bits sanity against the allocation table (the same check the local
+/// loaders apply; 16 = fp fallback is always admissible).
+fn check_alloc_bits(bits: u8, allocation: &[Vec<u8>], l: usize, e: usize) -> Result<()> {
+    if bits != allocation[l][e] && bits != 16 {
+        bail!("expert ({l},{e}) bits {bits} != allocation {}", allocation[l][e]);
+    }
+    Ok(())
+}
+
+impl RemoteStore {
+    /// Connect to every shard, learn its layer range from `STATS`, and
+    /// verify the union covers all layers. Startup is strict (every
+    /// shard reachable, full coverage) — *after* startup, shard deaths
+    /// degrade per-request instead.
+    pub fn connect(
+        shards: &[String],
+        nbytes: Vec<Vec<u64>>,
+        importance: Vec<Vec<f64>>,
+        allocation: Vec<Vec<u8>>,
+        budget_bytes: u64,
+        fetch_timeout_ms: u64,
+    ) -> Result<RemoteStore> {
+        if shards.is_empty() {
+            bail!("no shard addresses given");
+        }
+        let timeout = Duration::from_millis(fetch_timeout_ms.max(1));
+        let rc = ResidencyCache::new(nbytes, importance, budget_bytes);
+        let n_layers = rc.n_layers();
+        let mut shard_states = Vec::with_capacity(shards.len());
+        for addr in shards {
+            let mut conn = open_conn(addr, timeout)?;
+            let layers = query_layers(&mut conn, addr)?;
+            if layers.end > n_layers {
+                bail!("shard {addr} serves layers {layers:?} but the model has {n_layers}");
+            }
+            shard_states.push(Shard {
+                addr: addr.clone(),
+                layers,
+                conn: Some(conn),
+                pending: None,
+            });
+        }
+        let mut layer_map = vec![usize::MAX; n_layers];
+        for (si, s) in shard_states.iter().enumerate() {
+            for l in s.layers.clone() {
+                if layer_map[l] != usize::MAX {
+                    bail!(
+                        "layer {l} served by both {} and {}",
+                        shard_states[layer_map[l]].addr,
+                        s.addr
+                    );
+                }
+                layer_map[l] = si;
+            }
+        }
+        if let Some(l) = layer_map.iter().position(|&si| si == usize::MAX) {
+            bail!("no shard serves layer {l} (got {} shard(s))", shard_states.len());
+        }
+        Ok(RemoteStore {
+            inner: Mutex::new(RemoteInner {
+                rc,
+                shards: shard_states,
+                layer_map,
+                allocation,
+                timeout,
+                next_tag: 0,
+                fetch_rpcs: 0,
+                prefetch_rpcs: 0,
+                fetched_bytes: 0,
+                latencies_us: VecDeque::with_capacity(LATENCY_WINDOW),
+            }),
+        })
+    }
+}
+
+impl ExpertStore for RemoteStore {
+    fn get(&self, layer: usize, expert: usize) -> Result<Arc<QuantExpert>> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        if layer >= inner.rc.n_layers() || expert >= inner.rc.n_experts() {
+            bail!("expert ({layer},{expert}) out of range");
+        }
+        let tick = inner.rc.next_tick();
+        // no hit count on touch: when this follows ensure_resident it is
+        // the same logical access the batch phase already counted
+        if let Some(rec) = inner.rc.touch(layer, expert, tick, false) {
+            return Ok(rec);
+        }
+        inner.rc.note_miss();
+        let nb = inner.rc.nbytes_of(layer, expert);
+        inner.rc.make_room(nb, &[]);
+        let rec = Arc::new(inner.fetch_demand(layer, &[expert])?.remove(0));
+        inner.rc.insert(layer, expert, Arc::clone(&rec), tick, false);
+        Ok(rec)
+    }
+
+    fn ensure_resident_batch(&self, layer: usize, experts: &[usize]) -> Result<()> {
+        if experts.is_empty() {
+            return Ok(());
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        // validate before any state changes (history, tick, loads)
+        inner.rc.check_bounds(layer, experts)?;
+        let tick = inner.rc.begin_batch(layer, experts);
+        let protect: Vec<(usize, usize)> = experts.iter().map(|&e| (layer, e)).collect();
+        let mut missing = Vec::new();
+        let mut incoming = 0u64;
+        for &e in experts {
+            if inner.rc.touch(layer, e, tick, true).is_some() {
+                continue;
+            }
+            inner.rc.note_miss();
+            incoming += inner.rc.nbytes_of(layer, e);
+            missing.push(e);
+        }
+        if !missing.is_empty() {
+            inner.rc.make_room(incoming, &protect);
+            // ONE batched RPC for the whole layer miss-set
+            let records = inner.fetch_demand(layer, &missing)?;
+            for (&e, rec) in missing.iter().zip(records) {
+                inner.rc.insert(layer, e, Arc::new(rec), tick, false);
+            }
+        }
+        // speculative: pipelined, drained on the shard's next touch
+        inner.issue_prefetch(layer);
+        Ok(())
+    }
+
+    fn expert_nbytes(&self, layer: usize, expert: usize) -> u64 {
+        self.inner.lock().unwrap().rc.nbytes_of(layer, expert)
+    }
+
+    fn total_nbytes(&self) -> u64 {
+        self.inner.lock().unwrap().rc.total_nbytes()
+    }
+
+    fn counters(&self) -> CacheCounters {
+        self.inner.lock().unwrap().rc.counters()
+    }
+
+    fn budget_bytes(&self) -> Option<u64> {
+        Some(self.inner.lock().unwrap().rc.budget())
+    }
+
+    fn set_importance(&self, importance: &[Vec<f64>]) {
+        self.inner.lock().unwrap().rc.set_importance(importance);
+    }
+
+    fn clear_cache(&self) {
+        self.inner.lock().unwrap().rc.clear();
+    }
+
+    fn remote_stats(&self) -> Option<RemoteFetchStats> {
+        let inner = self.inner.lock().unwrap();
+        Some(RemoteFetchStats {
+            fetch_rpcs: inner.fetch_rpcs,
+            prefetch_rpcs: inner.prefetch_rpcs,
+            fetched_bytes: inner.fetched_bytes,
+            fetch_p95_us: inner.p95_us(),
+            shards_up: inner.shards.iter().filter(|s| s.conn.is_some()).count(),
+            shards_total: inner.shards.len(),
+        })
+    }
+
+    fn kind(&self) -> &'static str {
+        "remote"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_range_parsing() {
+        assert_eq!(parse_layer_range("kind=shard layers=0..4 experts=8").unwrap(), 0..4);
+        assert_eq!(parse_layer_range("layers=2..3").unwrap(), 2..3);
+        assert!(parse_layer_range("kind=shard").is_err());
+        assert!(parse_layer_range("layers=3..3").is_err());
+        assert!(parse_layer_range("layers=4..2").is_err());
+        assert!(parse_layer_range("layers=x..2").is_err());
+    }
+
+    #[test]
+    fn fetch_unavailable_survives_anyhow_context() {
+        let e = unavailable("127.0.0.1:9", "connection refused")
+            .context("ensure_resident failed")
+            .context("engine step");
+        assert!(is_fetch_unavailable(&e));
+        let plain = anyhow!("some other failure").context("engine step");
+        assert!(!is_fetch_unavailable(&plain));
+    }
+
+    #[test]
+    fn connect_requires_reachable_shards() {
+        // nothing listens on this port — strict startup must fail fast
+        let err = RemoteStore::connect(
+            &["127.0.0.1:1".into()],
+            vec![vec![24; 2]; 2],
+            vec![vec![1.0; 2]; 2],
+            vec![vec![2; 2]; 2],
+            1 << 20,
+            200,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("127.0.0.1:1"));
+    }
+}

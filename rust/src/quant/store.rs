@@ -19,6 +19,14 @@
 //!   set *before* the scoped-thread execute, and the store prefetches the
 //!   next layer's hottest experts (by observed `moe::stats` routing
 //!   frequency) into whatever budget remains.
+//! * [`RemoteStore`](super::remote::RemoteStore) — the same residency
+//!   policy, but records page in over the wire from shard servers
+//!   (`mcsharp shard`) instead of a local file.
+//!
+//! The budget/LRU/importance/prefetch policy itself lives in
+//! [`ResidencyCache`], shared by the paged and remote stores so the two
+//! cannot drift: what differs between them is only *where a missing
+//! record comes from* (a seek + read vs. a batched `FETCH` RPC).
 //!
 //! Handles are `Arc<QuantExpert>`: eviction drops the store's reference,
 //! in-flight executions keep theirs, so no lock is held while an expert
@@ -68,6 +76,26 @@ impl CacheCounters {
     }
 }
 
+/// Wire-side gauges a remote store exposes on top of [`CacheCounters`]
+/// (STATS/METRICS `remote_fetch_*` fields). Local stores report `None`
+/// from [`ExpertStore::remote_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteFetchStats {
+    /// Demand `FETCH` RPCs issued (one per layer miss-set, not per
+    /// expert — the batching proof).
+    pub fetch_rpcs: u64,
+    /// Speculative `FETCH` RPCs issued (pipelined next-layer prefetch).
+    pub prefetch_rpcs: u64,
+    /// Σ payload bytes received over all record frames.
+    pub fetched_bytes: u64,
+    /// p95 demand-fetch round trip in µs (window since last scrape-reset;
+    /// 0 when no fetch happened yet).
+    pub fetch_p95_us: u64,
+    /// Shards currently reachable.
+    pub shards_up: usize,
+    pub shards_total: usize,
+}
+
 /// Allocation bit-widths as the eviction-priority fallback: PMQ gives
 /// important experts more bits, so bits are a coarse built-in proxy when
 /// no calibrated significance was persisted with the model.
@@ -85,12 +113,22 @@ pub trait ExpertStore: Send + Sync {
     /// Handle to expert `(layer, expert)`, loading it on a miss.
     fn get(&self, layer: usize, expert: usize) -> Result<Arc<QuantExpert>>;
 
-    /// Make a layer's routed expert set resident in one batched pass and
-    /// feed the store's routing history (which drives next-layer
-    /// prefetch). No-op for fully resident stores.
-    fn ensure_resident(&self, layer: usize, experts: &[usize]) -> Result<()> {
+    /// The overridable batched fetch plan: make a layer's routed expert
+    /// set resident in one pass (one seek sweep for a paged store, one
+    /// batched `FETCH` RPC per shard for a remote store) and feed the
+    /// store's routing history (which drives next-layer prefetch). No-op
+    /// for fully resident stores.
+    fn ensure_resident_batch(&self, layer: usize, experts: &[usize]) -> Result<()> {
         let _ = (layer, experts);
         Ok(())
+    }
+
+    /// Call-site-facing residency entry point (the dispatcher's
+    /// pre-execute phase); forwards to
+    /// [`ensure_resident_batch`](Self::ensure_resident_batch) so stores
+    /// override in exactly one place.
+    fn ensure_resident(&self, layer: usize, experts: &[usize]) -> Result<()> {
+        self.ensure_resident_batch(layer, experts)
     }
 
     /// Packed bytes of one expert, from metadata (never faults it in).
@@ -118,6 +156,12 @@ pub trait ExpertStore: Send + Sync {
     /// misses/evictions masquerade as serving-time cache behaviour.
     /// No-op for all-resident stores.
     fn clear_cache(&self) {}
+
+    /// Wire gauges + shard health, for stores that fetch over the
+    /// network. `None` for local stores.
+    fn remote_stats(&self) -> Option<RemoteFetchStats> {
+        None
+    }
 
     fn kind(&self) -> &'static str;
 }
@@ -182,13 +226,7 @@ impl ExpertStore for ResidentStore {
     }
 }
 
-// ------------------------------------------------------------------ paged
-
-/// Seekable source of individual expert records (the v2 qcheckpoint's
-/// index, or an in-memory table in tests).
-pub trait RecordSource: Send {
-    fn read_record(&mut self, layer: usize, expert: usize) -> Result<QuantExpert>;
-}
+// -------------------------------------------------------- residency cache
 
 struct CacheEntry {
     expert: Arc<QuantExpert>,
@@ -199,8 +237,24 @@ struct CacheEntry {
     prefetched: bool,
 }
 
-struct PagedInner {
-    source: Box<dyn RecordSource>,
+/// The budget/LRU/importance/prefetch policy, independent of where
+/// records come from. [`PagedStore`] wires it to a seekable
+/// [`RecordSource`]; [`RemoteStore`](super::remote::RemoteStore) wires it
+/// to shard-server RPCs. Both stores hold it behind their own mutex; the
+/// cache itself is plain data, so the policy cannot fork between the two
+/// backends.
+///
+/// The miss path is split into `note_miss` → `make_room` → (the owner
+/// reads the record however it reads records) → `insert`, preserving the
+/// paged store's historical accounting order: a failed read leaves the
+/// miss counted and the cache untouched.
+pub struct ResidencyCache {
+    n_layers: usize,
+    n_experts: usize,
+    nbytes: Vec<Vec<u64>>,
+    budget: u64,
+    /// Max experts speculatively loaded per ensure batch.
+    prefetch_width: usize,
     cache: HashMap<(usize, usize), CacheEntry>,
     tick: u64,
     counters: CacheCounters,
@@ -213,15 +267,237 @@ struct PagedInner {
     importance: Vec<Vec<f64>>,
 }
 
+impl ResidencyCache {
+    /// `nbytes` is the per-(layer, expert) packed size table (from the v2
+    /// header) — budget accounting and metrics read it without faulting
+    /// records in.
+    pub fn new(nbytes: Vec<Vec<u64>>, importance: Vec<Vec<f64>>, budget_bytes: u64) -> Self {
+        let n_layers = nbytes.len();
+        let n_experts = nbytes.first().map(|r| r.len()).unwrap_or(0);
+        ResidencyCache {
+            n_layers,
+            n_experts,
+            nbytes,
+            budget: budget_bytes,
+            prefetch_width: 4,
+            cache: HashMap::new(),
+            tick: 0,
+            counters: CacheCounters::default(),
+            route: RoutingStats::new(n_layers, n_experts),
+            importance,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn nbytes_of(&self, layer: usize, expert: usize) -> u64 {
+        self.nbytes[layer][expert]
+    }
+
+    pub fn total_nbytes(&self) -> u64 {
+        self.nbytes.iter().flatten().sum()
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    pub fn set_importance(&mut self, importance: &[Vec<f64>]) {
+        self.importance = importance.to_vec();
+    }
+
+    /// Drop every cached record and zero the gauges (routing history and
+    /// the tick survive — they are serving-lifetime signals).
+    pub fn clear(&mut self) {
+        self.cache.clear();
+        self.counters = CacheCounters::default();
+    }
+
+    pub fn contains(&self, layer: usize, expert: usize) -> bool {
+        self.cache.contains_key(&(layer, expert))
+    }
+
+    /// Validate a request before any state changes (history, tick,
+    /// loads) — a rejected request must leave no trace.
+    pub fn check_bounds(&self, layer: usize, experts: &[usize]) -> Result<()> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (n_layers {})", self.n_layers);
+        }
+        if let Some(&e) = experts.iter().find(|&&e| e >= self.n_experts) {
+            bail!("expert ({layer},{e}) out of range (n_experts {})", self.n_experts);
+        }
+        Ok(())
+    }
+
+    pub fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Start one batched ensure: bump the tick and feed the routing
+    /// history (one observation unit per batch). Bounds must already have
+    /// been checked.
+    pub fn begin_batch(&mut self, layer: usize, experts: &[usize]) -> u64 {
+        let tick = self.next_tick();
+        self.route.bump_tokens();
+        for &e in experts {
+            self.route.record(layer, e, 1.0);
+        }
+        tick
+    }
+
+    /// Hit path: refresh recency, clear the speculative flag (counting a
+    /// prefetch hit), and count a hit when `count_hit` (the batch phase
+    /// counts; the execute-phase `get` that follows it does not — same
+    /// logical access).
+    pub fn touch(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        tick: u64,
+        count_hit: bool,
+    ) -> Option<Arc<QuantExpert>> {
+        let entry = self.cache.get_mut(&(layer, expert))?;
+        entry.last_use = tick;
+        if entry.prefetched {
+            entry.prefetched = false;
+            self.counters.prefetch_hits += 1;
+        }
+        if count_hit {
+            self.counters.hits += 1;
+        }
+        Some(Arc::clone(&entry.expert))
+    }
+
+    /// Count a record fault. Called before the read so a failed read
+    /// still shows up in the gauges.
+    pub fn note_miss(&mut self) {
+        self.counters.misses += 1;
+    }
+
+    /// Free room for `incoming` bytes BEFORE the record is read, so
+    /// resident bytes never transiently exceed the budget. `protect`
+    /// entries (the working set about to execute) are never dropped — a
+    /// working set larger than the budget overflows visibly (peak
+    /// counter) instead of thrashing the experts mid-dispatch.
+    pub fn make_room(&mut self, incoming: u64, protect: &[(usize, usize)]) {
+        while self.counters.resident_bytes + incoming > self.budget {
+            let victim = self
+                .cache
+                .iter()
+                .filter(|(k, _)| !protect.contains(*k))
+                .min_by(|(ka, a), (kb, b)| {
+                    let ia = self.importance[ka.0][ka.1];
+                    let ib = self.importance[kb.0][kb.1];
+                    // oldest first; among equals, least significant first
+                    a.last_use
+                        .cmp(&b.last_use)
+                        .then(ia.partial_cmp(&ib).unwrap_or(std::cmp::Ordering::Equal))
+                        .then(ka.cmp(kb))
+                })
+                .map(|(k, _)| *k);
+            let Some(k) = victim else { break };
+            self.cache.remove(&k);
+            self.counters.resident_bytes -= self.nbytes[k.0][k.1];
+            self.counters.evictions += 1;
+        }
+    }
+
+    /// Account and cache one record the owner just read.
+    pub fn insert(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        rec: Arc<QuantExpert>,
+        tick: u64,
+        prefetched: bool,
+    ) {
+        self.counters.resident_bytes += self.nbytes[layer][expert];
+        self.counters.peak_resident_bytes =
+            self.counters.peak_resident_bytes.max(self.counters.resident_bytes);
+        self.cache.insert((layer, expert), CacheEntry { expert: rec, last_use: tick, prefetched });
+    }
+
+    /// Insert a speculative record only if it still fits the spare budget
+    /// (prefetch never evicts). Returns whether it was kept — a remote
+    /// store drains pipelined prefetch responses long after planning, so
+    /// the fit is re-checked at insert time.
+    pub fn insert_prefetched_if_fits(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        rec: Arc<QuantExpert>,
+        tick: u64,
+    ) -> bool {
+        if self.contains(layer, expert)
+            || self.counters.resident_bytes + self.nbytes[layer][expert] > self.budget
+        {
+            return false;
+        }
+        self.insert(layer, expert, rec, tick, true);
+        true
+    }
+
+    /// Next-layer speculative fetch plan: the historically hottest
+    /// experts of `layer + 1` that are not cached and fit the spare
+    /// budget *cumulatively* (the plan never requires an eviction),
+    /// width-limited. Returns `(layer, expert)` pairs in rank order.
+    pub fn prefetch_plan(&self, layer: usize) -> Vec<(usize, usize)> {
+        let next = layer + 1;
+        if next >= self.n_layers {
+            return Vec::new();
+        }
+        let mut ranked: Vec<(u64, usize)> = (0..self.n_experts)
+            .map(|e| (self.route.counts[next * self.n_experts + e], e))
+            .filter(|&(c, _)| c > 0)
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut plan = Vec::new();
+        let mut resident = self.counters.resident_bytes;
+        for (_, e) in ranked {
+            if plan.len() >= self.prefetch_width {
+                break;
+            }
+            if self.cache.contains_key(&(next, e)) {
+                continue;
+            }
+            if resident + self.nbytes[next][e] > self.budget {
+                continue;
+            }
+            resident += self.nbytes[next][e];
+            plan.push((next, e));
+        }
+        plan
+    }
+}
+
+// ------------------------------------------------------------------ paged
+
+/// Seekable source of individual expert records (the v2 qcheckpoint's
+/// index, or an in-memory table in tests).
+pub trait RecordSource: Send {
+    fn read_record(&mut self, layer: usize, expert: usize) -> Result<QuantExpert>;
+}
+
+struct PagedInner {
+    source: Box<dyn RecordSource>,
+    rc: ResidencyCache,
+}
+
 /// Budgeted lazy store: LRU eviction, PMQ-importance tie-break,
-/// frequency-driven next-layer prefetch.
+/// frequency-driven next-layer prefetch — the [`ResidencyCache`] policy
+/// over a local seekable [`RecordSource`].
 pub struct PagedStore {
-    n_layers: usize,
-    n_experts: usize,
-    nbytes: Vec<Vec<u64>>,
-    budget: u64,
-    /// Max experts speculatively loaded per `ensure_resident` call.
-    prefetch_width: usize,
     inner: Mutex<PagedInner>,
 }
 
@@ -236,193 +512,89 @@ impl PagedStore {
         importance: Vec<Vec<f64>>,
         budget_bytes: u64,
     ) -> PagedStore {
-        let n_layers = nbytes.len();
-        let n_experts = nbytes.first().map(|r| r.len()).unwrap_or(0);
         PagedStore {
-            n_layers,
-            n_experts,
-            nbytes,
-            budget: budget_bytes,
-            prefetch_width: 4,
             inner: Mutex::new(PagedInner {
                 source,
-                cache: HashMap::new(),
-                tick: 0,
-                counters: CacheCounters::default(),
-                route: RoutingStats::new(n_layers, n_experts),
-                importance,
+                rc: ResidencyCache::new(nbytes, importance, budget_bytes),
             }),
         }
-    }
-
-    fn load_locked(
-        &self,
-        inner: &mut PagedInner,
-        layer: usize,
-        expert: usize,
-        tick: u64,
-        prefetched: bool,
-    ) -> Result<Arc<QuantExpert>> {
-        let rec = Arc::new(inner.source.read_record(layer, expert)?);
-        inner.counters.resident_bytes += self.nbytes[layer][expert];
-        inner.counters.peak_resident_bytes =
-            inner.counters.peak_resident_bytes.max(inner.counters.resident_bytes);
-        inner.cache.insert(
-            (layer, expert),
-            CacheEntry { expert: Arc::clone(&rec), last_use: tick, prefetched },
-        );
-        Ok(rec)
-    }
-
-    /// Free room for `incoming` bytes BEFORE the record is read, so
-    /// resident bytes never transiently exceed the budget. `protect`
-    /// entries (the working set about to execute) are never dropped — a
-    /// working set larger than the budget overflows visibly (peak
-    /// counter) instead of thrashing the experts mid-dispatch.
-    fn make_room_locked(&self, inner: &mut PagedInner, incoming: u64, protect: &[(usize, usize)]) {
-        while inner.counters.resident_bytes + incoming > self.budget {
-            let victim = inner
-                .cache
-                .iter()
-                .filter(|(k, _)| !protect.contains(*k))
-                .min_by(|(ka, a), (kb, b)| {
-                    let ia = inner.importance[ka.0][ka.1];
-                    let ib = inner.importance[kb.0][kb.1];
-                    // oldest first; among equals, least significant first
-                    a.last_use
-                        .cmp(&b.last_use)
-                        .then(ia.partial_cmp(&ib).unwrap_or(std::cmp::Ordering::Equal))
-                        .then(ka.cmp(kb))
-                })
-                .map(|(k, _)| *k);
-            let Some(k) = victim else { break };
-            inner.cache.remove(&k);
-            inner.counters.resident_bytes -= self.nbytes[k.0][k.1];
-            inner.counters.evictions += 1;
-        }
-    }
-
-    /// Speculatively load the next layer's historically hottest experts
-    /// into spare budget (never evicts anything to make room). Errors
-    /// stay internal: a record the demand path never asked for must not
-    /// fail the dispatch, so the caller drops this Result.
-    fn prefetch_locked(&self, inner: &mut PagedInner, layer: usize, tick: u64) -> Result<()> {
-        let next = layer + 1;
-        if next >= self.n_layers {
-            return Ok(());
-        }
-        let mut ranked: Vec<(u64, usize)> = (0..self.n_experts)
-            .map(|e| (inner.route.counts[next * self.n_experts + e], e))
-            .filter(|&(c, _)| c > 0)
-            .collect();
-        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
-        let mut loaded = 0usize;
-        for (_, e) in ranked {
-            if loaded >= self.prefetch_width {
-                break;
-            }
-            if inner.cache.contains_key(&(next, e)) {
-                continue;
-            }
-            if inner.counters.resident_bytes + self.nbytes[next][e] > self.budget {
-                continue;
-            }
-            self.load_locked(inner, next, e, tick, true)?;
-            loaded += 1;
-        }
-        Ok(())
     }
 }
 
 impl ExpertStore for PagedStore {
     fn get(&self, layer: usize, expert: usize) -> Result<Arc<QuantExpert>> {
-        if layer >= self.n_layers || expert >= self.n_experts {
-            bail!("expert ({layer},{expert}) out of range");
-        }
         let mut inner = self.inner.lock().unwrap();
         let inner = &mut *inner;
-        inner.tick += 1;
-        let tick = inner.tick;
-        if let Some(entry) = inner.cache.get_mut(&(layer, expert)) {
-            entry.last_use = tick;
-            if entry.prefetched {
-                entry.prefetched = false;
-                inner.counters.prefetch_hits += 1;
-            }
-            // no hits += 1: when this follows ensure_resident it is the
-            // same logical access the batch phase already counted
-            return Ok(Arc::clone(&entry.expert));
+        if layer >= inner.rc.n_layers() || expert >= inner.rc.n_experts() {
+            bail!("expert ({layer},{expert}) out of range");
         }
-        inner.counters.misses += 1;
-        self.make_room_locked(inner, self.nbytes[layer][expert], &[]);
-        self.load_locked(inner, layer, expert, tick, false)
+        let tick = inner.rc.next_tick();
+        // no hit count on touch: when this follows ensure_resident it is
+        // the same logical access the batch phase already counted
+        if let Some(rec) = inner.rc.touch(layer, expert, tick, false) {
+            return Ok(rec);
+        }
+        inner.rc.note_miss();
+        let nb = inner.rc.nbytes_of(layer, expert);
+        inner.rc.make_room(nb, &[]);
+        let rec = Arc::new(inner.source.read_record(layer, expert)?);
+        inner.rc.insert(layer, expert, Arc::clone(&rec), tick, false);
+        Ok(rec)
     }
 
-    fn ensure_resident(&self, layer: usize, experts: &[usize]) -> Result<()> {
+    fn ensure_resident_batch(&self, layer: usize, experts: &[usize]) -> Result<()> {
         if experts.is_empty() {
             return Ok(());
         }
-        // validate before any state changes (history, tick, loads)
-        if layer >= self.n_layers {
-            bail!("layer {layer} out of range (n_layers {})", self.n_layers);
-        }
-        if let Some(&e) = experts.iter().find(|&&e| e >= self.n_experts) {
-            bail!("expert ({layer},{e}) out of range (n_experts {})", self.n_experts);
-        }
         let mut inner = self.inner.lock().unwrap();
         let inner = &mut *inner;
-        inner.tick += 1;
-        let tick = inner.tick;
-        // routing history: one observation unit per batched ensure call
-        inner.route.bump_tokens();
-        for &e in experts {
-            inner.route.record(layer, e, 1.0);
-        }
+        // validate before any state changes (history, tick, loads)
+        inner.rc.check_bounds(layer, experts)?;
+        let tick = inner.rc.begin_batch(layer, experts);
         let protect: Vec<(usize, usize)> = experts.iter().map(|&e| (layer, e)).collect();
         for &e in experts {
-            if let Some(entry) = inner.cache.get_mut(&(layer, e)) {
-                entry.last_use = tick;
-                if entry.prefetched {
-                    entry.prefetched = false;
-                    inner.counters.prefetch_hits += 1;
-                }
-                inner.counters.hits += 1;
-            } else {
-                inner.counters.misses += 1;
-                self.make_room_locked(inner, self.nbytes[layer][e], &protect);
-                self.load_locked(inner, layer, e, tick, false)?;
+            if inner.rc.touch(layer, e, tick, true).is_some() {
+                continue;
             }
+            inner.rc.note_miss();
+            let nb = inner.rc.nbytes_of(layer, e);
+            inner.rc.make_room(nb, &protect);
+            let rec = Arc::new(inner.source.read_record(layer, e)?);
+            inner.rc.insert(layer, e, rec, tick, false);
         }
         // speculative: a failed prefetch read is not a dispatch error
         // (the demanded set is already resident at this point)
-        let _ = self.prefetch_locked(inner, layer, tick);
+        for (l, e) in inner.rc.prefetch_plan(layer) {
+            match inner.source.read_record(l, e) {
+                Ok(rec) => inner.rc.insert(l, e, Arc::new(rec), tick, true),
+                Err(_) => break,
+            }
+        }
         Ok(())
     }
 
     fn expert_nbytes(&self, layer: usize, expert: usize) -> u64 {
-        self.nbytes[layer][expert]
+        self.inner.lock().unwrap().rc.nbytes_of(layer, expert)
     }
 
     fn total_nbytes(&self) -> u64 {
-        self.nbytes.iter().flatten().sum()
+        self.inner.lock().unwrap().rc.total_nbytes()
     }
 
     fn counters(&self) -> CacheCounters {
-        self.inner.lock().unwrap().counters
+        self.inner.lock().unwrap().rc.counters()
     }
 
     fn budget_bytes(&self) -> Option<u64> {
-        Some(self.budget)
+        Some(self.inner.lock().unwrap().rc.budget())
     }
 
     fn set_importance(&self, importance: &[Vec<f64>]) {
-        self.inner.lock().unwrap().importance = importance.to_vec();
+        self.inner.lock().unwrap().rc.set_importance(importance);
     }
 
     fn clear_cache(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.cache.clear();
-        inner.counters = CacheCounters::default();
+        self.inner.lock().unwrap().rc.clear();
     }
 
     fn kind(&self) -> &'static str {
@@ -484,6 +656,7 @@ mod tests {
         let c = s.counters();
         assert_eq!(c.resident_bytes, s.total_nbytes());
         assert_eq!(c.misses, 0);
+        assert!(s.remote_stats().is_none(), "local store has no wire gauges");
     }
 
     #[test]
@@ -516,7 +689,7 @@ mod tests {
         assert!(s.counters().resident_bytes > 0);
         s.clear_cache();
         assert_eq!(s.counters(), CacheCounters::default());
-        assert!(s.inner.lock().unwrap().cache.is_empty());
+        assert!(s.inner.lock().unwrap().rc.cache.is_empty());
         // still serviceable after the reset
         s.ensure_resident(0, &[0]).unwrap();
         assert_eq!(s.counters().misses, 1);
@@ -529,8 +702,8 @@ mod tests {
         assert!(s.ensure_resident(9, &[0]).is_err());
         assert!(s.get(0, 7).is_err());
         let inner = s.inner.lock().unwrap();
-        assert_eq!(inner.route.tokens, 0, "failed ensure must not record history");
-        assert_eq!(inner.counters, CacheCounters::default());
+        assert_eq!(inner.rc.route.tokens, 0, "failed ensure must not record history");
+        assert_eq!(inner.rc.counters, CacheCounters::default());
     }
 
     #[test]
@@ -541,8 +714,8 @@ mod tests {
         // loading (0,0) must evict the tied-recency entry with the LOWER
         // importance: expert 1 (imp 2.0) goes before expert 2 (imp 3.0)
         s.get(0, 0).unwrap();
-        assert!(s.inner.lock().unwrap().cache.contains_key(&(0, 2)));
-        assert!(!s.inner.lock().unwrap().cache.contains_key(&(0, 1)));
+        assert!(s.inner.lock().unwrap().rc.cache.contains_key(&(0, 2)));
+        assert!(!s.inner.lock().unwrap().rc.cache.contains_key(&(0, 1)));
     }
 
     #[test]
@@ -552,9 +725,9 @@ mod tests {
         // both stay resident for the dispatch (overflow is visible in the
         // peak, not destructive)
         let inner = s.inner.lock().unwrap();
-        assert!(inner.cache.contains_key(&(0, 0)));
-        assert!(inner.cache.contains_key(&(0, 1)));
-        assert_eq!(inner.counters.peak_resident_bytes, 48);
+        assert!(inner.rc.cache.contains_key(&(0, 0)));
+        assert!(inner.rc.cache.contains_key(&(0, 1)));
+        assert_eq!(inner.rc.counters.peak_resident_bytes, 48);
     }
 
     #[test]
@@ -565,15 +738,15 @@ mod tests {
         // model it aging out of the cache (white-box: drop the entry)
         {
             let mut inner = s.inner.lock().unwrap();
-            inner.cache.remove(&(1, 2)).unwrap();
-            inner.counters.resident_bytes -= 24;
+            inner.rc.cache.remove(&(1, 2)).unwrap();
+            inner.rc.counters.resident_bytes -= 24;
         }
         // an ensure on layer 0 demands (0,0) and should prefetch (1,2)
         // into the spare budget
         s.ensure_resident(0, &[0]).unwrap();
         {
             let inner = s.inner.lock().unwrap();
-            let entry = inner.cache.get(&(1, 2)).expect("(1,2) prefetched");
+            let entry = inner.rc.cache.get(&(1, 2)).expect("(1,2) prefetched");
             assert!(entry.prefetched);
         }
         let before = s.counters();
@@ -590,7 +763,33 @@ mod tests {
         s.ensure_resident(0, &[1]).unwrap(); // (1,0) history exists, no room
         let inner = s.inner.lock().unwrap();
         // only the demanded expert is resident; prefetch found no space
-        assert!(inner.cache.contains_key(&(0, 1)));
-        assert_eq!(inner.cache.len(), 1);
+        assert!(inner.rc.cache.contains_key(&(0, 1)));
+        assert_eq!(inner.rc.cache.len(), 1);
+    }
+
+    /// The extracted policy core, driven directly: the prefetch plan is
+    /// budget-cumulative (reserving one candidate shrinks the room the
+    /// next sees) and `insert_prefetched_if_fits` re-checks at insert
+    /// time — the remote store drains pipelined responses long after
+    /// planning.
+    #[test]
+    fn residency_cache_plan_is_cumulative_and_insert_rechecks() {
+        let nbytes = vec![vec![24u64; 3]; 2];
+        let mut rc = ResidencyCache::new(nbytes, vec![vec![1.0; 3]; 2], 48);
+        // history: layer-1 experts 0 and 1 each routed once
+        rc.begin_batch(1, &[0, 1]);
+        // plan from layer 0 with an empty cache: both fit 48 B? only
+        // cumulatively — 24 + 24 == budget, so both make the plan
+        assert_eq!(rc.prefetch_plan(0), vec![(1, 0), (1, 1)]);
+        // one demand insert consumes half the budget: the plan keeps the
+        // hotter candidate and drops the one that no longer fits
+        let tick = rc.next_tick();
+        rc.insert(0, 0, Arc::new(tiny_expert(0.0)), tick, false);
+        assert_eq!(rc.prefetch_plan(0), vec![(1, 0)]);
+        // a drained prefetch record that raced past the budget is dropped
+        assert!(rc.insert_prefetched_if_fits(1, 0, Arc::new(tiny_expert(1.0)), tick));
+        assert!(!rc.insert_prefetched_if_fits(1, 1, Arc::new(tiny_expert(2.0)), tick));
+        assert_eq!(rc.counters().resident_bytes, 48);
+        assert_eq!(rc.counters().evictions, 0, "prefetch insert never evicts");
     }
 }

@@ -1,0 +1,209 @@
+//! Read-only file memory-mapping without a libc dependency: the offline
+//! toolchain has no `libc`/`memmap` crate, so the `mmap`/`munmap`
+//! syscalls are issued directly (x86_64 linux only, the deployment
+//! target) and every other platform transparently falls back to reading
+//! the file into an owned buffer.
+//!
+//! Why it exists: the v2 qcheckpoint's per-expert seek index turns the
+//! checkpoint into a random-access record database. Mapping it means a
+//! paged/shard record read is a slice copy out of the page cache instead
+//! of a seek+read syscall pair, the dense base can be decoded straight
+//! from the map, and — the part that matters for footprint — bytes
+//! nothing touches (e.g. the dense base in `mcsharp shard` mode, expert
+//! records outside the residency budget) are never resident at all.
+
+use anyhow::{bail, Context, Result};
+
+/// A read-only view of a whole file: an OS mapping when the platform
+/// supports our raw-syscall path, an owned heap copy otherwise. Either
+/// way [`as_slice`](Mmap::as_slice) is the entire file.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+    /// Fallback storage when the file could not be mapped; `ptr` points
+    /// into it (or is dangling for empty files).
+    owned: Option<Vec<u8>>,
+}
+
+// The mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime, so shared references across threads are safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only, falling back to a heap read when mapping is
+    /// unavailable (non-linux/x86_64, empty file, or a refused syscall).
+    pub fn open(path: &str) -> Result<Mmap> {
+        let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+        let len = f.metadata()?.len();
+        if len > usize::MAX as u64 {
+            bail!("{path}: file too large to map");
+        }
+        let len = len as usize;
+        if len > 0 {
+            if let Some(ptr) = sys::map_readonly(&f, len) {
+                return Ok(Mmap { ptr, len, owned: None });
+            }
+        }
+        // fallback: plain read (also the empty-file path — zero-length
+        // mmap is EINVAL)
+        let buf = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        let ptr = buf.as_ptr();
+        Ok(Mmap { ptr, len: buf.len(), owned: Some(buf) })
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len cover either a live PROT_READ mapping (unmapped
+        // only in Drop) or the owned buffer held alive by `self`.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether this view is a real OS mapping (false = heap fallback).
+    pub fn is_mapped(&self) -> bool {
+        self.owned.is_none()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.owned.is_none() && self.len > 0 {
+            sys::unmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod sys {
+    //! Raw x86_64 linux syscalls — no libc in the vendored toolchain.
+    use std::os::unix::io::AsRawFd;
+
+    const SYS_MMAP: usize = 9;
+    const SYS_MUNMAP: usize = 11;
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    pub fn map_readonly(f: &std::fs::File, len: usize) -> Option<*const u8> {
+        let fd = f.as_raw_fd();
+        let ret: isize;
+        // SAFETY: well-formed mmap(NULL, len, PROT_READ, MAP_PRIVATE,
+        // fd, 0); the kernel either returns a mapping or -errno.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") SYS_MMAP as isize => ret,
+                in("rdi") 0usize,
+                in("rsi") len,
+                in("rdx") PROT_READ,
+                in("r10") MAP_PRIVATE,
+                in("r8") fd as isize,
+                in("r9") 0usize,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        // errno range: [-4095, -1]
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as usize as *const u8)
+        }
+    }
+
+    pub fn unmap(ptr: *const u8, len: usize) {
+        let ret: isize;
+        // SAFETY: ptr/len came from a successful map_readonly.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") SYS_MUNMAP as isize => ret,
+                in("rdi") ptr as usize,
+                in("rsi") len,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        let _ = ret; // nothing sensible to do on munmap failure
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+mod sys {
+    pub fn map_readonly(_f: &std::fs::File, _len: usize) -> Option<*const u8> {
+        None
+    }
+
+    pub fn unmap(_ptr: *const u8, _len: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmppath(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("mcsharp-mmap-{name}-{}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn maps_whole_file_contents() {
+        let path = tmppath("basic");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(m.as_slice(), &payload[..]);
+        // on the deployment target this must be a real mapping
+        #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+        assert!(m.is_mapped());
+        drop(m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_an_empty_slice() {
+        let path = tmppath("empty");
+        std::fs::write(&path, b"").unwrap();
+        let m = Mmap::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), b"");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(Mmap::open("/definitely/not/a/real/path.bin").is_err());
+    }
+
+    #[test]
+    fn view_is_shareable_across_threads() {
+        let path = tmppath("threads");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let m = std::sync::Arc::new(Mmap::open(&path).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = std::sync::Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                assert!(m.as_slice().iter().all(|&b| b == 7));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,16 +1,29 @@
 //! Failure-injection integration tests: every loading path must turn
 //! corrupted or hostile inputs into `Err` (never panics, never silent
-//! garbage), and runtime guardrails must hold under adversarial pruners
-//! and degenerate batcher limits.
+//! garbage), and runtime guardrails must hold under adversarial pruners,
+//! degenerate batcher limits, and misbehaving expert shards (stalls,
+//! connection drops, overload backpressure).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use mcsharp::backend::NativeBackend;
-use mcsharp::config::ModelConfig;
+use mcsharp::config::{ModelConfig, PmqConfig, ServingConfig};
 use mcsharp::coordinator::batcher::Batcher;
+use mcsharp::coordinator::client::{Client, ClientError};
 use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
 use mcsharp::coordinator::request::GenRequest;
+use mcsharp::coordinator::scheduler::Scheduler;
+use mcsharp::coordinator::{protocol, server};
 use mcsharp::moe::gating::Route;
 use mcsharp::moe::model::Pruner;
 use mcsharp::moe::MoeModel;
+use mcsharp::quant::qcheckpoint::{self, ShardSource};
+use mcsharp::quant::qmodel::{QuantMethod, QuantModel};
 use mcsharp::runtime::Runtime;
 use mcsharp::util::json::Value;
 
@@ -224,4 +237,264 @@ fn out_of_vocab_token_does_not_corrupt_neighbours() {
     let mut results = b.run(&mut eng).unwrap();
     results.sort_by_key(|r| r.id);
     assert_eq!(results[0].tokens, want);
+}
+
+// ------------------------------------------------------------ expert shards
+
+/// Quantize the tiny model and save a v2 (seek-indexed) checkpoint that
+/// shard servers can serve records from.
+fn quant_ckpt(name: &str, seed: u64) -> String {
+    let m = MoeModel::new(&tiny_cfg(), seed);
+    let alloc = vec![vec![2u8, 1, 3, 2], vec![3u8, 2, 1, 2]];
+    let mut q = QuantModel::quantize(&m, &alloc, &PmqConfig::default(), &QuantMethod::Rtn);
+    let importance: Vec<Vec<f64>> = (0..2)
+        .map(|l| (0..4).map(|e| ((l * 4 + e) as f64 * 0.41).sin().abs() + 0.01).collect())
+        .collect();
+    q.set_importance(importance);
+    let path = format!("{}/q.q2", tmpdir(name));
+    qcheckpoint::save(&q, &path).unwrap();
+    path
+}
+
+/// A shard that answers the connect-time `STATS` probe and then swallows
+/// every `FETCH` without replying — the coordinator's per-fetch read
+/// timeout is the only thing standing between a stall and a hung engine.
+fn spawn_stalling_shard(layers: Range<usize>, n_experts: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { return };
+            let layers = layers.clone();
+            std::thread::spawn(move || {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut out = stream;
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                        return;
+                    }
+                    if line.starts_with("STATS") {
+                        let _ = write!(
+                            out,
+                            "STATS kind=shard layers={}..{} n_experts={n_experts} fetches=0\n",
+                            layers.start, layers.end
+                        );
+                    }
+                    // FETCH: swallowed on purpose — never answered
+                }
+            });
+        }
+    });
+    addr
+}
+
+/// A correct shard with an off switch: flipping `alive` closes every
+/// connection and the listener, indistinguishable from process death.
+struct KillableShard {
+    addr: String,
+    alive: Arc<AtomicBool>,
+}
+
+fn spawn_killable_shard(path: &str, layers: Range<usize>) -> KillableShard {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let alive = Arc::new(AtomicBool::new(true));
+    let source = Arc::new(ShardSource::open(path, layers).unwrap());
+    let flag = alive.clone();
+    std::thread::spawn(move || {
+        listener.set_nonblocking(true).unwrap();
+        loop {
+            if !flag.load(Ordering::Acquire) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let (src, f) = (source.clone(), flag.clone());
+                    std::thread::spawn(move || {
+                        let _ = killable_conn(stream, &src, &f);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(_) => return,
+            }
+        }
+    });
+    KillableShard { addr, alive }
+}
+
+fn killable_conn(
+    stream: TcpStream,
+    source: &ShardSource,
+    alive: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(20)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        if !alive.load(Ordering::Acquire) {
+            return Ok(()); // socket drops here: the "kill"
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+        match protocol::parse_command(&line) {
+            Ok(protocol::Command::Stats) => {
+                let l = source.layers();
+                write!(
+                    out,
+                    "STATS kind=shard layers={}..{} n_experts={} fetches=0\n",
+                    l.start,
+                    l.end,
+                    source.n_experts()
+                )?;
+            }
+            Ok(protocol::Command::Fetch(wf)) => {
+                for &e in &wf.experts {
+                    let span = source.record_span(wf.layer, e).unwrap();
+                    out.write_all(
+                        protocol::format_rec(wf.tag, wf.layer, e, span.len()).as_bytes(),
+                    )?;
+                    out.write_all(span)?;
+                }
+            }
+            _ => write!(out, "ERR msg=unsupported\n")?,
+        }
+    }
+}
+
+/// A stalled expert fetch must degrade to a failed *request* within the
+/// fetch timeout — never a hung engine. The loop survives: it still
+/// accepts new work afterwards (a fatal engine error would flip the
+/// scheduler to draining and reject submissions), and it exits cleanly
+/// through shutdown instead of dying with an error.
+#[test]
+fn stalled_shard_fetch_times_out_and_loop_keeps_serving() {
+    let path = quant_ckpt("stall", 40);
+    let shard = spawn_stalling_shard(0..2, 4);
+    let remote = qcheckpoint::load_remote(&path, &[shard], u64::MAX, 150).unwrap();
+    let be = NativeBackend::quant(&remote);
+    let engine = Mutex::new(DecodeEngine::new(EngineModel::Quant(&remote), &be, None));
+    let sched = Scheduler::new(Batcher::new(2, 256));
+    std::thread::scope(|s| {
+        let loop_thread = s.spawn(|| sched.run_engine(&engine));
+        let t0 = Instant::now();
+        let rx = sched.submit(GenRequest::greedy(0, vec![1, 2, 3], 4)).unwrap();
+        assert!(rx.recv().is_err(), "stalled fetch must fail the request, not hang");
+        assert!(t0.elapsed() < Duration::from_secs(10), "degradation must be prompt");
+        // still accepting: the outage was contained, not fatal
+        let rx2 = sched.submit(GenRequest::greedy(1, vec![1, 5, 2], 4)).unwrap();
+        assert!(rx2.recv().is_err(), "shard is still stalled; request must fail");
+        sched.shutdown();
+        let served = loop_thread
+            .join()
+            .unwrap()
+            .expect("engine loop must exit cleanly, not die");
+        assert_eq!(served, 0);
+    });
+}
+
+/// A dropped shard connection fails only the sequences that *need* a
+/// fetch: a prompt whose routed experts are already cache-resident keeps
+/// generating bit-identically with the shard dead, while a cold cache
+/// surfaces the recoverable `FetchUnavailable` classification.
+#[test]
+fn shard_connection_drop_fails_only_uncached_sequences() {
+    let path = quant_ckpt("drop", 41);
+    let shard = spawn_killable_shard(&path, 0..2);
+    let remote =
+        qcheckpoint::load_remote(&path, &[shard.addr.clone()], u64::MAX, 300).unwrap();
+    let be = NativeBackend::quant(&remote);
+    let mut eng = DecodeEngine::new(EngineModel::Quant(&remote), &be, None);
+    let g1 = eng.generate(&[1, 7, 3], 6).unwrap();
+
+    shard.alive.store(false, Ordering::Release);
+    std::thread::sleep(Duration::from_millis(80)); // sockets drop
+    // same prompt ⇒ same routes ⇒ all hits: generation is unaffected
+    let g2 = eng.generate(&[1, 7, 3], 6).unwrap();
+    assert_eq!(g1, g2, "cache-resident sequence must not notice the dead shard");
+
+    // force residency misses: now the drop is a recoverable fetch error
+    remote.store.clear_cache();
+    let err = eng.generate(&[1, 7, 3], 6).unwrap_err();
+    assert!(
+        mcsharp::quant::remote::is_fetch_unavailable(&err),
+        "shard death must classify as FetchUnavailable, got: {err:#}"
+    );
+}
+
+/// `gen_with_retry` against a real `max_queue = 1` server: with one
+/// sequence wedged in the engine (the test holds the engine mutex) and
+/// one filling the queue, a plain `gen` is refused with `BUSY`, while
+/// `gen_with_retry` rides the backoff out and completes — strictly after
+/// the engine is released.
+#[test]
+fn gen_with_retry_waits_out_busy_queue() {
+    let m = MoeModel::new(&tiny_cfg(), 42);
+    let be = NativeBackend::fp(&m);
+    let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sc = ServingConfig { max_batch: 1, max_queue: 1, ..Default::default() };
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            server::serve_with(listener, &engine, &sc, Some(4)).unwrap();
+        });
+        let mut a = Client::connect(addr).unwrap();
+        // warm-up round trip: proves the engine loop is past its startup
+        // engine-lock and idle, so the wedge below cannot block startup
+        a.gen(&[1, 2], 1).unwrap();
+        // wedge the engine: admission keeps running (scheduler lock), but
+        // no step can complete until we let go
+        let guard = engine.lock().unwrap();
+        let t0 = a.submit(&[1, 5, 9], 4).unwrap(); // admitted, then wedged
+        std::thread::sleep(Duration::from_millis(80));
+        let t1 = a.submit(&[1, 6, 9], 4).unwrap(); // fills max_queue = 1
+        std::thread::sleep(Duration::from_millis(80));
+
+        // queue is provably full: a plain gen bounces with BUSY
+        let mut b = Client::connect(addr).unwrap();
+        let err = b.gen(&[1, 7, 9], 4).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ClientError>(), Some(ClientError::Busy { .. })),
+            "expected BUSY against a full queue, got: {err:#}"
+        );
+
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let retry = s.spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            tx.send(()).unwrap();
+            let out = c.gen_with_retry(&[1, 7, 9], 4, Duration::from_secs(20)).unwrap();
+            let done = Instant::now();
+            c.quit().unwrap();
+            (out, done)
+        });
+        rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(60)); // a few BUSY rounds
+        let released = Instant::now();
+        drop(guard);
+
+        let (out, done) = retry.join().unwrap();
+        assert!(done >= released, "retry cannot succeed while the engine is wedged");
+        assert_eq!(out.tokens.len(), 7, "retried request must complete normally");
+        // the wedged and queued requests drained too
+        let got = a.collect_tags(&[t0, t1]).unwrap();
+        assert_eq!(got[&t0].tokens.len(), 7);
+        assert_eq!(got[&t1].tokens.len(), 7);
+    });
 }
