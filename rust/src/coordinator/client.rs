@@ -132,7 +132,13 @@ impl Client {
     /// different tag is an error, so use it only when this client has no
     /// other requests in flight).
     pub fn gen(&mut self, prompt: &[u16], max_new: usize) -> Result<GenOutput> {
-        let tag = self.submit(prompt, max_new)?;
+        self.gen_opts(prompt, max_new, GenOpts::default())
+    }
+
+    /// [`gen`](Self::gen) with explicit submission options (same
+    /// lockstep contract).
+    pub fn gen_opts(&mut self, prompt: &[u16], max_new: usize, opts: GenOpts) -> Result<GenOutput> {
+        let tag = self.submit_opts(prompt, max_new, opts)?;
         let mut got = self.collect_tags(&[tag])?;
         Ok(got.remove(&tag).expect("collect_tags returned the tag"))
     }
@@ -148,6 +154,12 @@ impl Client {
     /// would overrun the deadline the last `Busy` error is returned;
     /// every non-`Busy` outcome (success, `ERR`, transport failure)
     /// passes straight through.
+    ///
+    /// After the **second consecutive** `BUSY` the resubmission escalates
+    /// `prio=` by one tier (once per call): a request that already waited
+    /// through two full admission rounds is no longer background traffic,
+    /// and the bump lets the priority scheduler admit it ahead of fresh
+    /// batch arrivals instead of starving it behind them.
     pub fn gen_with_retry(
         &mut self,
         prompt: &[u16],
@@ -156,17 +168,23 @@ impl Client {
     ) -> Result<GenOutput> {
         let started = Instant::now();
         let mut backoff = Duration::from_millis(2);
+        let mut opts = GenOpts::default();
+        let mut busies = 0u32;
         // deterministic per-call jitter stream; distinct clients diverge
         // via their tag counters
         let mut rng = crate::util::rng::Rng::new(0xB0FF_u64 ^ (self.next_tag << 17));
         loop {
-            match self.gen(prompt, max_new) {
+            match self.gen_opts(prompt, max_new, opts) {
                 Err(e)
                     if matches!(
                         e.downcast_ref::<ClientError>(),
                         Some(ClientError::Busy { .. })
                     ) =>
                 {
+                    busies += 1;
+                    if busies == 2 {
+                        opts.priority = opts.priority.saturating_add(1);
+                    }
                     let frac = 0.5 + 0.5 * rng.f64(); // (0.5, 1.0]
                     let wait = backoff.mul_f64(frac);
                     if started.elapsed() + wait > deadline {
@@ -325,4 +343,94 @@ impl Client {
 // The request-line grammar round-trip (format_gen → parse_command) is
 // tested next to the formatter in protocol::tests; Client behaviour
 // over real sockets is covered by rust/tests/protocol_v1.rs and
-// rust/tests/server_roundtrip.rs.
+// rust/tests/server_roundtrip.rs. The retry-escalation policy below is
+// unit-tested here against a scripted in-process acceptor.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{self, Command};
+    use crate::coordinator::request::GenResult;
+    use std::net::TcpListener;
+
+    /// Accept one connection and answer each `GEN` per `script` (`true` =
+    /// `BUSY`, `false` = `OK`), returning the `prio=` of every request
+    /// line in arrival order.
+    fn scripted_server(script: Vec<bool>) -> (std::net::SocketAddr, std::thread::JoinHandle<Vec<u8>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (sock, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            let mut out = sock;
+            let mut prios = Vec::new();
+            for busy in script {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let g = match protocol::parse_command(&line).unwrap() {
+                    Command::Gen(g) => g,
+                    other => panic!("expected GEN, got {other:?}"),
+                };
+                prios.push(g.priority);
+                let tag = g.tag.unwrap();
+                let reply = if busy {
+                    protocol::format_busy(tag)
+                } else {
+                    protocol::format_ok(
+                        tag,
+                        &GenResult {
+                            id: tag,
+                            tokens: g.toks.clone(),
+                            latency_us: 7,
+                            queue_us: 3,
+                            prompt_len: g.toks.len(),
+                        },
+                    )
+                };
+                out.write_all(reply.as_bytes()).unwrap();
+            }
+            prios
+        });
+        (addr, handle)
+    }
+
+    /// ROADMAP §Churn-proof serving: after the second consecutive BUSY
+    /// the resubmission must carry `prio=` one tier above the default —
+    /// and only one tier, exactly once per call.
+    #[test]
+    fn retry_escalates_priority_after_second_busy() {
+        let (addr, server) = scripted_server(vec![true, true, false]);
+        let mut c = Client::connect(addr).unwrap();
+        let out = c.gen_with_retry(&[5, 6], 4, Duration::from_secs(10)).unwrap();
+        assert_eq!(out.tokens, vec![5, 6]);
+        assert_eq!(
+            server.join().unwrap(),
+            vec![0, 0, 1],
+            "third attempt (after two consecutive BUSYs) must escalate prio by one tier"
+        );
+    }
+
+    /// One BUSY is ordinary overload: the immediate retry must stay at
+    /// the default tier.
+    #[test]
+    fn single_busy_does_not_escalate() {
+        let (addr, server) = scripted_server(vec![true, false]);
+        let mut c = Client::connect(addr).unwrap();
+        c.gen_with_retry(&[9], 2, Duration::from_secs(10)).unwrap();
+        assert_eq!(server.join().unwrap(), vec![0, 0]);
+    }
+
+    /// The deadline budget still wins: with an exhausted budget the
+    /// first BUSY surfaces as the terminal error (no endless resubmits).
+    #[test]
+    fn deadline_still_bounds_retries() {
+        let (addr, server) = scripted_server(vec![true]);
+        let mut c = Client::connect(addr).unwrap();
+        let err = c.gen_with_retry(&[1], 2, Duration::ZERO).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ClientError>(),
+            Some(ClientError::Busy { .. })
+        ));
+        assert_eq!(server.join().unwrap(), vec![0]);
+    }
+}

@@ -251,13 +251,17 @@ impl<'a> DecodeEngine<'a> {
     /// A sequence whose last prompt position was computed this step
     /// decodes its next token. This is continuous batching at
     /// chunk-step granularity — prefill and decode share engine steps.
+    // analyze: hot-path
     pub fn step(&mut self, batch: &mut [&mut SeqState]) -> Result<()> {
         if batch.is_empty() {
             return Ok(());
         }
+        // analyze: allow(alloc): Arc refcount bump, not a heap allocation
         let pool_arc = self.pool.clone();
         let mut pool = pool_arc.lock().unwrap();
         let model = self.em.model();
+        // analyze: allow(alloc): small config copy taken once per step to
+        // end the borrow of `model`; O(1) in batch and model size
         let cfg = model.cfg.clone();
         let h = cfg.d_model;
         let chunk = self.prefill_chunk;
@@ -268,7 +272,9 @@ impl<'a> DecodeEngine<'a> {
                 debug_assert!(s.prefilled < s.tokens.len());
                 (s.tokens.len() - s.prefilled).min(chunk)
             })
+            // analyze: allow(alloc): one usize per sequence per step
             .collect();
+        // analyze: allow(alloc): one usize per sequence per step
         let mut off = Vec::with_capacity(counts.len());
         let mut total = 0;
         for &c in &counts {
@@ -291,6 +297,8 @@ impl<'a> DecodeEngine<'a> {
                 for j in 0..c {
                     rmsnorm(x.row(o + j), &block.attn_norm, normed.row_mut(o + j));
                 }
+                // analyze: allow(alloc): contiguous per-seq chunk copy
+                // for attention, bounded by prefill_chunk x d_model
                 let xc = Tensor2::from_vec(c, h, normed.data[o * h..(o + c) * h].to_vec());
                 let out = block.attn.forward_chunk(&xc, &mut pool, &mut seq.kv.layers[l]);
                 for j in 0..c {

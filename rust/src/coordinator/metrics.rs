@@ -31,12 +31,15 @@ pub struct Metrics {
     pub finished: Option<Instant>,
     /// Expert-cache gauges, refreshed from the store each engine step
     /// (`None` when the model does not serve from a store, i.e. fp).
+    // analyze: gauge
     pub cache: Option<CacheCounters>,
     /// Remote-fetch gauges, refreshed each engine step when experts
     /// page in over the wire (`None` for local stores and fp models).
+    // analyze: gauge
     pub remote: Option<RemoteFetchStats>,
     /// Paged-KV gauges (pages/bytes in use, prefix hits, CoW copies),
     /// refreshed from the pool each engine step — O(1) reads.
+    // analyze: gauge
     pub kv: KvGauges,
 }
 

@@ -24,6 +24,10 @@
 // Index-loop style is deliberate in the kernel code (mirrors the Pallas
 // tile loops and keeps the autovectorization-friendly shapes obvious).
 #![allow(clippy::needless_range_loop)]
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` justification, even inside `unsafe fn` bodies —
+// `mcsharp-analyze` (pass 3) audits exactly those blocks.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod backend;
 pub mod config;

@@ -244,6 +244,7 @@ pub fn dispatch_moe_layer(
 
 /// Execute every group, fanning independent groups out over scoped
 /// threads when the layer carries enough rows to pay for it.
+// analyze: hot-path
 fn run_groups(
     layer: usize,
     exec: &dyn DispatchExecutor,
@@ -263,15 +264,20 @@ fn run_groups(
         .unwrap_or(1)
         .min(n);
     if workers <= 1 || total_rows * normed.cols < PAR_MIN_VOLUME {
+        // analyze: allow(alloc): one output block per expert group —
+        // these ARE the layer's results, sized by routing each step
         return work.iter().map(run_one).collect();
     }
+    // analyze: allow(alloc): one slot per expert group per layer step
     let mut blocks: Vec<Option<Result<Tensor2>>> = Vec::with_capacity(n);
     blocks.resize_with(n, || None);
     std::thread::scope(|s| {
+        // analyze: allow(alloc): one join handle per worker thread
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let run_one = &run_one;
             handles.push(s.spawn(move || {
+                // analyze: allow(alloc): per-worker result list, |groups|/workers entries
                 let mut outs = Vec::new();
                 let mut gi = w;
                 while gi < n {
@@ -290,6 +296,7 @@ fn run_groups(
     blocks
         .into_iter()
         .map(|b| b.expect("every group index is covered by exactly one worker"))
+        // analyze: allow(alloc): final unwrap of the per-group blocks
         .collect()
 }
 

@@ -23,24 +23,39 @@ use super::repack::Repacked;
 use super::{Dims, PLANE_WEIGHTS};
 
 /// Per-lane test masks: `masks[j]` selects bit `j` in every lane.
+///
+/// # Safety
+/// Requires AVX2 at runtime; every caller sits inside (or inlines
+/// into) a `target_feature(avx2,fma)` wrapper behind the CPUID check.
 #[inline(always)]
 unsafe fn bit_masks() -> [__m256i; 8] {
-    [
-        _mm256_set1_epi32(1),
-        _mm256_set1_epi32(2),
-        _mm256_set1_epi32(4),
-        _mm256_set1_epi32(8),
-        _mm256_set1_epi32(16),
-        _mm256_set1_epi32(32),
-        _mm256_set1_epi32(64),
-        _mm256_set1_epi32(128),
-    ]
+    // SAFETY: `_mm256_set1_epi32` only needs AVX2, guaranteed by the
+    // caller per this fn's contract.
+    unsafe {
+        [
+            _mm256_set1_epi32(1),
+            _mm256_set1_epi32(2),
+            _mm256_set1_epi32(4),
+            _mm256_set1_epi32(8),
+            _mm256_set1_epi32(16),
+            _mm256_set1_epi32(32),
+            _mm256_set1_epi32(64),
+            _mm256_set1_epi32(128),
+        ]
+    }
 }
 
 /// 8 plane bytes (8 output columns) → 8 zero-extended i32 lanes.
+///
+/// # Safety
+/// Requires AVX2 at runtime and `p` valid for an 8-byte read; callers
+/// point `p` into repacked plane rows, which are padded to `dp` (a
+/// multiple of 8) columns.
 #[inline(always)]
 unsafe fn load8(p: *const u8) -> __m256i {
-    _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    // SAFETY: caller guarantees 8 readable bytes at `p` (padded plane
+    // row) and AVX2 availability; `_mm_loadl_epi64` is unaligned.
+    unsafe { _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i)) }
 }
 
 /// # Safety
@@ -55,12 +70,16 @@ pub(super) unsafe fn packed_matvec(
     y: &mut [f32],
     qacc: &mut [f32],
 ) {
-    match bits {
-        1 => matvec_core::<1>(rp, d, x, y, qacc),
-        2 => matvec_core::<2>(rp, d, x, y, qacc),
-        3 => matvec_core::<3>(rp, d, x, y, qacc),
-        4 => matvec_core::<4>(rp, d, x, y, qacc),
-        b => panic!("fused kernels cover bits 1..=4, got {b}"),
+    // SAFETY: the cores need AVX2+FMA — this fn's target_feature
+    // contract — plus the entry-point length checks, forwarded intact.
+    unsafe {
+        match bits {
+            1 => matvec_core::<1>(rp, d, x, y, qacc),
+            2 => matvec_core::<2>(rp, d, x, y, qacc),
+            3 => matvec_core::<3>(rp, d, x, y, qacc),
+            4 => matvec_core::<4>(rp, d, x, y, qacc),
+            b => panic!("fused kernels cover bits 1..=4, got {b}"),
+        }
     }
 }
 
@@ -77,15 +96,23 @@ pub(super) unsafe fn packed_matmul(
     y: &mut [f32],
     tile: &mut [f32],
 ) {
-    match bits {
-        1 => matmul_core::<1>(rp, d, x, t, y, tile),
-        2 => matmul_core::<2>(rp, d, x, t, y, tile),
-        3 => matmul_core::<3>(rp, d, x, t, y, tile),
-        4 => matmul_core::<4>(rp, d, x, t, y, tile),
-        b => panic!("fused kernels cover bits 1..=4, got {b}"),
+    // SAFETY: the cores need AVX2+FMA — this fn's target_feature
+    // contract — plus the entry-point length checks, forwarded intact.
+    unsafe {
+        match bits {
+            1 => matmul_core::<1>(rp, d, x, t, y, tile),
+            2 => matmul_core::<2>(rp, d, x, t, y, tile),
+            3 => matmul_core::<3>(rp, d, x, t, y, tile),
+            4 => matmul_core::<4>(rp, d, x, t, y, tile),
+            b => panic!("fused kernels cover bits 1..=4, got {b}"),
+        }
     }
 }
 
+/// # Safety
+/// Requires AVX2+FMA at runtime and the `kernels` entry-point length
+/// checks: `x` is `d_in`, `y` is `d_out`, `qacc` covers `dp`, and the
+/// repacked planes/scales/zeros are padded to `dp` columns.
 #[inline(always)]
 unsafe fn matvec_core<const BITS: usize>(
     rp: &Repacked,
@@ -94,65 +121,76 @@ unsafe fn matvec_core<const BITS: usize>(
     y: &mut [f32],
     qacc: &mut [f32],
 ) {
-    let dp = rp.dp;
-    let bpg = d.group / 8;
-    let masks = bit_masks();
-    for gi in 0..d.d_in / d.group {
-        qacc[..dp].fill(0.0);
-        let mut xsum = 0.0f32;
-        for bq in 0..bpg {
-            let br = gi * bpg + bq;
-            let x8 = &x[br * 8..br * 8 + 8];
-            if x8.iter().all(|&v| v == 0.0) {
-                continue;
-            }
-            xsum += x8.iter().sum::<f32>();
-            for p in 0..BITS {
-                let pw = PLANE_WEIGHTS[p];
-                let mut xw = [_mm256_setzero_ps(); 8];
-                for j in 0..8 {
-                    xw[j] = _mm256_set1_ps(x8[j] * pw);
+    // SAFETY: all pointer arithmetic stays inside the repack layout —
+    // plane rows and scale/zero rows are `dp` wide (multiple of 8, so
+    // every 8-wide load is in bounds) and stores into unpadded `y` take
+    // the scalar tail; AVX2+FMA comes from the caller's contract.
+    unsafe {
+        let dp = rp.dp;
+        let bpg = d.group / 8;
+        let masks = bit_masks();
+        for gi in 0..d.d_in / d.group {
+            qacc[..dp].fill(0.0);
+            let mut xsum = 0.0f32;
+            for bq in 0..bpg {
+                let br = gi * bpg + bq;
+                let x8 = &x[br * 8..br * 8 + 8];
+                if x8.iter().all(|&v| v == 0.0) {
+                    continue;
                 }
-                let row = rp.data.as_ptr().add((br * BITS + p) * dp);
-                let mut oc = 0;
-                while oc < dp {
-                    let v = load8(row.add(oc));
-                    let mut acc = _mm256_loadu_ps(qacc.as_ptr().add(oc));
+                xsum += x8.iter().sum::<f32>();
+                for p in 0..BITS {
+                    let pw = PLANE_WEIGHTS[p];
+                    let mut xw = [_mm256_setzero_ps(); 8];
                     for j in 0..8 {
-                        let hit =
-                            _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
-                        acc = _mm256_add_ps(
-                            acc,
-                            _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]),
-                        );
+                        xw[j] = _mm256_set1_ps(x8[j] * pw);
                     }
-                    _mm256_storeu_ps(qacc.as_mut_ptr().add(oc), acc);
-                    oc += 8;
+                    let row = rp.data.as_ptr().add((br * BITS + p) * dp);
+                    let mut oc = 0;
+                    while oc < dp {
+                        let v = load8(row.add(oc));
+                        let mut acc = _mm256_loadu_ps(qacc.as_ptr().add(oc));
+                        for j in 0..8 {
+                            let hit =
+                                _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+                            acc = _mm256_add_ps(
+                                acc,
+                                _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]),
+                            );
+                        }
+                        _mm256_storeu_ps(qacc.as_mut_ptr().add(oc), acc);
+                        oc += 8;
+                    }
                 }
             }
-        }
-        // epilogue: y += s ⊙ (qacc − z·xsum), vector main + scalar tail
-        // (y is unpadded; scales/zeros are padded so 8-wide loads are safe)
-        let srow = &rp.scales[gi * dp..][..dp];
-        let zrow = &rp.zeros[gi * dp..][..dp];
-        let xs = _mm256_set1_ps(xsum);
-        let mut o = 0;
-        while o + 8 <= d.d_out {
-            let q = _mm256_loadu_ps(qacc.as_ptr().add(o));
-            let z = _mm256_loadu_ps(zrow.as_ptr().add(o));
-            let sv = _mm256_loadu_ps(srow.as_ptr().add(o));
-            let acc = _mm256_fnmadd_ps(z, xs, q); // q − z·xsum
-            let yv = _mm256_loadu_ps(y.as_ptr().add(o));
-            _mm256_storeu_ps(y.as_mut_ptr().add(o), _mm256_fmadd_ps(sv, acc, yv));
-            o += 8;
-        }
-        while o < d.d_out {
-            y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
-            o += 1;
+            // epilogue: y += s ⊙ (qacc − z·xsum), vector main + scalar tail
+            // (y is unpadded; scales/zeros are padded so 8-wide loads are safe)
+            let srow = &rp.scales[gi * dp..][..dp];
+            let zrow = &rp.zeros[gi * dp..][..dp];
+            let xs = _mm256_set1_ps(xsum);
+            let mut o = 0;
+            while o + 8 <= d.d_out {
+                let q = _mm256_loadu_ps(qacc.as_ptr().add(o));
+                let z = _mm256_loadu_ps(zrow.as_ptr().add(o));
+                let sv = _mm256_loadu_ps(srow.as_ptr().add(o));
+                let acc = _mm256_fnmadd_ps(z, xs, q); // q − z·xsum
+                let yv = _mm256_loadu_ps(y.as_ptr().add(o));
+                _mm256_storeu_ps(y.as_mut_ptr().add(o), _mm256_fmadd_ps(sv, acc, yv));
+                o += 8;
+            }
+            while o < d.d_out {
+                y[o] += srow[o] * (qacc[o] - zrow[o] * xsum);
+                o += 1;
+            }
         }
     }
 }
 
+/// # Safety
+/// Requires AVX2+FMA at runtime and the `kernels` entry-point length
+/// checks: `x` is `t·d_in`, `y` is `t·d_out`, `tile` covers
+/// `group·dp`, and the repacked planes/scales/zeros are padded to `dp`
+/// columns.
 #[inline(always)]
 unsafe fn matmul_core<const BITS: usize>(
     rp: &Repacked,
@@ -162,44 +200,50 @@ unsafe fn matmul_core<const BITS: usize>(
     y: &mut [f32],
     tile: &mut [f32],
 ) {
-    let dp = rp.dp;
-    let bpg = d.group / 8;
-    let masks = bit_masks();
-    let mut pw_i = [_mm256_setzero_si256(); BITS];
-    for p in 0..BITS {
-        pw_i[p] = _mm256_set1_epi32(1 << p);
-    }
-    for gi in 0..d.d_in / d.group {
-        // decode this group's [group, dp] tile once (integer plane
-        // accumulate → cvt → (q − z)·s), padded columns decode to 0
-        let srow = &rp.scales[gi * dp..][..dp];
-        let zrow = &rp.zeros[gi * dp..][..dp];
-        for bq in 0..bpg {
-            let br = gi * bpg + bq;
-            let mut oc = 0;
-            while oc < dp {
-                let mut planes = [_mm256_setzero_si256(); BITS];
-                for p in 0..BITS {
-                    planes[p] = load8(rp.data.as_ptr().add((br * BITS + p) * dp + oc));
-                }
-                let sv = _mm256_loadu_ps(srow.as_ptr().add(oc));
-                let zv = _mm256_loadu_ps(zrow.as_ptr().add(oc));
-                for j in 0..8 {
-                    let mut qi = _mm256_setzero_si256();
-                    for p in 0..BITS {
-                        let hit = _mm256_cmpeq_epi32(
-                            _mm256_and_si256(planes[p], masks[j]),
-                            masks[j],
-                        );
-                        qi = _mm256_add_epi32(qi, _mm256_and_si256(hit, pw_i[p]));
-                    }
-                    let w = _mm256_mul_ps(_mm256_sub_ps(_mm256_cvtepi32_ps(qi), zv), sv);
-                    _mm256_storeu_ps(tile.as_mut_ptr().add((bq * 8 + j) * dp + oc), w);
-                }
-                oc += 8;
-            }
+    // SAFETY: tile stores index `(bq·8 + j)·dp + oc` with `bq·8 + j <
+    // group` and `oc < dp`, inside the caller-sized `group·dp` scratch;
+    // plane reads stay inside padded rows; AVX2+FMA per the contract.
+    unsafe {
+        let dp = rp.dp;
+        let bpg = d.group / 8;
+        let masks = bit_masks();
+        let mut pw_i = [_mm256_setzero_si256(); BITS];
+        for p in 0..BITS {
+            pw_i[p] = _mm256_set1_epi32(1 << p);
         }
-        token_acc(rp, tile, d.group, x, t, &d, gi * d.group, y);
+        for gi in 0..d.d_in / d.group {
+            // decode this group's [group, dp] tile once (integer plane
+            // accumulate → cvt → (q − z)·s), padded columns decode to 0
+            let srow = &rp.scales[gi * dp..][..dp];
+            let zrow = &rp.zeros[gi * dp..][..dp];
+            for bq in 0..bpg {
+                let br = gi * bpg + bq;
+                let mut oc = 0;
+                while oc < dp {
+                    let mut planes = [_mm256_setzero_si256(); BITS];
+                    for p in 0..BITS {
+                        planes[p] = load8(rp.data.as_ptr().add((br * BITS + p) * dp + oc));
+                    }
+                    let sv = _mm256_loadu_ps(srow.as_ptr().add(oc));
+                    let zv = _mm256_loadu_ps(zrow.as_ptr().add(oc));
+                    for j in 0..8 {
+                        let mut qi = _mm256_setzero_si256();
+                        for p in 0..BITS {
+                            let hit = _mm256_cmpeq_epi32(
+                                _mm256_and_si256(planes[p], masks[j]),
+                                masks[j],
+                            );
+                            qi = _mm256_add_epi32(qi, _mm256_and_si256(hit, pw_i[p]));
+                        }
+                        let w =
+                            _mm256_mul_ps(_mm256_sub_ps(_mm256_cvtepi32_ps(qi), zv), sv);
+                        _mm256_storeu_ps(tile.as_mut_ptr().add((bq * 8 + j) * dp + oc), w);
+                    }
+                    oc += 8;
+                }
+            }
+            token_acc(rp, tile, d.group, x, t, &d, gi * d.group, y);
+        }
     }
 }
 
@@ -214,47 +258,54 @@ pub(super) unsafe fn binary_matvec(
     y: &mut [f32],
     qacc: &mut [f32],
 ) {
-    let dp = rp.dp;
-    let masks = bit_masks();
-    qacc[..dp].fill(0.0);
-    let mut xsum = 0.0f32;
-    for (br, x8) in x.chunks_exact(8).enumerate() {
-        if x8.iter().all(|&v| v == 0.0) {
-            continue;
-        }
-        xsum += x8.iter().sum::<f32>();
-        let mut xw = [_mm256_setzero_ps(); 8];
-        for j in 0..8 {
-            xw[j] = _mm256_set1_ps(x8[j]);
-        }
-        let row = rp.data.as_ptr().add(br * dp);
-        let mut oc = 0;
-        while oc < dp {
-            let v = load8(row.add(oc));
-            let mut acc = _mm256_loadu_ps(qacc.as_ptr().add(oc));
-            for j in 0..8 {
-                let hit = _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
-                acc = _mm256_add_ps(acc, _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]));
+    // SAFETY: plane rows and `qacc` are `dp` wide (multiple of 8), so
+    // the 8-wide loop loads/stores are in bounds; `y` writes past the
+    // vector main loop take the scalar tail; AVX2+FMA per this fn's
+    // target_feature contract.
+    unsafe {
+        let dp = rp.dp;
+        let masks = bit_masks();
+        qacc[..dp].fill(0.0);
+        let mut xsum = 0.0f32;
+        for (br, x8) in x.chunks_exact(8).enumerate() {
+            if x8.iter().all(|&v| v == 0.0) {
+                continue;
             }
-            _mm256_storeu_ps(qacc.as_mut_ptr().add(oc), acc);
-            oc += 8;
+            xsum += x8.iter().sum::<f32>();
+            let mut xw = [_mm256_setzero_ps(); 8];
+            for j in 0..8 {
+                xw[j] = _mm256_set1_ps(x8[j]);
+            }
+            let row = rp.data.as_ptr().add(br * dp);
+            let mut oc = 0;
+            while oc < dp {
+                let v = load8(row.add(oc));
+                let mut acc = _mm256_loadu_ps(qacc.as_ptr().add(oc));
+                for j in 0..8 {
+                    let hit = _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+                    acc =
+                        _mm256_add_ps(acc, _mm256_and_ps(_mm256_castsi256_ps(hit), xw[j]));
+                }
+                _mm256_storeu_ps(qacc.as_mut_ptr().add(oc), acc);
+                oc += 8;
+            }
         }
-    }
-    // Eq. 9 epilogue: y += α ⊙ (2·qacc − xsum)
-    let xs = _mm256_set1_ps(xsum);
-    let two = _mm256_set1_ps(2.0);
-    let mut o = 0;
-    while o + 8 <= d_out {
-        let q = _mm256_loadu_ps(qacc.as_ptr().add(o));
-        let a = _mm256_loadu_ps(rp.scales.as_ptr().add(o));
-        let acc = _mm256_fmsub_ps(two, q, xs); // 2q − xsum
-        let yv = _mm256_loadu_ps(y.as_ptr().add(o));
-        _mm256_storeu_ps(y.as_mut_ptr().add(o), _mm256_fmadd_ps(a, acc, yv));
-        o += 8;
-    }
-    while o < d_out {
-        y[o] += rp.scales[o] * (2.0 * qacc[o] - xsum);
-        o += 1;
+        // Eq. 9 epilogue: y += α ⊙ (2·qacc − xsum)
+        let xs = _mm256_set1_ps(xsum);
+        let two = _mm256_set1_ps(2.0);
+        let mut o = 0;
+        while o + 8 <= d_out {
+            let q = _mm256_loadu_ps(qacc.as_ptr().add(o));
+            let a = _mm256_loadu_ps(rp.scales.as_ptr().add(o));
+            let acc = _mm256_fmsub_ps(two, q, xs); // 2q − xsum
+            let yv = _mm256_loadu_ps(y.as_ptr().add(o));
+            _mm256_storeu_ps(y.as_mut_ptr().add(o), _mm256_fmadd_ps(a, acc, yv));
+            o += 8;
+        }
+        while o < d_out {
+            y[o] += rp.scales[o] * (2.0 * qacc[o] - xsum);
+            o += 1;
+        }
     }
 }
 
@@ -270,39 +321,50 @@ pub(super) unsafe fn binary_matmul(
     y: &mut [f32],
     tile: &mut [f32],
 ) {
-    let dp = rp.dp;
-    let masks = bit_masks();
-    let two = _mm256_set1_ps(2.0);
-    let onef = _mm256_set1_ps(1.0);
-    let onei = _mm256_set1_epi32(1);
-    let mut row0 = 0;
-    while row0 < d.d_in {
-        // decode an α·(2b−1) tile for a block of input rows (d.group =
-        // the row-block size here), reuse it for every token
-        let rows = d.group.min(d.d_in - row0);
-        for bq in 0..rows / 8 {
-            let br = row0 / 8 + bq;
-            let mut oc = 0;
-            while oc < dp {
-                let v = load8(rp.data.as_ptr().add(br * dp + oc));
-                let a = _mm256_loadu_ps(rp.scales.as_ptr().add(oc));
-                for j in 0..8 {
-                    let hit = _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
-                    let b = _mm256_cvtepi32_ps(_mm256_and_si256(hit, onei));
-                    let w = _mm256_mul_ps(a, _mm256_fmsub_ps(two, b, onef));
-                    _mm256_storeu_ps(tile.as_mut_ptr().add((bq * 8 + j) * dp + oc), w);
+    // SAFETY: tile stores stay inside the caller-sized `rows·dp`
+    // scratch and plane reads inside padded `dp`-wide rows; AVX2+FMA
+    // per this fn's target_feature contract.
+    unsafe {
+        let dp = rp.dp;
+        let masks = bit_masks();
+        let two = _mm256_set1_ps(2.0);
+        let onef = _mm256_set1_ps(1.0);
+        let onei = _mm256_set1_epi32(1);
+        let mut row0 = 0;
+        while row0 < d.d_in {
+            // decode an α·(2b−1) tile for a block of input rows (d.group =
+            // the row-block size here), reuse it for every token
+            let rows = d.group.min(d.d_in - row0);
+            for bq in 0..rows / 8 {
+                let br = row0 / 8 + bq;
+                let mut oc = 0;
+                while oc < dp {
+                    let v = load8(rp.data.as_ptr().add(br * dp + oc));
+                    let a = _mm256_loadu_ps(rp.scales.as_ptr().add(oc));
+                    for j in 0..8 {
+                        let hit =
+                            _mm256_cmpeq_epi32(_mm256_and_si256(v, masks[j]), masks[j]);
+                        let b = _mm256_cvtepi32_ps(_mm256_and_si256(hit, onei));
+                        let w = _mm256_mul_ps(a, _mm256_fmsub_ps(two, b, onef));
+                        _mm256_storeu_ps(tile.as_mut_ptr().add((bq * 8 + j) * dp + oc), w);
+                    }
+                    oc += 8;
                 }
-                oc += 8;
             }
+            token_acc(rp, tile, rows, x, t, &d, row0, y);
+            row0 += rows;
         }
-        token_acc(rp, tile, rows, x, t, &d, row0, y);
-        row0 += rows;
     }
 }
 
 /// `y[ti] += x[ti, row0..row0+rows] @ tile` for every token row: the
 /// output axis is chunked 16 floats wide (2 ymm accumulators per token)
 /// so each y chunk stays in registers across the whole row block.
+///
+/// # Safety
+/// Requires AVX2+FMA at runtime; `tile` must hold `rows·dp` decoded
+/// weights, `x` `t·d_in` inputs, and `y` `t·d_out` outputs (the entry
+/// points assert the latter two).
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 unsafe fn token_acc(
@@ -315,57 +377,62 @@ unsafe fn token_acc(
     row0: usize,
     y: &mut [f32],
 ) {
-    let dp = rp.dp;
-    let mut oc = 0;
-    while oc + 16 <= d.d_out {
-        for ti in 0..t {
-            let xr = &x[ti * d.d_in + row0..][..rows];
-            let yp = y.as_mut_ptr().add(ti * d.d_out + oc);
-            let mut a0 = _mm256_loadu_ps(yp);
-            let mut a1 = _mm256_loadu_ps(yp.add(8));
-            for (rq, &xv) in xr.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
+    // SAFETY: y pointers stay under `t·d_out` (the 16/8-wide loops only
+    // run while `oc + width <= d_out`) and tile pointers under
+    // `rows·dp`; AVX2+FMA comes from the caller's contract.
+    unsafe {
+        let dp = rp.dp;
+        let mut oc = 0;
+        while oc + 16 <= d.d_out {
+            for ti in 0..t {
+                let xr = &x[ti * d.d_in + row0..][..rows];
+                let yp = y.as_mut_ptr().add(ti * d.d_out + oc);
+                let mut a0 = _mm256_loadu_ps(yp);
+                let mut a1 = _mm256_loadu_ps(yp.add(8));
+                for (rq, &xv) in xr.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let tp = tile.as_ptr().add(rq * dp + oc);
+                    let xb = _mm256_set1_ps(xv);
+                    a0 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp), a0);
+                    a1 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp.add(8)), a1);
                 }
-                let tp = tile.as_ptr().add(rq * dp + oc);
-                let xb = _mm256_set1_ps(xv);
-                a0 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp), a0);
-                a1 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(tp.add(8)), a1);
+                _mm256_storeu_ps(yp, a0);
+                _mm256_storeu_ps(yp.add(8), a1);
             }
-            _mm256_storeu_ps(yp, a0);
-            _mm256_storeu_ps(yp.add(8), a1);
+            oc += 16;
         }
-        oc += 16;
-    }
-    if oc + 8 <= d.d_out {
-        for ti in 0..t {
-            let xr = &x[ti * d.d_in + row0..][..rows];
-            let yp = y.as_mut_ptr().add(ti * d.d_out + oc);
-            let mut a0 = _mm256_loadu_ps(yp);
-            for (rq, &xv) in xr.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
+        if oc + 8 <= d.d_out {
+            for ti in 0..t {
+                let xr = &x[ti * d.d_in + row0..][..rows];
+                let yp = y.as_mut_ptr().add(ti * d.d_out + oc);
+                let mut a0 = _mm256_loadu_ps(yp);
+                for (rq, &xv) in xr.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    a0 = _mm256_fmadd_ps(
+                        _mm256_set1_ps(xv),
+                        _mm256_loadu_ps(tile.as_ptr().add(rq * dp + oc)),
+                        a0,
+                    );
                 }
-                a0 = _mm256_fmadd_ps(
-                    _mm256_set1_ps(xv),
-                    _mm256_loadu_ps(tile.as_ptr().add(rq * dp + oc)),
-                    a0,
-                );
+                _mm256_storeu_ps(yp, a0);
             }
-            _mm256_storeu_ps(yp, a0);
+            oc += 8;
         }
-        oc += 8;
-    }
-    if oc < d.d_out {
-        for ti in 0..t {
-            let xr = &x[ti * d.d_in + row0..][..rows];
-            for (rq, &xv) in xr.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let trow = &tile[rq * dp..][..dp];
-                for o in oc..d.d_out {
-                    y[ti * d.d_out + o] += xv * trow[o];
+        if oc < d.d_out {
+            for ti in 0..t {
+                let xr = &x[ti * d.d_in + row0..][..rows];
+                for (rq, &xv) in xr.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let trow = &tile[rq * dp..][..dp];
+                    for o in oc..d.d_out {
+                        y[ti * d.d_out + o] += xv * trow[o];
+                    }
                 }
             }
         }

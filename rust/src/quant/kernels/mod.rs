@@ -192,6 +192,7 @@ pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
 // --------------------------------------------------------- entry points
 
 /// Fused `y += x @ dequant(pm)` for one token, ISA-dispatched.
+// analyze: hot-path
 pub fn packed_matvec(pm: &PackedMatrix, x: &[f32], y: &mut [f32], s: &mut Scratch) {
     assert_eq!(x.len(), pm.d_in);
     assert_eq!(y.len(), pm.d_out);
@@ -201,6 +202,8 @@ pub fn packed_matvec(pm: &PackedMatrix, x: &[f32], y: &mut [f32], s: &mut Scratc
     let qacc = grow(&mut s.qacc, rp.dp);
     match active_isa() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_isa() returned Avx2Fma only after the cached
+        // CPUID check; slice lengths were asserted above.
         Isa::Avx2Fma => unsafe {
             avx2::packed_matvec(pm.bits as usize, rp, dims, x, y, qacc)
         },
@@ -217,6 +220,7 @@ pub fn packed_matvec(pm: &PackedMatrix, x: &[f32], y: &mut [f32], s: &mut Scratc
 /// Batched fused `y += x @ dequant(pm)` over `t` tokens (`x` row-major
 /// `[t, d_in]`, `y` `[t, d_out]`): each group tile is decoded into
 /// scratch once and reused by every token.
+// analyze: hot-path
 pub fn packed_matmul(pm: &PackedMatrix, x: &[f32], t: usize, y: &mut [f32], s: &mut Scratch) {
     assert_eq!(x.len(), t * pm.d_in);
     assert_eq!(y.len(), t * pm.d_out);
@@ -226,6 +230,8 @@ pub fn packed_matmul(pm: &PackedMatrix, x: &[f32], t: usize, y: &mut [f32], s: &
     let tile = grow(&mut s.tile, pm.group * rp.dp);
     match active_isa() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_isa() returned Avx2Fma only after the cached
+        // CPUID check; slice lengths were asserted above.
         Isa::Avx2Fma => unsafe {
             avx2::packed_matmul(pm.bits as usize, rp, dims, x, t, y, tile)
         },
@@ -282,6 +288,7 @@ pub fn packed_matmul_scaled(
 }
 
 /// Fused binary matvec (Eq. 9), ISA-dispatched.
+// analyze: hot-path
 pub fn binary_matvec(bm: &BinaryMatrix, x: &[f32], y: &mut [f32], s: &mut Scratch) {
     assert_eq!(x.len(), bm.d_in);
     assert_eq!(y.len(), bm.d_out);
@@ -289,6 +296,8 @@ pub fn binary_matvec(bm: &BinaryMatrix, x: &[f32], y: &mut [f32], s: &mut Scratc
     let qacc = grow(&mut s.qacc, rp.dp);
     match active_isa() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_isa() returned Avx2Fma only after the cached
+        // CPUID check; slice lengths were asserted above.
         Isa::Avx2Fma => unsafe { avx2::binary_matvec(rp, bm.d_out, x, y, qacc) },
         _ => scalar::binary_matvec(rp, bm.d_out, x, y, qacc),
     }
@@ -300,6 +309,7 @@ pub fn binary_matvec(bm: &BinaryMatrix, x: &[f32], y: &mut [f32], s: &mut Scratc
 const BINARY_TILE_ROWS: usize = 64;
 
 /// Batched fused binary matmul over `t` tokens.
+// analyze: hot-path
 pub fn binary_matmul(bm: &BinaryMatrix, x: &[f32], t: usize, y: &mut [f32], s: &mut Scratch) {
     assert_eq!(x.len(), t * bm.d_in);
     assert_eq!(y.len(), t * bm.d_out);
@@ -309,6 +319,8 @@ pub fn binary_matmul(bm: &BinaryMatrix, x: &[f32], t: usize, y: &mut [f32], s: &
     let tile = grow(&mut s.tile, rows * rp.dp);
     match active_isa() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_isa() returned Avx2Fma only after the cached
+        // CPUID check; slice lengths were asserted above.
         Isa::Avx2Fma => unsafe { avx2::binary_matmul(rp, dims, x, t, y, tile) },
         _ => scalar::binary_matmul(rp, dims, x, t, y, tile),
     }

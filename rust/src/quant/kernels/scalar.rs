@@ -14,6 +14,7 @@ use super::repack::Repacked;
 use super::{Dims, BIT_LUT, PLANE_WEIGHTS};
 
 /// `y += x @ dequant` for one token.
+// analyze: hot-path
 pub(super) fn matvec<const BITS: usize>(
     rp: &Repacked,
     d: Dims,
@@ -69,6 +70,7 @@ pub(super) fn matvec<const BITS: usize>(
 
 /// Batched `y += x @ dequant` over `t` tokens: decode each group tile
 /// into scratch once, reuse it for every token row.
+// analyze: hot-path
 pub(super) fn matmul<const BITS: usize>(
     rp: &Repacked,
     d: Dims,
@@ -105,6 +107,7 @@ pub(super) fn matmul<const BITS: usize>(
 
 /// Binary Eq. 9: accumulate `qacc[o] = Σ_{bit=1} x_r`, one α multiply
 /// per output channel in the epilogue.
+// analyze: hot-path
 pub(super) fn binary_matvec(rp: &Repacked, d_out: usize, x: &[f32], y: &mut [f32], qacc: &mut [f32]) {
     let dp = rp.dp;
     qacc[..dp].fill(0.0);
@@ -134,6 +137,7 @@ pub(super) fn binary_matvec(rp: &Repacked, d_out: usize, x: &[f32], y: &mut [f32
 
 /// Batched binary: decode the `α·(2b−1)` tile for a block of input rows
 /// (`d.group` = the row-block size here) and reuse it for every token.
+// analyze: hot-path
 pub(super) fn binary_matmul(
     rp: &Repacked,
     d: Dims,
@@ -162,6 +166,7 @@ pub(super) fn binary_matmul(
 }
 
 /// `y[ti] += x[ti, row0..row0+rows] @ tile` for every token row.
+// analyze: hot-path
 #[allow(clippy::too_many_arguments)]
 fn token_acc(
     rp: &Repacked,

@@ -36,6 +36,7 @@ pub struct QuantExpert {
 
 impl QuantExpert {
     /// `out += w * F(x)` with fused dequant matvecs.
+    // analyze: hot-path
     pub fn ffn_row_acc(&self, x: &[f32], w: f32, out: &mut [f32]) {
         kernels::with_scratch(|s| self.ffn_row_sc(x, w, out, s));
     }
@@ -45,6 +46,7 @@ impl QuantExpert {
     /// come out of the thread's kernel scratch arena instead of three
     /// fresh `Vec`s per expert call — zero steady-state allocation on the
     /// decode hot path.
+    // analyze: hot-path
     pub fn ffn_row_sc(&self, x: &[f32], w: f32, out: &mut [f32], s: &mut Scratch) {
         let f = self.wg.d_out();
         let mut g = s.take_pool(0, f);
@@ -75,6 +77,7 @@ impl QuantExpert {
     /// Batched `out += F(x)` over a token block: one decoded weight tile
     /// serves every token (the native analog of running the Pallas
     /// expert-FFN kernel on a padded token bucket).
+    // analyze: hot-path
     pub fn ffn_batch_acc(&self, x: &Tensor2, out: &mut Tensor2) {
         assert_eq!(x.cols, self.wg.d_in());
         assert_eq!((out.rows, out.cols), (x.rows, self.wd.d_out()));
@@ -85,6 +88,7 @@ impl QuantExpert {
     /// (`x: [t, d_model]`, `out: [t, d_model]`), intermediates pooled in
     /// the scratch arena. Same zero-allocation contract as
     /// [`ffn_row_sc`](Self::ffn_row_sc).
+    // analyze: hot-path
     pub fn ffn_batch_sc(&self, x: &[f32], t: usize, out: &mut [f32], s: &mut Scratch) {
         let f = self.wg.d_out();
         let mut g = s.take_pool(0, t * f);

@@ -11,6 +11,9 @@ pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
     if n != data.len() {
         return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
     }
+    // SAFETY: an f32 slice is always valid to reinterpret as its raw
+    // bytes — same allocation, same length in bytes (len * 4), no
+    // alignment requirement on u8 — and the view dies with `data`.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)

@@ -25,9 +25,12 @@ pub struct Mmap {
     owned: Option<Vec<u8>>,
 }
 
-// The mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
-// lifetime, so shared references across threads are safe.
+// SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) for its
+// whole lifetime and owned buffers move with the struct, so sending the
+// view to another thread cannot observe a mutation or a dangling ptr.
 unsafe impl Send for Mmap {}
+// SAFETY: same invariant as Send — the bytes behind `ptr` never change
+// after construction, so concurrent shared reads are safe.
 unsafe impl Sync for Mmap {}
 
 impl Mmap {

@@ -1,0 +1,13 @@
+//! Gauge-staleness pass fixture (seeded violation, with metrics.rs):
+//! `step` bumps a counter but never republishes the marked gauge.
+//! Never compiled — lexed only.
+
+pub struct DecodeEngine {
+    pub metrics: super::metrics::Metrics,
+}
+
+impl DecodeEngine {
+    pub fn step(&mut self) {
+        self.metrics.steps += 1;
+    }
+}

@@ -1,0 +1,11 @@
+//! Gauge-staleness pass fixture (seeded violation): `kv_pages` is
+//! marked as a gauge but the sibling engine fixture's `step` never
+//! refreshes it. Never compiled — lexed only.
+
+pub struct Metrics {
+    /// Pages currently owned by live sequences or the prefix tree.
+    // analyze: gauge
+    pub kv_pages: u64,
+    /// Monotone counter — not a gauge, not checked.
+    pub steps: u64,
+}

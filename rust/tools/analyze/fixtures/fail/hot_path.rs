@@ -1,0 +1,14 @@
+//! Hot-path pass fixture (seeded violations): a marked function that
+//! allocates three different ways. Never compiled — lexed only.
+
+// analyze: hot-path
+pub fn softmax_slow(x: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    let exps: Vec<f32> = x.iter().map(|v| v.exp()).collect();
+    let denom: f32 = exps.iter().sum();
+    for e in &exps {
+        out.push(e / denom);
+    }
+    let _scale = vec![denom; x.len()];
+    out
+}

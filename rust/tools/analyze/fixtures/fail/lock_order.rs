@@ -1,0 +1,22 @@
+//! Lock-order pass fixture (seeded violations): one hierarchy
+//! inversion, one blocking write under a held lock. Never compiled.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+pub struct Engine;
+pub struct Pool;
+
+pub fn bad_order(pool: &Mutex<Pool>, eng: &Mutex<Engine>) {
+    let p = pool.lock().unwrap();
+    let e = eng.lock().unwrap();
+    drop(e);
+    drop(p);
+}
+
+pub fn io_under_lock(eng: &Mutex<Engine>, sock: &mut TcpStream) {
+    let e = eng.lock().unwrap();
+    sock.write_all(b"tick").unwrap();
+    drop(e);
+}

@@ -1,0 +1,18 @@
+//! Unsafe-audit pass fixture (seeded violations): an impl, a fn and a
+//! block, all without justification. Never compiled — lexed only.
+
+pub struct RawView {
+    ptr: *const f32,
+    len: usize,
+}
+
+unsafe impl Send for RawView {}
+
+pub unsafe fn read_first(v: &RawView) -> f32 {
+    *v.ptr
+}
+
+pub fn peek(v: &RawView) -> f32 {
+    let x = unsafe { *v.ptr.add(v.len - 1) };
+    x
+}

@@ -1,0 +1,13 @@
+//! Protocol-point pass fixture (seeded violations): hand-rolled wire
+//! frames outside coordinator/protocol.rs. Never compiled — lexed only.
+
+pub fn handroll_busy(id: u64) -> String {
+    let mut s = String::from("BUSY id=");
+    s.push_str(&id.to_string());
+    s.push('\n');
+    s
+}
+
+pub fn handroll_fetch(eid: u32) -> Vec<u8> {
+    format!("FETCH {eid}\n").into_bytes()
+}

@@ -1,0 +1,13 @@
+//! Gauge-staleness pass fixture (clean): `step` republishes every
+//! marked gauge each call. Never compiled — lexed only.
+
+pub struct DecodeEngine {
+    pub metrics: super::metrics::Metrics,
+}
+
+impl DecodeEngine {
+    pub fn step(&mut self, live_pages: u64) {
+        self.metrics.steps += 1;
+        self.metrics.kv_pages = live_pages;
+    }
+}

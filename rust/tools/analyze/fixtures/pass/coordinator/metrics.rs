@@ -1,0 +1,10 @@
+//! Gauge-staleness pass fixture (clean): the marked gauge is refreshed
+//! by `step` in the sibling engine fixture. Never compiled — lexed only.
+
+pub struct Metrics {
+    /// Pages currently owned by live sequences or the prefix tree.
+    // analyze: gauge
+    pub kv_pages: u64,
+    /// Monotone counter — not a gauge, not checked.
+    pub steps: u64,
+}

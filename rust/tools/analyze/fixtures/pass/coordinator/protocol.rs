@@ -1,0 +1,15 @@
+//! Protocol-point pass fixture (clean): wire framing literals are legal
+//! here — this path is the single parse/format point the pass protects.
+//! Never compiled — lexed only.
+
+pub fn format_ok(id: u64) -> String {
+    format!("OK id={id}\n")
+}
+
+pub fn format_busy(id: u64) -> String {
+    format!("BUSY id={id} retry=1\n")
+}
+
+pub fn format_fetch(eid: u32) -> String {
+    format!("FETCH {eid}\n")
+}

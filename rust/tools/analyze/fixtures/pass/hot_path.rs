@@ -1,0 +1,28 @@
+//! Hot-path pass fixture (clean): a marked function that only writes
+//! into caller scratch, a waived one-time copy, and an unmarked helper
+//! that allocates freely. Never compiled — lexed only.
+
+// analyze: hot-path
+pub fn dot(a: &[f32], b: &[f32], acc: &mut f32) {
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    *acc = s;
+}
+
+// analyze: hot-path
+pub fn warm(src: &[f32], scratch: &mut Vec<f32>) {
+    if scratch.is_empty() {
+        // analyze: allow(alloc): one-time warmup copy, not per token
+        *scratch = src.to_vec();
+    }
+    for v in scratch.iter_mut() {
+        *v *= 2.0;
+    }
+}
+
+pub fn setup(n: usize) -> Vec<f32> {
+    // unmarked: setup-time code may allocate
+    vec![0.0; n]
+}

@@ -1,0 +1,47 @@
+//! Lock-order pass fixture (clean): acquisitions follow the declared
+//! hierarchy, guards drop before lower-ranked locks are retaken, and
+//! blocking I/O only runs lock-free. Never compiled — lexed only.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+pub struct Engine;
+pub struct Pool;
+
+pub fn good_order(eng: &Mutex<Engine>, pool: &Mutex<Pool>) {
+    let e = eng.lock().unwrap();
+    let p = pool.lock().unwrap();
+    drop(p);
+    drop(e);
+}
+
+pub fn reacquire_after_drop(pool: &Mutex<Pool>, eng: &Mutex<Engine>) {
+    let p = pool.lock().unwrap();
+    drop(p);
+    let e = eng.lock().unwrap();
+    drop(e);
+}
+
+pub fn scoped_release(pool: &Mutex<Pool>, eng: &Mutex<Engine>) {
+    {
+        let p = pool.lock().unwrap();
+        let _ = &*p;
+    }
+    let e = eng.lock().unwrap();
+    drop(e);
+}
+
+pub fn statement_temporary(eng: &Mutex<Engine>, sock: &mut TcpStream) {
+    // the guard is a statement temporary: it cannot outlive this line
+    eng.lock().unwrap();
+    sock.write_all(b"ok").unwrap();
+}
+
+pub fn waived_inversion(pool: &Mutex<Pool>, eng: &Mutex<Engine>) {
+    let p = pool.lock().unwrap();
+    // analyze: allow(lock-order): startup-only path, both locks private
+    let e = eng.lock().unwrap();
+    drop(e);
+    drop(p);
+}

@@ -1,0 +1,11 @@
+//! Protocol-point pass fixture (clean, outside protocol.rs): literals
+//! that merely MENTION a wire tag mid-string are prose, not framing —
+//! only a literal that begins with a tag is a frame. Never compiled.
+
+pub fn fetch_error(code: u32) -> String {
+    format!("shard rejected FETCH request: code {code}")
+}
+
+pub fn busy_hint() -> &'static str {
+    "server replied BUSY id=<tag>; retry with backoff"
+}

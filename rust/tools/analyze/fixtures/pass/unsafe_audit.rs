@@ -1,0 +1,21 @@
+//! Unsafe-audit pass fixture (clean): every site carries its
+//! justification — `// SAFETY:` on impls and blocks, a `# Safety` doc
+//! section on unsafe fns. Never compiled — lexed only.
+
+pub struct SharedTable {
+    ptr: *const f32,
+    len: usize,
+}
+
+// SAFETY: the pointer refers to an immutable 'static mapping that is
+// never mutated after initialization, so concurrent reads are safe.
+unsafe impl Sync for SharedTable {}
+
+/// Reads one element without a bounds check.
+///
+/// # Safety
+/// `i` must be less than `t.len` and the mapping must outlive the call.
+pub unsafe fn get_unchecked(t: &SharedTable, i: usize) -> f32 {
+    // SAFETY: the caller upholds the index bound per this fn's contract.
+    unsafe { *t.ptr.add(i) }
+}

@@ -1,0 +1,1081 @@
+//! `mcsharp-analyze` — repo-native static analysis for the `mcsharp`
+//! serving stack. Five passes over `rust/src/` enforce the invariants
+//! the type system cannot:
+//!
+//! 1. **lock-order** — mutexes are acquired in the declared hierarchy
+//!    `scheduler → engine → pool → store` (deadlock freedom), and no
+//!    blocking I/O call runs while a classified lock is held.
+//! 2. **hot-path** — functions marked `// analyze: hot-path` never
+//!    allocate (`Vec::new`, `vec!`, `.to_vec()`, `.collect()`,
+//!    `.clone()`, `Box::new`, `String` construction, `format!`); each
+//!    deliberate exception carries `// analyze: allow(alloc): <why>`.
+//! 3. **unsafe-audit** — every `unsafe` block/impl has an adjacent
+//!    `// SAFETY:` comment, every `unsafe fn` a `# Safety` doc, and the
+//!    per-file site counts match the checked-in inventory table in
+//!    `ANALYSIS.md` (drift or stale rows are findings).
+//! 4. **protocol-point** — wire-framing string literals (`OK id=`,
+//!    `BUSY id=`, `FETCH `, …) appear only in
+//!    `coordinator/protocol.rs`, the single parse/format point.
+//! 5. **gauge-staleness** — every `Metrics` field marked
+//!    `// analyze: gauge` is re-assigned inside `DecodeEngine::step`,
+//!    so `STATS`/`METRICS` can never silently publish stale gauges.
+//!
+//! The analysis is a hand-rolled lexer plus token-stream walks — no
+//! external parser crates (this build environment has no crates.io
+//! access), no type information, per-function scope only. `#[cfg(test)]`
+//! regions are exempt. `tools/analyze_mirror.py` at the repo root is a
+//! line-for-line Python mirror that runs without a Rust toolchain; any
+//! behavioural change must land in both.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+// --------------------------------------------------------------- lexer
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Comment,
+    Str,
+    Char,
+    Lifetime,
+    Ident,
+    Num,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    fn is(&self, kind: Kind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+/// Tokenize Rust source: comments, string/char/lifetime literals,
+/// identifiers, numbers, single-char punctuation. Enough fidelity for
+/// token-stream analysis; not a full grammar.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let span = |a: usize, b: usize| cs[a..b.min(n)].iter().collect::<String>();
+    let mut toks = Vec::new();
+    let (mut i, mut line) = (0usize, 1usize);
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let mut j = i;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Comment, text: span(i, j), line });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let (mut depth, mut j, start) = (1usize, i + 2, line);
+            while j < n && depth > 0 {
+                if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Comment, text: span(i, j), line: start });
+            i = j;
+            continue;
+        }
+        // raw / byte-raw strings: r"..", r#".."#, br".."
+        if c == 'r' || (c == 'b' && i + 1 < n && cs[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let h0 = j;
+            while j < n && cs[j] == '#' {
+                j += 1;
+            }
+            let hashes = j - h0;
+            if j < n && cs[j] == '"' {
+                let start = line;
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if cs[j] == '"' {
+                        let mut k = j + 1;
+                        while k < n && k - j - 1 < hashes && cs[k] == '#' {
+                            k += 1;
+                        }
+                        if k - j - 1 == hashes {
+                            j = k;
+                            break;
+                        }
+                    }
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                toks.push(Tok { kind: Kind::Str, text: span(i, j), line: start });
+                i = j;
+                continue;
+            }
+            // not a raw string opener — fall through to the ident arm
+        }
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Str, text: span(i, j), line });
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // lifetime ('a) vs char literal ('x', '\n', '\'')
+            if i + 1 < n && (cs[i + 1].is_ascii_alphabetic() || cs[i + 1] == '_') {
+                let mut j = i + 2;
+                while j < n && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                if j >= n || cs[j] != '\'' {
+                    toks.push(Tok { kind: Kind::Lifetime, text: span(i, j), line });
+                    i = j;
+                    continue;
+                }
+            }
+            let mut j = i + 1;
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\'' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Char, text: span(i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < n && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: span(i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Num, text: span(i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Drop `#[cfg(test)] <item> { .. }` regions — tests are exempt from
+/// every pass (they may hold wire literals, allocate, and take locks in
+/// arbitrary orders on purpose).
+fn strip_tests(toks: Vec<Tok>) -> Vec<Tok> {
+    let mut out = Vec::with_capacity(toks.len());
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        let is_cfg_test = toks[i].is(Kind::Punct, "#")
+            && i + 6 < n
+            && toks[i + 1].is(Kind::Punct, "[")
+            && toks[i + 2].is(Kind::Ident, "cfg")
+            && toks[i + 3].is(Kind::Punct, "(")
+            && toks[i + 4].is(Kind::Ident, "test")
+            && toks[i + 5].is(Kind::Punct, ")")
+            && toks[i + 6].is(Kind::Punct, "]");
+        if is_cfg_test {
+            let mut j = i + 7;
+            while j < n && !toks[j].is(Kind::Punct, "{") {
+                if toks[j].is(Kind::Punct, ";") {
+                    break; // cfg(test) on a bodiless item
+                }
+                j += 1;
+            }
+            if j < n && toks[j].is(Kind::Punct, "{") {
+                let mut depth = 0i64;
+                while j < n {
+                    if toks[j].is(Kind::Punct, "{") {
+                        depth += 1;
+                    } else if toks[j].is(Kind::Punct, "}") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            i = j + 1;
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// One lexed source file: raw lines (for comment-adjacency checks),
+/// the full token stream, and the comment-free code stream — both with
+/// `#[cfg(test)]` regions removed.
+pub struct SrcFile {
+    pub rel: String,
+    lines: Vec<String>,
+    toks: Vec<Tok>,
+    code: Vec<Tok>,
+}
+
+impl SrcFile {
+    pub fn new(rel: &str, text: &str) -> SrcFile {
+        let toks = strip_tests(lex(text));
+        let code = toks.iter().filter(|t| t.kind != Kind::Comment).cloned().collect();
+        SrcFile {
+            rel: rel.replace('\\', "/"),
+            lines: text.split('\n').map(str::to_string).collect(),
+            toks,
+            code,
+        }
+    }
+
+    fn line(&self, ln: usize) -> &str {
+        if (1..=self.lines.len()).contains(&ln) {
+            &self.lines[ln - 1]
+        } else {
+            ""
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub rel: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}:{}: {}", self.pass, self.rel, self.line, self.msg)
+    }
+}
+
+// ---------------------------------------------------- function extraction
+
+struct FnItem<'a> {
+    name: String,
+    line: usize,
+    body: &'a [Tok],
+    sfile: &'a SrcFile,
+}
+
+/// Every `fn name(..) { .. }` with a body in the code stream.
+fn functions(sfile: &SrcFile) -> Vec<FnItem<'_>> {
+    let toks = &sfile.code;
+    let n = toks.len();
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if toks[i].is(Kind::Ident, "fn") && i + 1 < n && toks[i + 1].kind == Kind::Ident {
+            let (name, fline) = (toks[i + 1].text.clone(), toks[i].line);
+            let mut j = i + 2;
+            let mut paren = 0i64;
+            let mut body: Option<(usize, usize)> = None;
+            while j < n {
+                let t = &toks[j];
+                if t.kind == Kind::Punct {
+                    match t.text.as_str() {
+                        "(" => paren += 1,
+                        ")" => paren -= 1,
+                        ";" if paren == 0 => break, // trait method without a body
+                        "{" if paren == 0 => {
+                            let mut depth = 0i64;
+                            let mut k = j;
+                            while k < n {
+                                if toks[k].is(Kind::Punct, "{") {
+                                    depth += 1;
+                                } else if toks[k].is(Kind::Punct, "}") {
+                                    depth -= 1;
+                                    if depth == 0 {
+                                        break;
+                                    }
+                                }
+                                k += 1;
+                            }
+                            body = Some((j, (k + 1).min(n)));
+                            j = k;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if let Some((a, b)) = body {
+                fns.push(FnItem { name, line: fline, body: &toks[a..b], sfile });
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// Comment/attribute/blank lines immediately above a declaration line —
+/// where `// analyze: ...` markers and `/// # Safety` docs live.
+fn header_block(sfile: &SrcFile, fn_line: usize) -> Vec<String> {
+    let mut block = Vec::new();
+    let mut ln = fn_line.saturating_sub(1);
+    while ln >= 1 {
+        let s = sfile.line(ln).trim().to_string();
+        if s.is_empty() || s.starts_with("//") || s.starts_with("#[") {
+            block.push(s);
+            ln -= 1;
+        } else {
+            break;
+        }
+    }
+    block
+}
+
+fn has_waiver(sfile: &SrcFile, line: usize, tag: &str) -> bool {
+    let marker = format!("analyze: allow({tag})");
+    for ln in [line, line.saturating_sub(1), line.saturating_sub(2)] {
+        if ln >= 1 && sfile.line(ln).contains(&marker) {
+            return true;
+        }
+    }
+    false
+}
+
+fn fn_waiver(fnc: &FnItem<'_>, tag: &str) -> bool {
+    let marker = format!("analyze: allow({tag})");
+    header_block(fnc.sfile, fnc.line).iter().any(|s| s.contains(&marker))
+}
+
+// ----------------------------------------------------------- pass 1: locks
+
+fn rank(cls: &str) -> u8 {
+    match cls {
+        "scheduler" => 0,
+        "engine" => 1,
+        "pool" => 2,
+        "store" => 3,
+        _ => unreachable!("unknown lock class {cls}"),
+    }
+}
+
+const IO_IDENTS: [&str; 11] = [
+    "read_command_line",
+    "read_line",
+    "write_all",
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "flush",
+    "connect",
+    "connect_timeout",
+    "accept",
+    "sleep",
+];
+
+/// Map a `.lock()` receiver to its hierarchy class, or `None` for
+/// unranked mutexes (log sinks, test plumbing).
+fn classify_lock(recv: &str, rel: &str) -> Option<&'static str> {
+    if recv.contains("pool") {
+        return Some("pool");
+    }
+    if recv == "inner" {
+        if rel.ends_with("coordinator/scheduler.rs") {
+            return Some("scheduler");
+        }
+        if rel.ends_with("quant/store.rs") || rel.ends_with("quant/remote.rs") {
+            return Some("store");
+        }
+        return None;
+    }
+    if recv == "eng" || recv == "engine" {
+        return Some("engine");
+    }
+    None
+}
+
+fn pass_lock_order(files: &[SrcFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for sf in files {
+        for fnc in functions(sf) {
+            check_fn_locks(&fnc, &mut findings);
+        }
+    }
+    findings
+}
+
+enum Binding {
+    Named(String),
+    Anon,
+    Temp,
+}
+
+fn check_fn_locks(fnc: &FnItem<'_>, findings: &mut Vec<Finding>) {
+    let toks = fnc.body;
+    let n = toks.len();
+    // (class, let-bound name, brace depth at acquisition)
+    let mut held: Vec<(&'static str, Option<String>, i64)> = Vec::new();
+    let mut depth = 0i64;
+    let mut stmt_start = 0usize;
+    let mut i = 0;
+    while i < n {
+        let t = &toks[i];
+        if t.is(Kind::Punct, "{") {
+            depth += 1;
+            stmt_start = i + 1;
+        } else if t.is(Kind::Punct, "}") {
+            depth -= 1;
+            held.retain(|h| h.2 <= depth);
+            stmt_start = i + 1;
+        } else if t.is(Kind::Punct, ";") {
+            stmt_start = i + 1;
+        } else if t.is(Kind::Ident, "drop")
+            && i + 2 < n
+            && toks[i + 1].is(Kind::Punct, "(")
+            && toks[i + 2].kind == Kind::Ident
+        {
+            let name = toks[i + 2].text.as_str();
+            held.retain(|h| h.1.as_deref() != Some(name));
+        } else if t.is(Kind::Punct, ".")
+            && i + 3 < n
+            && toks[i + 1].is(Kind::Ident, "lock")
+            && toks[i + 2].is(Kind::Punct, "(")
+            && toks[i + 3].is(Kind::Punct, ")")
+        {
+            let recv = receiver_before(toks, i);
+            if let Some(cls) = classify_lock(&recv, &fnc.sfile.rel) {
+                let r = rank(cls);
+                for (hcls, _, _) in &held {
+                    if rank(hcls) >= r
+                        && !(has_waiver(fnc.sfile, t.line, "lock-order")
+                            || fn_waiver(fnc, "lock-order"))
+                    {
+                        findings.push(Finding {
+                            pass: "lock-order",
+                            rel: fnc.sfile.rel.clone(),
+                            line: t.line,
+                            msg: format!(
+                                "acquires `{cls}` lock while holding `{hcls}` \
+                                 (declared order: scheduler -> engine -> pool -> store) in fn {}",
+                                fnc.name
+                            ),
+                        });
+                    }
+                }
+                // bound to a let-guard? held until scope end / drop()
+                match let_binding(toks, stmt_start, i) {
+                    Binding::Named(name) => held.push((cls, Some(name), depth)),
+                    Binding::Anon => held.push((cls, None, depth)),
+                    Binding::Temp => {}
+                }
+            }
+            i += 4;
+            continue;
+        } else if t.kind == Kind::Ident && IO_IDENTS.contains(&t.text.as_str()) && !held.is_empty()
+        {
+            if !(has_waiver(fnc.sfile, t.line, "lock-across-io")
+                || fn_waiver(fnc, "lock-across-io"))
+            {
+                let hcls = held.last().unwrap().0;
+                findings.push(Finding {
+                    pass: "lock-order",
+                    rel: fnc.sfile.rel.clone(),
+                    line: t.line,
+                    msg: format!(
+                        "blocking call `{}` while holding `{hcls}` lock in fn {}",
+                        t.text, fnc.name
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Identifier naming the receiver of `.lock()`: the ident before the
+/// dot, or — when the receiver is a call like `kv_pool()` — the method
+/// name before its parens.
+fn receiver_before(toks: &[Tok], dot_i: usize) -> String {
+    let mut j = dot_i as i64 - 1;
+    if j >= 0 && toks[j as usize].is(Kind::Punct, ")") {
+        let mut depth = 0i64;
+        while j >= 0 {
+            if toks[j as usize].text == ")" {
+                depth += 1;
+            } else if toks[j as usize].text == "(" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j -= 1;
+        }
+        j -= 1;
+    }
+    if j >= 0 && toks[j as usize].kind == Kind::Ident {
+        return toks[j as usize].text.clone();
+    }
+    String::new()
+}
+
+/// `let [mut] name = ..lock()..` => Named; `let (a, b) = ..` => Anon
+/// (scope-held, anonymous); no `let` => Temp (statement temporary).
+fn let_binding(toks: &[Tok], stmt_start: usize, lock_i: usize) -> Binding {
+    for j in stmt_start..lock_i {
+        if toks[j].is(Kind::Ident, "let") {
+            let mut k = j + 1;
+            if k < lock_i && toks[k].is(Kind::Ident, "mut") {
+                k += 1;
+            }
+            if k < lock_i && toks[k].kind == Kind::Ident {
+                return Binding::Named(toks[k].text.clone());
+            }
+            return Binding::Anon;
+        }
+    }
+    Binding::Temp
+}
+
+// -------------------------------------------------------- pass 2: hot path
+
+const DENIED_METHODS: [&str; 6] = ["to_vec", "collect", "clone", "cloned", "to_owned", "to_string"];
+const DENIED_CTORS: [&str; 3] = ["Vec", "String", "Box"];
+const DENIED_CTOR_FNS: [&str; 3] = ["new", "with_capacity", "from"];
+
+fn is_hot_path(fnc: &FnItem<'_>) -> bool {
+    header_block(fnc.sfile, fnc.line).iter().any(|s| s.contains("analyze: hot-path"))
+}
+
+fn pass_hot_path(files: &[SrcFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for sf in files {
+        for fnc in functions(sf) {
+            if is_hot_path(&fnc) {
+                check_hot_fn(&fnc, &mut findings);
+            }
+        }
+    }
+    findings
+}
+
+fn check_hot_fn(fnc: &FnItem<'_>, findings: &mut Vec<Finding>) {
+    let toks = fnc.body;
+    let n = toks.len();
+    let flag = |t: &Tok, what: String, findings: &mut Vec<Finding>| {
+        if !has_waiver(fnc.sfile, t.line, "alloc") {
+            findings.push(Finding {
+                pass: "hot-path",
+                rel: fnc.sfile.rel.clone(),
+                line: t.line,
+                msg: format!(
+                    "allocation `{what}` in hot-path fn {} \
+                     (scratch-arena contract; waive with `// analyze: allow(alloc): <why>`)",
+                    fnc.name
+                ),
+            });
+        }
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        if (t.text == "vec" || t.text == "format") && i + 1 < n && toks[i + 1].text == "!" {
+            flag(t, format!("{}!", t.text), findings);
+        } else if DENIED_CTORS.contains(&t.text.as_str())
+            && i + 3 < n
+            && toks[i + 1].text == ":"
+            && toks[i + 2].text == ":"
+            && toks[i + 3].kind == Kind::Ident
+            && DENIED_CTOR_FNS.contains(&toks[i + 3].text.as_str())
+        {
+            flag(t, format!("{}::{}", t.text, toks[i + 3].text), findings);
+        } else if DENIED_METHODS.contains(&t.text.as_str())
+            && i >= 1
+            && toks[i - 1].text == "."
+            && i + 1 < n
+            && toks[i + 1].text == "("
+        {
+            flag(t, format!(".{}()", t.text), findings);
+        }
+    }
+}
+
+// ---------------------------------------------------- pass 3: unsafe audit
+
+const STMT_ENDERS: &[char] = &[';', '{', '}', ','];
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum UnsafeKind {
+    Fn,
+    Impl,
+    Block,
+}
+
+/// Every `unsafe fn` / `unsafe impl` / `unsafe {}` site outside tests.
+fn unsafe_sites(sfile: &SrcFile) -> Vec<(UnsafeKind, usize)> {
+    let toks = &sfile.code;
+    let mut sites = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.is(Kind::Ident, "unsafe") {
+            let kind = match toks.get(i + 1) {
+                Some(nxt) if nxt.is(Kind::Ident, "impl") => UnsafeKind::Impl,
+                Some(nxt) if nxt.is(Kind::Ident, "fn") => UnsafeKind::Fn,
+                _ => UnsafeKind::Block,
+            };
+            sites.push((kind, t.line));
+        }
+    }
+    sites
+}
+
+/// An `unsafe {}` block (or `unsafe impl`) is justified when a
+/// `// SAFETY:` comment sits on the same line or directly above it —
+/// scanning up through comment lines and the continuation lines of the
+/// same statement, stopping at any line that ends a prior statement.
+fn block_justified(sfile: &SrcFile, line: usize) -> bool {
+    if sfile.line(line).contains("SAFETY:") {
+        return true;
+    }
+    let mut ln = line.saturating_sub(1);
+    while ln >= 1 {
+        let s = sfile.line(ln).trim().to_string();
+        if s.starts_with("//") {
+            if s.contains("SAFETY:") {
+                return true;
+            }
+            ln -= 1;
+            continue;
+        }
+        if s.is_empty() {
+            return false;
+        }
+        if s.ends_with(STMT_ENDERS) {
+            return false; // crossed a statement boundary with no comment
+        }
+        ln -= 1; // continuation line of the same statement
+    }
+    false
+}
+
+/// An `unsafe fn` is justified by a `# Safety` doc section (or a SAFETY
+/// note) in its header block.
+fn fn_justified(sfile: &SrcFile, line: usize) -> bool {
+    header_block(sfile, line).iter().any(|s| s.contains("SAFETY") || s.contains("# Safety"))
+        || sfile.line(line).contains("SAFETY:")
+}
+
+fn pass_unsafe(files: &[SrcFile], inventory_text: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut counts: BTreeMap<String, (u32, u32, u32)> = BTreeMap::new();
+    for sf in files {
+        let mut c = (0u32, 0u32, 0u32);
+        for (kind, line) in unsafe_sites(sf) {
+            let (ok, word) = match kind {
+                UnsafeKind::Fn => {
+                    c.0 += 1;
+                    (fn_justified(sf, line), "fn")
+                }
+                UnsafeKind::Impl => {
+                    c.1 += 1;
+                    (block_justified(sf, line), "impl")
+                }
+                UnsafeKind::Block => {
+                    c.2 += 1;
+                    (block_justified(sf, line), "block")
+                }
+            };
+            if !ok {
+                findings.push(Finding {
+                    pass: "unsafe-audit",
+                    rel: sf.rel.clone(),
+                    line,
+                    msg: format!("unsafe {word} without an adjacent `// SAFETY:` justification"),
+                });
+            }
+        }
+        if c != (0, 0, 0) {
+            counts.insert(sf.rel.clone(), c);
+        }
+    }
+    let Some(text) = inventory_text else {
+        return findings;
+    };
+    let inv = parse_inventory(text);
+    for (rel, c) in &counts {
+        match inv.get(rel) {
+            None => findings.push(Finding {
+                pass: "unsafe-audit",
+                rel: rel.clone(),
+                line: 0,
+                msg: format!(
+                    "unsafe code not in the ANALYSIS.md inventory (fns={} impls={} blocks={})",
+                    c.0, c.1, c.2
+                ),
+            }),
+            Some(want) if want != c => findings.push(Finding {
+                pass: "unsafe-audit",
+                rel: rel.clone(),
+                line: 0,
+                msg: format!(
+                    "inventory drift: ANALYSIS.md says fns={} impls={} blocks={}, \
+                     tree has fns={} impls={} blocks={}",
+                    want.0, want.1, want.2, c.0, c.1, c.2
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+    for rel in inv.keys() {
+        if !counts.contains_key(rel) {
+            findings.push(Finding {
+                pass: "unsafe-audit",
+                rel: rel.clone(),
+                line: 0,
+                msg: "stale inventory row: file has no unsafe code (or no longer exists)".into(),
+            });
+        }
+    }
+    findings
+}
+
+/// Rows shaped `` | `path` | fns | impls | blocks | `` anywhere in the
+/// inventory document.
+pub fn parse_inventory(text: &str) -> BTreeMap<String, (u32, u32, u32)> {
+    let mut inv = BTreeMap::new();
+    for line in text.split('\n') {
+        let cells: Vec<&str> = line.split('|').collect();
+        if !line.starts_with('|') || cells.len() < 5 {
+            continue;
+        }
+        let path = cells[1].trim();
+        if path.len() < 3 || !path.starts_with('`') || !path.ends_with('`') {
+            continue;
+        }
+        let nums: Vec<Option<u32>> =
+            cells[2..5].iter().map(|c| c.trim().parse::<u32>().ok()).collect();
+        if let [Some(a), Some(b), Some(c)] = nums[..] {
+            inv.insert(path.trim_matches('`').to_string(), (a, b, c));
+        }
+    }
+    inv
+}
+
+// ------------------------------------------------- pass 4: protocol point
+
+const WIRE_PATTERNS: [&str; 7] =
+    ["OK id=", "ERR id=", "REC id=", "TOK id=", "BUSY id=", "GEN id=", "FETCH "];
+
+fn pass_protocol(files: &[SrcFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for sf in files {
+        if sf.rel.ends_with("coordinator/protocol.rs") {
+            continue;
+        }
+        for t in &sf.toks {
+            if t.kind != Kind::Str {
+                continue;
+            }
+            let body = t
+                .text
+                .trim_start_matches(&['b', 'r', '#'][..])
+                .trim_start_matches('"');
+            for pat in WIRE_PATTERNS {
+                // wire frames are whole lines: only a literal that BEGINS
+                // with a tag is framing (error text mentioning FETCH is not)
+                if body.starts_with(pat) {
+                    findings.push(Finding {
+                        pass: "protocol-point",
+                        rel: sf.rel.clone(),
+                        line: t.line,
+                        msg: format!(
+                            "wire literal \"{pat}..\" outside coordinator/protocol.rs \
+                             (all framing goes through protocol::format_*/parse_*)"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ------------------------------------------------ pass 5: gauge staleness
+
+/// Fields of `struct Metrics` whose preceding comment carries
+/// `analyze: gauge`.
+fn gauge_fields(sf: &SrcFile) -> Vec<(String, usize)> {
+    let toks = &sf.code;
+    let n = toks.len();
+    let mut fields = Vec::new();
+    for i in 0..n {
+        if toks[i].is(Kind::Ident, "struct") && i + 1 < n && toks[i + 1].text == "Metrics" {
+            let mut j = i + 2;
+            while j < n && !toks[j].is(Kind::Punct, "{") {
+                j += 1;
+            }
+            let mut depth = 0i64;
+            while j < n {
+                let tj = &toks[j];
+                if tj.is(Kind::Punct, "{") {
+                    depth += 1;
+                } else if tj.is(Kind::Punct, "}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 1
+                    && tj.kind == Kind::Ident
+                    && j + 2 < n
+                    && toks[j + 1].text == ":"
+                    && toks[j + 2].text != ":"
+                {
+                    let block = header_block(sf, tj.line);
+                    if block.iter().any(|s| s.contains("analyze: gauge")) {
+                        fields.push((tj.text.clone(), tj.line));
+                    }
+                }
+                j += 1;
+            }
+            break;
+        }
+    }
+    fields
+}
+
+fn pass_gauges(files: &[SrcFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(metrics) = files.iter().find(|f| f.rel.ends_with("coordinator/metrics.rs")) else {
+        return findings;
+    };
+    let Some(engine) = files.iter().find(|f| f.rel.ends_with("coordinator/engine.rs")) else {
+        return findings;
+    };
+    let fields = gauge_fields(metrics);
+    if fields.is_empty() {
+        findings.push(Finding {
+            pass: "gauge-staleness",
+            rel: metrics.rel.clone(),
+            line: 0,
+            msg: "no Metrics field carries an `// analyze: gauge` marker — \
+                  the staleness contract has rotted"
+                .into(),
+        });
+        return findings;
+    }
+    let fns = functions(engine);
+    let Some(step) = fns.iter().find(|f| f.name == "step") else {
+        findings.push(Finding {
+            pass: "gauge-staleness",
+            rel: engine.rel.clone(),
+            line: 0,
+            msg: "DecodeEngine::step not found".into(),
+        });
+        return findings;
+    };
+    for (field, fline) in fields {
+        if !assigns_metrics_field(step.body, &field) {
+            findings.push(Finding {
+                pass: "gauge-staleness",
+                rel: metrics.rel.clone(),
+                line: fline,
+                msg: format!(
+                    "gauge field `{field}` is never refreshed inside DecodeEngine::step \
+                     (the per-step loop must republish it)"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+/// `metrics.<field> = ...` (assignment, not `==`) anywhere in the body.
+fn assigns_metrics_field(toks: &[Tok], field: &str) -> bool {
+    let n = toks.len();
+    for i in 0..n.saturating_sub(3) {
+        if toks[i].is(Kind::Ident, "metrics")
+            && toks[i + 1].text == "."
+            && toks[i + 2].is(Kind::Ident, field)
+            && toks[i + 3].text == "="
+            && (i + 4 >= n || toks[i + 4].text != "=")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+// ----------------------------------------------------------------- driver
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    // a directory's own files come before its subdirectories' files,
+    // matching the mirror's os.walk order
+    for p in &entries {
+        if p.is_file() && p.extension().is_some_and(|e| e == "rs") {
+            out.push(p.clone());
+        }
+    }
+    for p in &entries {
+        if p.is_dir() {
+            collect_rs(p, out);
+        }
+    }
+}
+
+/// Lex every `.rs` file under `root`; `rel` paths are reported relative
+/// to `root`'s grandparent (so `rust/src/...` from the repo root).
+pub fn load_tree(root: &Path) -> Vec<SrcFile> {
+    let base = root.parent().and_then(Path::parent).unwrap_or_else(|| Path::new(""));
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths);
+    paths
+        .iter()
+        .filter_map(|p| {
+            let rel = p.strip_prefix(base).unwrap_or(p).to_string_lossy().into_owned();
+            fs::read_to_string(p).ok().map(|text| SrcFile::new(&rel, &text))
+        })
+        .collect()
+}
+
+/// Run all five passes over pre-lexed files (fixture tests call this
+/// with synthetic `rel` names).
+pub fn run_passes(files: &[SrcFile], inventory_text: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    findings.extend(pass_lock_order(files));
+    findings.extend(pass_hot_path(files));
+    findings.extend(pass_unsafe(files, inventory_text));
+    findings.extend(pass_protocol(files));
+    findings.extend(pass_gauges(files));
+    findings
+}
+
+/// Run all five passes over the tree at `root`, checking the unsafe
+/// inventory in `inventory` when it exists.
+pub fn run_all(root: &Path, inventory: Option<&Path>) -> Vec<Finding> {
+    let files = load_tree(root);
+    let inv_text = inventory.and_then(|p| fs::read_to_string(p).ok());
+    run_passes(&files, inv_text.as_deref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_kinds_and_lines() {
+        let toks = lex("fn a() {\n  let s = \"x\"; // hi\n}\n");
+        let kinds: Vec<Kind> = toks.iter().map(|t| t.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                Kind::Ident, // fn
+                Kind::Ident, // a
+                Kind::Punct,
+                Kind::Punct,
+                Kind::Punct, // {
+                Kind::Ident, // let
+                Kind::Ident, // s
+                Kind::Punct, // =
+                Kind::Str,
+                Kind::Punct, // ;
+                Kind::Comment,
+                Kind::Punct, // }
+            ]
+        );
+        assert_eq!(toks[8].line, 2);
+        assert_eq!(toks[10].text, "// hi");
+    }
+
+    #[test]
+    fn lexer_raw_strings_and_lifetimes() {
+        let toks = lex("r#\"a \"quote\" b\"# b\"bytes\" 'a 'x' rp");
+        assert_eq!(toks[0].kind, Kind::Str);
+        assert_eq!(toks[0].text, "r#\"a \"quote\" b\"#");
+        assert_eq!(toks[1].kind, Kind::Str);
+        assert_eq!(toks[2].kind, Kind::Lifetime);
+        assert_eq!(toks[3].kind, Kind::Char);
+        assert!(toks[4].is(Kind::Ident, "rp"), "r-prefixed ident is not a raw string");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_stripped() {
+        let sf = SrcFile::new(
+            "x.rs",
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn gone() { let v = vec![1]; }\n}\n",
+        );
+        let names: Vec<String> = functions(&sf).iter().map(|f| f.name.clone()).collect();
+        assert_eq!(names, vec!["live"]);
+    }
+
+    #[test]
+    fn inventory_rows_parse() {
+        let inv = parse_inventory(
+            "| file | fns | impls | blocks |\n\
+             |---|---|---|---|\n\
+             | `rust/src/a.rs` | 1 | 2 | 3 |\n\
+             not a row | `x` | 1 | 1 | 1 |\n",
+        );
+        assert_eq!(inv.len(), 1);
+        assert_eq!(inv["rust/src/a.rs"], (1, 2, 3));
+    }
+}

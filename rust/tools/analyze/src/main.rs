@@ -1,0 +1,57 @@
+//! CLI for `mcsharp-analyze`.
+//!
+//! ```text
+//! cargo run -p mcsharp-analyze --bin analyze [-- ROOT] [--inventory PATH | --no-inventory]
+//! ```
+//!
+//! Defaults (run from the repo root, as CI does): `ROOT = rust/src`,
+//! inventory = `ANALYSIS.md`. Findings go to stdout one per line; the
+//! summary goes to stderr. Exit 0 when clean, 1 on any finding, 2 on a
+//! missing source root. `tools/analyze_mirror.py` is the toolchain-free
+//! mirror with the identical interface.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut inventory: Option<PathBuf> = Some(PathBuf::from("ANALYSIS.md"));
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--no-inventory" => inventory = None,
+            "--inventory" => match args.next() {
+                Some(p) => inventory = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("analyze: --inventory needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                eprintln!("usage: analyze [ROOT] [--inventory PATH | --no-inventory]");
+                return ExitCode::SUCCESS;
+            }
+            // first positional wins, matching the mirror
+            _ => {
+                if root.is_none() {
+                    root = Some(PathBuf::from(a));
+                }
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from("rust/src"));
+    if !root.is_dir() {
+        eprintln!("analyze: source root {} not found", root.display());
+        return ExitCode::from(2);
+    }
+    let findings = mcsharp_analyze::run_all(&root, inventory.as_deref());
+    for f in &findings {
+        println!("{f}");
+    }
+    eprintln!("analyze: {} finding(s) over 5 passes", findings.len());
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,140 @@
+//! End-to-end checks of the five analysis passes against the seeded
+//! fixture trees, plus the gate the CI `analysis` job relies on: the
+//! real `rust/src/` tree must be clean against the `ANALYSIS.md`
+//! inventory.
+
+use std::path::{Path, PathBuf};
+
+use mcsharp_analyze::{load_tree, run_all, run_passes, Finding};
+
+fn fixture_dir(which: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(which)
+}
+
+fn by_pass<'a>(findings: &'a [Finding], pass: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.pass == pass).collect()
+}
+
+fn render(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("  {f}\n"));
+    }
+    s
+}
+
+#[test]
+fn fail_fixtures_trip_every_pass() {
+    let findings = run_all(&fixture_dir("fail"), None);
+
+    let lock = by_pass(&findings, "lock-order");
+    assert_eq!(lock.len(), 2, "lock-order findings:\n{}", render(&findings));
+    assert!(
+        lock.iter().any(|f| {
+            f.rel.ends_with("fail/lock_order.rs")
+                && f.msg.contains("acquires `engine` lock while holding `pool`")
+                && f.msg.contains("fn bad_order")
+        }),
+        "missing the hierarchy-inversion finding:\n{}",
+        render(&findings)
+    );
+    assert!(
+        lock.iter().any(|f| {
+            f.msg.contains("blocking call `write_all` while holding `engine` lock")
+                && f.msg.contains("fn io_under_lock")
+        }),
+        "missing the lock-across-io finding:\n{}",
+        render(&findings)
+    );
+
+    let hot = by_pass(&findings, "hot-path");
+    assert_eq!(hot.len(), 3, "hot-path findings:\n{}", render(&findings));
+    for what in ["`Vec::new`", "`.collect()`", "`vec!`"] {
+        assert!(
+            hot.iter().any(|f| f.msg.contains(what) && f.msg.contains("fn softmax_slow")),
+            "missing hot-path finding for {what}:\n{}",
+            render(&findings)
+        );
+    }
+
+    let uns = by_pass(&findings, "unsafe-audit");
+    assert_eq!(uns.len(), 3, "unsafe-audit findings:\n{}", render(&findings));
+    for word in ["unsafe impl", "unsafe fn", "unsafe block"] {
+        assert!(
+            uns.iter().any(|f| f.rel.ends_with("fail/unsafe_audit.rs")
+                && f.msg.contains(word)
+                && f.msg.contains("without an adjacent")),
+            "missing unjustified `{word}` finding:\n{}",
+            render(&findings)
+        );
+    }
+
+    let wire = by_pass(&findings, "protocol-point");
+    assert_eq!(wire.len(), 2, "protocol-point findings:\n{}", render(&findings));
+    for pat in ["BUSY id=", "FETCH "] {
+        assert!(
+            wire.iter().any(|f| f.rel.ends_with("fail/wire_literals.rs")
+                && f.msg.contains(&format!("\"{pat}..\""))),
+            "missing wire-literal finding for {pat:?}:\n{}",
+            render(&findings)
+        );
+    }
+
+    let gauge = by_pass(&findings, "gauge-staleness");
+    assert_eq!(gauge.len(), 1, "gauge findings:\n{}", render(&findings));
+    assert!(
+        gauge[0].rel.ends_with("coordinator/metrics.rs")
+            && gauge[0].msg.contains("`kv_pages` is never refreshed"),
+        "wrong gauge finding:\n{}",
+        render(&findings)
+    );
+
+    assert_eq!(findings.len(), 11, "unexpected extra findings:\n{}", render(&findings));
+}
+
+#[test]
+fn pass_fixtures_are_clean() {
+    let findings = run_all(&fixture_dir("pass"), None);
+    assert!(
+        findings.is_empty(),
+        "pass fixtures must produce zero findings:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn inventory_drift_and_stale_rows_are_caught() {
+    let files = load_tree(&fixture_dir("pass"));
+
+    let good = "| `fixtures/pass/unsafe_audit.rs` | 1 | 1 | 1 |\n";
+    let findings = run_passes(&files, Some(good));
+    assert!(findings.is_empty(), "accurate inventory must be clean:\n{}", render(&findings));
+
+    let bad = "| `fixtures/pass/unsafe_audit.rs` | 9 | 9 | 9 |\n\
+               | `fixtures/pass/gone.rs` | 1 | 0 | 0 |\n";
+    let findings = run_passes(&files, Some(bad));
+    assert_eq!(findings.len(), 2, "drift + stale expected:\n{}", render(&findings));
+    assert!(findings.iter().any(|f| f.msg.contains("inventory drift")
+        && f.msg.contains("says fns=9 impls=9 blocks=9")
+        && f.msg.contains("tree has fns=1 impls=1 blocks=1")));
+    assert!(findings
+        .iter()
+        .any(|f| f.rel == "fixtures/pass/gone.rs" && f.msg.contains("stale inventory row")));
+
+    // no inventory row at all for a file with unsafe code is a finding
+    let findings = run_passes(&files, Some("| `fixtures/pass/other.rs` | 0 | 0 | 1 |\n"));
+    assert!(findings.iter().any(|f| f.rel.ends_with("unsafe_audit.rs")
+        && f.msg.contains("not in the ANALYSIS.md inventory")));
+}
+
+#[test]
+fn real_tree_is_clean_against_checked_in_inventory() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..");
+    let findings = run_all(&repo.join("rust/src"), Some(&repo.join("ANALYSIS.md")));
+    assert!(
+        findings.is_empty(),
+        "rust/src must satisfy all five passes (fix the code, add a waiver \
+         with a reason, or update the ANALYSIS.md inventory):\n{}",
+        render(&findings)
+    );
+}

@@ -1,0 +1,764 @@
+#!/usr/bin/env python3
+"""Python mirror of rust/tools/analyze (mcsharp-analyze).
+
+The container this repo grows in has no Rust toolchain, so — like the C
+port that cross-validated the PR 5 kernels — this mirror re-implements
+the analyzer's lexer and five passes 1:1 and is runnable today:
+
+    python3 tools/analyze_mirror.py [root] [--inventory ANALYSIS.md]
+
+Keep the logic in lockstep with rust/tools/analyze/src/lib.rs: any
+behavioural change must land in both.  The fixture expectations under
+rust/tools/analyze/fixtures/ are validated against this mirror.
+"""
+
+import os
+import re
+import sys
+
+# --------------------------------------------------------------- lexer
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind  # ident | punct | str | char | lifetime | num | comment
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"{self.kind}({self.text!r}@{self.line})"
+
+
+def lex(src):
+    toks = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            toks.append(Tok("comment", src[i:j], line))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            depth, j, start = 1, i + 2, line
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if src[j] == "\n":
+                        line += 1
+                    j += 1
+            toks.append(Tok("comment", src[i:j], start))
+            i = j
+            continue
+        # raw / byte strings
+        m = re.match(r'(?:b?r)(#*)"', src[i:])
+        if m and (c == "r" or src.startswith("br", i) or (c == "b" and src[i + 1 : i + 2] == "r")):
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = src.find(close, i + m.end())
+            j = n if j < 0 else j + len(close)
+            start = line
+            line += src.count("\n", i, j)
+            toks.append(Tok("str", src[i:j], start))
+            i = j
+            continue
+        if c == '"' or (c == "b" and src[i + 1 : i + 2] == '"'):
+            j = i + (2 if c == "b" else 1)
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == '"':
+                    j += 1
+                    break
+                if src[j] == "\n":
+                    line += 1
+                j += 1
+            toks.append(Tok("str", src[i:j], line))
+            i = j
+            continue
+        if c == "'":
+            # lifetime ('a) vs char literal ('x', '\n', '\'')
+            m = re.match(r"'[A-Za-z_][A-Za-z0-9_]*(?!')", src[i:])
+            if m and not src.startswith("'", i + m.end()):
+                toks.append(Tok("lifetime", m.group(0), line))
+                i += m.end()
+                continue
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == "'":
+                    j += 1
+                    break
+                j += 1
+            toks.append(Tok("char", src[i:j], line))
+            i = j
+            continue
+        m = re.match(r"[A-Za-z_][A-Za-z0-9_]*", src[i:])
+        if m:
+            toks.append(Tok("ident", m.group(0), line))
+            i += m.end()
+            continue
+        m = re.match(r"[0-9][0-9A-Za-z_]*", src[i:])
+        if m:
+            toks.append(Tok("num", m.group(0), line))
+            i += m.end()
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+    return toks
+
+
+def strip_tests(toks):
+    """Drop `#[cfg(test)] <item> { .. }` regions (tests are exempt)."""
+    out, i, n = [], 0, len(toks)
+    while i < n:
+        t = toks[i]
+        if (
+            t.kind == "punct"
+            and t.text == "#"
+            and i + 6 < n
+            and [x.text for x in toks[i + 1 : i + 7]]
+            == ["[", "cfg", "(", "test", ")", "]"]
+        ):
+            j = i + 7
+            while j < n and not (toks[j].kind == "punct" and toks[j].text == "{"):
+                if toks[j].kind == "punct" and toks[j].text == ";":
+                    break  # cfg(test) on a bodiless item
+                j += 1
+            if j < n and toks[j].text == "{":
+                depth = 0
+                while j < n:
+                    if toks[j].kind == "punct" and toks[j].text == "{":
+                        depth += 1
+                    elif toks[j].kind == "punct" and toks[j].text == "}":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    j += 1
+            i = j + 1
+            continue
+        out.append(t)
+        i += 1
+    return out
+
+
+class SrcFile:
+    def __init__(self, rel, text):
+        self.rel = rel.replace(os.sep, "/")
+        self.lines = text.split("\n")
+        self.toks = strip_tests([t for t in lex(text)])
+        self.code = [t for t in self.toks if t.kind != "comment"]
+
+    def line(self, ln):
+        return self.lines[ln - 1] if 1 <= ln <= len(self.lines) else ""
+
+
+class Finding:
+    def __init__(self, pass_name, rel, line, msg):
+        self.pass_name, self.rel, self.line, self.msg = pass_name, rel, line, msg
+
+    def __str__(self):
+        return f"[{self.pass_name}] {self.rel}:{self.line}: {self.msg}"
+
+
+# ---------------------------------------------------- function extraction
+
+
+class Fn:
+    def __init__(self, name, line, body, sfile):
+        self.name, self.line, self.body, self.sfile = name, line, body, sfile
+
+
+def functions(sfile):
+    """Every `fn name(..) { .. }` with a body, as (name, code-token slice)."""
+    toks = sfile.code
+    fns, i, n = [], 0, len(toks)
+    while i < n:
+        if toks[i].kind == "ident" and toks[i].text == "fn" and i + 1 < n and toks[i + 1].kind == "ident":
+            name, fline = toks[i + 1].text, toks[i].line
+            j, paren = i + 2, 0
+            body = None
+            while j < n:
+                t = toks[j]
+                if t.kind == "punct":
+                    if t.text == "(":
+                        paren += 1
+                    elif t.text == ")":
+                        paren -= 1
+                    elif t.text == ";" and paren == 0:
+                        break  # trait method without a body
+                    elif t.text == "{" and paren == 0:
+                        depth, k = 0, j
+                        while k < n:
+                            if toks[k].kind == "punct" and toks[k].text == "{":
+                                depth += 1
+                            elif toks[k].kind == "punct" and toks[k].text == "}":
+                                depth -= 1
+                                if depth == 0:
+                                    break
+                            k += 1
+                        body = toks[j : k + 1]
+                        j = k
+                        break
+                j += 1
+            if body is not None:
+                fns.append(Fn(name, fline, body, sfile))
+                i = j + 1
+                continue
+        i += 1
+    return fns
+
+
+def header_block(sfile, fn_line):
+    """Comment/attribute lines immediately above a declaration line
+    (doc comments, attributes, blanks in between)."""
+    block, ln = [], fn_line - 1
+    while ln >= 1:
+        s = sfile.line(ln).strip()
+        if s == "" or s.startswith("//") or s.startswith("#["):
+            block.append(s)
+            ln -= 1
+        else:
+            break
+    return block
+
+
+def decl_line(fn):
+    """First line of the declaration (walk up over pub/unsafe/attr lines
+    that share the fn keyword's line in the token stream)."""
+    return fn.line
+
+
+# ----------------------------------------------------------- pass 1: locks
+
+RANK = {"scheduler": 0, "engine": 1, "pool": 2, "store": 3}
+IO_IDENTS = {
+    "read_command_line",
+    "read_line",
+    "write_all",
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "flush",
+    "connect",
+    "connect_timeout",
+    "accept",
+    "sleep",
+}
+
+
+def classify_lock(recv, rel):
+    if "pool" in recv:
+        return "pool"
+    if recv == "inner":
+        if rel.endswith("coordinator/scheduler.rs"):
+            return "scheduler"
+        if rel.endswith("quant/store.rs") or rel.endswith("quant/remote.rs"):
+            return "store"
+        return None
+    if recv in ("eng", "engine"):
+        return "engine"
+    return None
+
+
+def has_waiver(sfile, line, tag):
+    for ln in (line, line - 1, line - 2):
+        if f"analyze: allow({tag})" in sfile.line(ln):
+            return True
+    return False
+
+
+def fn_waiver(fn, tag):
+    return any(f"analyze: allow({tag})" in s for s in header_block(fn.sfile, fn.line))
+
+
+def pass_lock_order(files):
+    findings = []
+    for sf in files:
+        for fn in functions(sf):
+            findings.extend(check_fn_locks(fn))
+    return findings
+
+
+def check_fn_locks(fn):
+    findings = []
+    toks = fn.body
+    held = []  # (class, name-or-None, depth)
+    depth = 0
+    stmt_start = 0
+    i, n = 0, len(toks)
+    while i < n:
+        t = toks[i]
+        if t.kind == "punct" and t.text == "{":
+            depth += 1
+            stmt_start = i + 1
+        elif t.kind == "punct" and t.text == "}":
+            depth -= 1
+            held = [h for h in held if h[2] <= depth]
+            stmt_start = i + 1
+        elif t.kind == "punct" and t.text == ";":
+            stmt_start = i + 1
+        elif (
+            t.kind == "ident"
+            and t.text == "drop"
+            and i + 2 < n
+            and toks[i + 1].text == "("
+            and toks[i + 2].kind == "ident"
+        ):
+            name = toks[i + 2].text
+            held = [h for h in held if h[1] != name]
+        elif (
+            t.kind == "punct"
+            and t.text == "."
+            and i + 3 < n
+            and toks[i + 1].kind == "ident"
+            and toks[i + 1].text == "lock"
+            and toks[i + 2].text == "("
+            and toks[i + 3].text == ")"
+        ):
+            recv = receiver_before(toks, i)
+            cls = classify_lock(recv, fn.sfile.rel)
+            if cls is not None:
+                rank = RANK[cls]
+                for hcls, _, _ in held:
+                    if RANK[hcls] >= rank and not (
+                        has_waiver(fn.sfile, t.line, "lock-order")
+                        or fn_waiver(fn, "lock-order")
+                    ):
+                        findings.append(
+                            Finding(
+                                "lock-order",
+                                fn.sfile.rel,
+                                t.line,
+                                f"acquires `{cls}` lock while holding `{hcls}` "
+                                f"(declared order: scheduler -> engine -> pool -> store) in fn {fn.name}",
+                            )
+                        )
+                # bound to a let-guard? held until scope end / drop()
+                name = let_binding(toks, stmt_start, i)
+                if name is not False:
+                    held.append((cls, name, depth))
+            i += 4
+            continue
+        elif t.kind == "ident" and t.text in IO_IDENTS and held:
+            if not (has_waiver(fn.sfile, t.line, "lock-across-io") or fn_waiver(fn, "lock-across-io")):
+                hcls = held[-1][0]
+                findings.append(
+                    Finding(
+                        "lock-order",
+                        fn.sfile.rel,
+                        t.line,
+                        f"blocking call `{t.text}` while holding `{hcls}` lock in fn {fn.name}",
+                    )
+                )
+        i += 1
+    return findings
+
+
+def receiver_before(toks, dot_i):
+    """Identifier naming the receiver of `.lock()`: the ident before the
+    dot, or — when the receiver is a call like `kv_pool()` — the method
+    name before its parens."""
+    j = dot_i - 1
+    if j >= 0 and toks[j].kind == "punct" and toks[j].text == ")":
+        depth = 0
+        while j >= 0:
+            if toks[j].text == ")":
+                depth += 1
+            elif toks[j].text == "(":
+                depth -= 1
+                if depth == 0:
+                    break
+            j -= 1
+        j -= 1
+    if j >= 0 and toks[j].kind == "ident":
+        return toks[j].text
+    return ""
+
+
+def let_binding(toks, stmt_start, lock_i):
+    """`let [mut] name = ..lock()..` => name; `let (a,b) = ..` => None
+    (scope-held, anonymous); no let => False (statement temporary)."""
+    for j in range(stmt_start, lock_i):
+        if toks[j].kind == "ident" and toks[j].text == "let":
+            k = j + 1
+            if k < lock_i and toks[k].kind == "ident" and toks[k].text == "mut":
+                k += 1
+            if k < lock_i and toks[k].kind == "ident":
+                return toks[k].text
+            return None
+    return False
+
+
+# -------------------------------------------------------- pass 2: hot path
+
+DENIED_METHODS = {"to_vec", "collect", "clone", "cloned", "to_owned", "to_string"}
+DENIED_CTORS = {"Vec", "String", "Box"}
+DENIED_CTOR_FNS = {"new", "with_capacity", "from"}
+
+
+def is_hot_path(fn):
+    return any("analyze: hot-path" in s for s in header_block(fn.sfile, fn.line))
+
+
+def pass_hot_path(files):
+    findings = []
+    for sf in files:
+        for fn in functions(sf):
+            if not is_hot_path(fn):
+                continue
+            findings.extend(check_hot_fn(fn))
+    return findings
+
+
+def check_hot_fn(fn):
+    findings = []
+    toks = fn.body
+    n = len(toks)
+
+    def flag(t, what):
+        if not has_waiver(fn.sfile, t.line, "alloc"):
+            findings.append(
+                Finding(
+                    "hot-path",
+                    fn.sfile.rel,
+                    t.line,
+                    f"allocation `{what}` in hot-path fn {fn.name} "
+                    "(scratch-arena contract; waive with `// analyze: allow(alloc): <why>`)",
+                )
+            )
+
+    for i, t in enumerate(toks):
+        if t.kind != "ident":
+            continue
+        if t.text in ("vec", "format") and i + 1 < n and toks[i + 1].text == "!":
+            flag(t, f"{t.text}!")
+        elif (
+            t.text in DENIED_CTORS
+            and i + 3 < n
+            and toks[i + 1].text == ":"
+            and toks[i + 2].text == ":"
+            and toks[i + 3].kind == "ident"
+            and toks[i + 3].text in DENIED_CTOR_FNS
+        ):
+            flag(t, f"{t.text}::{toks[i + 3].text}")
+        elif (
+            t.text in DENIED_METHODS
+            and i >= 1
+            and toks[i - 1].text == "."
+            and i + 1 < n
+            and toks[i + 1].text == "("
+        ):
+            flag(t, f".{t.text}()")
+    return findings
+
+
+# ---------------------------------------------------- pass 3: unsafe audit
+
+STMT_ENDERS = (";", "{", "}", ",")
+
+
+def unsafe_sites(sfile):
+    """(kind, line) for every unsafe fn / impl / block outside tests."""
+    sites = []
+    toks = sfile.code
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == "unsafe":
+            nxt = toks[i + 1] if i + 1 < len(toks) else None
+            if nxt is not None and nxt.kind == "ident" and nxt.text == "impl":
+                sites.append(("impl", t.line))
+            elif nxt is not None and nxt.kind == "ident" and nxt.text == "fn":
+                sites.append(("fn", t.line))
+            else:
+                sites.append(("block", t.line))
+    return sites
+
+
+def block_justified(sfile, line):
+    if "SAFETY:" in sfile.line(line):
+        return True
+    ln = line - 1
+    while ln >= 1:
+        s = sfile.line(ln).strip()
+        if s.startswith("//"):
+            if "SAFETY:" in s:
+                return True
+            ln -= 1
+            continue
+        if s == "":
+            return False
+        if s.endswith(STMT_ENDERS):
+            return False  # crossed a statement boundary with no comment
+        ln -= 1  # continuation line of the same statement
+    return False
+
+
+def fn_justified(sfile, line):
+    block = header_block(sfile, line)
+    return any("SAFETY" in s or "# Safety" in s for s in block) or "SAFETY:" in sfile.line(line)
+
+
+def pass_unsafe(files, inventory_text):
+    findings = []
+    counts = {}
+    for sf in files:
+        c = [0, 0, 0]  # fns, impls, blocks
+        for kind, line in unsafe_sites(sf):
+            if kind == "fn":
+                c[0] += 1
+                ok = fn_justified(sf, line)
+            elif kind == "impl":
+                c[1] += 1
+                ok = block_justified(sf, line)
+            else:
+                c[2] += 1
+                ok = block_justified(sf, line)
+            if not ok:
+                findings.append(
+                    Finding(
+                        "unsafe-audit",
+                        sf.rel,
+                        line,
+                        f"unsafe {kind} without an adjacent `// SAFETY:` justification",
+                    )
+                )
+        if c != [0, 0, 0]:
+            counts[sf.rel] = tuple(c)
+    if inventory_text is None:
+        return findings
+    inv = parse_inventory(inventory_text)
+    for rel, c in sorted(counts.items()):
+        if rel not in inv:
+            findings.append(
+                Finding("unsafe-audit", rel, 0, f"unsafe code not in the ANALYSIS.md inventory (fns={c[0]} impls={c[1]} blocks={c[2]})")
+            )
+        elif inv[rel] != c:
+            findings.append(
+                Finding(
+                    "unsafe-audit",
+                    rel,
+                    0,
+                    f"inventory drift: ANALYSIS.md says fns={inv[rel][0]} impls={inv[rel][1]} blocks={inv[rel][2]}, tree has fns={c[0]} impls={c[1]} blocks={c[2]}",
+                )
+            )
+    for rel in sorted(inv):
+        if rel not in counts:
+            findings.append(
+                Finding("unsafe-audit", rel, 0, "stale inventory row: file has no unsafe code (or no longer exists)")
+            )
+    return findings
+
+
+def parse_inventory(text):
+    inv = {}
+    for line in text.split("\n"):
+        m = re.match(r"\|\s*`([^`]+)`\s*\|\s*(\d+)\s*\|\s*(\d+)\s*\|\s*(\d+)\s*\|", line)
+        if m:
+            inv[m.group(1)] = (int(m.group(2)), int(m.group(3)), int(m.group(4)))
+    return inv
+
+
+# ------------------------------------------------- pass 4: protocol point
+
+WIRE_PATTERNS = ("OK id=", "ERR id=", "REC id=", "TOK id=", "BUSY id=", "GEN id=", "FETCH ")
+
+
+def pass_protocol(files):
+    findings = []
+    for sf in files:
+        if sf.rel.endswith("coordinator/protocol.rs"):
+            continue
+        for t in sf.toks:
+            if t.kind != "str":
+                continue
+            body = t.text.lstrip("br#").lstrip('"')
+            for pat in WIRE_PATTERNS:
+                # wire frames are whole lines: only a literal that BEGINS
+                # with a tag is framing (error text mentioning FETCH is not)
+                if body.startswith(pat):
+                    findings.append(
+                        Finding(
+                            "protocol-point",
+                            sf.rel,
+                            t.line,
+                            f'wire literal "{pat}.." outside coordinator/protocol.rs '
+                            "(all framing goes through protocol::format_*/parse_*)",
+                        )
+                    )
+                    break
+    return findings
+
+
+# ------------------------------------------------ pass 5: gauge staleness
+
+
+def gauge_fields(sf):
+    """Fields of `struct Metrics` whose preceding comment carries
+    `analyze: gauge`."""
+    toks = sf.code
+    fields = []
+    for i, t in enumerate(toks):
+        if (
+            t.kind == "ident"
+            and t.text == "struct"
+            and i + 1 < len(toks)
+            and toks[i + 1].text == "Metrics"
+        ):
+            j = i + 2
+            while j < len(toks) and toks[j].text != "{":
+                j += 1
+            depth = 0
+            while j < len(toks):
+                tj = toks[j]
+                if tj.kind == "punct" and tj.text == "{":
+                    depth += 1
+                elif tj.kind == "punct" and tj.text == "}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                elif (
+                    depth == 1
+                    and tj.kind == "ident"
+                    and j + 1 < len(toks)
+                    and toks[j + 1].text == ":"
+                    and toks[j + 2].text != ":"
+                ):
+                    block = header_block(sf, tj.line)
+                    if any("analyze: gauge" in s for s in block):
+                        fields.append((tj.text, tj.line))
+                j += 1
+            break
+    return fields
+
+
+def pass_gauges(files):
+    findings = []
+    metrics = next((f for f in files if f.rel.endswith("coordinator/metrics.rs")), None)
+    engine = next((f for f in files if f.rel.endswith("coordinator/engine.rs")), None)
+    if metrics is None or engine is None:
+        return findings
+    fields = gauge_fields(metrics)
+    if not fields:
+        findings.append(
+            Finding(
+                "gauge-staleness",
+                metrics.rel,
+                0,
+                "no Metrics field carries an `// analyze: gauge` marker — the staleness contract has rotted",
+            )
+        )
+        return findings
+    step = next((fn for fn in functions(engine) if fn.name == "step"), None)
+    if step is None:
+        findings.append(Finding("gauge-staleness", engine.rel, 0, "DecodeEngine::step not found"))
+        return findings
+    for field, fline in fields:
+        if not assigns_metrics_field(step.body, field):
+            findings.append(
+                Finding(
+                    "gauge-staleness",
+                    metrics.rel,
+                    fline,
+                    f"gauge field `{field}` is never refreshed inside DecodeEngine::step "
+                    "(the per-step loop must republish it)",
+                )
+            )
+    return findings
+
+
+def assigns_metrics_field(toks, field):
+    n = len(toks)
+    for i in range(n - 3):
+        if (
+            toks[i].kind == "ident"
+            and toks[i].text == "metrics"
+            and toks[i + 1].text == "."
+            and toks[i + 2].kind == "ident"
+            and toks[i + 2].text == field
+            and toks[i + 3].text == "="
+            and (i + 4 >= n or toks[i + 4].text != "=")
+        ):
+            return True
+    return False
+
+
+# ----------------------------------------------------------------- driver
+
+
+def load_tree(root):
+    files = []
+    for dirpath, dirs, names in os.walk(root):
+        dirs.sort()  # deterministic walk, matching the Rust tool
+        for name in sorted(names):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, os.path.dirname(os.path.dirname(root)))
+            with open(path, encoding="utf-8") as f:
+                files.append(SrcFile(rel, f.read()))
+    return files
+
+
+def run_all(root, inventory_path):
+    files = load_tree(root)
+    inv_text = None
+    if inventory_path and os.path.exists(inventory_path):
+        with open(inventory_path, encoding="utf-8") as f:
+            inv_text = f.read()
+    findings = []
+    findings += pass_lock_order(files)
+    findings += pass_hot_path(files)
+    findings += pass_unsafe(files, inv_text)
+    findings += pass_protocol(files)
+    findings += pass_gauges(files)
+    return findings
+
+
+def main(argv):
+    root = "rust/src"
+    inventory = "ANALYSIS.md"
+    args = argv[1:]
+    pos = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--inventory":
+            inventory = args[i + 1]
+            i += 2
+        elif args[i] == "--no-inventory":
+            inventory = None
+            i += 1
+        else:
+            pos.append(args[i])
+            i += 1
+    if pos:
+        root = pos[0]
+    if not os.path.isdir(root):
+        print(f"analyze: source root {root} not found", file=sys.stderr)
+        return 2
+    findings = run_all(root, inventory)
+    for f in findings:
+        print(f)
+    print(f"analyze: {len(findings)} finding(s) over 5 passes", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
