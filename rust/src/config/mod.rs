@@ -174,6 +174,11 @@ pub struct ServingConfig {
     /// shard that misses it is marked down for the affected requests;
     /// later fetches lazily reconnect.
     pub fetch_timeout_ms: u64,
+    /// Chrome trace_event output path (`--trace-out`): at shutdown the
+    /// engine's span ring is dumped there for chrome://tracing /
+    /// Perfetto. `None` = no file (the `TRACE` wire command still
+    /// works; the ring always records).
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -189,6 +194,7 @@ impl Default for ServingConfig {
             prefill_chunk: 16,
             shards: Vec::new(),
             fetch_timeout_ms: 2_000,
+            trace_out: None,
         }
     }
 }

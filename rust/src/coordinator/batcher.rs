@@ -26,6 +26,7 @@ use crate::coordinator::engine::{DecodeEngine, SeqState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResult};
 use crate::moe::kv::KvPool;
+use crate::trace::{SpanKind, Tracer};
 
 /// Admission-ordering policy. FIFO is the default; SJF (shortest job
 /// first, by token footprint) minimizes mean latency on mixed workloads;
@@ -214,12 +215,17 @@ impl Batcher {
     }
 
     /// Remove finished sequences from `active`, recording their latency
-    /// in `metrics` and releasing their KV pages back to the pool
-    /// (pages shared via the prefix tree stay resident for the next
-    /// warm request). Returns results in completion order.
+    /// in `metrics` (bounded histograms) and their lifecycle spans in
+    /// `trace` — the retroactive path: the submit/admit instants were
+    /// captured when the request queued, so the whole `queued` →
+    /// `request` timeline is written here, under the engine lock, at
+    /// retirement. KV pages go back to the pool (pages shared via the
+    /// prefix tree stay resident for the next warm request). Returns
+    /// results in completion order.
     pub fn retire(
         active: &mut Vec<ActiveSeq>,
         metrics: &mut Metrics,
+        trace: &Tracer,
         pool: &Mutex<KvPool>,
     ) -> Vec<GenResult> {
         let mut out = Vec::new();
@@ -230,8 +236,23 @@ impl Batcher {
                 pool.lock().unwrap().free_seq(&mut a.seq.kv);
                 let lat = a.submitted.elapsed().as_micros() as u64;
                 let queue = a.admitted.duration_since(a.submitted).as_micros() as u64;
-                metrics.latencies_us.push(lat);
-                metrics.queue_waits_us.push(queue);
+                metrics.latencies_us.record(lat);
+                metrics.queue_waits_us.record(queue);
+                trace.record_range(
+                    SpanKind::Queued,
+                    a.seq.id,
+                    a.submitted,
+                    a.admitted,
+                    a.prompt_len as u64,
+                    0,
+                );
+                trace.record_since(
+                    SpanKind::Request,
+                    a.seq.id,
+                    a.submitted,
+                    a.prompt_len as u64,
+                    a.seq.generated as u64,
+                );
                 out.push(GenResult {
                     id: a.seq.id,
                     tokens: a.seq.tokens,
@@ -260,7 +281,12 @@ impl Batcher {
                 break; // queue drained (admit force-admits when non-empty)
             }
             Self::step_active(engine, &mut active)?;
-            results.append(&mut Self::retire(&mut active, &mut engine.metrics, &pool));
+            results.append(&mut Self::retire(
+                &mut active,
+                &mut engine.metrics,
+                &engine.trace,
+                &pool,
+            ));
         }
         engine.metrics.finish();
         Ok(results)
@@ -368,7 +394,8 @@ mod tests {
         // once the long sequence retires, its whole footprint comes back
         active[0].seq.generated = 8;
         let mut metrics = Metrics::default();
-        let done = Batcher::retire(&mut active, &mut metrics, &pool);
+        let trace = Tracer::new(8);
+        let done = Batcher::retire(&mut active, &mut metrics, &trace, &pool);
         assert_eq!(done.len(), 1);
         b.submit(GenRequest::greedy(2, vec![1, 2, 3, 4], 8));
         b.admit(&mut active, 2, &pool);

@@ -306,6 +306,27 @@ impl Client {
             .map_err(|e| anyhow!("STATS {key}: {e}"))
     }
 
+    /// `TRACE [last=<n>]` → the span dump, one JSON object string per
+    /// span, oldest first. The `TRACE n=<k>` header tells this reader
+    /// exactly how many span lines to consume, keeping the connection
+    /// line-synchronized for whatever is pipelined behind it.
+    pub fn trace(&mut self, last: Option<usize>) -> Result<Vec<String>> {
+        self.out.write_all(protocol::format_trace_cmd(last).as_bytes())?;
+        let n = match self.recv_response()? {
+            Response::Trace { n } => n,
+            other => bail!("expected TRACE, got {other:?}"),
+        };
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("server closed mid span dump");
+            }
+            spans.push(line.trim_end().to_string());
+        }
+        Ok(spans)
+    }
+
     /// `METRICS` → the raw JSON payload.
     pub fn metrics_json(&mut self) -> Result<String> {
         self.out.write_all(b"METRICS\n")?;

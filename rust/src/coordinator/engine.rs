@@ -15,6 +15,7 @@
 //! instead of one row per full engine step.
 
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -24,6 +25,7 @@ use crate::moe::kv::{KvPool, SeqKv, DEFAULT_KV_PAGE};
 use crate::moe::model::{ExpertId, MoeModel, Pruner};
 use crate::quant::qmodel::QuantModel;
 use crate::tensor::{rmsnorm, softmax, Tensor2};
+use crate::trace::{SpanKind, Tracer};
 use crate::util::rng::Rng;
 
 use super::metrics::Metrics;
@@ -72,6 +74,15 @@ impl EngineModel<'_> {
         match self {
             EngineModel::Fp(_) => None,
             EngineModel::Quant(q) => q.store.remote_stats(),
+        }
+    }
+
+    /// Per-RPC demand-fetch wait histogram (µs) when the experts page
+    /// in over the wire; empty for fp models and local stores.
+    pub fn fetch_histo(&self) -> crate::trace::Histo {
+        match self {
+            EngineModel::Fp(_) => crate::trace::Histo::default(),
+            EngineModel::Quant(q) => q.store.fetch_histo().unwrap_or_default(),
         }
     }
 }
@@ -197,6 +208,10 @@ pub struct DecodeEngine<'a> {
     pub backend: &'a dyn ExpertBackend,
     pub pruner: Option<Box<dyn Pruner + 'a>>,
     pub metrics: Metrics,
+    /// Span recorder for the engine's timeline (step/phase spans written
+    /// here in [`step`](Self::step), request-lifecycle spans written by
+    /// the batcher's retire path). Every writer holds the engine lock.
+    pub trace: Tracer,
     rng: Rng,
     /// Shared paged KV pool. `Arc` so admission (batcher/scheduler) can
     /// probe/adopt/free without holding the engine lock. Lock order:
@@ -219,10 +234,18 @@ impl<'a> DecodeEngine<'a> {
             backend,
             pruner,
             metrics: Metrics::default(),
+            trace: Tracer::new(crate::trace::DEFAULT_RING_CAP),
             rng: Rng::new(0x5EED),
             pool: Arc::new(Mutex::new(pool)),
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
         }
+    }
+
+    /// Rebuild the span ring with `cap` entries (`MCSHARP_TRACE_OFF`
+    /// is re-read). Call before serving; the old ring is discarded.
+    pub fn with_trace_capacity(mut self, cap: usize) -> Self {
+        self.trace = Tracer::new(cap);
+        self
     }
 
     /// Rebuild the pool with `page` positions per KV page
@@ -256,6 +279,11 @@ impl<'a> DecodeEngine<'a> {
         if batch.is_empty() {
             return Ok(());
         }
+        let step_id = self.metrics.steps;
+        // RAII step span: two Instant reads + one ring write on drop
+        // (end of this function); phase spans nest inside its window
+        let mut step_span = self.trace.span(SpanKind::DecodeStep, step_id);
+        let step_start = Instant::now();
         // analyze: allow(alloc): Arc refcount bump, not a heap allocation
         let pool_arc = self.pool.clone();
         let mut pool = pool_arc.lock().unwrap();
@@ -289,9 +317,14 @@ impl<'a> DecodeEngine<'a> {
                 x.row_mut(off[i] + j).copy_from_slice(model.embed.row(tok));
             }
         }
+        step_span.a = batch.len() as u64;
+        step_span.b = total as u64;
+        // per-step phase accumulators (µs, summed over layers)
+        let (mut route_acc, mut gather_acc, mut exec_acc, mut kv_acc) = (0u64, 0u64, 0u64, 0u64);
         let mut normed = Tensor2::zeros(total, h);
         for (l, block) in model.blocks.iter().enumerate() {
             // attention (per sequence, chunked against the paged pool)
+            let t_attn = Instant::now();
             for (i, seq) in batch.iter_mut().enumerate() {
                 let (o, c) = (off[i], counts[i]);
                 for j in 0..c {
@@ -308,6 +341,8 @@ impl<'a> DecodeEngine<'a> {
                     }
                 }
             }
+            kv_acc += t_attn.elapsed().as_micros() as u64;
+            self.trace.record_since(SpanKind::Kv, step_id, t_attn, l as u64, 0);
             // MoE: the shared expert-grouped dispatcher (route + prune +
             // group + execute-once-per-expert + scatter) over all rows —
             // prefill rows ride the same fused token-group kernels
@@ -319,6 +354,7 @@ impl<'a> DecodeEngine<'a> {
                 pruner: self.pruner.as_deref_mut(),
                 ..Default::default()
             };
+            let t_disp = Instant::now();
             let outcome = dispatch_moe_layer(
                 l,
                 &block.gate,
@@ -332,10 +368,57 @@ impl<'a> DecodeEngine<'a> {
             self.metrics.experts_kept += outcome.kept;
             self.metrics.experts_offered += outcome.offered;
             self.metrics.routed_bytes += outcome.routed_bytes;
+            route_acc += outcome.route_us;
+            gather_acc += outcome.gather_us;
+            exec_acc += outcome.execute_us;
+            // lay the phases dispatch measured internally out end-to-end
+            // inside its window (dispatch runs route → gather → prepare
+            // → execute sequentially), so they nest under the step span
+            let layer = l as u64;
+            let mut sub = 0u64;
+            let tr = &self.trace;
+            tr.record_offset(SpanKind::Route, step_id, t_disp, sub, outcome.route_us, layer, 0);
+            sub += outcome.route_us;
+            tr.record_offset(SpanKind::Gather, step_id, t_disp, sub, outcome.gather_us, layer, 0);
+            sub += outcome.gather_us;
+            if outcome.prepare_us > 0 {
+                // expert paging / remote FETCH wait (store `prepare`)
+                self.trace.record_offset(
+                    SpanKind::Fetch,
+                    step_id,
+                    t_disp,
+                    sub,
+                    outcome.prepare_us,
+                    layer,
+                    0,
+                );
+            }
+            sub += outcome.prepare_us;
+            self.trace.record_offset(
+                SpanKind::Execute,
+                step_id,
+                t_disp,
+                sub,
+                outcome.execute_us,
+                layer,
+                outcome.kept,
+            );
         }
         // head + token transition per sequence
         for (i, seq) in batch.iter_mut().enumerate() {
             let c = counts[i];
+            // `tokens.len() - generated` is the prompt length (both grow
+            // together on decode), so this spots steps that consumed
+            // prompt positions — those get a prefill-chunk span
+            if seq.prefilled < seq.tokens.len() - seq.generated {
+                self.trace.record_since(
+                    SpanKind::PrefillChunk,
+                    seq.id,
+                    step_start,
+                    c as u64,
+                    step_id,
+                );
+            }
             seq.prefilled += c;
             if seq.prefilled < seq.tokens.len() {
                 // still prefilling: logits unused
@@ -367,9 +450,15 @@ impl<'a> DecodeEngine<'a> {
             pool.register_progress(&mut seq.kv, &seq.tokens);
         }
         self.metrics.steps += 1;
-        // refresh the expert-cache + KV gauges (both O(1) reads)
+        // per-step phase histograms: O(1) records, bounded memory
+        self.metrics.step_route_us.record(route_acc);
+        self.metrics.step_execute_us.record(gather_acc + exec_acc);
+        self.metrics.step_kv_us.record(kv_acc);
+        // refresh the expert-cache + KV gauges (all O(1) reads; the
+        // fetch-wait histogram is a fixed-size struct copy)
         self.metrics.cache = self.em.cache_counters();
         self.metrics.remote = self.em.remote_stats();
+        self.metrics.fetch_wait_us = self.em.fetch_histo();
         self.metrics.kv = pool.gauges();
         Ok(())
     }
@@ -501,6 +590,46 @@ mod tests {
         assert_eq!(c.resident_bytes, q.store.total_nbytes());
         assert_eq!(c.misses, 0);
         assert_eq!(c.evictions, 0);
+    }
+
+    /// Every step records a step span plus per-layer phase spans that
+    /// nest inside its window, and the phase histograms fill — the
+    /// signal the METRICS scrape and the TRACE dump are built from.
+    #[test]
+    fn step_records_spans_and_phase_histograms() {
+        let m = MoeModel::new(&cfg(), 65);
+        let be = NativeBackend::fp(&m);
+        let mut eng = DecodeEngine::new(EngineModel::Fp(&m), &be, None);
+        eng.generate(&[1, 2, 3], 4).unwrap();
+        assert_eq!(eng.metrics.step_route_us.count(), eng.metrics.steps);
+        assert_eq!(eng.metrics.step_execute_us.count(), eng.metrics.steps);
+        assert_eq!(eng.metrics.step_kv_us.count(), eng.metrics.steps);
+        assert_eq!(eng.metrics.fetch_wait_us.count(), 0, "fp model never fetches");
+        let spans = eng.trace.snapshot(None);
+        let steps =
+            spans.iter().filter(|sp| sp.kind == SpanKind::DecodeStep).count() as u64;
+        assert_eq!(steps, eng.metrics.steps, "one step span per engine step");
+        for kind in [SpanKind::Route, SpanKind::Gather, SpanKind::Execute, SpanKind::Kv] {
+            let n = spans.iter().filter(|sp| sp.kind == kind).count() as u64;
+            assert_eq!(n, eng.metrics.steps * 2, "{kind:?}: one span per layer per step");
+        }
+        assert_eq!(
+            spans.iter().filter(|sp| sp.kind == SpanKind::PrefillChunk).count(),
+            1,
+            "the 3-token prompt prefills in one chunk"
+        );
+        // phase spans lie inside their step span's window (µs rounding)
+        let step0 = spans
+            .iter()
+            .find(|sp| sp.kind == SpanKind::DecodeStep && sp.id == 0)
+            .unwrap();
+        for sp in spans.iter().filter(|sp| sp.id == 0 && sp.kind == SpanKind::Route) {
+            assert!(sp.t_start_us >= step0.t_start_us, "phase starts inside the step");
+            assert!(
+                sp.t_start_us + sp.dur_us <= step0.t_start_us + step0.dur_us + 2,
+                "phase ends inside the step"
+            );
+        }
     }
 
     /// Regression: the greedy sampler must not panic on (or select)

@@ -2,19 +2,34 @@
 //! activated-parameter accounting (feeds Tables 5/6/8) and — when the
 //! engine serves from a paged [`ExpertStore`](crate::quant::store) — the
 //! expert-cache gauges (resident bytes, hit/miss/evict/prefetch counts).
+//!
+//! Latency samples live in bounded log2 [`Histo`]s (O(1) memory, no
+//! per-scrape sort under the engine lock); the old per-request
+//! `Vec<u64>` vectors grew forever and were clone+sorted on every
+//! `STATS`/`METRICS` read. Percentile reads report the bucket upper
+//! bound — within one log2 bucket of the exact value (pinned in
+//! `trace::tests`).
 
 use std::time::Instant;
 
 use crate::moe::kv::KvGauges;
 use crate::quant::store::{CacheCounters, RemoteFetchStats};
+use crate::trace::Histo;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    /// Per-request end-to-end latency (µs).
-    pub latencies_us: Vec<u64>,
-    /// Per-request queue wait before admission (µs) — same order as
-    /// `latencies_us`, pushed together at retirement.
-    pub queue_waits_us: Vec<u64>,
+    /// Per-request end-to-end latency (µs), bounded log2 histogram.
+    pub latencies_us: Histo,
+    /// Per-request queue wait before admission (µs) — recorded together
+    /// with `latencies_us` at retirement.
+    pub queue_waits_us: Histo,
+    /// Per-step routing + pruning time (µs, summed over layers).
+    pub step_route_us: Histo,
+    /// Per-step expert execute time (µs, summed over layers; includes
+    /// the gather that builds each expert's row block).
+    pub step_execute_us: Histo,
+    /// Per-step attention + KV-cache time (µs, summed over layers).
+    pub step_kv_us: Histo,
     /// Decoded tokens total.
     pub tokens_out: u64,
     /// Prompt tokens processed.
@@ -37,6 +52,11 @@ pub struct Metrics {
     /// page in over the wire (`None` for local stores and fp models).
     // analyze: gauge
     pub remote: Option<RemoteFetchStats>,
+    /// Demand-fetch wait histogram (µs), copied from the expert store
+    /// each engine step (empty for fp / non-remote models) — the
+    /// per-RPC distribution behind `remote.fetch_p95_us`.
+    // analyze: gauge
+    pub fetch_wait_us: Histo,
     /// Paged-KV gauges (pages/bytes in use, prefix hits, CoW copies),
     /// refreshed from the pool each engine step — O(1) reads.
     // analyze: gauge
@@ -94,28 +114,33 @@ impl Metrics {
         1.0 - self.experts_kept as f64 / self.experts_offered as f64
     }
 
+    /// Requests retired so far (latency samples recorded).
+    pub fn requests(&self) -> u64 {
+        self.latencies_us.count()
+    }
+
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        percentiles(&self.latencies_us, &[p])[0]
+        self.latencies_us.percentile(p)
     }
 
     /// Queue-wait percentile (µs) — how long requests sat in the
     /// admission queue before the engine picked them up.
     pub fn queue_percentile_us(&self, p: f64) -> u64 {
-        percentiles(&self.queue_waits_us, &[p])[0]
+        self.queue_waits_us.percentile(p)
     }
 
-    /// Several latency percentiles with **one** clone+sort of the sample
-    /// — the `STATS`/`METRICS` scrape path runs under the engine lock,
-    /// so per-percentile re-sorts of server-lifetime vectors would stall
-    /// the decode loop for nothing.
+    /// Several latency percentiles in one O(buckets·|ps|) pass over the
+    /// bounded histogram — the `STATS`/`METRICS` scrape path runs under
+    /// the engine lock, so there must be no clone+sort of lifetime
+    /// sample vectors here (there is no longer such a vector to sort).
     pub fn latency_percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
-        percentiles(&self.latencies_us, ps)
+        self.latencies_us.percentiles(ps)
     }
 
-    /// Several queue-wait percentiles with one clone+sort (see
+    /// Several queue-wait percentiles (see
     /// [`latency_percentiles_us`](Self::latency_percentiles_us)).
     pub fn queue_percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
-        percentiles(&self.queue_waits_us, ps)
+        self.queue_waits_us.percentiles(ps)
     }
 
     /// Mean activated routed-expert bytes per decoded token.
@@ -140,13 +165,21 @@ impl Metrics {
             ("tokens_out", num(self.tokens_out as f64)),
             ("tokens_in", num(self.tokens_in as f64)),
             ("steps", num(self.steps as f64)),
-            ("requests", num(self.latencies_us.len() as f64)),
+            ("requests", num(self.requests() as f64)),
             ("tokens_per_sec", num(self.tokens_per_sec())),
             ("latency_p50_us", num(lat[0] as f64)),
             ("latency_p95_us", num(lat[1] as f64)),
             ("latency_p99_us", num(lat[2] as f64)),
             ("queue_p50_us", num(queue[0] as f64)),
             ("queue_p95_us", num(queue[1] as f64)),
+            ("step_route_p50_us", num(self.step_route_us.percentile(0.5) as f64)),
+            ("step_route_p95_us", num(self.step_route_us.percentile(0.95) as f64)),
+            ("step_execute_p50_us", num(self.step_execute_us.percentile(0.5) as f64)),
+            ("step_execute_p95_us", num(self.step_execute_us.percentile(0.95) as f64)),
+            ("step_kv_p50_us", num(self.step_kv_us.percentile(0.5) as f64)),
+            ("step_kv_p95_us", num(self.step_kv_us.percentile(0.95) as f64)),
+            ("fetch_wait_p50_us", num(self.fetch_wait_us.percentile(0.5) as f64)),
+            ("fetch_wait_p95_us", num(self.fetch_wait_us.percentile(0.95) as f64)),
             ("pruning_ratio", num(self.pruning_ratio())),
             ("routed_bytes_per_token", num(self.routed_bytes_per_token())),
             ("experts_kept", num(self.experts_kept as f64)),
@@ -171,17 +204,6 @@ impl Metrics {
             ("kv_tree_blocks", num(self.kv.tree_blocks as f64)),
         ])
     }
-}
-
-fn percentiles(v: &[u64], ps: &[f64]) -> Vec<u64> {
-    if v.is_empty() {
-        return vec![0; ps.len()];
-    }
-    let mut sorted = v.to_vec();
-    sorted.sort_unstable();
-    ps.iter()
-        .map(|p| sorted[((sorted.len() - 1) as f64 * p).round() as usize])
-        .collect()
 }
 
 #[cfg(test)]
@@ -230,19 +252,53 @@ mod tests {
     #[test]
     fn percentiles_and_ratio() {
         let mut m = Metrics::default();
-        m.latencies_us = vec![10, 20, 30, 40, 100];
-        assert_eq!(m.latency_percentile_us(0.5), 30);
-        assert_eq!(m.latency_percentile_us(1.0), 100);
-        m.queue_waits_us = vec![1, 2, 3, 4, 50];
-        assert_eq!(m.queue_percentile_us(0.5), 3);
-        assert_eq!(m.queue_percentile_us(1.0), 50);
+        for v in [10, 20, 30, 40, 100] {
+            m.latencies_us.record(v);
+        }
+        // histogram percentiles report the bucket upper bound of the
+        // exact rank: p50 exact 30 → bucket [16,31]; p100 exact 100 →
+        // bucket [64,127]
+        assert_eq!(m.latency_percentile_us(0.5), 31);
+        assert_eq!(m.latency_percentile_us(1.0), 127);
+        assert_eq!(m.requests(), 5);
+        for v in [1, 2, 3, 4, 50] {
+            m.queue_waits_us.record(v);
+        }
+        assert_eq!(m.queue_percentile_us(0.5), 3); // exact 3 → bucket [2,3]
+        assert_eq!(m.queue_percentile_us(1.0), 63); // exact 50 → bucket [32,63]
         assert_eq!(Metrics::default().queue_percentile_us(0.95), 0);
-        // batched scrape path: one sort, same answers
-        assert_eq!(m.latency_percentiles_us(&[0.5, 1.0]), vec![30, 100]);
-        assert_eq!(m.queue_percentiles_us(&[0.5, 1.0]), vec![3, 50]);
+        // batched scrape path: same answers, no sort anywhere
+        assert_eq!(m.latency_percentiles_us(&[0.5, 1.0]), vec![31, 127]);
+        assert_eq!(m.queue_percentiles_us(&[0.5, 1.0]), vec![3, 63]);
         assert_eq!(Metrics::default().latency_percentiles_us(&[0.5, 0.95]), vec![0, 0]);
         m.experts_kept = 80;
         m.experts_offered = 100;
         assert!((m.pruning_ratio() - 0.2).abs() < 1e-12);
+    }
+
+    /// Old-vs-new pin: for the retired-latency sample sets the serving
+    /// tests exercise, the histogram percentile lands in the same log2
+    /// bucket as the exact value the old clone+sort implementation
+    /// (`sorted[round((n-1)·p)]`) returned, and is never below it.
+    #[test]
+    fn histogram_percentiles_match_old_sort_within_one_bucket() {
+        use crate::trace::bucket_of;
+        let samples: Vec<u64> = (0..500u64).map(|i| (i * i * 7 + 13) % 90_000).collect();
+        let mut m = Metrics::default();
+        for &v in &samples {
+            m.latencies_us.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for &p in &[0.5, 0.95, 0.99, 1.0] {
+            let old = sorted[((sorted.len() - 1) as f64 * p).round() as usize];
+            let new = m.latency_percentile_us(p);
+            assert!(new >= old, "p{p}: histogram {new} below exact {old}");
+            assert_eq!(
+                bucket_of(new),
+                bucket_of(old),
+                "p{p}: histogram {new} not within one bucket of exact {old}"
+            );
+        }
     }
 }

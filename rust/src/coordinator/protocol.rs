@@ -42,7 +42,15 @@
 //!
 //! Control lines are shared by all dialects: `PING` → `PONG`,
 //! `STATS` → one `STATS k=v ...` line, `METRICS` → `METRICS {json}`,
-//! `QUIT` → server closes the connection. Responses to a v1 request are
+//! `QUIT` → server closes the connection. `TRACE [last=<n>]` dumps the
+//! engine's span ring (newest `n` spans, or everything buffered):
+//!
+//! ```text
+//! TRACE [last=<n>]
+//!   → TRACE n=<k>   then k lines, one JSON span object per line
+//! ```
+//!
+//! Responses to a v1 request are
 //! always tagged; responses to v0 requests and control lines never are.
 //! `id` tags are namespaced per connection — two connections may both
 //! use `id=1` — and within a connection the client is responsible for
@@ -112,6 +120,8 @@ pub enum Command {
     Ping,
     Stats,
     Metrics,
+    /// Span-ring dump; `last` limits the reply to the newest `n` spans.
+    Trace { last: Option<usize> },
     Quit,
     /// Blank line — ignored, no response.
     Empty,
@@ -126,6 +136,7 @@ pub fn parse_command(line: &str) -> Result<Command> {
         "PING" => return Ok(Command::Ping),
         "STATS" => return Ok(Command::Stats),
         "METRICS" => return Ok(Command::Metrics),
+        "TRACE" => return Ok(Command::Trace { last: None }),
         "QUIT" => return Ok(Command::Quit),
         _ => {}
     }
@@ -146,6 +157,10 @@ pub fn parse_command(line: &str) -> Result<Command> {
         Some("FETCH") => {
             let rest = parts.next().ok_or_else(|| anyhow!("FETCH missing arguments"))?;
             parse_fetch(rest).map(Command::Fetch)
+        }
+        Some("TRACE") => {
+            let rest = parts.next().ok_or_else(|| anyhow!("TRACE missing arguments"))?;
+            parse_trace(rest).map(|last| Command::Trace { last })
         }
         Some(cmd) => bail!("unknown command {cmd:?}"),
         // splitn on a non-empty string always yields a first part, and
@@ -254,6 +269,26 @@ fn parse_fetch(rest: &str) -> Result<WireFetch> {
         layer: layer.ok_or_else(|| anyhow!("FETCH missing layer="))?,
         experts: experts.ok_or_else(|| anyhow!("FETCH missing experts="))?,
     })
+}
+
+/// Optional-key form: `[last=<n>]`, the key at most once.
+fn parse_trace(rest: &str) -> Result<Option<usize>> {
+    let mut last = None;
+    for word in rest.split(' ').filter(|w| !w.is_empty()) {
+        let (key, val) = word
+            .split_once('=')
+            .ok_or_else(|| anyhow!("TRACE expected key=value, got {word:?}"))?;
+        let duplicate = match key {
+            "last" => last
+                .replace(val.parse::<usize>().map_err(|e| anyhow!("last={val:?}: {e}"))?)
+                .is_some(),
+            _ => bail!("unknown TRACE key {key:?}"),
+        };
+        if duplicate {
+            bail!("duplicate TRACE key {key:?}");
+        }
+    }
+    Ok(last)
 }
 
 /// Best-effort tag recovery for a line that failed [`parse_command`]:
@@ -415,6 +450,20 @@ pub fn format_rec(tag: u64, layer: usize, expert: usize, len: usize) -> String {
     format!("REC id={tag} layer={layer} expert={expert} len={len}\n")
 }
 
+/// Format a span-ring dump request — the client side of [`parse_trace`].
+pub fn format_trace_cmd(last: Option<usize>) -> String {
+    match last {
+        Some(n) => format!("TRACE last={n}\n"),
+        None => "TRACE\n".to_string(),
+    }
+}
+
+/// Span-dump reply header; `n` one-JSON-object-per-line span lines
+/// follow the newline.
+pub fn format_trace_header(n: usize) -> String {
+    format!("TRACE n={n}\n")
+}
+
 // ---- response parsing (client side) ----
 
 /// One parsed response line.
@@ -437,6 +486,9 @@ pub enum Response {
     Stats(String),
     /// Raw `METRICS` payload (JSON).
     Metrics(String),
+    /// Span-dump header; the reader must consume `n` JSON span lines
+    /// before the next response line.
+    Trace { n: usize },
 }
 
 fn parse_kv<'a>(word: &'a str, key: &str) -> Result<&'a str> {
@@ -456,6 +508,9 @@ pub fn parse_response(line: &str) -> Result<Response> {
     }
     if let Some(rest) = line.strip_prefix("METRICS ") {
         return Ok(Response::Metrics(rest.to_string()));
+    }
+    if let Some(rest) = line.strip_prefix("TRACE ") {
+        return Ok(Response::Trace { n: parse_kv(rest, "n")?.parse()? });
     }
     if let Some(rest) = line.strip_prefix("BUSY ") {
         return Ok(Response::Busy { tag: parse_kv(rest, "id")?.parse()? });
@@ -724,6 +779,40 @@ mod tests {
         assert_eq!(parse_response("PONG\n").unwrap(), Response::Pong);
         assert!(matches!(parse_response("STATS tps=1.0").unwrap(), Response::Stats(_)));
         assert!(parse_response("GARBAGE").is_err());
+    }
+
+    /// TRACE grammar: bare and `last=` forms parse, the formatter
+    /// round-trips through parse_command, and the reply header
+    /// round-trips through parse_response.
+    #[test]
+    fn trace_round_trips_and_rejects_malformed() {
+        assert!(matches!(parse_command("TRACE").unwrap(), Command::Trace { last: None }));
+        assert!(matches!(
+            parse_command("TRACE last=16").unwrap(),
+            Command::Trace { last: Some(16) }
+        ));
+        assert!(matches!(
+            parse_command(&format_trace_cmd(Some(3))).unwrap(),
+            Command::Trace { last: Some(3) }
+        ));
+        assert!(matches!(
+            parse_command(&format_trace_cmd(None)).unwrap(),
+            Command::Trace { last: None }
+        ));
+        assert_eq!(
+            parse_response(&format_trace_header(12)).unwrap(),
+            Response::Trace { n: 12 }
+        );
+        let bad = [
+            "TRACE last=x",        // bad count
+            "TRACE last=-1",       // negative count
+            "TRACE 5",             // no positional form
+            "TRACE bogus=1",       // unknown key
+            "TRACE last=1 last=2", // duplicate key
+        ];
+        for line in bad {
+            assert!(parse_command(line).is_err(), "{line:?} must not parse");
+        }
     }
 
     #[test]

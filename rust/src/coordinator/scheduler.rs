@@ -223,7 +223,12 @@ impl Scheduler {
                                 streamed.push((id, new.to_vec()));
                             }
                         }
-                        (streamed, Batcher::retire(&mut active, &mut eng.metrics, &pool))
+                        // split-borrow metrics + trace through the guard
+                        let eng = &mut *eng;
+                        (
+                            streamed,
+                            Batcher::retire(&mut active, &mut eng.metrics, &eng.trace, &pool),
+                        )
                     }
                     // a shard became unreachable mid-step: degrade, don't
                     // die. The sequences in this step get a terminal ERR
@@ -385,8 +390,19 @@ mod tests {
             eng.metrics.steps
         );
         assert_eq!(eng.metrics.tokens_out, 12);
-        assert_eq!(eng.metrics.latencies_us.len(), 2);
-        assert_eq!(eng.metrics.queue_waits_us.len(), 2);
+        assert_eq!(eng.metrics.latencies_us.count(), 2);
+        assert_eq!(eng.metrics.queue_waits_us.count(), 2);
+        // the shared loop's lifecycle spans landed in the engine tracer
+        let spans = eng.trace.snapshot(None);
+        let requests = spans
+            .iter()
+            .filter(|sp| sp.kind == crate::trace::SpanKind::Request)
+            .count();
+        assert_eq!(requests, 2, "one request span per retired sequence");
+        assert!(
+            spans.iter().any(|sp| sp.kind == crate::trace::SpanKind::DecodeStep),
+            "engine steps must record step spans"
+        );
     }
 
     #[test]

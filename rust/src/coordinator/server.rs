@@ -251,6 +251,16 @@ fn read_loop(
                 };
                 send(otx, ConnOut::Line(msg))?;
             }
+            Ok(Command::Trace { last }) => {
+                // snapshot under the engine lock, format outside it
+                let spans = engine.lock().unwrap().trace.snapshot(last);
+                let mut msg = protocol::format_trace_header(spans.len());
+                for sp in &spans {
+                    msg.push_str(&sp.to_value().to_json());
+                    msg.push('\n');
+                }
+                send(otx, ConnOut::Line(msg))?;
+            }
             Ok(Command::Quit) => return Ok(()),
             Ok(Command::Gen(wire)) => submit_gen(wire, sched, next_id, otx)?,
             // FETCH is the shard dialect; a coordinator answers it with a
@@ -465,6 +475,12 @@ fn handle_shard_conn(
                 out.write_all(msg.as_bytes())?;
                 out.flush()?;
             }
+            // a shard has no decode engine, hence no span ring
+            Ok(Command::Trace { .. }) => {
+                let msg = protocol::format_err(None, "shard does not serve TRACE");
+                out.write_all(msg.as_bytes())?;
+                out.flush()?;
+            }
             Ok(Command::Fetch(wf)) => {
                 serve_fetch(&wf, source, &mut out)?;
                 answered.fetch_add(1, Ordering::AcqRel);
@@ -526,6 +542,10 @@ mod tests {
         assert!(matches!(protocol::parse_command("PING").unwrap(), Command::Ping));
         assert!(matches!(protocol::parse_command("STATS").unwrap(), Command::Stats));
         assert!(matches!(protocol::parse_command("METRICS").unwrap(), Command::Metrics));
+        assert!(matches!(
+            protocol::parse_command("TRACE").unwrap(),
+            Command::Trace { last: None }
+        ));
         assert!(matches!(protocol::parse_command("QUIT").unwrap(), Command::Quit));
         assert!(matches!(protocol::parse_command("  \n").unwrap(), Command::Empty));
         assert!(matches!(protocol::parse_command("GEN 2 7,8").unwrap(), Command::Gen(_)));
@@ -541,12 +561,13 @@ mod tests {
     #[test]
     fn stats_line_reports_percentiles() {
         use crate::coordinator::metrics::Metrics;
-        let m = Metrics {
-            latencies_us: vec![100, 200, 300],
-            queue_waits_us: vec![10, 20, 30],
-            tokens_out: 9,
-            ..Default::default()
-        };
+        let mut m = Metrics { tokens_out: 9, ..Default::default() };
+        for v in [100, 200, 300] {
+            m.latencies_us.record(v);
+        }
+        for v in [10, 20, 30] {
+            m.queue_waits_us.record(v);
+        }
         let line = format!(
             "lat_p50_us={} lat_p95_us={} queue_p50_us={} queue_p95_us={}",
             m.latency_percentile_us(0.5),
@@ -554,7 +575,8 @@ mod tests {
             m.queue_percentile_us(0.5),
             m.queue_percentile_us(0.95),
         );
-        assert_eq!(line, "lat_p50_us=200 lat_p95_us=300 queue_p50_us=20 queue_p95_us=30");
+        // histogram percentiles report log2-bucket upper bounds
+        assert_eq!(line, "lat_p50_us=255 lat_p95_us=511 queue_p50_us=31 queue_p95_us=31");
     }
 
     // full TCP round-trips (pipelining, streaming, BUSY backpressure,

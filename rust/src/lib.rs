@@ -41,5 +41,6 @@ pub mod profile;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;

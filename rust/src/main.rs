@@ -20,6 +20,8 @@
 //!                                                         the wire (needs --qckpt for the dense
 //!                                                         base + seek index)
 //!                   [--fetch-timeout-ms T]                per-RPC remote fetch deadline
+//!                   [--trace-out t.json]                  dump the span ring as a Chrome
+//!                                                         trace_event file at shutdown
 //! mcsharp shard     --qckpt q.bin --layers a..b           serve expert records for layers
 //!                   [--port 7177] [--max-requests N]      [a, b) off the checkpoint's mmap'd
 //!                                                         seek index (FETCH/REC dialect)
@@ -50,7 +52,7 @@ const FLAGS: &[&str] = &[
     "model", "steps", "bits", "otp", "port", "max-requests", "items", "seed", "pjrt",
     "calib-seqs", "lambda", "out", "qckpt", "expert-cache-mb", "max-batch",
     "token-budget", "workers", "batch-window-us", "max-queue", "kv-page", "prefill-chunk",
-    "shards", "layers", "fetch-timeout-ms",
+    "shards", "layers", "fetch-timeout-ms", "trace-out",
 ];
 
 fn main() -> Result<()> {
@@ -204,6 +206,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fetch_timeout_ms: args
             .usize_or("fetch-timeout-ms", defaults.fetch_timeout_ms as usize)?
             as u64,
+        trace_out: args.get("trace-out").map(|s| s.to_string()),
     };
     // `--qckpt path` serves straight from a pre-compressed checkpoint —
     // the paper's pre-loading deployment story (no calibration at boot).
@@ -274,7 +277,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .with_prefill_chunk(sc.prefill_chunk),
         );
         let n = server::serve_with(listener, &engine, &sc, max)?;
-        report_served(&engine.lock().unwrap(), n, "pjrt");
+        let eng = engine.lock().unwrap();
+        report_served(&eng, n, "pjrt");
+        dump_trace(&eng, sc.trace_out.as_deref())?;
     } else {
         let be = NativeBackend::quant(&q);
         let engine = std::sync::Mutex::new(
@@ -283,8 +288,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .with_prefill_chunk(sc.prefill_chunk),
         );
         let n = server::serve_with(listener, &engine, &sc, max)?;
-        report_served(&engine.lock().unwrap(), n, "native");
+        let eng = engine.lock().unwrap();
+        report_served(&eng, n, "native");
+        dump_trace(&eng, sc.trace_out.as_deref())?;
     }
+    Ok(())
+}
+
+/// `--trace-out`: dump the engine's span ring as a Chrome trace_event
+/// file (open in chrome://tracing or Perfetto).
+fn dump_trace(eng: &DecodeEngine, path: Option<&str>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let spans = eng.trace.snapshot(None);
+    mcsharp::trace::write_chrome(path, &spans)?;
+    println!("wrote {} trace span(s) to {path} (chrome://tracing)", spans.len());
     Ok(())
 }
 

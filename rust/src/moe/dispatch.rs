@@ -19,6 +19,8 @@
 //! then shared) order after the join, so results are bitwise identical
 //! whether groups ran sequentially or in parallel.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::tensor::Tensor2;
@@ -102,7 +104,8 @@ pub struct DispatchHooks<'h, 'p> {
 }
 
 /// Per-layer dispatch accounting, returned to the caller (the engine
-/// folds it into its serving metrics; eval callers may ignore it).
+/// folds it into its serving metrics and phase histograms/spans; eval
+/// callers may ignore it).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DispatchOutcome {
     /// Σ kept experts over rows.
@@ -111,6 +114,17 @@ pub struct DispatchOutcome {
     pub offered: u64,
     /// Σ packed bytes of each routed expert executed (once per group).
     pub routed_bytes: u64,
+    /// Routing + pruning phase wall time (µs). All four phase timings
+    /// are 0 for an empty block (no `Instant` reads, so the no-op
+    /// equality contract holds).
+    pub route_us: u64,
+    /// Gather phase wall time (µs) — building each group's row block.
+    pub gather_us: u64,
+    /// Pre-execute residency wall time (µs) — expert paging and remote
+    /// FETCH wait live here.
+    pub prepare_us: u64,
+    /// Execute + scatter phase wall time (µs).
+    pub execute_us: u64,
 }
 
 /// One gathered expert group ready to execute.
@@ -156,6 +170,9 @@ pub fn dispatch_moe_layer(
     let h = normed.cols;
     let n_experts = gate.cols;
     let mut outcome = DispatchOutcome::default();
+    // phase boundaries (µs timings land in the outcome; the engine turns
+    // them into step-phase histograms and timeline spans)
+    let t_route = Instant::now();
     // -- routing phase: sequential, hook order == token-row order --------
     let mut groups: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n_experts];
     for i in 0..t {
@@ -189,6 +206,7 @@ pub fn dispatch_moe_layer(
             }
         }
     }
+    let t_gather = Instant::now();
     // -- gather phase ----------------------------------------------------
     let mut work: Vec<GroupWork> = Vec::new();
     for (e, group) in groups.iter().enumerate() {
@@ -227,7 +245,9 @@ pub fn dispatch_moe_layer(
             ExpertId::Shared(_) => None,
         })
         .collect();
+    let t_prepare = Instant::now();
     exec.prepare(layer, &routed)?;
+    let t_execute = Instant::now();
     // -- execute phase: each expert once over its gathered block ---------
     let blocks = run_groups(layer, exec, normed, &work)?;
     // -- scatter phase: deterministic group order, weights pre-applied ---
@@ -238,6 +258,14 @@ pub fn dispatch_moe_layer(
                 *a += o;
             }
         }
+    }
+    // an empty block keeps every timing at 0 so the no-op equality
+    // contract (`outcome == DispatchOutcome::default()`) still holds
+    if t > 0 {
+        outcome.route_us = t_gather.duration_since(t_route).as_micros() as u64;
+        outcome.gather_us = t_prepare.duration_since(t_gather).as_micros() as u64;
+        outcome.prepare_us = t_execute.duration_since(t_prepare).as_micros() as u64;
+        outcome.execute_us = t_execute.elapsed().as_micros() as u64;
     }
     Ok(outcome)
 }

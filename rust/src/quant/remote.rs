@@ -22,7 +22,6 @@
 //! the engine alive; every later fetch lazily retries the connection,
 //! so a restarted shard heals the coordinator without a restart.
 
-use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::ops::Range;
@@ -68,9 +67,6 @@ fn unavailable(shard: &str, detail: impl std::fmt::Display) -> anyhow::Error {
 /// guard): a corrupt `len=` must error, not abort on allocation.
 const MAX_REC_BYTES: usize = 1 << 31;
 
-/// Demand-fetch latency window for the p95 gauge.
-const LATENCY_WINDOW: usize = 256;
-
 struct ShardConn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -100,7 +96,10 @@ struct RemoteInner {
     fetch_rpcs: u64,
     prefetch_rpcs: u64,
     fetched_bytes: u64,
-    latencies_us: VecDeque<u64>,
+    /// Demand-fetch wait distribution (µs), log2-bucketed: bounded
+    /// memory over the whole run, unlike the windowed vector it
+    /// replaced.
+    fetch_histo: crate::trace::Histo,
 }
 
 /// [`ExpertStore`] whose record source is a set of shard servers.
@@ -286,10 +285,7 @@ impl RemoteInner {
             }
         };
         self.fetch_rpcs += 1;
-        if self.latencies_us.len() == LATENCY_WINDOW {
-            self.latencies_us.pop_front();
-        }
-        self.latencies_us.push_back(started.elapsed().as_micros() as u64);
+        self.fetch_histo.record(started.elapsed().as_micros() as u64);
         let mut records = Vec::with_capacity(experts.len());
         for (&e, payload) in experts.iter().zip(&payloads) {
             self.fetched_bytes += payload.len() as u64;
@@ -329,14 +325,6 @@ impl RemoteInner {
         self.shards[si].pending = Some(PendingFetch { tag, entries: plan });
     }
 
-    fn p95_us(&self) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut xs: Vec<u64> = self.latencies_us.iter().copied().collect();
-        xs.sort_unstable();
-        xs[(xs.len() * 95 / 100).min(xs.len() - 1)]
-    }
 }
 
 /// Bits sanity against the allocation table (the same check the local
@@ -408,7 +396,7 @@ impl RemoteStore {
                 fetch_rpcs: 0,
                 prefetch_rpcs: 0,
                 fetched_bytes: 0,
-                latencies_us: VecDeque::with_capacity(LATENCY_WINDOW),
+                fetch_histo: crate::trace::Histo::default(),
             }),
         })
     }
@@ -498,10 +486,14 @@ impl ExpertStore for RemoteStore {
             fetch_rpcs: inner.fetch_rpcs,
             prefetch_rpcs: inner.prefetch_rpcs,
             fetched_bytes: inner.fetched_bytes,
-            fetch_p95_us: inner.p95_us(),
+            fetch_p95_us: inner.fetch_histo.percentile(0.95),
             shards_up: inner.shards.iter().filter(|s| s.conn.is_some()).count(),
             shards_total: inner.shards.len(),
         })
+    }
+
+    fn fetch_histo(&self) -> Option<crate::trace::Histo> {
+        Some(self.inner.lock().unwrap().fetch_histo)
     }
 
     fn kind(&self) -> &'static str {

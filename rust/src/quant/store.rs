@@ -163,6 +163,12 @@ pub trait ExpertStore: Send + Sync {
         None
     }
 
+    /// Per-RPC demand-fetch wait distribution (µs, log2 buckets), for
+    /// stores that fetch over the network. `None` for local stores.
+    fn fetch_histo(&self) -> Option<crate::trace::Histo> {
+        None
+    }
+
     fn kind(&self) -> &'static str;
 }
 

@@ -1,0 +1,560 @@
+//! Always-on, zero-steady-state-alloc tracing and histogram metrics.
+//!
+//! Two primitives, both fixed-size after construction:
+//!
+//! - [`Histo`] — a 64-bucket log2 histogram of `u64` samples (we use it
+//!   for microsecond durations). Recording is a shift + two increments;
+//!   a percentile read is one cumulative walk over the buckets. It
+//!   replaces the unbounded per-request `Vec<u64>` latency vectors the
+//!   metrics used to keep (which every `STATS`/`METRICS` scrape had to
+//!   clone + sort *under the engine lock*). Percentiles are reported as
+//!   the upper bound of the bucket holding the requested rank, so they
+//!   agree with the exact (sorted-vector) percentile to within one
+//!   log2 bucket — pinned by a unit test below.
+//!
+//! - [`Tracer`] — a preallocated ring of [`Span`] records covering the
+//!   request lifecycle (enqueue → admit → prefill/decode steps →
+//!   retire) and the engine-step phase breakdown (route, gather, expert
+//!   execute, attention/KV, expert paging/FETCH). Spans are recorded
+//!   either through the [`SpanGuard`] RAII timer — whose hot-path cost
+//!   is two `Instant` reads and one ring write — or retroactively via
+//!   [`Tracer::record_range`] when the start instant was captured
+//!   earlier (e.g. a request's submit time lives in the batcher).
+//!   The ring has fixed capacity; old spans are overwritten, never
+//!   reallocated, so tracing cannot grow the engine's footprint.
+//!
+//! All writers run under the engine lock (the engine's step body and
+//! the batcher's retire path), so the ring needs no lock of its own —
+//! a `RefCell` gives the interior mutability that lets several
+//! `SpanGuard`s coexist while the engine mutates its other fields.
+//!
+//! Export paths: the `TRACE` wire command dumps recent spans as JSON
+//! lines (one [`Span::to_value`] object per line), and
+//! [`write_chrome`] writes the whole snapshot as a Chrome
+//! `trace_event`-format file (`mcsharp serve --trace-out t.json`) that
+//! opens directly in Perfetto / `chrome://tracing`.
+//!
+//! Tracing is on by default; setting the `MCSHARP_TRACE_OFF`
+//! environment variable (read once, at [`Tracer`] construction — same
+//! pattern as `MCSHARP_FORCE_SCALAR`) turns span recording into a
+//! no-op so the bench suite can price the overhead.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Value};
+
+/// Number of log2 buckets in a [`Histo`]. Bucket 0 holds the value 0;
+/// bucket `i` (i ≥ 1) holds values whose bit length is `i`, i.e. the
+/// range `[2^(i-1), 2^i - 1]`; the top bucket saturates.
+pub const HISTO_BUCKETS: usize = 64;
+
+/// Log2 bucket index for a sample (0 → 0, else its bit length, capped).
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let bits = (64 - v.leading_zeros()) as usize;
+    bits.min(HISTO_BUCKETS - 1)
+}
+
+/// Upper bound of a bucket — the conservative value percentile reads
+/// report (never below the exact percentile, same bucket).
+fn bucket_upper(idx: usize) -> u64 {
+    if idx == 0 {
+        0
+    } else if idx >= HISTO_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << idx) - 1
+    }
+}
+
+/// Fixed-bucket log2 histogram: O(1) record, O(buckets) percentile,
+/// constant memory. `Copy` so gauge-style snapshots (e.g. the remote
+/// store's fetch-wait histogram copied into `Metrics` each step) are a
+/// plain struct copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Histo {
+    counts: [u64; HISTO_BUCKETS],
+    total: u64,
+}
+
+impl Default for Histo {
+    // [u64; 64] is past the derive limit for Default
+    fn default() -> Histo {
+        Histo { counts: [0; HISTO_BUCKETS], total: 0 }
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The `p`-quantile (`p` in `[0, 1]`), reported as the upper bound
+    /// of the bucket holding that rank. Empty histogram → 0. Matches
+    /// the old sorted-vector percentile (`sorted[round((n-1)·p)]`) to
+    /// within one log2 bucket.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        // same rank the sorted-vector read used: round((n-1)·p), 0-based
+        let rank = ((self.total - 1) as f64 * p).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_upper(idx);
+            }
+        }
+        bucket_upper(HISTO_BUCKETS - 1)
+    }
+
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        ps.iter().map(|&p| self.percentile(p)).collect()
+    }
+}
+
+/// What a span measures. `name()` is the stable string used in both
+/// the JSON-lines dump and the Chrome trace `name` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole request lifecycle: submit → retire. `id` = request id,
+    /// `a` = prompt tokens, `b` = generated tokens.
+    Request,
+    /// Submit → admission. `id` = request id, `a` = prompt tokens.
+    Queued,
+    /// One prefill chunk inside a step. `id` = request id, `a` = chunk
+    /// tokens, `b` = step ordinal.
+    PrefillChunk,
+    /// One engine step over the active batch. `id` = step ordinal,
+    /// `a` = batch size, `b` = rows (tokens) processed.
+    DecodeStep,
+    /// Routing + pruning phase of one MoE layer. `id` = step ordinal,
+    /// `a` = layer.
+    Route,
+    /// Expert-group gather phase. `id` = step ordinal, `a` = layer.
+    Gather,
+    /// Expert execute phase. `id` = step ordinal, `a` = layer,
+    /// `b` = experts kept.
+    Execute,
+    /// Attention + KV-cache phase. `id` = step ordinal, `a` = layer.
+    Kv,
+    /// Expert paging / remote FETCH wait (the store `prepare` call).
+    /// `id` = step ordinal, `a` = layer.
+    Fetch,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Queued => "queued",
+            SpanKind::PrefillChunk => "prefill-chunk",
+            SpanKind::DecodeStep => "decode-step",
+            SpanKind::Route => "route",
+            SpanKind::Gather => "gather",
+            SpanKind::Execute => "execute",
+            SpanKind::Kv => "attn-kv",
+            SpanKind::Fetch => "fetch",
+        }
+    }
+
+    /// Chrome trace category: request-lifecycle spans get their own
+    /// per-request track; engine-step spans share the engine track.
+    fn is_request_scope(self) -> bool {
+        matches!(self, SpanKind::Request | SpanKind::Queued)
+    }
+}
+
+/// One timed interval. Timestamps are microseconds since the tracer's
+/// epoch (engine construction), so every span in a dump shares one
+/// clock and nesting is a plain interval-containment check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Request id for lifecycle spans, step ordinal for phase spans.
+    pub id: u64,
+    pub t_start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific payload (see [`SpanKind`] docs).
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Span {
+    /// The JSON object a `TRACE` response emits per line.
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("kind", s(self.kind.name())),
+            ("id", num(self.id as f64)),
+            ("t_start_us", num(self.t_start_us as f64)),
+            ("dur_us", num(self.dur_us as f64)),
+            ("a", num(self.a as f64)),
+            ("b", num(self.b as f64)),
+        ])
+    }
+}
+
+/// Fixed-capacity overwrite-oldest span storage. Preallocated at
+/// construction; steady-state recording never allocates.
+struct SpanRing {
+    buf: Vec<Span>,
+    cap: usize,
+    /// Next write position; wraps.
+    head: usize,
+    /// Spans currently held (≤ cap).
+    len: usize,
+}
+
+impl SpanRing {
+    fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing { buf: Vec::with_capacity(cap), cap, head: 0, len: 0 }
+    }
+
+    fn push(&mut self, sp: Span) {
+        if self.buf.len() < self.cap {
+            self.buf.push(sp);
+        } else {
+            self.buf[self.head] = sp;
+        }
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// Retained spans, oldest first, optionally only the last `n`.
+    fn snapshot(&self, last: Option<usize>) -> Vec<Span> {
+        let take = last.unwrap_or(self.len).min(self.len);
+        let newest_end = if self.buf.len() < self.cap { self.buf.len() } else { self.head };
+        // oldest retained span sits at `newest_end` once the ring wraps
+        let start = (newest_end + self.cap - take) % self.cap.max(1);
+        let mut out = Vec::with_capacity(take);
+        for i in 0..take {
+            out.push(self.buf[(start + i) % self.cap]);
+        }
+        out
+    }
+}
+
+/// Default span-ring capacity for an engine: enough for several
+/// hundred steps of per-layer phase spans on the test models.
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+/// Per-engine span recorder. Owned by the `DecodeEngine`, so every
+/// writer already holds the engine lock; the `RefCell` only provides
+/// interior mutability (multiple live [`SpanGuard`]s borrow the tracer
+/// shared while the engine mutates its own fields).
+pub struct Tracer {
+    t0: Instant,
+    ring: RefCell<SpanRing>,
+    enabled: bool,
+}
+
+impl Tracer {
+    /// Ring of `cap` spans; recording is disabled for the tracer's
+    /// lifetime when `MCSHARP_TRACE_OFF` is set in the environment at
+    /// construction time.
+    pub fn new(cap: usize) -> Tracer {
+        Tracer {
+            t0: Instant::now(),
+            ring: RefCell::new(SpanRing::new(cap)),
+            enabled: std::env::var_os("MCSHARP_TRACE_OFF").is_none(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Spans currently retained.
+    pub fn len(&self) -> usize {
+        self.ring.borrow().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.borrow().cap
+    }
+
+    fn rel_us(&self, t: Instant) -> u64 {
+        // saturate to the epoch for instants captured before t0
+        t.checked_duration_since(self.t0).map_or(0, |d| d.as_micros() as u64)
+    }
+
+    /// Start a RAII-timed span: records on drop. Bind it to a *named*
+    /// `let` — `let _ = tracer.span(..)` drops immediately and records
+    /// a zero-length span (the `trace-guard` analyzer pass flags this).
+    #[must_use]
+    pub fn span(&self, kind: SpanKind, id: u64) -> SpanGuard<'_> {
+        SpanGuard { tracer: self, kind, id, start: Instant::now(), a: 0, b: 0 }
+    }
+
+    /// Record a span whose endpoints were captured by the caller —
+    /// the retroactive path for instants that live outside the engine
+    /// (a request's submit/admit times in the batcher).
+    pub fn record_range(
+        &self,
+        kind: SpanKind,
+        id: u64,
+        start: Instant,
+        end: Instant,
+        a: u64,
+        b: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let t_start_us = self.rel_us(start);
+        let dur_us = end.checked_duration_since(start).map_or(0, |d| d.as_micros() as u64);
+        self.ring.borrow_mut().push(Span { kind, id, t_start_us, dur_us, a, b });
+    }
+
+    /// [`record_range`](Self::record_range) ending now.
+    pub fn record_since(&self, kind: SpanKind, id: u64, start: Instant, a: u64, b: u64) {
+        self.record_range(kind, id, start, Instant::now(), a, b);
+    }
+
+    /// Record a span from an offset + duration pair (µs) inside an
+    /// enclosing window that started at `start` — how the engine lays
+    /// out the route/gather/fetch/execute sub-phases a dispatch call
+    /// measured internally.
+    pub fn record_offset(
+        &self,
+        kind: SpanKind,
+        id: u64,
+        start: Instant,
+        offset_us: u64,
+        dur_us: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let t_start_us = self.rel_us(start) + offset_us;
+        self.ring.borrow_mut().push(Span { kind, id, t_start_us, dur_us, a, b });
+    }
+
+    /// Retained spans oldest-first, optionally capped to the last `n`.
+    pub fn snapshot(&self, last: Option<usize>) -> Vec<Span> {
+        self.ring.borrow().snapshot(last)
+    }
+}
+
+/// RAII span timer from [`Tracer::span`]: one `Instant` read at
+/// construction, one at drop, one ring write. Set `a`/`b` on the guard
+/// before it drops to attach payload.
+pub struct SpanGuard<'t> {
+    tracer: &'t Tracer,
+    kind: SpanKind,
+    id: u64,
+    start: Instant,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.tracer.record_range(self.kind, self.id, self.start, Instant::now(), self.a, self.b);
+    }
+}
+
+/// Render a span snapshot as a Chrome `trace_event`-format JSON value
+/// (`{"traceEvents": [...]}`, all complete `"ph":"X"` events) — the
+/// format Perfetto and `chrome://tracing` open directly. Lifecycle
+/// spans get one track (`tid`) per request; engine-step and phase
+/// spans share the engine track, where their intervals nest by
+/// containment.
+pub fn chrome_value(spans: &[Span]) -> Value {
+    let mut events = Vec::with_capacity(spans.len());
+    for sp in spans {
+        let tid = if sp.kind.is_request_scope() { 2 + sp.id } else { 1 };
+        let cat = if sp.kind.is_request_scope() { "request" } else { "engine" };
+        events.push(obj(vec![
+            ("name", s(sp.kind.name())),
+            ("cat", s(cat)),
+            ("ph", s("X")),
+            ("ts", num(sp.t_start_us as f64)),
+            ("dur", num(sp.dur_us as f64)),
+            ("pid", num(1.0)),
+            ("tid", num(tid as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("id", num(sp.id as f64)),
+                    ("a", num(sp.a as f64)),
+                    ("b", num(sp.b as f64)),
+                ]),
+            ),
+        ]));
+    }
+    obj(vec![("traceEvents", Value::Arr(events))])
+}
+
+/// Write a span snapshot as a Chrome trace_event file (the
+/// `mcsharp serve --trace-out` shutdown artifact).
+pub fn write_chrome(path: &str, spans: &[Span]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_value(spans).to_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- Histo ----
+
+    #[test]
+    fn histo_buckets_cover_the_u64_range() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HISTO_BUCKETS - 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(10), 1023);
+    }
+
+    #[test]
+    fn histo_percentile_is_bucket_upper_bound_of_the_rank() {
+        let mut h = Histo::new();
+        for v in [10u64, 20, 30, 40, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        // rank(round((5-1)*0.5)) = 2 → exact 30 → bucket [16,31] → 31
+        assert_eq!(h.percentile(0.5), 31);
+        // p100 → exact 100 → bucket [64,127] → 127
+        assert_eq!(h.percentile(1.0), 127);
+        assert_eq!(Histo::new().percentile(0.95), 0, "empty histogram reads 0");
+    }
+
+    /// The pinned old-vs-new contract: for any sample set the histogram
+    /// percentile and the exact sorted-vector percentile land in the
+    /// same log2 bucket (the histogram reports the bucket's upper
+    /// bound, so it is never below the exact value).
+    #[test]
+    fn histo_percentile_agrees_with_exact_within_one_bucket() {
+        let samples: Vec<u64> =
+            (1..200u64).map(|i| i.wrapping_mul(2_654_435_761) % 50_000).collect();
+        let mut h = Histo::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for &p in &[0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = sorted[((sorted.len() - 1) as f64 * p).round() as usize];
+            let approx = h.percentile(p);
+            assert!(approx >= exact, "p{p}: histo {approx} below exact {exact}");
+            assert_eq!(
+                bucket_of(approx),
+                bucket_of(exact),
+                "p{p}: histo {approx} and exact {exact} in different buckets"
+            );
+        }
+    }
+
+    // ---- ring + tracer ----
+
+    #[test]
+    fn ring_caps_and_overwrites_oldest() {
+        let tr = Tracer::new(4);
+        let t = Instant::now();
+        for i in 0..7u64 {
+            tr.record_range(SpanKind::DecodeStep, i, t, t, 0, 0);
+        }
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr.capacity(), 4);
+        let snap = tr.snapshot(None);
+        let ids: Vec<u64> = snap.iter().map(|sp| sp.id).collect();
+        assert_eq!(ids, vec![3, 4, 5, 6], "oldest spans overwritten, order kept");
+        let last2: Vec<u64> = tr.snapshot(Some(2)).iter().map(|sp| sp.id).collect();
+        assert_eq!(last2, vec![5, 6]);
+        assert_eq!(tr.snapshot(Some(99)).len(), 4, "last > len clamps");
+    }
+
+    #[test]
+    fn span_guard_records_on_drop_with_payload() {
+        let tr = Tracer::new(8);
+        {
+            let mut g = tr.span(SpanKind::Execute, 3);
+            g.a = 7;
+            g.b = 2;
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let snap = tr.snapshot(None);
+        assert_eq!(snap.len(), 1);
+        let sp = snap[0];
+        assert_eq!((sp.kind, sp.id, sp.a, sp.b), (SpanKind::Execute, 3, 7, 2));
+        assert!(sp.dur_us >= 1_000, "a ~2ms guard must not read as zero: {}", sp.dur_us);
+    }
+
+    #[test]
+    fn two_guards_can_coexist_and_nest() {
+        let tr = Tracer::new(8);
+        {
+            let _outer = tr.span(SpanKind::DecodeStep, 0);
+            {
+                let _inner = tr.span(SpanKind::Route, 0);
+            }
+            // inner dropped first: one span already in the ring
+            assert_eq!(tr.len(), 1);
+        }
+        let snap = tr.snapshot(None);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].kind, SpanKind::Route);
+        assert_eq!(snap[1].kind, SpanKind::DecodeStep);
+        assert!(snap[1].t_start_us <= snap[0].t_start_us, "outer starts first");
+    }
+
+    #[test]
+    fn span_json_line_and_chrome_export_parse_back() {
+        let tr = Tracer::new(8);
+        let t = Instant::now();
+        tr.record_range(SpanKind::Request, 42, t, t, 3, 5);
+        let sp = tr.snapshot(None)[0];
+        let line = sp.to_value().to_json();
+        let v = Value::parse(&line).expect("span JSON line parses");
+        assert_eq!(v.get("kind").unwrap().as_str().unwrap(), "request");
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 42);
+
+        let chrome = chrome_value(&tr.snapshot(None));
+        let parsed = Value::parse(&chrome.to_json()).expect("chrome JSON parses");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(events[0].get("name").unwrap().as_str().unwrap(), "request");
+        assert_eq!(events[0].get("cat").unwrap().as_str().unwrap(), "request");
+    }
+
+    #[test]
+    fn record_offset_lays_sub_phases_inside_the_window() {
+        let tr = Tracer::new(8);
+        let t = Instant::now();
+        tr.record_offset(SpanKind::Route, 0, t, 0, 10, 0, 0);
+        tr.record_offset(SpanKind::Gather, 0, t, 10, 5, 0, 0);
+        let snap = tr.snapshot(None);
+        assert_eq!(snap[1].t_start_us, snap[0].t_start_us + 10);
+        assert_eq!(snap[1].dur_us, 5);
+    }
+}

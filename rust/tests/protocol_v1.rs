@@ -10,7 +10,11 @@
 //! * v0 and v1 traffic interleave on one connection, v0 byte-identical
 //!   to the legacy protocol;
 //! * malformed / oversized / partial lines produce `ERR` and leave the
-//!   connection usable (never a hang, panic, or silent drop).
+//!   connection usable (never a hang, panic, or silent drop);
+//! * `TRACE` dumps the span ring of a served `GEN` as valid JSON lines,
+//!   `last=` truncation and the ring capacity both bound the dump;
+//! * the `--trace-out` artifact is valid Chrome trace_event JSON whose
+//!   request spans temporally contain the engine's step-phase spans.
 
 use std::net::TcpListener;
 use std::sync::Mutex;
@@ -22,6 +26,7 @@ use mcsharp::coordinator::engine::{DecodeEngine, EngineModel};
 use mcsharp::coordinator::protocol::Response;
 use mcsharp::coordinator::server;
 use mcsharp::moe::MoeModel;
+use mcsharp::util::json::Value;
 
 fn tiny_cfg() -> ModelConfig {
     ModelConfig {
@@ -277,4 +282,104 @@ fn malformed_and_oversized_lines_answer_err_and_stay_usable() {
         let out = client.gen(&[1, 5], 2).unwrap();
         assert_eq!(out.tokens, want);
     });
+}
+
+/// `TRACE` over the wire: a served `GEN` leaves spans in the ring, the
+/// dump is one valid JSON object per line with the full span schema,
+/// `last=` truncates to the newest spans, and a deliberately tiny ring
+/// (capacity 8, far below the ~11 spans a single step + retire records)
+/// proves overwrite-oldest capping end to end.
+#[test]
+fn trace_dump_roundtrips_spans_and_honors_ring_cap() {
+    let m = MoeModel::new(&tiny_cfg(), 305);
+    let be = NativeBackend::fp(&m);
+    let engine = Mutex::new(
+        DecodeEngine::new(EngineModel::Fp(&m), &be, None).with_trace_capacity(8),
+    );
+    let sc = ServingConfig::default();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| server::serve_with(listener, &engine, &sc, Some(1)).unwrap());
+        let mut client = Client::connect(addr).unwrap();
+        client.gen(&[1, 17, 30], 4).unwrap();
+        let spans = client.trace(None).unwrap();
+        assert!(!spans.is_empty(), "a served GEN must leave spans in the ring");
+        assert!(spans.len() <= 8, "ring cap 8 must bound the dump, got {}", spans.len());
+        let mut kinds = Vec::new();
+        for line in &spans {
+            let v = Value::parse(line)
+                .unwrap_or_else(|e| panic!("span line must be valid JSON, got {line:?}: {e}"));
+            kinds.push(v.get("kind").unwrap().as_str().unwrap().to_string());
+            for key in ["id", "t_start_us", "dur_us", "a", "b"] {
+                v.get(key).unwrap().as_f64().unwrap();
+            }
+        }
+        // retire records the request lifecycle last, so the newest 8
+        // spans always hold the final step and the request record
+        assert!(kinds.iter().any(|k| k == "request"), "no request span in {kinds:?}");
+        assert!(kinds.iter().any(|k| k == "decode-step"), "no step span in {kinds:?}");
+        // last= keeps only the newest n spans; the engine is idle
+        // between the two dumps, so the tail matches exactly
+        let last2 = client.trace(Some(2)).unwrap();
+        assert_eq!(last2.len(), 2);
+        assert_eq!(&spans[spans.len() - 2..], &last2[..]);
+    });
+}
+
+/// The `--trace-out` shutdown artifact: after serving a `GEN`, the
+/// engine's span snapshot written through `trace::write_chrome` is
+/// valid Chrome trace_event JSON (`chrome://tracing` loadable) — a
+/// `traceEvents` array of complete (`ph:"X"`) events where the served
+/// request's span temporally contains the engine's step-phase spans.
+#[test]
+fn trace_out_writes_chrome_trace_event_json_with_nested_spans() {
+    let m = MoeModel::new(&tiny_cfg(), 306);
+    let be = NativeBackend::fp(&m);
+    let engine = Mutex::new(DecodeEngine::new(EngineModel::Fp(&m), &be, None));
+    let sc = ServingConfig::default();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| server::serve_with(listener, &engine, &sc, Some(1)).unwrap());
+        let mut client = Client::connect(addr).unwrap();
+        client.gen(&[1, 17, 30], 4).unwrap();
+    });
+    // server joined at scope exit; this is the same dump `mcsharp serve
+    // --trace-out` performs at shutdown
+    let path = std::env::temp_dir().join(format!("mcsharp_trace_{}.json", std::process::id()));
+    let path_str = path.to_str().unwrap();
+    let spans = engine.lock().unwrap().trace.snapshot(None);
+    mcsharp::trace::write_chrome(path_str, &spans).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let doc = Value::parse(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "trace file must carry the served request's events");
+    let window = |ev: &Value| -> (f64, f64) {
+        assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "X", "complete events only");
+        (ev.get("ts").unwrap().as_f64().unwrap(), ev.get("dur").unwrap().as_f64().unwrap())
+    };
+    let req = events
+        .iter()
+        .find(|ev| ev.get("name").unwrap().as_str().unwrap() == "request")
+        .expect("no request event in the trace file");
+    let (req_ts, req_dur) = window(req);
+    // request-scope events sit on their own per-request track
+    assert!(req.get("tid").unwrap().as_f64().unwrap() >= 2.0);
+    let step = events
+        .iter()
+        .find(|ev| ev.get("name").unwrap().as_str().unwrap() == "decode-step")
+        .expect("no decode-step event in the trace file");
+    let (step_ts, step_dur) = window(step);
+    assert_eq!(step.get("tid").unwrap().as_f64().unwrap(), 1.0, "engine track");
+    // nesting: every step serving this lone request falls inside its
+    // request window (+2µs slack for independent µs floor-rounding)
+    assert!(step_ts >= req_ts, "step starts before its request: {step_ts} < {req_ts}");
+    assert!(
+        step_ts + step_dur <= req_ts + req_dur + 2.0,
+        "step outlives its request: {} > {}",
+        step_ts + step_dur,
+        req_ts + req_dur
+    );
 }

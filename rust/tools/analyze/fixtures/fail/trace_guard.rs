@@ -1,0 +1,10 @@
+//! Trace-guard pass fixture (seeded violation): a SpanGuard bound to
+//! `_` drops before the work it was meant to time. Never compiled —
+//! lexed only.
+
+pub fn step_with_dropped_guard(tracer: &Tracer) {
+    let _ = tracer.span(SpanKind::DecodeStep, 0);
+    expensive_work();
+}
+
+fn expensive_work() {}

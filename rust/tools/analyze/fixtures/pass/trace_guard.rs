@@ -1,0 +1,23 @@
+//! Trace-guard pass fixture (clean): a named guard that lives across
+//! the timed work, a waived deliberate drop, and an innocent `let _`
+//! that has nothing to do with spans. Never compiled — lexed only.
+
+pub fn step_with_named_guard(tracer: &Tracer) {
+    let _step = tracer.span(SpanKind::DecodeStep, 0);
+    expensive_work();
+}
+
+pub fn probe_enabled(tracer: &Tracer) {
+    // analyze: allow(trace-guard): probing that span() compiles is the point
+    let _ = tracer.span(SpanKind::Route, 1);
+}
+
+pub fn unrelated_discard() {
+    let _ = compute();
+}
+
+fn compute() -> u64 {
+    7
+}
+
+fn expensive_work() {}

@@ -1,5 +1,5 @@
 //! `mcsharp-analyze` — repo-native static analysis for the `mcsharp`
-//! serving stack. Five passes over `rust/src/` enforce the invariants
+//! serving stack. Six passes over `rust/src/` enforce the invariants
 //! the type system cannot:
 //!
 //! 1. **lock-order** — mutexes are acquired in the declared hierarchy
@@ -19,6 +19,10 @@
 //! 5. **gauge-staleness** — every `Metrics` field marked
 //!    `// analyze: gauge` is re-assigned inside `DecodeEngine::step`,
 //!    so `STATS`/`METRICS` can never silently publish stale gauges.
+//! 6. **trace-guard** — a `SpanGuard` records its span when dropped, so
+//!    `let _ = ..span(..)` (immediate drop) records a zero-length span
+//!    and measures nothing; the guard must be bound to a named variable
+//!    (or waived with `// analyze: allow(trace-guard): <why>`).
 //!
 //! The analysis is a hand-rolled lexer plus token-stream walks — no
 //! external parser crates (this build environment has no crates.io
@@ -817,8 +821,8 @@ pub fn parse_inventory(text: &str) -> BTreeMap<String, (u32, u32, u32)> {
 
 // ------------------------------------------------- pass 4: protocol point
 
-const WIRE_PATTERNS: [&str; 7] =
-    ["OK id=", "ERR id=", "REC id=", "TOK id=", "BUSY id=", "GEN id=", "FETCH "];
+const WIRE_PATTERNS: [&str; 8] =
+    ["OK id=", "ERR id=", "REC id=", "TOK id=", "BUSY id=", "GEN id=", "FETCH ", "TRACE "];
 
 fn pass_protocol(files: &[SrcFile]) -> Vec<Finding> {
     let mut findings = Vec::new();
@@ -960,6 +964,67 @@ fn assigns_metrics_field(toks: &[Tok], field: &str) -> bool {
     false
 }
 
+// -------------------------------------------------- pass 6: trace guard
+
+fn pass_trace_guard(files: &[SrcFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for sf in files {
+        for fnc in functions(sf) {
+            check_fn_trace_guard(&fnc, &mut findings);
+        }
+    }
+    findings
+}
+
+/// `let _ = <expr containing .span( or SpanGuard>;` — the guard drops at
+/// the end of the statement, so the recorded span is zero-length and the
+/// timing is silently lost.
+fn check_fn_trace_guard(fnc: &FnItem<'_>, findings: &mut Vec<Finding>) {
+    let toks = fnc.body;
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if toks[i].is(Kind::Ident, "let")
+            && i + 2 < n
+            && toks[i + 1].is(Kind::Ident, "_")
+            && toks[i + 2].is(Kind::Punct, "=")
+        {
+            let let_line = toks[i].line;
+            let mut j = i + 3;
+            let mut guardish = false;
+            while j < n && !toks[j].is(Kind::Punct, ";") {
+                let t = &toks[j];
+                if t.kind == Kind::Ident
+                    && ((t.text == "span" && j + 1 < n && toks[j + 1].is(Kind::Punct, "("))
+                        || t.text == "SpanGuard")
+                {
+                    guardish = true;
+                }
+                j += 1;
+            }
+            if guardish
+                && !(has_waiver(fnc.sfile, let_line, "trace-guard")
+                    || fn_waiver(fnc, "trace-guard"))
+            {
+                findings.push(Finding {
+                    pass: "trace-guard",
+                    rel: fnc.sfile.rel.clone(),
+                    line: let_line,
+                    msg: format!(
+                        "`let _ = ..span(..)` drops the SpanGuard immediately — the span \
+                         records zero length and measures nothing; bind a named guard in fn {} \
+                         (waive with `// analyze: allow(trace-guard): <why>`)",
+                        fnc.name
+                    ),
+                });
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+}
+
 // ----------------------------------------------------------------- driver
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
@@ -997,7 +1062,7 @@ pub fn load_tree(root: &Path) -> Vec<SrcFile> {
         .collect()
 }
 
-/// Run all five passes over pre-lexed files (fixture tests call this
+/// Run all six passes over pre-lexed files (fixture tests call this
 /// with synthetic `rel` names).
 pub fn run_passes(files: &[SrcFile], inventory_text: Option<&str>) -> Vec<Finding> {
     let mut findings = Vec::new();
@@ -1006,10 +1071,11 @@ pub fn run_passes(files: &[SrcFile], inventory_text: Option<&str>) -> Vec<Findin
     findings.extend(pass_unsafe(files, inventory_text));
     findings.extend(pass_protocol(files));
     findings.extend(pass_gauges(files));
+    findings.extend(pass_trace_guard(files));
     findings
 }
 
-/// Run all five passes over the tree at `root`, checking the unsafe
+/// Run all six passes over the tree at `root`, checking the unsafe
 /// inventory in `inventory` when it exists.
 pub fn run_all(root: &Path, inventory: Option<&Path>) -> Vec<Finding> {
     let files = load_tree(root);

@@ -48,7 +48,7 @@ fn main() -> ExitCode {
     for f in &findings {
         println!("{f}");
     }
-    eprintln!("analyze: {} finding(s) over 5 passes", findings.len());
+    eprintln!("analyze: {} finding(s) over 6 passes", findings.len());
     if findings.is_empty() {
         ExitCode::SUCCESS
     } else {

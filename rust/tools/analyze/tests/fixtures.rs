@@ -1,4 +1,4 @@
-//! End-to-end checks of the five analysis passes against the seeded
+//! End-to-end checks of the six analysis passes against the seeded
 //! fixture trees, plus the gate the CI `analysis` job relies on: the
 //! real `rust/src/` tree must be clean against the `ANALYSIS.md`
 //! inventory.
@@ -89,7 +89,17 @@ fn fail_fixtures_trip_every_pass() {
         render(&findings)
     );
 
-    assert_eq!(findings.len(), 11, "unexpected extra findings:\n{}", render(&findings));
+    let guard = by_pass(&findings, "trace-guard");
+    assert_eq!(guard.len(), 1, "trace-guard findings:\n{}", render(&findings));
+    assert!(
+        guard[0].rel.ends_with("fail/trace_guard.rs")
+            && guard[0].msg.contains("drops the SpanGuard immediately")
+            && guard[0].msg.contains("fn step_with_dropped_guard"),
+        "wrong trace-guard finding:\n{}",
+        render(&findings)
+    );
+
+    assert_eq!(findings.len(), 12, "unexpected extra findings:\n{}", render(&findings));
 }
 
 #[test]
@@ -133,7 +143,7 @@ fn real_tree_is_clean_against_checked_in_inventory() {
     let findings = run_all(&repo.join("rust/src"), Some(&repo.join("ANALYSIS.md")));
     assert!(
         findings.is_empty(),
-        "rust/src must satisfy all five passes (fix the code, add a waiver \
+        "rust/src must satisfy all six passes (fix the code, add a waiver \
          with a reason, or update the ANALYSIS.md inventory):\n{}",
         render(&findings)
     );

@@ -3,7 +3,7 @@
 
 The container this repo grows in has no Rust toolchain, so — like the C
 port that cross-validated the PR 5 kernels — this mirror re-implements
-the analyzer's lexer and five passes 1:1 and is runnable today:
+the analyzer's lexer and six passes 1:1 and is runnable today:
 
     python3 tools/analyze_mirror.py [root] [--inventory ANALYSIS.md]
 
@@ -578,7 +578,7 @@ def parse_inventory(text):
 
 # ------------------------------------------------- pass 4: protocol point
 
-WIRE_PATTERNS = ("OK id=", "ERR id=", "REC id=", "TOK id=", "BUSY id=", "GEN id=", "FETCH ")
+WIRE_PATTERNS = ("OK id=", "ERR id=", "REC id=", "TOK id=", "BUSY id=", "GEN id=", "FETCH ", "TRACE ")
 
 
 def pass_protocol(files):
@@ -700,6 +700,64 @@ def assigns_metrics_field(toks, field):
     return False
 
 
+# -------------------------------------------------- pass 6: trace guard
+
+
+def pass_trace_guard(files):
+    findings = []
+    for sf in files:
+        for fn in functions(sf):
+            findings.extend(check_fn_trace_guard(fn))
+    return findings
+
+
+def check_fn_trace_guard(fn):
+    """`let _ = <expr containing .span( or SpanGuard>;` — the guard drops
+    at the end of the statement, so the recorded span is zero-length and
+    the timing is silently lost."""
+    findings = []
+    toks = fn.body
+    i, n = 0, len(toks)
+    while i < n:
+        if (
+            toks[i].kind == "ident"
+            and toks[i].text == "let"
+            and i + 2 < n
+            and toks[i + 1].kind == "ident"
+            and toks[i + 1].text == "_"
+            and toks[i + 2].kind == "punct"
+            and toks[i + 2].text == "="
+        ):
+            let_line = toks[i].line
+            j = i + 3
+            guardish = False
+            while j < n and not (toks[j].kind == "punct" and toks[j].text == ";"):
+                t = toks[j]
+                if t.kind == "ident" and (
+                    (t.text == "span" and j + 1 < n and toks[j + 1].kind == "punct" and toks[j + 1].text == "(")
+                    or t.text == "SpanGuard"
+                ):
+                    guardish = True
+                j += 1
+            if guardish and not (
+                has_waiver(fn.sfile, let_line, "trace-guard") or fn_waiver(fn, "trace-guard")
+            ):
+                findings.append(
+                    Finding(
+                        "trace-guard",
+                        fn.sfile.rel,
+                        let_line,
+                        "`let _ = ..span(..)` drops the SpanGuard immediately — the span "
+                        f"records zero length and measures nothing; bind a named guard in fn {fn.name} "
+                        "(waive with `// analyze: allow(trace-guard): <why>`)",
+                    )
+                )
+            i = j
+            continue
+        i += 1
+    return findings
+
+
 # ----------------------------------------------------------------- driver
 
 
@@ -729,6 +787,7 @@ def run_all(root, inventory_path):
     findings += pass_unsafe(files, inv_text)
     findings += pass_protocol(files)
     findings += pass_gauges(files)
+    findings += pass_trace_guard(files)
     return findings
 
 
@@ -756,7 +815,7 @@ def main(argv):
     findings = run_all(root, inventory)
     for f in findings:
         print(f)
-    print(f"analyze: {len(findings)} finding(s) over 5 passes", file=sys.stderr)
+    print(f"analyze: {len(findings)} finding(s) over 6 passes", file=sys.stderr)
     return 1 if findings else 0
 
 
